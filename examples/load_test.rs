@@ -1,0 +1,80 @@
+//! Open-loop load test: Poisson-arrival workload trace replayed against a
+//! live serving stack — queueing delay vs service time under pressure.
+//!
+//!   cargo run --release --example load_test [requests] [rate_rps]
+
+use std::sync::Arc;
+
+use gcoospdm::coordinator::{Coordinator, CoordinatorConfig};
+use gcoospdm::runtime::Registry;
+use gcoospdm::serve::{self, Client, Server, ServerConfig, TraceSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let rate_rps: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(15.0);
+
+    let registry = Arc::new(Registry::load("artifacts").expect("run `make artifacts` first"));
+    let coord = Arc::new(Coordinator::new(
+        registry,
+        CoordinatorConfig { workers: 2, queue_cap: 32, ..Default::default() },
+    ));
+    let metrics = coord.metrics();
+    let server = Server::bind(&ServerConfig { addr: "127.0.0.1:0".into() }, coord).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    let spec = TraceSpec {
+        requests,
+        rate_rps,
+        sizes: vec![128, 256],
+        sparsities: vec![0.98, 0.99, 0.995],
+        patterns: vec!["uniform".into(), "banded".into()],
+        seed: 0x10AD,
+    };
+    let items = serve::generate_trace(&spec);
+    println!(
+        "trace: {} requests over {:.1}s (λ={} rps) against {addr}",
+        items.len(),
+        items.last().unwrap().arrival_s,
+        rate_rps
+    );
+
+    // Each replay worker holds one connection (connection pool of 4).
+    let conns: Vec<std::sync::Mutex<Client>> = (0..4)
+        .map(|_| std::sync::Mutex::new(Client::connect(&addr).unwrap()))
+        .collect();
+    let next_conn = std::sync::atomic::AtomicUsize::new(0);
+    let report = serve::replay_trace(&items, 4, |item| {
+        let idx = next_conn.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % conns.len();
+        let mut c = conns[idx].lock().unwrap();
+        let r = c
+            .spdm_synthetic(item.id, item.n, item.sparsity, &item.pattern, item.seed, "auto", false)
+            .map_err(|e| e)?;
+        if r.ok {
+            Ok(())
+        } else {
+            Err(r.error.unwrap_or_default())
+        }
+    });
+
+    println!("\n=== open-loop load report ===");
+    println!("completed: {} / failed: {}", report.completed, report.failed);
+    println!("wall time: {:.2}s  goodput: {:.1} rps", report.wall_s, report.throughput_rps());
+    println!(
+        "latency (arrival→done): p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms",
+        report.p(50.0) * 1e3,
+        report.p(95.0) * 1e3,
+        report.p(99.0) * 1e3
+    );
+    let max_late = report.lateness_s.iter().copied().fold(0.0, f64::max);
+    println!("max queueing lateness: {:.1} ms", max_late * 1e3);
+    println!("\nserver metrics:\n{}", metrics.snapshot().render());
+    assert_eq!(report.failed, 0);
+
+    drop(conns); // close pooled connections before asking for shutdown
+    let mut ctl = Client::connect(&addr).unwrap();
+    ctl.shutdown(u64::MAX).unwrap();
+    server_thread.join().unwrap();
+    println!("\nload_test OK");
+}

@@ -1,0 +1,43 @@
+//! Regenerate a compact version of every paper table/figure in one run and
+//! print the headline reproduction checks.
+//!
+//!   cargo run --release --example paper_figures
+//!
+//! (Full-scale sweeps: `gcoospdm figures --fig all --full`, or the
+//! per-figure `cargo bench` targets.)
+
+use gcoospdm::figures;
+
+fn main() {
+    println!("### Fig 1 — roofline ###");
+    figures::fig1_roofline().print();
+
+    println!("\n### Table I — memory consumption ###");
+    figures::table1_memory().print();
+
+    println!("\n### Fig 4 — public-corpus histogram (scaled: 60 matrices) ###");
+    figures::fig4_public_hist(60, 768).print();
+
+    println!("\n### Table III / Fig 5 — 14 selected matrices ###");
+    figures::fig5_selected(768).print();
+
+    println!("\n### Fig 6 — random-matrix histogram (scaled: 60 matrices) ###");
+    figures::fig6_random_hist(60, 1024).print();
+
+    println!("\n### Figs 7-9 — time vs sparsity ###");
+    figures::fig7_9_time_vs_sparsity().print();
+
+    println!("\n### Figs 10-12 — perf vs size ###");
+    figures::fig10_12_perf_vs_size().print();
+
+    println!("\n### Fig 13 — EO/KC breakdown ###");
+    figures::fig13_breakdown().print();
+
+    println!("\n### Fig 14 — instruction distributions ###");
+    figures::fig14_instructions().print();
+
+    println!("\n### Fig 15 — scaling behaviors ###");
+    figures::fig15_scaling().print();
+
+    println!("\nall figures regenerated; CSVs under results/");
+}

@@ -1,0 +1,52 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Generates a sparse matrix, runs C = A·B through the full stack
+//! (dense→GCOO conversion → algorithm selection → AOT PJRT kernel), checks
+//! the result against the CPU oracle, and prints the timing split.
+
+use std::sync::Arc;
+
+use gcoospdm::coordinator::{Coordinator, CoordinatorConfig, SpdmRequest};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::Registry;
+
+fn main() {
+    // 1. Load the AOT artifact registry (built once by `make artifacts`).
+    let registry = Arc::new(Registry::load("artifacts").expect("run `make artifacts` first"));
+    println!("loaded {} artifacts", registry.artifacts.len());
+
+    // 2. Start a coordinator (owns the PJRT engines and the job queue).
+    let coord = Coordinator::new(registry, CoordinatorConfig::default());
+
+    // 3. Build a workload: a 512×512 matrix at 99% sparsity times a dense B.
+    let mut rng = Rng::new(7);
+    let a = gen::uniform(512, 0.99, &mut rng);
+    let b = Mat::randn(512, 512, &mut rng);
+    println!("A: 512x512, nnz = {}, sparsity = {:.4}", a.nnz(), a.sparsity());
+
+    // 4. Run it. `verify` cross-checks against the CPU oracle.
+    let mut req = SpdmRequest::new(1, a, b);
+    req.verify = true;
+    let resp = coord.run_sync(req);
+
+    assert!(resp.ok(), "request failed: {:?}", resp.error);
+    println!(
+        "routed to {} ({}), n_exec = {}",
+        resp.algo.as_str(),
+        resp.artifact,
+        resp.n_exec
+    );
+    println!(
+        "convert (EO) {:.3} ms | kernel (KC) {:.3} ms | total {:.3} ms",
+        resp.convert_s * 1e3,
+        resp.kernel_s * 1e3,
+        resp.total_s * 1e3
+    );
+    println!("verified against CPU oracle: {:?}", resp.verified);
+    assert_eq!(resp.verified, Some(true));
+    println!("quickstart OK");
+}

@@ -1,0 +1,99 @@
+//! End-to-end serving driver (the E2E validation run of EXPERIMENTS.md):
+//! boots the full serving stack — TCP server → coordinator (2 workers,
+//! bounded queue, shape-affine batching) → per-worker PJRT engines — then
+//! drives a mixed synthetic workload through real client connections and
+//! reports latency percentiles, throughput, routing distribution, and
+//! verification results.
+//!
+//!   cargo run --release --example serve_spdm [requests] [clients]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use gcoospdm::coordinator::{Coordinator, CoordinatorConfig};
+use gcoospdm::ndarray::percentile;
+use gcoospdm::runtime::Registry;
+use gcoospdm::serve::{Client, Server, ServerConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let total_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    // --- boot the stack ---
+    let registry = Arc::new(Registry::load("artifacts").expect("run `make artifacts` first"));
+    let coord = Arc::new(Coordinator::new(
+        Arc::clone(&registry),
+        CoordinatorConfig { workers: 2, queue_cap: 32, batch_max: 8, ..Default::default() },
+    ));
+    let metrics = coord.metrics();
+    let server = Server::bind(&ServerConfig { addr: "127.0.0.1:0".into() }, coord).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+    println!("server on {addr}; {clients} clients × {} requests", total_requests / clients);
+
+    // --- drive a mixed workload: sizes, sparsities, patterns ---
+    let sizes = [128usize, 200, 256, 400, 512];
+    let sparsities = [0.95, 0.98, 0.99, 0.995, 0.5];
+    let patterns = ["uniform", "banded", "diagonal", "power_law_rows"];
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let per_client = total_requests / clients;
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut lat_ms = Vec::new();
+            let mut verified = 0usize;
+            for i in 0..per_client {
+                let id = (c * per_client + i) as u64;
+                let n = sizes[(c + i) % sizes.len()];
+                let s = sparsities[(c * 3 + i) % sparsities.len()];
+                let pat = patterns[(c + 2 * i) % patterns.len()];
+                let t0 = Instant::now();
+                let r = client
+                    .spdm_synthetic(id, n, s, pat, id, "auto", true)
+                    .expect("request");
+                assert!(r.ok, "request {id} failed: {:?}", r.error);
+                if r.verified == Some(true) {
+                    verified += 1;
+                }
+                lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            (lat_ms, verified)
+        }));
+    }
+
+    let mut all_lat = Vec::new();
+    let mut all_verified = 0;
+    for h in handles {
+        let (lat, v) = h.join().unwrap();
+        all_lat.extend(lat);
+        all_verified += v;
+    }
+    let elapsed = started.elapsed().as_secs_f64();
+
+    // --- report ---
+    println!("\n=== end-to-end serving report ===");
+    println!("requests:      {}", all_lat.len());
+    println!("verified OK:   {all_verified}/{}", all_lat.len());
+    println!("wall time:     {elapsed:.2} s");
+    println!("throughput:    {:.1} req/s", all_lat.len() as f64 / elapsed);
+    println!(
+        "client latency: p50 {:.1} ms | p95 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
+        percentile(&all_lat, 50.0),
+        percentile(&all_lat, 95.0),
+        percentile(&all_lat, 99.0),
+        percentile(&all_lat, 100.0)
+    );
+    let snap = metrics.snapshot();
+    println!("\nserver-side metrics:\n{}", snap.render());
+    assert_eq!(all_verified, all_lat.len(), "every request must verify");
+    assert_eq!(snap.errors, 0);
+
+    // --- shut down cleanly ---
+    let mut ctl = Client::connect(&addr).unwrap();
+    ctl.shutdown(u64::MAX).unwrap();
+    server_thread.join().unwrap();
+    println!("\nserve_spdm OK");
+}

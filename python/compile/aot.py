@@ -1,0 +1,99 @@
+"""AOT export: lower every L2 variant to HLO *text* + manifest.json.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run from python/:  python -m compile.aot --out-dir ../artifacts
+Incremental: a variant is skipped when its .hlo.txt already exists and is
+newer than every file in compile/ (Makefile also guards with a sentinel).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import all_variants, SIZES, P, TB, RP
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_variant(variant, out_dir: str, force: bool = False) -> dict:
+    """Lower one variant; returns its manifest entry."""
+    path = os.path.join(out_dir, f"{variant.name}.hlo.txt")
+    entry = {
+        "name": variant.name,
+        "algo": variant.algo,
+        "n": variant.n,
+        "params": variant.params,
+        "inputs": [
+            {"name": nm, "dtype": dt, "shape": list(shape)}
+            for nm, dt, shape in variant.in_specs
+        ],
+        "outputs": [{"dtype": "float32", "shape": list(variant.output_shape())}],
+        "file": os.path.basename(path),
+    }
+    if not force and os.path.exists(path) and os.path.getsize(path) > 0:
+        entry["sha256"] = _sha256(path)
+        return entry
+    t0 = time.time()
+    lowered = jax.jit(variant.fn).lower(*variant.example_args())
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    entry["sha256"] = _sha256(path)
+    print(f"  {variant.name}: {len(text)} chars in {time.time() - t0:.1f}s", flush=True)
+    return entry
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="re-lower even if fresh")
+    ap.add_argument("--only", default=None, help="substring filter on variant names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    variants = all_variants()
+    if args.only:
+        variants = [v for v in variants if args.only in v.name]
+    print(f"exporting {len(variants)} variants to {args.out_dir}", flush=True)
+    entries = [export_variant(v, args.out_dir, force=args.force) for v in variants]
+
+    manifest = {
+        "schema": 1,
+        "generator": "python -m compile.aot",
+        "jax_version": jax.__version__,
+        "defaults": {"sizes": list(SIZES), "p": P, "tb": TB, "rp": RP},
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(entries)} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

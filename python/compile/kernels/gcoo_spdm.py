@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: GCOOSpDM (paper Algorithm 2, TPU adaptation).
+
+The sparse matrix ``A`` (n×n) is stored in *row-band GCOO*: bands of ``p``
+consecutive rows, each band's nonzeros in COO sorted by ``(col, row)`` and
+padded to a static per-band capacity ``cap`` (padding entries have value 0 and
+therefore contribute nothing). See DESIGN.md §3 for the CUDA→TPU mapping and
+the orientation note (Algorithm 2's output indexing implies row bands).
+
+Grid: ``(g, n // tb)`` — one program per (row band, C column tile).
+Per program:
+  * the band's ``values/rows/cols`` slabs are staged into VMEM once
+    (the CUDA shared-memory staging of Algorithm 2 lines 12-15);
+  * a scan walks the COO entries; each entry gathers one row ``B(col, :)`` of
+    the staged B stripe as a ``tb``-wide vector (the coalesced ``bv`` load,
+    line 24) and accumulates ``v * bv`` into a ``(p, tb)`` accumulator
+    (lines 25-26);
+  * when ``reuse=True`` the scan carries the previous ``(col, bv)`` and skips
+    the gather on same-column runs via ``lax.cond`` — the paper's operational
+    intensity optimization (lines 28-36);
+  * the accumulator is written to C exactly once (lines 38-39).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["gcoo_spdm", "gcoo_spdm_kernel"]
+
+
+def gcoo_spdm_kernel(vals_ref, rows_ref, cols_ref, b_ref, o_ref, *, cap, p, reuse):
+    """Pallas kernel body. Refs:
+    vals_ref: (1, cap) f32   — band values (zero padded)
+    rows_ref: (1, cap) i32   — row within band, in [0, p)
+    cols_ref: (1, cap) i32   — absolute column of A == row of B, in [0, n)
+    b_ref:    (n, tb)  f32   — the B column stripe for this program
+    o_ref:    (p, tb)  f32   — the C block owned by this program
+    """
+    tb = o_ref.shape[1]
+
+    def body(k, carry):
+        acc, prev_col, prev_brow = carry
+        col = cols_ref[0, k]
+        row = rows_ref[0, k]
+        v = vals_ref[0, k]
+        if reuse:
+            # Same-column run: bv is already in registers; skip the gather.
+            brow = lax.cond(col == prev_col, lambda: prev_brow, lambda: b_ref[col, :])
+        else:
+            brow = b_ref[col, :]
+        acc = acc.at[row].add(v * brow)
+        return acc, col, brow
+
+    acc0 = jnp.zeros((p, tb), jnp.float32)
+    init = (acc0, jnp.int32(-1), jnp.zeros((tb,), jnp.float32))
+    acc, _, _ = lax.fori_loop(0, cap, body, init)
+    o_ref[...] = acc  # single coalesced write of the C block
+
+
+def gcoo_spdm(vals, rows, cols, b, *, p, tb, reuse=True, interpret=True):
+    """C = A @ B with A in padded row-band GCOO.
+
+    Args:
+      vals: (g, cap) f32 — band-local COO values, zero padded.
+      rows: (g, cap) i32 — band-local row indices (0..p-1).
+      cols: (g, cap) i32 — absolute column indices (0..n-1).
+      b:    (n, n)   f32 — dense right-hand side.
+      p:    rows per band; g * p must equal A's row count.
+      tb:   C column tile width; must divide b.shape[1].
+      reuse: enable the same-column bv-reuse scan (paper lines 28-36).
+    Returns: (g*p, n) f32 dense product.
+    """
+    g, cap = vals.shape
+    n_rows_b, n = b.shape
+    if n % tb != 0:
+        raise ValueError(f"tb={tb} must divide n={n}")
+    grid = (g, n // tb)
+    kernel = partial(gcoo_spdm_kernel, cap=cap, p=p, reuse=reuse)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i, j: (i, 0)),   # band values  -> VMEM
+            pl.BlockSpec((1, cap), lambda i, j: (i, 0)),   # band rows    -> VMEM
+            pl.BlockSpec((1, cap), lambda i, j: (i, 0)),   # band cols    -> VMEM
+            pl.BlockSpec((n_rows_b, tb), lambda i, j: (0, j)),  # B stripe -> VMEM
+        ],
+        out_specs=pl.BlockSpec((p, tb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((g * p, n), jnp.float32),
+        interpret=interpret,  # CPU path; real-TPU lowering emits Mosaic custom-calls
+    )(vals, rows, cols, b)

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: GCOO sparse matrix-vector product (y = A·x).
+
+The paper's conclusion proposes extending GCOO beyond SpDM; SpMV is the
+natural first extension (GCOO descends from the SCOO *SpMV* format [31]).
+Same row-band layout as `gcoo_spdm`; the C-column lane dimension collapses
+to a single output column, so each program owns a `p`-row slice of y and
+scans its band once. Same-column runs reuse the gathered `x[col]` scalar —
+the bv-reuse optimization carried over.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["gcoo_spmv", "gcoo_spmv_kernel"]
+
+
+def gcoo_spmv_kernel(vals_ref, rows_ref, cols_ref, x_ref, o_ref, *, cap, p, reuse):
+    """vals/rows/cols: (1, cap); x_ref: (n,); o_ref: (p,)."""
+
+    def body(k, carry):
+        acc, prev_col, prev_xv = carry
+        col = cols_ref[0, k]
+        row = rows_ref[0, k]
+        v = vals_ref[0, k]
+        if reuse:
+            xv = lax.cond(col == prev_col, lambda: prev_xv, lambda: x_ref[col])
+        else:
+            xv = x_ref[col]
+        acc = acc.at[row].add(v * xv)
+        return acc, col, xv
+
+    init = (jnp.zeros((p,), jnp.float32), jnp.int32(-1), jnp.float32(0))
+    acc, _, _ = lax.fori_loop(0, cap, body, init)
+    o_ref[...] = acc
+
+
+def gcoo_spmv(vals, rows, cols, x, *, p, reuse=True, interpret=True):
+    """y = A @ x with A in padded row-band GCOO.
+
+    Args:
+      vals: (g, cap) f32; rows: (g, cap) i32 band-local; cols: (g, cap) i32.
+      x: (n,) f32.
+    Returns: (g*p,) f32.
+    """
+    g, cap = vals.shape
+    n = x.shape[0]
+    kernel = partial(gcoo_spmv_kernel, cap=cap, p=p, reuse=reuse)
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((g * p,), jnp.float32),
+        interpret=interpret,
+    )(vals, rows, cols, x)

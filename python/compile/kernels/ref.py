@@ -1,0 +1,123 @@
+"""Pure-jnp/numpy correctness oracles and host-side format builders.
+
+Everything here is the *specification*: kernels are correct iff they match
+these functions (allclose) on every generated input. The format builders
+mirror the rust `sparse` module (rust/src/sparse/) — the cross-language
+agreement is itself tested (python writes fixtures, rust parses and re-emits
+them; see rust/tests/format_fixtures.rs).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "spdm_ref",
+    "gcoo_to_dense",
+    "ell_to_dense",
+    "dense_to_gcoo",
+    "dense_to_ell",
+    "random_sparse",
+]
+
+
+def spdm_ref(a_dense, b):
+    """The oracle: dense matmul of the densified sparse operand."""
+    return jnp.matmul(a_dense, b)
+
+
+def dense_to_gcoo(a, p, cap):
+    """Dense -> padded row-band GCOO (bands of p rows, sorted by (col, row)).
+
+    Returns (vals (g,cap) f32, rows (g,cap) i32 band-local, cols (g,cap) i32
+    absolute, nnz_per_group (g,) i32). Raises if any band exceeds cap.
+    Mirrors rust sparse::Gcoo::from_dense + GcooPadded.
+    """
+    a = np.asarray(a)
+    n = a.shape[0]
+    g = (n + p - 1) // p
+    if g * p != n:
+        raise ValueError(f"p={p} must divide n={n} (pad A to a multiple of p first)")
+    vals = np.zeros((g, cap), np.float32)
+    rows = np.zeros((g, cap), np.int32)
+    cols = np.zeros((g, cap), np.int32)
+    nnz_pg = np.zeros((g,), np.int32)
+    for gi in range(g):
+        band = a[gi * p:(gi + 1) * p]
+        r, c = np.nonzero(band)
+        order = np.lexsort((r, c))  # primary: col, secondary: row
+        r, c = r[order], c[order]
+        k = len(r)
+        if k > cap:
+            raise ValueError(f"band {gi}: nnz {k} exceeds cap {cap}")
+        vals[gi, :k] = band[r, c]
+        rows[gi, :k] = r
+        cols[gi, :k] = c
+        nnz_pg[gi] = k
+    return vals, rows, cols, nnz_pg
+
+
+def gcoo_to_dense(vals, rows, cols, p, n):
+    """Inverse of dense_to_gcoo (padding entries are 0 and vanish)."""
+    g = vals.shape[0]
+    a = np.zeros((g * p, n), np.float32)
+    for gi in range(g):
+        for k in range(vals.shape[1]):
+            v = vals[gi, k]
+            if v != 0.0:
+                a[gi * p + rows[gi, k], cols[gi, k]] += v
+    return a
+
+
+def dense_to_ell(a, rowcap):
+    """Dense -> padded-CSR/ELL (vals (n,rowcap), cols (n,rowcap))."""
+    a = np.asarray(a)
+    n = a.shape[0]
+    vals = np.zeros((n, rowcap), np.float32)
+    cols = np.zeros((n, rowcap), np.int32)
+    for i in range(n):
+        (c,) = np.nonzero(a[i])
+        if len(c) > rowcap:
+            raise ValueError(f"row {i}: nnz {len(c)} exceeds rowcap {rowcap}")
+        vals[i, : len(c)] = a[i, c]
+        cols[i, : len(c)] = c
+    return vals, cols
+
+
+def ell_to_dense(vals, cols, n):
+    """Inverse of dense_to_ell."""
+    out = np.zeros((vals.shape[0], n), np.float32)
+    for i in range(vals.shape[0]):
+        for k in range(vals.shape[1]):
+            if vals[i, k] != 0.0:
+                out[i, cols[i, k]] += vals[i, k]
+    return out
+
+
+def random_sparse(n, sparsity, seed=0, pattern="uniform"):
+    """Random n×n f32 sparse matrix. Patterns mirror rust gen::.
+
+    uniform  — iid nonzero placement (the paper's random corpus)
+    diagonal — nonzeros on/near the diagonal (the paper's loss case)
+    banded   — nonzeros within a ±band of the diagonal
+    """
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    # Nonzero values must not themselves be ~0: resample tiny magnitudes so
+    # dense_to_* round-trips (np.nonzero) see exactly the intended support.
+    a = np.where(np.abs(a) < 1e-3, 1.0, a).astype(np.float32)
+    if pattern == "uniform":
+        mask = rng.random((n, n)) < (1.0 - sparsity)
+    elif pattern == "diagonal":
+        mask = np.zeros((n, n), bool)
+        width = max(1, int(round((1.0 - sparsity) * n)))
+        for d in range(-(width // 2), width - width // 2):
+            idx = np.arange(max(0, -d), min(n, n - d))
+            mask[idx, idx + d] = True
+    elif pattern == "banded":
+        half = max(1, int(round((1.0 - sparsity) * n / 2 * 3)))
+        ii, jj = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+        band = np.abs(ii - jj) <= half
+        mask = band & (rng.random((n, n)) < 0.34)
+    else:
+        raise ValueError(f"unknown pattern {pattern!r}")
+    return np.where(mask, a, 0.0).astype(np.float32)

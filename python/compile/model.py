@@ -1,0 +1,176 @@
+"""L2: the JAX compute graphs exported to the rust runtime.
+
+One jitted function per (algorithm × shape variant). This module is the
+single source of truth for the variant table — `aot.py` lowers every entry,
+`tests/` sweep them, and `artifacts/manifest.json` (consumed by the rust
+artifact registry, rust/src/runtime/registry.rs) is generated from it.
+
+Algorithms:
+  gcoo         — the paper's contribution: Pallas GCOOSpDM (bv-reuse on)
+  gcoo_noreuse — ablation: same kernel, same-column reuse disabled
+  csr          — cuSPARSE analog: padded-CSR row-split Pallas kernel
+  dense_pallas — cuBLAS analog as an explicit tiled Pallas GEMM
+  dense_xla    — cuBLAS analog as XLA's own fused GEMM (jnp.matmul); the
+                 vendor-optimized dense baseline for wall-clock comparisons
+"""
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gcoo_spdm import gcoo_spdm
+from compile.kernels.gcoo_spmv import gcoo_spmv
+from compile.kernels.csr_spdm import csr_spdm
+from compile.kernels.dense_gemm import dense_gemm
+
+# Export sizes. Pallas interpret-mode artifacts get expensive to *execute*
+# past n=1024 on CPU; the simgpu layer covers the paper's n up to 14500.
+SIZES = (256, 512, 1024)
+P = 8        # rows per GCOO band (paper's p, adapted: accumulator height)
+TB = 128     # C column tile width (lane dimension; the paper's b analog)
+RP = 8       # rows per program for the CSR kernel
+
+
+def gcoo_caps(n: int) -> List[int]:
+    """Per-band nnz capacities exported per size (density ~1/32, 1/8, 1/2)."""
+    return [P * n // 32, P * n // 8, P * n // 2]
+
+
+def csr_rowcaps(n: int) -> List[int]:
+    """Per-row nnz capacities exported per size."""
+    return [n // 32, n // 8, n // 2]
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One exportable computation: metadata + the jax callable."""
+    name: str
+    algo: str
+    n: int
+    params: Dict[str, int]
+    in_specs: Tuple[Tuple[str, str, Tuple[int, ...]], ...]  # (name, dtype, shape)
+    fn: Callable
+    out_shape: Tuple[int, ...] = None  # defaults to (n, n)
+
+    def output_shape(self):
+        return self.out_shape if self.out_shape is not None else (self.n, self.n)
+
+    def example_args(self):
+        return tuple(
+            jax.ShapeDtypeStruct(shape, jnp.dtype(dt)) for _, dt, shape in self.in_specs
+        )
+
+
+def _gcoo_variant(n: int, cap: int, reuse: bool) -> Variant:
+    g = n // P
+    tag = "gcoo" if reuse else "gcoo_noreuse"
+
+    def fn(vals, rows, cols, b):
+        return (gcoo_spdm(vals, rows, cols, b, p=P, tb=TB, reuse=reuse),)
+
+    return Variant(
+        name=f"{tag}_n{n}_p{P}_tb{TB}_cap{cap}",
+        algo=tag,
+        n=n,
+        params={"p": P, "tb": TB, "cap": cap},
+        in_specs=(
+            ("values", "float32", (g, cap)),
+            ("rows", "int32", (g, cap)),
+            ("cols", "int32", (g, cap)),
+            ("b", "float32", (n, n)),
+        ),
+        fn=fn,
+    )
+
+
+def _csr_variant(n: int, rowcap: int) -> Variant:
+    def fn(vals, cols, b):
+        return (csr_spdm(vals, cols, b, rp=RP, tb=TB),)
+
+    return Variant(
+        name=f"csr_n{n}_rp{RP}_tb{TB}_rowcap{rowcap}",
+        algo="csr",
+        n=n,
+        params={"rp": RP, "tb": TB, "rowcap": rowcap},
+        in_specs=(
+            ("values", "float32", (n, rowcap)),
+            ("cols", "int32", (n, rowcap)),
+            ("b", "float32", (n, n)),
+        ),
+        fn=fn,
+    )
+
+
+def _dense_pallas_variant(n: int) -> Variant:
+    t = min(128, n)
+
+    def fn(a, b):
+        return (dense_gemm(a, b, tm=t, tn=t, tk=t),)
+
+    return Variant(
+        name=f"dense_pallas_n{n}",
+        algo="dense_pallas",
+        n=n,
+        params={"tm": t, "tn": t, "tk": t},
+        in_specs=(("a", "float32", (n, n)), ("b", "float32", (n, n))),
+        fn=fn,
+    )
+
+
+def _gcoo_spmv_variant(n: int, cap: int) -> Variant:
+    g = n // P
+
+    def fn(vals, rows, cols, x):
+        return (gcoo_spmv(vals, rows, cols, x, p=P),)
+
+    return Variant(
+        name=f"gcoo_spmv_n{n}_p{P}_cap{cap}",
+        algo="gcoo_spmv",
+        n=n,
+        params={"p": P, "cap": cap},
+        in_specs=(
+            ("values", "float32", (g, cap)),
+            ("rows", "int32", (g, cap)),
+            ("cols", "int32", (g, cap)),
+            ("x", "float32", (n,)),
+        ),
+        fn=fn,
+        out_shape=(n,),
+    )
+
+
+def _dense_xla_variant(n: int) -> Variant:
+    def fn(a, b):
+        return (jnp.matmul(a, b),)
+
+    return Variant(
+        name=f"dense_xla_n{n}",
+        algo="dense_xla",
+        n=n,
+        params={},
+        in_specs=(("a", "float32", (n, n)), ("b", "float32", (n, n))),
+        fn=fn,
+    )
+
+
+def all_variants() -> List[Variant]:
+    """The full export table, deterministic order."""
+    out: List[Variant] = []
+    for n in SIZES:
+        for cap in gcoo_caps(n):
+            out.append(_gcoo_variant(n, cap, reuse=True))
+        # one ablation variant per size at the middle capacity
+        out.append(_gcoo_variant(n, gcoo_caps(n)[1], reuse=False))
+        for rowcap in csr_rowcaps(n):
+            out.append(_csr_variant(n, rowcap))
+        # SpMV extension (paper future work): one variant per size
+        out.append(_gcoo_spmv_variant(n, gcoo_caps(n)[1]))
+        out.append(_dense_pallas_variant(n))
+        out.append(_dense_xla_variant(n))
+    return out
+
+
+def variants_by_name() -> Dict[str, Variant]:
+    return {v.name: v for v in all_variants()}

@@ -1,0 +1,98 @@
+"""L1 performance analysis: VMEM footprint and bytes/FLOP per BlockSpec.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+Pallas layer is optimized *structurally*: every variant's per-program VMEM
+residency must fit the ~16 MB budget with double-buffering headroom, and the
+bytes-moved-per-FLOP ratio (the paper's operational intensity lens) is
+tracked analytically. Run:  python -m compile.vmem
+
+Used by EXPERIMENTS.md §Perf; the pytest in tests/test_vmem.py pins the
+budget so a regressive BlockSpec change fails CI.
+"""
+
+from dataclasses import dataclass
+
+from compile.model import all_variants, Variant
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TPU core (v4-ish)
+
+
+@dataclass
+class VmemReport:
+    name: str
+    algo: str
+    blocks_bytes: int          # resident input/output blocks per program
+    accum_bytes: int           # accumulator/scratch
+    total_bytes: int
+    fits: bool
+    headroom: float            # fraction of budget free (for double buffering)
+    bytes_per_flop: float      # HBM traffic per FLOP at nominal density
+
+
+def analyze(v: Variant, density: float = 0.01) -> VmemReport:
+    """Static analysis of the per-program VMEM residency for one variant."""
+    n = v.n
+    p = v.params.get("p", 8)
+    tb = v.params.get("tb", 128)
+    if v.algo == "gcoo_spmv":
+        cap = v.params["cap"]
+        blocks = cap * 12 + n * 4          # COO slabs + the x vector
+        accum = p * 4
+        nnz_g = max(1.0, p * n * density)
+        hbm = cap * 12 + n * 4 + p * 4
+        flops = 2.0 * nnz_g
+    elif v.algo.startswith("gcoo"):
+        cap = v.params["cap"]
+        # blocks: vals (1,cap) f32 + rows/cols (1,cap) i32 + B stripe (n,tb) f32
+        blocks = cap * 4 * 3 + n * tb * 4
+        accum = p * tb * 4
+        # HBM per program: COO slabs + B stripe + C block; FLOPs: 2·nnz_g·tb
+        nnz_g = max(1.0, p * n * density)
+        hbm = cap * 12 + n * tb * 4 + p * tb * 4
+        flops = 2.0 * nnz_g * tb
+    elif v.algo == "csr":
+        rowcap = v.params["rowcap"]
+        rp = v.params.get("rp", 8)
+        blocks = rp * rowcap * 8 + n * tb * 4
+        accum = rp * tb * 4
+        nnz_rows = max(1.0, rp * n * density)
+        hbm = rp * rowcap * 8 + n * tb * 4 + rp * tb * 4
+        flops = 2.0 * nnz_rows * tb
+    elif v.algo == "dense_pallas":
+        tm = v.params.get("tm", 128)
+        tn = v.params.get("tn", 128)
+        tk = v.params.get("tk", 128)
+        blocks = (tm * tk + tk * tn) * 4
+        accum = tm * tn * 4
+        hbm = (tm * tk + tk * tn) * 4
+        flops = 2.0 * tm * tn * tk
+    else:  # dense_xla — XLA's own tiling; report the dot's aggregate ratio
+        blocks = 0
+        accum = 0
+        hbm = 3 * n * n * 4
+        flops = 2.0 * float(n) ** 3
+    total = blocks + accum
+    return VmemReport(
+        name=v.name,
+        algo=v.algo,
+        blocks_bytes=blocks,
+        accum_bytes=accum,
+        total_bytes=total,
+        fits=total <= VMEM_BUDGET,
+        headroom=1.0 - total / VMEM_BUDGET,
+        bytes_per_flop=hbm / flops,
+    )
+
+
+def main():
+    print(f"{'variant':<40} {'vmem_kb':>9} {'fits':>5} {'headroom':>9} {'B/FLOP':>8}")
+    for v in all_variants():
+        r = analyze(v)
+        print(
+            f"{r.name:<40} {r.total_bytes / 1024:>9.1f} {str(r.fits):>5} "
+            f"{r.headroom:>9.2%} {r.bytes_per_flop:>8.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

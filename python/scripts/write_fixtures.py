@@ -1,0 +1,68 @@
+"""Write cross-language format fixtures consumed by rust/tests/format_fixtures.rs.
+
+The matrix is defined by a closed-form rule (no RNG) so rust can reconstruct
+it exactly:  a[i,j] = ((i + 2j) % 5) + 1  if (i*31 + j*17) % 7 == 0 else 0.
+
+Usage: cd python && python scripts/write_fixtures.py ../tests_fixtures
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile.kernels import ref  # noqa: E402
+
+
+def rule_matrix(n):
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(n):
+            if (i * 31 + j * 17) % 7 == 0:
+                a[i, j] = float((i + 2 * j) % 5 + 1)
+    return a
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "../tests_fixtures"
+    os.makedirs(out_dir, exist_ok=True)
+    n, p = 32, 8
+    a = rule_matrix(n)
+    cap = p * n
+    vals, rows, cols, nnz = ref.dense_to_gcoo(a, p, cap)
+    # Trim each band to its nnz for a compact fixture (padding is implied).
+    bands = []
+    for gi in range(n // p):
+        k = int(nnz[gi])
+        bands.append(
+            {
+                "vals": [float(v) for v in vals[gi, :k]],
+                "rows": [int(r) for r in rows[gi, :k]],
+                "cols": [int(c) for c in cols[gi, :k]],
+            }
+        )
+    evals, ecols = ref.dense_to_ell(a, rowcap=n)
+    ell_rows = []
+    for i in range(n):
+        k = int(np.count_nonzero(evals[i]))
+        ell_rows.append(
+            {"vals": [float(v) for v in evals[i, :k]], "cols": [int(c) for c in ecols[i, :k]]}
+        )
+    fixture = {
+        "n": n,
+        "p": p,
+        "rule": "a[i,j] = ((i+2j)%5)+1 if (i*31+j*17)%7==0 else 0",
+        "nnz": int(nnz.sum()),
+        "gcoo_bands": bands,
+        "ell_rows": ell_rows,
+    }
+    path = os.path.join(out_dir, "format_fixture.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f, indent=1)
+    print(f"wrote {path} (nnz={fixture['nnz']})")
+
+
+if __name__ == "__main__":
+    main()

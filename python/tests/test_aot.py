@@ -1,0 +1,98 @@
+"""AOT exporter: HLO text properties and manifest generation.
+
+These pin the interchange contract the rust runtime depends on:
+HLO *text* beginning with `HloModule`, a tuple-wrapped single output, and a
+manifest whose shapes match the variant table exactly.
+"""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import model
+from compile.aot import export_variant, to_hlo_text
+
+
+@pytest.fixture(scope="module")
+def small_gcoo_variant():
+    return min(
+        (v for v in model.all_variants() if v.algo == "gcoo"),
+        key=lambda v: (v.n, v.params["cap"]),
+    )
+
+
+class TestHloText:
+    def test_starts_with_hlomodule_and_has_entry(self, small_gcoo_variant):
+        v = small_gcoo_variant
+        text = to_hlo_text(jax.jit(v.fn).lower(*v.example_args()))
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_scan_stays_rolled(self, small_gcoo_variant):
+        """The cap-length scan must lower to a while loop, not be unrolled —
+        unrolling would blow up artifact size and compile time (L2 §Perf)."""
+        v = small_gcoo_variant
+        text = to_hlo_text(jax.jit(v.fn).lower(*v.example_args()))
+        assert "while(" in text or "while " in text, "scan was unrolled"
+        # artifact stays small because the loop is rolled
+        assert len(text) < 200_000
+
+    def test_output_is_tuple_wrapped(self, small_gcoo_variant):
+        v = small_gcoo_variant
+        text = to_hlo_text(jax.jit(v.fn).lower(*v.example_args()))
+        # return_tuple=True ⇒ ENTRY computation root is a tuple
+        assert "tuple(" in text or "(f32[" in text
+
+
+class TestExport:
+    def test_export_writes_file_and_entry(self, tmp_path, small_gcoo_variant):
+        v = small_gcoo_variant
+        entry = export_variant(v, str(tmp_path))
+        path = tmp_path / entry["file"]
+        assert path.exists() and path.stat().st_size > 0
+        assert entry["name"] == v.name
+        assert entry["algo"] == v.algo
+        assert entry["inputs"][0]["shape"] == list(v.in_specs[0][2])
+        assert len(entry["sha256"]) == 64
+
+    def test_export_is_incremental(self, tmp_path, small_gcoo_variant):
+        v = small_gcoo_variant
+        e1 = export_variant(v, str(tmp_path))
+        mtime = (tmp_path / e1["file"]).stat().st_mtime_ns
+        e2 = export_variant(v, str(tmp_path))  # no force: must skip rewrite
+        assert (tmp_path / e2["file"]).stat().st_mtime_ns == mtime
+        assert e1["sha256"] == e2["sha256"]
+
+    def test_force_rewrites(self, tmp_path, small_gcoo_variant):
+        v = small_gcoo_variant
+        export_variant(v, str(tmp_path))
+        e2 = export_variant(v, str(tmp_path), force=True)
+        assert len(e2["sha256"]) == 64
+
+
+class TestRealManifest:
+    """When `make artifacts` has run, the shipped manifest must be coherent."""
+
+    @pytest.fixture()
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_manifest_covers_variant_table(self, manifest):
+        names = {a["name"] for a in manifest["artifacts"]}
+        expected = {v.name for v in model.all_variants()}
+        assert expected <= names
+
+    def test_manifest_files_exist_and_hash(self, manifest):
+        import hashlib
+        base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        for a in manifest["artifacts"][:5]:  # spot check
+            p = os.path.join(base, a["file"])
+            assert os.path.exists(p), a["file"]
+            h = hashlib.sha256(open(p, "rb").read()).hexdigest()
+            assert h == a["sha256"], a["file"]

@@ -1,0 +1,114 @@
+"""Host-side format builders: round trips and structural invariants.
+
+These mirror the rust sparse:: module; cross-language agreement is pinned by
+rust/tests/format_fixtures.rs on fixtures written by scripts/write_fixtures.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+class TestGcooRoundTrip:
+    @pytest.mark.parametrize("pattern", ["uniform", "diagonal", "banded"])
+    def test_round_trip(self, pattern):
+        n, p = 64, 8
+        a = ref.random_sparse(n, 0.9, seed=0, pattern=pattern)
+        vals, rows, cols, nnz = ref.dense_to_gcoo(a, p, cap=p * n)
+        back = ref.gcoo_to_dense(vals, rows, cols, p, n)
+        np.testing.assert_array_equal(a, back)
+
+    def test_band_sorted_by_col_then_row(self):
+        """The sort order is the contract the bv-reuse scan depends on."""
+        n, p = 64, 8
+        a = ref.random_sparse(n, 0.8, seed=1)
+        vals, rows, cols, nnz = ref.dense_to_gcoo(a, p, cap=p * n)
+        for gi in range(n // p):
+            k = nnz[gi]
+            cc, rr = cols[gi, :k], rows[gi, :k]
+            key = cc.astype(np.int64) * p + rr
+            assert np.all(np.diff(key) > 0), f"band {gi} not strictly (col,row)-sorted"
+
+    def test_rows_are_band_local(self):
+        n, p = 32, 8
+        a = ref.random_sparse(n, 0.7, seed=2)
+        _, rows, _, nnz = ref.dense_to_gcoo(a, p, cap=p * n)
+        for gi in range(n // p):
+            assert rows[gi, : nnz[gi]].max(initial=0) < p
+
+    def test_nnz_conservation(self):
+        n, p = 64, 8
+        a = ref.random_sparse(n, 0.9, seed=3)
+        _, _, _, nnz = ref.dense_to_gcoo(a, p, cap=p * n)
+        assert nnz.sum() == np.count_nonzero(a)
+
+    def test_cap_overflow_raises(self):
+        n, p = 32, 8
+        a = np.ones((n, n), np.float32)
+        with pytest.raises(ValueError):
+            ref.dense_to_gcoo(a, p, cap=4)
+
+    def test_p_must_divide_n(self):
+        a = np.zeros((30, 30), np.float32)
+        with pytest.raises(ValueError):
+            ref.dense_to_gcoo(a, 8, cap=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        logn=st.integers(3, 6),
+        p_exp=st.integers(0, 3),
+        sparsity=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_round_trip_property(self, logn, p_exp, sparsity, seed):
+        n, p = 2**logn, 2**p_exp
+        if p > n:
+            p = n
+        a = ref.random_sparse(n, sparsity, seed=seed)
+        vals, rows, cols, _ = ref.dense_to_gcoo(a, p, cap=p * n)
+        np.testing.assert_array_equal(ref.gcoo_to_dense(vals, rows, cols, p, n), a)
+
+
+class TestEllRoundTrip:
+    def test_round_trip(self):
+        n = 64
+        a = ref.random_sparse(n, 0.9, seed=4)
+        vals, cols = ref.dense_to_ell(a, rowcap=n)
+        np.testing.assert_array_equal(ref.ell_to_dense(vals, cols, n), a)
+
+    def test_rowcap_overflow_raises(self):
+        a = np.ones((8, 8), np.float32)
+        with pytest.raises(ValueError):
+            ref.dense_to_ell(a, rowcap=4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(logn=st.integers(3, 6), sparsity=st.floats(0.0, 1.0),
+           seed=st.integers(0, 2**31 - 1))
+    def test_round_trip_property(self, logn, sparsity, seed):
+        n = 2**logn
+        a = ref.random_sparse(n, sparsity, seed=seed)
+        vals, cols = ref.dense_to_ell(a, rowcap=n)
+        np.testing.assert_array_equal(ref.ell_to_dense(vals, cols, n), a)
+
+
+class TestRandomSparse:
+    def test_sparsity_approximately_honored(self):
+        a = ref.random_sparse(256, 0.9, seed=5)
+        actual = 1.0 - np.count_nonzero(a) / a.size
+        assert abs(actual - 0.9) < 0.03
+
+    def test_deterministic(self):
+        np.testing.assert_array_equal(
+            ref.random_sparse(64, 0.5, seed=6), ref.random_sparse(64, 0.5, seed=6)
+        )
+
+    def test_diagonal_pattern_on_diagonal(self):
+        a = ref.random_sparse(64, 0.99, seed=7, pattern="diagonal")
+        r, c = np.nonzero(a)
+        assert np.abs(r - c).max(initial=0) <= 2
+
+    def test_unknown_pattern_raises(self):
+        with pytest.raises(ValueError):
+            ref.random_sparse(16, 0.5, pattern="nope")

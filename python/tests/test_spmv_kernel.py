@@ -1,0 +1,66 @@
+"""L1 correctness: the GCOO SpMV extension kernel vs the dense oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.gcoo_spmv import gcoo_spmv
+from compile.kernels import ref
+
+
+def run_spmv(a, x, p, cap, reuse=True):
+    vals, rows, cols, _ = ref.dense_to_gcoo(a, p, cap)
+    y = gcoo_spmv(jnp.asarray(vals), jnp.asarray(rows), jnp.asarray(cols),
+                  jnp.asarray(x), p=p, reuse=reuse)
+    return np.asarray(y)
+
+
+class TestBasics:
+    def test_identity(self):
+        n, p = 32, 8
+        x = np.arange(n, dtype=np.float32)
+        y = run_spmv(np.eye(n, dtype=np.float32), x, p, cap=p)
+        np.testing.assert_allclose(y, x, rtol=1e-6)
+
+    def test_zero(self):
+        y = run_spmv(np.zeros((16, 16), np.float32), np.ones(16, np.float32), 8, cap=4)
+        np.testing.assert_array_equal(y, np.zeros(16, np.float32))
+
+    def test_dense_column_reuse_path(self):
+        n, p = 32, 8
+        a = np.zeros((n, n), np.float32)
+        a[:, 5] = 2.0
+        x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+        y = run_spmv(a, x, p, cap=2 * p)
+        np.testing.assert_allclose(y, a @ x, rtol=1e-5, atol=1e-5)
+
+    def test_reuse_matches_noreuse(self):
+        n, p = 64, 8
+        a = ref.random_sparse(n, 0.9, seed=1)
+        x = np.random.default_rng(2).standard_normal(n).astype(np.float32)
+        np.testing.assert_array_equal(
+            run_spmv(a, x, p, cap=256, reuse=True),
+            run_spmv(a, x, p, cap=256, reuse=False),
+        )
+
+
+class TestSweep:
+    @pytest.mark.parametrize("pattern", ["uniform", "diagonal", "banded"])
+    def test_patterns(self, pattern):
+        n, p = 64, 8
+        a = ref.random_sparse(n, 0.95, seed=3, pattern=pattern)
+        x = np.random.default_rng(4).standard_normal(n).astype(np.float32)
+        y = run_spmv(a, x, p, cap=p * n)
+        np.testing.assert_allclose(y, a @ x, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(logn=st.integers(4, 6), sparsity=st.floats(0.0, 0.99),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, logn, sparsity, seed):
+        n, p = 2 ** logn, 8
+        a = ref.random_sparse(n, sparsity, seed=seed)
+        x = np.random.default_rng(seed + 1).standard_normal(n).astype(np.float32)
+        y = run_spmv(a, x, p, cap=p * n)
+        np.testing.assert_allclose(y, a @ x, rtol=1e-3, atol=1e-3)

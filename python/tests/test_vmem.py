@@ -1,0 +1,57 @@
+"""L1 §Perf gate: every exported variant's per-program VMEM residency must
+fit the budget with double-buffering headroom, and the sparse kernels must
+beat the dense kernel on bytes/FLOP at their design density."""
+
+import pytest
+
+from compile import model
+from compile.vmem import analyze, VMEM_BUDGET
+
+
+@pytest.fixture(scope="module")
+def reports():
+    return {v.name: (v, analyze(v)) for v in model.all_variants()}
+
+
+def test_every_variant_fits_vmem(reports):
+    for name, (_v, r) in reports.items():
+        assert r.fits, f"{name}: {r.total_bytes} bytes exceeds {VMEM_BUDGET}"
+
+
+def test_headroom_allows_double_buffering(reports):
+    # ≥50% headroom ⇒ the next grid step's blocks can prefetch while the
+    # current one computes.
+    for name, (v, r) in reports.items():
+        if v.algo == "dense_xla":
+            continue
+        assert r.headroom >= 0.5, f"{name}: headroom {r.headroom:.2%}"
+
+
+def test_sparse_kernels_are_memory_bound_dense_is_not(reports):
+    # The paper's premise (§II-A): SpDM sits deep in the memory-bound
+    # region, dense GEMM near the compute-bound region.
+    for v in model.all_variants():
+        r = analyze(v, density=0.01)
+        if v.algo in ("gcoo", "gcoo_noreuse", "csr"):
+            assert r.bytes_per_flop > 5.0, f"{v.name}: {r.bytes_per_flop}"
+        if v.algo == "dense_pallas":
+            assert r.bytes_per_flop < 0.1, f"{v.name}: {r.bytes_per_flop}"
+
+
+def test_tighter_capacity_means_lower_traffic(reports):
+    # Smallest-cap artifact routing (runtime::Registry::select) is justified:
+    # per-program traffic grows monotonically with cap at fixed n.
+    for n in model.SIZES:
+        caps = sorted(
+            (v.params["cap"], analyze(v, density=0.01).bytes_per_flop)
+            for v in model.all_variants()
+            if v.algo == "gcoo" and v.n == n
+        )
+        for (c1, b1), (c2, b2) in zip(caps, caps[1:]):
+            assert b1 <= b2, f"n={n}: cap {c1}->{c2} traffic {b1}->{b2}"
+
+
+def test_accumulator_pressure_bounded(reports):
+    # p*tb*4 accumulator bytes stay register/VMEM-friendly (≤ 256 KB).
+    for name, (v, r) in reports.items():
+        assert r.accum_bytes <= 256 * 1024, f"{name}: accum {r.accum_bytes}"

@@ -1,0 +1,86 @@
+//! Ablation bench: the (p, b) design space of GCOOSpDM (DESIGN.md §Perf,
+//! paper §VI future work) — simulated kernel time across band heights and
+//! block widths, per structural family, plus the autotuner's pick.
+
+use gcoospdm::autotune::{analytic_cost, Autotuner, MatrixStats, B_CANDIDATES, P_CANDIDATES};
+use gcoospdm::bench::Table;
+use gcoospdm::gen;
+use gcoospdm::rng::Rng;
+use gcoospdm::simgpu::{self, GcooStructure, WalkConfig, TITANX};
+use gcoospdm::sparse::Gcoo;
+
+fn main() {
+    let n = 1024;
+    let mut t = Table::new(
+        "Ablation: simulated GCOO time (µs, TitanX) across (p, b) per structure",
+        &["pattern", "sparsity", "p", "b", "sim_us", "analytic_rank"],
+    );
+    let mut picks = Table::new(
+        "Autotuner picks vs exhaustive best",
+        &["pattern", "sparsity", "picked_p", "picked_b", "best_p", "best_b", "pick_within_pct"],
+    );
+
+    for &(pattern, s) in &[
+        (gen::Pattern::Uniform, 0.99),
+        (gen::Pattern::Uniform, 0.98),
+        (gen::Pattern::DenseColumns, 0.99),
+        (gen::Pattern::Diagonal, 0.99),
+        (gen::Pattern::PowerLawRows, 0.99),
+    ] {
+        let mut rng = Rng::new(0xAB1A);
+        let a = gen::generate(pattern, n, s, &mut rng);
+        let base = Gcoo::from_dense(&a, 8);
+        let stats = MatrixStats::measure(&base);
+        let tuner = Autotuner::new(&TITANX);
+        let ranked = tuner.rank(&stats);
+
+        let mut best: Option<(usize, usize, f64)> = None;
+        for &p in &P_CANDIDATES {
+            let rebanded = Gcoo::from_csr(
+                &gcoospdm::sparse::Csr::from_dense(&a),
+                p,
+            );
+            let st = GcooStructure::new(&rebanded);
+            for &b in &B_CANDIDATES {
+                let cfg = WalkConfig { b, sample_blocks: 32, seed: 3 };
+                let rep = simgpu::simulate_gcoo(&st, &TITANX, &cfg, true);
+                let us = rep.time_s() * 1e6;
+                let rank = ranked
+                    .iter()
+                    .position(|c| c.p == p && c.b == b)
+                    .map(|i| (i + 1).to_string())
+                    .unwrap_or_default();
+                t.row(&[
+                    pattern.name().into(),
+                    format!("{s}"),
+                    p.to_string(),
+                    b.to_string(),
+                    format!("{us:.2}"),
+                    rank,
+                ]);
+                if best.map_or(true, |(_, _, t0)| us < t0) {
+                    best = Some((p, b, us));
+                }
+                // analytic model consistency (ranking is advisory)
+                let _ = analytic_cost(&stats, p, b);
+            }
+        }
+        let mut tuner = Autotuner::new(&TITANX);
+        let choice = tuner.tune(&base);
+        let (bp, bb, bt) = best.unwrap();
+        let picked_t = choice.measured_s.unwrap_or(f64::INFINITY) * 1e6;
+        picks.row(&[
+            pattern.name().into(),
+            format!("{s}"),
+            choice.p.to_string(),
+            choice.b.to_string(),
+            bp.to_string(),
+            bb.to_string(),
+            format!("{:.0}%", 100.0 * (picked_t / bt - 1.0).max(0.0)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{}", picks.render());
+    t.write_csv("results/ablation_pb.csv");
+    picks.write_csv("results/ablation_picks.csv");
+}

@@ -1,0 +1,72 @@
+//! Bench: measured CPU wall-clock of the real AOT kernels via PJRT —
+//! this testbed's analog of the paper's kernel-time comparisons, honestly
+//! labeled (interpret-mode Pallas on CPU measures algorithm structure, not
+//! GPU performance; see EXPERIMENTS.md).
+//!
+//! Per (n, sparsity): GCOOSpDM vs GCOO-noreuse (ablation) vs CSR vs
+//! dense_xla (vendor GEMM) vs dense_pallas, plus EO (conversion) split.
+
+use gcoospdm::bench::{Bencher, Table};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::sparse::{Csr, Ell, Gcoo};
+
+fn main() {
+    let reg = match Registry::load("artifacts") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cpu_wallclock: {e}; run `make artifacts`");
+            return;
+        }
+    };
+    let engine = Engine::new().expect("PJRT CPU client");
+    println!("PJRT platform: {}", engine.platform());
+
+    let mut t = Table::new(
+        "Measured CPU wall-clock per kernel (median of repeated runs, ms)",
+        &["n", "sparsity", "gcoo", "gcoo_noreuse", "csr", "dense_xla", "dense_pallas", "convert_eo"],
+    );
+    let bencher = Bencher::quick();
+
+    for &(n, s) in &[
+        (256usize, 0.98f64),
+        (256, 0.995),
+        (512, 0.98),
+        (512, 0.995),
+        (1024, 0.995),
+    ] {
+        let mut rng = Rng::new(0xCA11 ^ n as u64);
+        let a = gen::uniform(n, s, &mut rng);
+        let b = Mat::randn(n, n, &mut rng);
+
+        let t_conv = std::time::Instant::now();
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(reg.select("gcoo", n, gcoo.max_group_nnz()).unwrap().param("cap").unwrap()).unwrap();
+        let csr = Csr::from_dense(&a);
+        let rowcap = reg.select("csr", n, csr.max_row_nnz()).unwrap().param("rowcap").unwrap();
+        let ell = Ell::from_csr(&csr, rowcap).unwrap();
+        let convert_ms = t_conv.elapsed().as_secs_f64() * 1e3;
+
+        let g = bencher.run(|| engine.run_gcoo(&reg, &padded, &b, true).unwrap());
+        let gn = bencher.run(|| engine.run_gcoo(&reg, &padded, &b, false).unwrap());
+        let c = bencher.run(|| engine.run_csr(&reg, &ell, &b).unwrap());
+        let dx = bencher.run(|| engine.run_dense(&reg, "dense_xla", &a, &b).unwrap());
+        let dp = bencher.run(|| engine.run_dense(&reg, "dense_pallas", &a, &b).unwrap());
+
+        t.row(&[
+            n.to_string(),
+            format!("{s}"),
+            format!("{:.3}", g.median() * 1e3),
+            format!("{:.3}", gn.median() * 1e3),
+            format!("{:.3}", c.median() * 1e3),
+            format!("{:.3}", dx.median() * 1e3),
+            format!("{:.3}", dp.median() * 1e3),
+            format!("{:.3}", convert_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv("results/cpu_wallclock.csv");
+    println!("CSV written to results/cpu_wallclock.csv");
+}

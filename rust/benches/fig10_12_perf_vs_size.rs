@@ -1,0 +1,4 @@
+//! Bench: regenerate paper Figs 10-12 (effective GFLOPS vs n at s ∈ {0.98, 0.995}).
+fn main() {
+    gcoospdm::figures::fig10_12_perf_vs_size().print();
+}

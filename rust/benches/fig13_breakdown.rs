@@ -1,0 +1,4 @@
+//! Bench: regenerate paper Fig 13 (EO vs KC time breakdown).
+fn main() {
+    gcoospdm::figures::fig13_breakdown().print();
+}

@@ -1,0 +1,4 @@
+//! Bench: regenerate paper Fig 14 (transaction distributions vs n and s).
+fn main() {
+    gcoospdm::figures::fig14_instructions().print();
+}

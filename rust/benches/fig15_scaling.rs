@@ -1,0 +1,4 @@
+//! Bench: regenerate paper Fig 15 (kernel-time scaling vs n and s).
+fn main() {
+    gcoospdm::figures::fig15_scaling().print();
+}

@@ -1,0 +1,4 @@
+//! Bench: regenerate paper Fig 1 (roofline model + measured dense GEMM).
+fn main() {
+    gcoospdm::figures::fig1_roofline().print();
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper Fig 4 (public-corpus speedup histogram, 3 GPUs).
+//! Scale via env: FIG4_COUNT (default 300), FIG4_MAX_N (default 1536).
+fn main() {
+    let count = std::env::var("FIG4_COUNT").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    let max_n = std::env::var("FIG4_MAX_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1536);
+    gcoospdm::figures::fig4_public_hist(count, max_n).print();
+}

@@ -1,0 +1,5 @@
+//! Bench: regenerate paper Fig 5 / Table III (14 selected matrices, P100).
+fn main() {
+    let max_n = std::env::var("FIG5_MAX_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1536);
+    gcoospdm::figures::fig5_selected(max_n).print();
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Fig 6 (random-matrix speedup histogram, 3 GPUs).
+fn main() {
+    let count = std::env::var("FIG6_COUNT").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    let max_n = std::env::var("FIG6_MAX_N").ok().and_then(|v| v.parse().ok()).unwrap_or(2048);
+    gcoospdm::figures::fig6_random_hist(count, max_n).print();
+}

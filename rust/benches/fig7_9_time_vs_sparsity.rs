@@ -1,0 +1,5 @@
+//! Bench: regenerate paper Figs 7-9 (time vs sparsity, n ∈ {4000, 14000},
+//! GTX980 / TitanX / P100, including the cuBLAS constant line).
+fn main() {
+    gcoospdm::figures::fig7_9_time_vs_sparsity().print();
+}

@@ -1,0 +1,78 @@
+//! §Perf harness: micro-profiles of the L3 hot paths (walkers, conversion,
+//! queue, selector) — the before/after numbers in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use gcoospdm::bench::{black_box, Bencher};
+use gcoospdm::coordinator::BoundedQueue;
+use gcoospdm::convert;
+use gcoospdm::gen;
+use gcoospdm::rng::Rng;
+use gcoospdm::simgpu::{self, SyntheticUniform, WalkConfig, TITANX};
+
+fn main() {
+    let b = Bencher::default();
+
+    // --- simgpu walkers (the figure benches' dominant cost) ---
+    for (n, s) in [(4000usize, 0.9f64), (4000, 0.995), (14000, 0.995)] {
+        let st = SyntheticUniform::new(n, s, 8, 7);
+        let cfg = WalkConfig::default();
+        let g = b.run(|| black_box(simgpu::gcoo_walk(&st, &TITANX, &cfg, true)));
+        let c = b.run(|| black_box(simgpu::csr_walk(&st, &TITANX, &cfg)));
+        println!(
+            "walk n={n} s={s}: gcoo {:.1} ms | csr {:.1} ms (median)",
+            g.median() * 1e3,
+            c.median() * 1e3
+        );
+    }
+    {
+        let cfg = WalkConfig::default();
+        let d = b.run(|| black_box(simgpu::gemm_walk(4096, &TITANX, &cfg)));
+        println!("walk gemm n=4096: {:.1} ms", d.median() * 1e3);
+    }
+
+    // --- dense→GCOO conversion (Algorithm 1) throughput ---
+    for n in [1024usize, 2048] {
+        let mut rng = Rng::new(1);
+        let a = gen::uniform(n, 0.99, &mut rng);
+        for threads in [1usize, 4] {
+            let t = b.run(|| black_box(convert::dense_to_gcoo_parallel(&a, 8, threads)));
+            let gbps = (n * n * 4) as f64 / t.median() / 1e9;
+            println!(
+                "convert n={n} threads={threads}: {:.2} ms ({gbps:.2} GB/s scan)",
+                t.median() * 1e3
+            );
+        }
+    }
+
+    // --- queue throughput (submit/dispatch overhead) ---
+    {
+        let q: BoundedQueue<(usize, usize)> = BoundedQueue::new(1 << 14);
+        let t0 = Instant::now();
+        let ops = 200_000usize;
+        for i in 0..ops {
+            q.try_push((i % 4, i)).unwrap();
+            if i % 8 == 7 {
+                black_box(q.pop_batch(8, |h, c| h.0 == c.0));
+            }
+        }
+        while q.pop_batch(64, |_, _| true).is_some() {
+            if q.is_empty() {
+                break;
+            }
+        }
+        let per_op = t0.elapsed().as_secs_f64() / ops as f64;
+        println!("queue: {:.0} ns/op (push + amortized batch-pop)", per_op * 1e9);
+    }
+
+    // --- selector planning latency ---
+    {
+        use gcoospdm::coordinator::{Selector, SelectorPolicy};
+        use gcoospdm::runtime::Registry;
+        if let Ok(reg) = Registry::load("artifacts") {
+            let sel = Selector::new(SelectorPolicy::default());
+            let t = b.run(|| black_box(sel.plan(&reg, 512, 0.99, 100, 50, None).unwrap()));
+            println!("selector plan: {:.2} µs", t.median() * 1e6);
+        }
+    }
+}

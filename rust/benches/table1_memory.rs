@@ -1,0 +1,4 @@
+//! Bench: regenerate paper Table I (format memory consumption).
+fn main() {
+    gcoospdm::figures::table1_memory().print();
+}

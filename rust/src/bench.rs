@@ -1,0 +1,288 @@
+//! Measurement harness substrate (the offline image has no criterion).
+//!
+//! `cargo bench` targets use [`Bencher`] for timed closures and
+//! [`Series`]/[`Table`] to print the paper-style rows each bench regenerates,
+//! plus CSV dumps under results/ so EXPERIMENTS.md numbers are reproducible.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// Robust statistics over a set of timing samples (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn median(&self) -> f64 {
+        crate::ndarray::percentile(&self.samples, 50.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.samples.len() as f64;
+        var.sqrt()
+    }
+
+    /// Median absolute deviation — robust spread estimate.
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let devs: Vec<f64> = self.samples.iter().map(|x| (x - med).abs()).collect();
+        crate::ndarray::percentile(&devs, 50.0)
+    }
+}
+
+/// Timed-measurement runner: warmup then fixed-count or time-budgeted sampling.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub time_budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 5,
+            max_iters: 100,
+            time_budget: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for slow end-to-end cases.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            time_budget: Duration::from_millis(500),
+        }
+    }
+
+    /// Measure `f` (its return value is passed to a sink to prevent DCE).
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && started.elapsed() < self.time_budget)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Stats { samples }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A named series of (x, y) points — one line in a paper figure.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Fixed-width text table mirroring a paper table/figure's rows.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(s, "{:<w$}  ", cell, w = widths[c]);
+            }
+            s.trim_end().to_string()
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Write as CSV into results/ (best-effort; benches must not fail on IO).
+    pub fn write_csv(&self, path: &str) {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let _ = std::fs::write(path, out);
+    }
+}
+
+/// Histogram with fixed bin edges — the paper's Fig 4/6 presentation.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub edges: Vec<f64>,   // len = bins + 1; last bin is open-ended
+    pub counts: Vec<u64>,  // len = bins
+}
+
+impl Histogram {
+    /// Paper Fig 4/6 bins: [0,0.2), [0.2,0.4), …, [1.8,2.0), [2.0, ∞).
+    pub fn paper_ratio_bins() -> Self {
+        let edges: Vec<f64> = (0..=10).map(|i| i as f64 * 0.2).collect();
+        let counts = vec![0; edges.len()]; // last = 2.0+
+        Histogram { edges, counts }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        for i in 0..self.edges.len() - 1 {
+            if x >= self.edges[i] && x < self.edges[i + 1] {
+                self.counts[i] += 1;
+                return;
+            }
+        }
+        *self.counts.last_mut().unwrap() += 1; // open-ended final bin
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fraction of samples at or above `threshold`'s bin start.
+    pub fn frac_at_least(&self, threshold: f64) -> f64 {
+        let total = self.total() as f64;
+        // counts[i] pairs with edges[i] as its bin start; the final count is
+        // the open-ended bin starting at the last edge.
+        let sum: u64 = self
+            .edges
+            .iter()
+            .zip(&self.counts)
+            .filter(|(e, _)| **e >= threshold - 1e-12)
+            .map(|(_, c)| *c)
+            .sum::<u64>();
+        sum as f64 / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_collects_min_iters() {
+        let b = Bencher { warmup_iters: 0, min_iters: 4, max_iters: 8, time_budget: Duration::ZERO };
+        let stats = b.run(|| 1 + 1);
+        assert!(stats.samples.len() >= 4);
+        assert!(stats.samples.len() <= 8);
+    }
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats { samples: vec![1.0, 2.0, 3.0, 4.0] };
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.median(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!(s.stddev() > 0.0);
+        assert_eq!(s.mad(), 1.0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("333"));
+        assert_eq!(r.lines().count(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_width_checked() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn histogram_paper_bins() {
+        let mut h = Histogram::paper_ratio_bins();
+        h.add(0.1);   // [0, .2)
+        h.add(1.95);  // [1.8, 2)
+        h.add(2.5);   // 2.0+
+        h.add(7.0);   // 2.0+
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(*h.counts.last().unwrap(), 2);
+        assert!((h.frac_at_least(2.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_frac_at_least_one() {
+        let mut h = Histogram::paper_ratio_bins();
+        for x in [0.5, 1.1, 1.3, 2.2] {
+            h.add(x);
+        }
+        assert!((h.frac_at_least(1.0) - 0.75).abs() < 1e-12);
+    }
+}

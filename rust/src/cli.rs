@@ -1,0 +1,175 @@
+//! Command-line argument parser substrate (the offline image has no clap).
+//!
+//! Model: `binary <subcommand> [--flag value]... [--switch]...`. Parsed into
+//! an [`Args`] bag with typed accessors and unknown-flag rejection against a
+//! declared spec.
+
+use std::collections::HashMap;
+
+/// Declared flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    values: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Parse argv (without the program name) against the declared flags.
+pub fn parse(argv: &[String], flags: &[FlagSpec]) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    if let Some(first) = it.peek() {
+        if !first.starts_with("--") {
+            args.subcommand = it.next().unwrap().clone();
+        }
+    }
+    while let Some(tok) = it.next() {
+        let name = tok
+            .strip_prefix("--")
+            .ok_or_else(|| format!("unexpected positional argument {tok:?}"))?;
+        // support --name=value
+        let (name, inline_val) = match name.split_once('=') {
+            Some((n, v)) => (n, Some(v.to_string())),
+            None => (name, None),
+        };
+        let spec = flags
+            .iter()
+            .find(|f| f.name == name)
+            .ok_or_else(|| format!("unknown flag --{name}"))?;
+        if spec.takes_value {
+            let val = match inline_val {
+                Some(v) => v,
+                None => it
+                    .next()
+                    .ok_or_else(|| format!("--{name} requires a value"))?
+                    .clone(),
+            };
+            args.values.insert(name.to_string(), val);
+        } else {
+            if inline_val.is_some() {
+                return Err(format!("--{name} does not take a value"));
+            }
+            args.switches.push(name.to_string());
+        }
+    }
+    Ok(args)
+}
+
+/// Render a usage block for the declared flags.
+pub fn usage(program: &str, subcommands: &[(&str, &str)], flags: &[FlagSpec]) -> String {
+    let mut out = format!("usage: {program} <subcommand> [flags]\n\nsubcommands:\n");
+    for (name, help) in subcommands {
+        out.push_str(&format!("  {name:<12} {help}\n"));
+    }
+    out.push_str("\nflags:\n");
+    for f in flags {
+        let v = if f.takes_value { " <value>" } else { "" };
+        out.push_str(&format!("  --{}{v:<10} {}\n", f.name, f.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "n", takes_value: true, help: "dimension" },
+            FlagSpec { name: "sparsity", takes_value: true, help: "sparsity" },
+            FlagSpec { name: "verify", takes_value: false, help: "check result" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse(&sv(&["run", "--n", "256", "--verify"]), &flags()).unwrap();
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 256);
+        assert!(a.has("verify"));
+        assert!(!a.has("other"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&sv(&["run", "--sparsity=0.99"]), &flags()).unwrap();
+        assert_eq!(a.get_f64("sparsity", 0.0).unwrap(), 0.99);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&sv(&["run"]), &flags()).unwrap();
+        assert_eq!(a.get_usize("n", 512).unwrap(), 512);
+        assert_eq!(a.get_str("missing", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(parse(&sv(&["run", "--bogus", "1"]), &flags()).is_err());
+        assert!(parse(&sv(&["run", "--n"]), &flags()).is_err());
+        assert!(parse(&sv(&["run", "stray"]), &flags()).is_err());
+        assert!(parse(&sv(&["run", "--verify=1"]), &flags()).is_err());
+        assert!(parse(&sv(&["run", "--n", "abc"]), &flags()).unwrap().get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_is_empty() {
+        let a = parse(&sv(&["--verify"]), &flags()).unwrap();
+        assert_eq!(a.subcommand, "");
+        assert!(a.has("verify"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("gcoospdm", &[("run", "run one SpDM")], &flags());
+        assert!(u.contains("run one SpDM"));
+        assert!(u.contains("--sparsity"));
+    }
+}

@@ -1,0 +1,274 @@
+//! Configuration-file substrate: a TOML-subset parser and the typed
+//! [`SystemConfig`] the launcher consumes (`gcoospdm serve --config x.toml`).
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! ("…"), integer, float, and boolean values, `#` comments. That covers
+//! deployment configuration without pulling a dependency into the offline
+//! build.
+
+use std::collections::HashMap;
+
+use crate::coordinator::{CoordinatorConfig, SelectorPolicy};
+
+/// Parsed config document: section → key → raw value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    sections: HashMap<String, HashMap<String, Value>>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        match self.get(section, key)? {
+            Value::Int(x) if *x >= 0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().to_string();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let dup = doc
+            .sections
+            .entry(section.clone())
+            .or_default()
+            .insert(key.clone(), value);
+        if dup.is_some() {
+            return Err(format!("line {}: duplicate key {key:?}", lineno + 1));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Value, String> {
+    if let Some(rest) = v.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match v {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {v:?}"))
+}
+
+/// Full launcher configuration with defaults.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub artifacts_dir: String,
+    pub server_addr: String,
+    pub coordinator: CoordinatorConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            artifacts_dir: "artifacts".into(),
+            server_addr: "127.0.0.1:7077".into(),
+            coordinator: CoordinatorConfig::default(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Load from a TOML-subset file; unset keys keep defaults.
+    pub fn from_file(path: &str) -> Result<SystemConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<SystemConfig, String> {
+        let doc = parse(text)?;
+        let mut cfg = SystemConfig::default();
+        if let Some(s) = doc.get_str("runtime", "artifacts_dir") {
+            cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = doc.get_str("server", "addr") {
+            cfg.server_addr = s.to_string();
+        }
+        let c = &mut cfg.coordinator;
+        if let Some(x) = doc.get_usize("coordinator", "workers") {
+            if x == 0 {
+                return Err("coordinator.workers must be positive".into());
+            }
+            c.workers = x;
+        }
+        if let Some(x) = doc.get_usize("coordinator", "queue_cap") {
+            c.queue_cap = x.max(1);
+        }
+        if let Some(x) = doc.get_usize("coordinator", "batch_max") {
+            c.batch_max = x.max(1);
+        }
+        if let Some(x) = doc.get_usize("coordinator", "gcoo_p") {
+            c.gcoo_p = x.max(1);
+        }
+        if let Some(x) = doc.get_usize("coordinator", "convert_threads") {
+            c.convert_threads = x.max(1);
+        }
+        if let Some(x) = doc.get_f64("selector", "gcoo_crossover") {
+            if !(0.0..=1.0).contains(&x) {
+                return Err(format!("selector.gcoo_crossover {x} out of [0,1]"));
+            }
+            c.policy.gcoo_crossover = x;
+        }
+        if let Some(x) = doc.get_usize("selector", "min_sparse_n") {
+            c.policy.min_sparse_n = x;
+        }
+        Ok(cfg)
+    }
+}
+
+/// Example config shipped in the docs.
+pub const EXAMPLE: &str = r#"# gcoospdm deployment configuration
+[runtime]
+artifacts_dir = "artifacts"
+
+[server]
+addr = "127.0.0.1:7077"
+
+[coordinator]
+workers = 2
+queue_cap = 64
+batch_max = 8
+gcoo_p = 8
+convert_threads = 4
+
+[selector]
+gcoo_crossover = 0.98   # paper's sparse-vs-dense break-even
+min_sparse_n = 256
+"#;
+
+#[allow(unused)]
+fn _assert_selector_policy_used(_p: SelectorPolicy) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_example_config() {
+        let cfg = SystemConfig::from_str(EXAMPLE).unwrap();
+        assert_eq!(cfg.server_addr, "127.0.0.1:7077");
+        assert_eq!(cfg.coordinator.workers, 2);
+        assert_eq!(cfg.coordinator.policy.gcoo_crossover, 0.98);
+        assert_eq!(cfg.coordinator.policy.min_sparse_n, 256);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let cfg = SystemConfig::from_str("[server]\naddr = \"0.0.0.0:9\"\n").unwrap();
+        assert_eq!(cfg.server_addr, "0.0.0.0:9");
+        assert_eq!(cfg.coordinator.workers, CoordinatorConfig::default().workers);
+    }
+
+    #[test]
+    fn value_types() {
+        let doc = parse("a = 1\nb = 1.5\nc = true\nd = \"x y\"\n[s]\ne = -3\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Float(1.5)));
+        assert_eq!(doc.get("", "c"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get_str("", "d"), Some("x y"));
+        assert_eq!(doc.get("s", "e"), Some(&Value::Int(-3)));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = parse("# top\n\na = 1  # trailing\ns = \"ha#sh\"\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get_str("", "s"), Some("ha#sh"));
+    }
+
+    #[test]
+    fn errors_are_precise() {
+        assert!(parse("[open\n").unwrap_err().contains("line 1"));
+        assert!(parse("novalue\n").unwrap_err().contains("line 1"));
+        assert!(parse("a = \n").unwrap_err().contains("line 1"));
+        assert!(parse("a = 1\na = 2\n").unwrap_err().contains("duplicate"));
+        assert!(parse("a = \"open\n").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        assert!(SystemConfig::from_str("[coordinator]\nworkers = 0\n").is_err());
+        assert!(SystemConfig::from_str("[selector]\ngcoo_crossover = 1.5\n").is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Parallel dense→sparse conversion (paper Algorithm 1) with the EO/KC
+//! timing split of Fig 13.
+//!
+//! The paper's conversion is a two-step GPU kernel (count nnz per group,
+//! then scatter); here it is a two-pass multi-threaded CPU routine with the
+//! same structure: pass 1 counts per-band nonzeros (parallel over bands) and
+//! prefix-sums `gIdxes`; pass 2 scatters entries into the concatenated
+//! arrays (parallel over bands, each band writing its disjoint slice).
+
+use std::time::Instant;
+
+use crate::exec::scoped_for;
+use crate::ndarray::Mat;
+use crate::sparse::{Csr, Ell, FormatError, Gcoo, GcooPadded};
+
+/// Timing breakdown for Fig 13: EO = alloc + convert; KC = kernel compute.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConvertTiming {
+    pub alloc_s: f64,
+    pub convert_s: f64,
+}
+
+impl ConvertTiming {
+    /// Extra overhead (the paper's EO).
+    pub fn eo(&self) -> f64 {
+        self.alloc_s + self.convert_s
+    }
+}
+
+/// Parallel Algorithm 1: dense → GCOO with `threads` workers.
+pub fn dense_to_gcoo_parallel(a: &Mat, p: usize, threads: usize) -> (Gcoo, ConvertTiming) {
+    assert!(p > 0);
+    let g = a.rows.div_ceil(p);
+
+    // --- Step 1: count nnz per group (parallel scan of A) ---
+    let t0 = Instant::now();
+    let mut nnz_per_group = vec![0u32; g];
+    {
+        let chunks: Vec<&mut [u32]> = nnz_per_group.chunks_mut(1).collect();
+        // chunks_mut(1) gives one &mut per band; move into closures by index
+        drop(chunks);
+    }
+    let counts: Vec<u32> = crate::exec::par_map(g, threads, |gi| {
+        let lo = gi * p;
+        let hi = ((gi + 1) * p).min(a.rows);
+        let mut c = 0u32;
+        for i in lo..hi {
+            c += a.row(i).iter().filter(|v| **v != 0.0).count() as u32;
+        }
+        c
+    });
+    nnz_per_group.copy_from_slice(&counts);
+    let mut g_idxes = vec![0u32; g];
+    for gi in 1..g {
+        g_idxes[gi] = g_idxes[gi - 1] + nnz_per_group[gi - 1];
+    }
+    let total: usize = nnz_per_group.iter().map(|&x| x as usize).sum();
+    let count_s = t0.elapsed().as_secs_f64();
+
+    // --- allocate (the paper's "memory allocation" EO component) ---
+    let t1 = Instant::now();
+    let mut vals = vec![0.0f32; total];
+    let mut rows = vec![0u32; total];
+    let mut cols = vec![0u32; total];
+    let alloc_s = t1.elapsed().as_secs_f64();
+
+    // --- Step 2: scatter (parallel over bands; disjoint output slices) ---
+    let t2 = Instant::now();
+    {
+        // Split the output arrays at the band boundaries so each worker
+        // owns its slices exclusively.
+        let mut val_slices: Vec<&mut [f32]> = Vec::with_capacity(g);
+        let mut row_slices: Vec<&mut [u32]> = Vec::with_capacity(g);
+        let mut col_slices: Vec<&mut [u32]> = Vec::with_capacity(g);
+        {
+            let (mut vrest, mut rrest, mut crest) =
+                (vals.as_mut_slice(), rows.as_mut_slice(), cols.as_mut_slice());
+            for gi in 0..g {
+                let len = nnz_per_group[gi] as usize;
+                let (vh, vt) = vrest.split_at_mut(len);
+                let (rh, rt) = rrest.split_at_mut(len);
+                let (ch, ct) = crest.split_at_mut(len);
+                val_slices.push(vh);
+                row_slices.push(rh);
+                col_slices.push(ch);
+                vrest = vt;
+                rrest = rt;
+                crest = ct;
+            }
+        }
+        // Interior mutability-free parallelism: move slices into a Vec of
+        // Options and hand each band's slices to exactly one worker.
+        let mut work: Vec<Option<(&mut [f32], &mut [u32], &mut [u32])>> = val_slices
+            .into_iter()
+            .zip(row_slices)
+            .zip(col_slices)
+            .map(|((v, r), c)| Some((v, r, c)))
+            .collect();
+        let work_ptr = std::sync::Mutex::new(&mut work);
+        scoped_for(g, threads, |range| {
+            // Per-worker scratch, reused across its bands (perf §L3: the
+            // original column-major band walk read A at stride n — cache
+            // hostile; collecting row-major then sorting the band's few
+            // entries by (col, row) is ~4x faster at the paper's sparsity).
+            let mut scratch: Vec<(u32, u32, f32)> = Vec::new();
+            for gi in range {
+                let (v, r, c) = {
+                    let mut guard = work_ptr.lock().unwrap();
+                    guard[gi].take().unwrap()
+                };
+                let lo = gi * p;
+                let hi = ((gi + 1) * p).min(a.rows);
+                scratch.clear();
+                for i in lo..hi {
+                    let local = (i - lo) as u32;
+                    for (j, &x) in a.row(i).iter().enumerate() {
+                        if x != 0.0 {
+                            scratch.push((j as u32, local, x));
+                        }
+                    }
+                }
+                scratch.sort_unstable_by_key(|&(col, row, _)| (col, row));
+                debug_assert_eq!(scratch.len(), v.len());
+                for (k, &(col, row, x)) in scratch.iter().enumerate() {
+                    v[k] = x;
+                    r[k] = row;
+                    c[k] = col;
+                }
+            }
+        });
+    }
+    let scatter_s = t2.elapsed().as_secs_f64();
+
+    let gcoo = Gcoo {
+        n_rows: a.rows,
+        n_cols: a.cols,
+        p,
+        vals,
+        rows,
+        cols,
+        g_idxes,
+        nnz_per_group,
+    };
+    (gcoo, ConvertTiming { alloc_s, convert_s: count_s + scatter_s })
+}
+
+/// Dense → padded device GCOO, end to end, with timing.
+pub fn dense_to_gcoo_padded(
+    a: &Mat,
+    p: usize,
+    cap: usize,
+    threads: usize,
+) -> Result<(GcooPadded, ConvertTiming), FormatError> {
+    let (gcoo, mut timing) = dense_to_gcoo_parallel(a, p, threads);
+    let t0 = Instant::now();
+    let padded = gcoo.pad(cap)?;
+    timing.convert_s += t0.elapsed().as_secs_f64();
+    Ok((padded, timing))
+}
+
+/// Dense → padded CSR (ELL) with timing (the cuSPARSE-side EO of Fig 13).
+pub fn dense_to_ell(a: &Mat, rowcap: usize) -> Result<(Ell, ConvertTiming), FormatError> {
+    let t0 = Instant::now();
+    let csr = Csr::from_dense(a);
+    let convert = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let ell = Ell::from_csr(&csr, rowcap)?;
+    let alloc = t1.elapsed().as_secs_f64();
+    Ok((ell, ConvertTiming { alloc_s: alloc, convert_s: convert }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Rng;
+    use crate::sparse::ToDense;
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let mut rng = Rng::new(1);
+        let a = gen::uniform(96, 0.9, &mut rng);
+        let (par, _t) = dense_to_gcoo_parallel(&a, 8, 4);
+        let seq = Gcoo::from_dense(&a, 8);
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let mut rng = Rng::new(2);
+        let a = gen::uniform(32, 0.8, &mut rng);
+        let (par, _t) = dense_to_gcoo_parallel(&a, 8, 1);
+        assert_eq!(par.to_dense(), a);
+    }
+
+    #[test]
+    fn ragged_band_count() {
+        let mut rng = Rng::new(3);
+        let a = gen::uniform(30, 0.7, &mut rng); // 30 rows, p=8
+        let (par, _t) = dense_to_gcoo_parallel(&a, 8, 3);
+        par.validate().unwrap();
+        assert_eq!(par.to_dense(), a);
+    }
+
+    #[test]
+    fn padded_round_trip_and_timing_positive() {
+        let mut rng = Rng::new(4);
+        let a = gen::uniform(64, 0.9, &mut rng);
+        let (padded, timing) = dense_to_gcoo_padded(&a, 8, 8 * 64, 4).unwrap();
+        assert_eq!(padded.g, 8);
+        assert!(timing.eo() > 0.0);
+    }
+
+    #[test]
+    fn padded_capacity_error_propagates() {
+        let mut rng = Rng::new(5);
+        let a = gen::uniform(64, 0.5, &mut rng);
+        assert!(dense_to_gcoo_padded(&a, 8, 2, 4).is_err());
+    }
+
+    #[test]
+    fn ell_conversion() {
+        let mut rng = Rng::new(6);
+        let a = gen::uniform(64, 0.9, &mut rng);
+        let (ell, timing) = dense_to_ell(&a, 64).unwrap();
+        assert_eq!(ell.to_dense(), a);
+        assert!(timing.eo() >= 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Job types crossing the coordinator boundary.
+
+use crate::ndarray::Mat;
+
+/// Algorithm families the coordinator can route to (== artifact `algo`s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Gcoo,
+    GcooNoreuse,
+    Csr,
+    DenseXla,
+    DensePallas,
+}
+
+impl Algo {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Algo::Gcoo => "gcoo",
+            Algo::GcooNoreuse => "gcoo_noreuse",
+            Algo::Csr => "csr",
+            Algo::DenseXla => "dense_xla",
+            Algo::DensePallas => "dense_pallas",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Algo> {
+        match s {
+            "gcoo" => Some(Algo::Gcoo),
+            "gcoo_noreuse" => Some(Algo::GcooNoreuse),
+            "csr" => Some(Algo::Csr),
+            "dense_xla" | "dense" => Some(Algo::DenseXla),
+            "dense_pallas" => Some(Algo::DensePallas),
+            _ => None,
+        }
+    }
+}
+
+/// One SpDM request: C = A·B with A treated as sparse.
+#[derive(Clone, Debug)]
+pub struct SpdmRequest {
+    pub id: u64,
+    pub a: Mat,
+    pub b: Mat,
+    /// Force a specific algorithm (None = selector decides).
+    pub algo_hint: Option<Algo>,
+    /// Verify the result against the CPU oracle (costs O(nnz·n)).
+    pub verify: bool,
+}
+
+impl SpdmRequest {
+    pub fn new(id: u64, a: Mat, b: Mat) -> Self {
+        SpdmRequest { id, a, b, algo_hint: None, verify: false }
+    }
+}
+
+/// Completed job.
+#[derive(Clone, Debug)]
+pub struct SpdmResponse {
+    pub id: u64,
+    pub algo: Algo,
+    pub artifact: String,
+    /// Dimension the request was padded to.
+    pub n_exec: usize,
+    /// Extra overhead: dense→sparse conversion + padding (the paper's EO).
+    pub convert_s: f64,
+    /// Kernel execution (the paper's KC).
+    pub kernel_s: f64,
+    /// End-to-end including queueing.
+    pub total_s: f64,
+    pub verified: Option<bool>,
+    pub error: Option<String>,
+    /// The result matrix (trimmed back to the request's n).
+    pub c: Option<Mat>,
+}
+
+impl SpdmResponse {
+    pub fn failed(id: u64, algo: Algo, msg: String) -> Self {
+        SpdmResponse {
+            id,
+            algo,
+            artifact: String::new(),
+            n_exec: 0,
+            convert_s: 0.0,
+            kernel_s: 0.0,
+            total_s: 0.0,
+            verified: None,
+            error: Some(msg),
+            c: None,
+        }
+    }
+
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_round_trip() {
+        for a in [Algo::Gcoo, Algo::GcooNoreuse, Algo::Csr, Algo::DenseXla, Algo::DensePallas] {
+            assert_eq!(Algo::from_str(a.as_str()), Some(a));
+        }
+        assert_eq!(Algo::from_str("dense"), Some(Algo::DenseXla));
+        assert_eq!(Algo::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn failed_response_reports_error() {
+        let r = SpdmResponse::failed(7, Algo::Gcoo, "boom".into());
+        assert!(!r.ok());
+        assert_eq!(r.id, 7);
+    }
+}

@@ -1,0 +1,158 @@
+//! Serving metrics: throughput counters and latency distributions.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::ndarray::percentile;
+
+/// Shared metrics sink (one per coordinator).
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub verify_failures: AtomicU64,
+    latencies_s: Mutex<Vec<f64>>,
+    kernel_s: Mutex<Vec<f64>>,
+    convert_s: Mutex<Vec<f64>>,
+    started: Instant,
+    per_algo: Mutex<std::collections::HashMap<&'static str, u64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            verify_failures: AtomicU64::new(0),
+            latencies_s: Mutex::new(Vec::new()),
+            kernel_s: Mutex::new(Vec::new()),
+            convert_s: Mutex::new(Vec::new()),
+            started: Instant::now(),
+            per_algo: Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    pub fn record_completion(&self, algo: &'static str, total_s: f64, kernel_s: f64, convert_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies_s.lock().unwrap().push(total_s);
+        self.kernel_s.lock().unwrap().push(kernel_s);
+        self.convert_s.lock().unwrap().push(convert_s);
+        *self.per_algo.lock().unwrap().entry(algo).or_insert(0) += 1;
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latencies_s.lock().unwrap().clone();
+        let ker = self.kernel_s.lock().unwrap().clone();
+        let conv = self.convert_s.lock().unwrap().clone();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let completed = self.completed.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            errors: self.errors.load(Ordering::Relaxed),
+            verify_failures: self.verify_failures.load(Ordering::Relaxed),
+            throughput_rps: completed as f64 / elapsed.max(1e-9),
+            p50_s: pct(&lat, 50.0),
+            p95_s: pct(&lat, 95.0),
+            p99_s: pct(&lat, 99.0),
+            mean_kernel_s: mean(&ker),
+            mean_convert_s: mean(&conv),
+            per_algo: self.per_algo.lock().unwrap().clone(),
+        }
+    }
+}
+
+fn pct(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        percentile(xs, p)
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Point-in-time view for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub verify_failures: u64,
+    pub throughput_rps: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_kernel_s: f64,
+    pub mean_convert_s: f64,
+    pub per_algo: std::collections::HashMap<&'static str, u64>,
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests: {} submitted / {} completed / {} errors\n\
+             latency:  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms\n\
+             phases:   kernel {:.3} ms  convert {:.3} ms (means)\n\
+             rate:     {:.1} req/s   per-algo: {:?}",
+            self.submitted,
+            self.completed,
+            self.errors,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.p99_s * 1e3,
+            self.mean_kernel_s * 1e3,
+            self.mean_convert_s * 1e3,
+            self.throughput_rps,
+            self.per_algo,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_completion("gcoo", 0.010, 0.004, 0.002);
+        m.record_completion("gcoo", 0.020, 0.008, 0.004);
+        m.record_completion("dense_xla", 0.030, 0.030, 0.0);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.per_algo["gcoo"], 2);
+        assert!((s.p50_s - 0.020).abs() < 1e-12);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99_s, 0.0);
+        assert!(s.render().contains("0 completed"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Coordinator — the L3 serving layer: bounded job queue with backpressure,
+//! algorithm selection (the sparsity/size routing policy the paper's
+//! conclusions prescribe), shape-affinity batching, a worker pool executing
+//! on the shared PJRT engine, and metrics.
+//!
+//! The paper's contribution is the kernel, so this layer is deliberately a
+//! *thin but real* serving stack (DESIGN.md §1 L3): everything a downstream
+//! user needs to put GCOOSpDM behind a request boundary.
+
+mod job;
+mod queue;
+mod selector;
+mod metrics;
+mod pool;
+
+pub use job::{Algo, SpdmRequest, SpdmResponse};
+pub use queue::BoundedQueue;
+pub use selector::{Selector, SelectorPolicy, Plan};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use pool::{Coordinator, CoordinatorConfig};

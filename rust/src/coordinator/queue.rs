@@ -1,0 +1,223 @@
+//! Bounded MPMC job queue with blocking backpressure and shape-affinity
+//! batch dequeue.
+//!
+//! `push` blocks when the queue is full (producers feel backpressure instead
+//! of OOMing the coordinator); `pop_batch` removes up to `max` jobs that the
+//! caller's affinity predicate groups with the head job — the batcher that
+//! keeps one worker on one compiled executable while work for it exists.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    deque: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner { deque: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Blocking push; returns false if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.deque.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.deque.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Non-blocking push; Err(item) when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.deque.len() >= self.cap {
+            return Err(item);
+        }
+        g.deque.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking single pop; None when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.deque.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop the head plus up to `max - 1` additional jobs for which
+    /// `affine(head, candidate)` holds (scanning the whole queue, preserving
+    /// relative order of the rest). None when closed and drained.
+    pub fn pop_batch(&self, max: usize, affine: impl Fn(&T, &T) -> bool) -> Option<Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.deque.is_empty() {
+                let head = g.deque.pop_front().unwrap();
+                let mut batch = vec![head];
+                let mut i = 0;
+                while i < g.deque.len() && batch.len() < max {
+                    if affine(&batch[0], &g.deque[i]) {
+                        let item = g.deque.remove(i).unwrap();
+                        batch.push(item);
+                    } else {
+                        i += 1;
+                    }
+                }
+                self.not_full.notify_all();
+                return Some(batch);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().deque.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(1);
+        q.close();
+        assert!(!q.push(2), "push after close fails");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0);
+        let q2 = Arc::clone(&q);
+        let handle = std::thread::spawn(move || q2.push(1));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "producer must be blocked");
+        assert_eq!(q.pop(), Some(0));
+        assert!(handle.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn pop_batch_groups_affine_jobs() {
+        let q = BoundedQueue::new(16);
+        // (shape, id)
+        for item in [(256, 0), (512, 1), (256, 2), (256, 3), (512, 4)] {
+            q.push(item);
+        }
+        let batch = q.pop_batch(8, |h, c| h.0 == c.0).unwrap();
+        assert_eq!(batch, vec![(256, 0), (256, 2), (256, 3)]);
+        let rest = q.pop_batch(8, |h, c| h.0 == c.0).unwrap();
+        assert_eq!(rest, vec![(512, 1), (512, 4)]);
+    }
+
+    #[test]
+    fn pop_batch_respects_max() {
+        let q = BoundedQueue::new(16);
+        for i in 0..6 {
+            q.push((1, i));
+        }
+        let batch = q.pop_batch(4, |_, _| true).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let total = 1000;
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..total / 4 {
+                    q.push(p * 1000 + i);
+                }
+            }));
+        }
+        let consumed = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = Arc::clone(&q);
+            let c = Arc::clone(&consumed);
+            consumers.push(std::thread::spawn(move || {
+                while q.pop().is_some() {
+                    c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        for h in consumers {
+            h.join().unwrap();
+        }
+        assert_eq!(consumed.load(std::sync::atomic::Ordering::Relaxed), total);
+    }
+}

@@ -1,0 +1,191 @@
+//! Algorithm selection — the routing policy distilled from the paper's
+//! conclusions plus artifact availability:
+//!
+//! * sparsity ≥ `gcoo_crossover` (paper: **0.98**) → GCOOSpDM beats dense;
+//! * sparsity ≥ `csr_crossover` (paper: 0.995) is where cuSPARSE would break
+//!   even — we still prefer GCOO there (it dominates CSR in Figs 7–12);
+//! * below the crossover, or when the matrix is too small for the sparse
+//!   path to amortize conversion (paper §IV-B: n < 1500 favors cuBLAS,
+//!   scaled to our artifact grid), route dense;
+//! * capacity fallback: if no compiled gcoo capacity fits the matrix's band
+//!   skew, degrade gcoo → csr → dense rather than failing.
+
+use super::job::Algo;
+use crate::ndarray::Mat;
+use crate::runtime::Registry;
+use crate::sparse::{Csr, Gcoo};
+
+/// Tunable thresholds (defaults = the paper's findings).
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorPolicy {
+    /// Sparsity above which GCOO beats the dense baseline (paper: 0.98).
+    pub gcoo_crossover: f64,
+    /// Smallest n for which the sparse path amortizes conversion.
+    pub min_sparse_n: usize,
+}
+
+impl Default for SelectorPolicy {
+    fn default() -> Self {
+        SelectorPolicy { gcoo_crossover: 0.98, min_sparse_n: 256 }
+    }
+}
+
+/// The selector's decision for one request.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub algo: Algo,
+    /// Exported size the request will be padded to.
+    pub n_exec: usize,
+    /// Why this algorithm won (observability / tests).
+    pub reason: &'static str,
+}
+
+pub struct Selector {
+    pub policy: SelectorPolicy,
+}
+
+impl Selector {
+    pub fn new(policy: SelectorPolicy) -> Self {
+        Selector { policy }
+    }
+
+    /// Decide the algorithm and execution size for A (n×n, sparsity s).
+    /// `max_band_nnz`/`max_row_nnz` gate capacity feasibility.
+    pub fn plan(
+        &self,
+        reg: &Registry,
+        n: usize,
+        sparsity: f64,
+        max_band_nnz: usize,
+        max_row_nnz: usize,
+        hint: Option<Algo>,
+    ) -> Result<Plan, String> {
+        // Resolve the padded execution size per algorithm family.
+        let fit = |algo: &str| reg.fit_size(algo, n);
+
+        if let Some(algo) = hint {
+            let n_exec = fit(algo.as_str())
+                .ok_or_else(|| format!("no {} artifact fits n={}", algo.as_str(), n))?;
+            return Ok(Plan { algo, n_exec, reason: "hint" });
+        }
+
+        let sparse_ok = n >= self.policy.min_sparse_n.min(reg.sizes("gcoo").first().copied().unwrap_or(usize::MAX));
+        if sparsity >= self.policy.gcoo_crossover && sparse_ok {
+            // GCOO first, capacity permitting.
+            if let Some(n_exec) = fit("gcoo") {
+                if reg.select("gcoo", n_exec, max_band_nnz).is_ok() {
+                    return Ok(Plan { algo: Algo::Gcoo, n_exec, reason: "sparse-crossover" });
+                }
+            }
+            if let Some(n_exec) = fit("csr") {
+                if reg.select("csr", n_exec, max_row_nnz).is_ok() {
+                    return Ok(Plan { algo: Algo::Csr, n_exec, reason: "gcoo-capacity-fallback" });
+                }
+            }
+        }
+        let n_exec = fit("dense_xla").ok_or_else(|| format!("no dense artifact fits n={n}"))?;
+        let reason = if sparsity >= self.policy.gcoo_crossover {
+            "sparse-capacity-exhausted"
+        } else {
+            "below-crossover"
+        };
+        Ok(Plan { algo: Algo::DenseXla, n_exec, reason })
+    }
+
+    /// Convenience: plan directly from a dense A.
+    pub fn plan_for(
+        &self,
+        reg: &Registry,
+        a: &Mat,
+        p: usize,
+        hint: Option<Algo>,
+    ) -> Result<Plan, String> {
+        let sparsity = a.sparsity();
+        // Cheap structural bounds (no full conversion yet).
+        let gcoo = Gcoo::from_dense(a, p);
+        let csr = Csr::from_dense(a);
+        self.plan(reg, a.rows, sparsity, gcoo.max_group_nnz(), csr.max_row_nnz(), hint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Registry;
+    use std::path::PathBuf;
+
+    fn reg() -> Registry {
+        let manifest = r#"{
+          "artifacts": [
+            {"name": "gcoo_n256_cap64", "algo": "gcoo", "n": 256,
+             "params": {"p": 8, "cap": 64}, "inputs": [], "file": "a.hlo.txt"},
+            {"name": "gcoo_n256_cap512", "algo": "gcoo", "n": 256,
+             "params": {"p": 8, "cap": 512}, "inputs": [], "file": "b.hlo.txt"},
+            {"name": "csr_n256_rowcap128", "algo": "csr", "n": 256,
+             "params": {"rp": 8, "rowcap": 128}, "inputs": [], "file": "c.hlo.txt"},
+            {"name": "dense_xla_n256", "algo": "dense_xla", "n": 256,
+             "params": {}, "inputs": [], "file": "d.hlo.txt"},
+            {"name": "dense_xla_n512", "algo": "dense_xla", "n": 512,
+             "params": {}, "inputs": [], "file": "e.hlo.txt"}
+          ]
+        }"#;
+        Registry::from_manifest_json(manifest, PathBuf::from("/nope")).unwrap()
+    }
+
+    fn sel() -> Selector {
+        Selector::new(SelectorPolicy::default())
+    }
+
+    #[test]
+    fn high_sparsity_routes_gcoo() {
+        let plan = sel().plan(&reg(), 256, 0.99, 100, 50, None).unwrap();
+        assert_eq!(plan.algo, Algo::Gcoo);
+        assert_eq!(plan.n_exec, 256);
+        assert_eq!(plan.reason, "sparse-crossover");
+    }
+
+    #[test]
+    fn low_sparsity_routes_dense() {
+        let plan = sel().plan(&reg(), 256, 0.5, 100, 50, None).unwrap();
+        assert_eq!(plan.algo, Algo::DenseXla);
+        assert_eq!(plan.reason, "below-crossover");
+    }
+
+    #[test]
+    fn crossover_boundary_is_inclusive() {
+        let plan = sel().plan(&reg(), 256, 0.98, 100, 50, None).unwrap();
+        assert_eq!(plan.algo, Algo::Gcoo);
+    }
+
+    #[test]
+    fn capacity_overflow_falls_back_to_csr_then_dense() {
+        // band nnz 600 > largest gcoo cap 512 → csr if rows fit
+        let plan = sel().plan(&reg(), 256, 0.99, 600, 100, None).unwrap();
+        assert_eq!(plan.algo, Algo::Csr);
+        assert_eq!(plan.reason, "gcoo-capacity-fallback");
+        // rows also overflow → dense
+        let plan = sel().plan(&reg(), 256, 0.99, 600, 200, None).unwrap();
+        assert_eq!(plan.algo, Algo::DenseXla);
+        assert_eq!(plan.reason, "sparse-capacity-exhausted");
+    }
+
+    #[test]
+    fn hint_overrides_policy() {
+        let plan = sel().plan(&reg(), 256, 0.1, 10, 10, Some(Algo::Csr)).unwrap();
+        assert_eq!(plan.algo, Algo::Csr);
+        assert_eq!(plan.reason, "hint");
+    }
+
+    #[test]
+    fn odd_sizes_pad_up() {
+        let plan = sel().plan(&reg(), 300, 0.99, 10, 10, None).unwrap();
+        // only dense_xla exists at 512; gcoo tops out at 256 → dense at 512
+        assert_eq!(plan.algo, Algo::DenseXla);
+        assert_eq!(plan.n_exec, 512);
+    }
+
+    #[test]
+    fn impossible_request_errors() {
+        assert!(sel().plan(&reg(), 4096, 0.99, 10, 10, None).is_err());
+    }
+}

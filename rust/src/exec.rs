@@ -1,0 +1,231 @@
+//! Thread-pool execution substrate (the offline image has no tokio).
+//!
+//! Two primitives cover every concurrency need in the repo:
+//! * [`ThreadPool`] — fixed worker pool with a shared injector queue; used by
+//!   the coordinator's worker loop and the serving accept loop.
+//! * [`scoped_for`] — data-parallel fork/join over an index range via
+//!   `std::thread::scope`; used by the parallel dense→GCOO conversion
+//!   (paper Algorithm 1) and the corpus generators.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+    in_flight: AtomicUsize,
+    idle: Condvar,
+}
+
+/// Fixed-size thread pool with graceful shutdown and `wait_idle`.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+            in_flight: AtomicUsize::new(0),
+            idle: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gcoospdm-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Pool sized to the machine (at least 2).
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ThreadPool::new(n.max(2))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job. Panics if the pool is shut down.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(job));
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.is_empty() || self.shared.in_flight.load(Ordering::SeqCst) > 0 {
+            q = self.shared.idle.wait(q).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if *shared.shutdown.lock().unwrap() {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+        if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Possibly idle now; wake waiters (they re-check under the lock).
+            let _q = shared.queue.lock().unwrap();
+            shared.idle.notify_all();
+        }
+    }
+}
+
+/// Fork/join data parallelism: split `0..n` into ~`chunks` contiguous ranges
+/// and run `f(range)` on scoped threads. `f` sees disjoint ranges, so callers
+/// can hand out `&mut` slices split beforehand.
+pub fn scoped_for<F>(n: usize, chunks: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let chunks = chunks.clamp(1, n);
+    let chunk = n.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for start in (0..n).step_by(chunk) {
+            let end = (start + chunk).min(n);
+            let f = &f;
+            s.spawn(move || f(start..end));
+        }
+    });
+}
+
+/// Parallel map over indices with collected results (order preserved).
+pub fn par_map<T, F>(n: usize, chunks: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    // Split `out` into disjoint chunks and fill each on its own thread.
+    if n == 0 {
+        return out;
+    }
+    let chunks = chunks.clamp(1, n);
+    let chunk = n.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for (ci, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = ci * chunk;
+                for (i, slot) in slice.iter_mut().enumerate() {
+                    *slot = f(base + i);
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn pool_shutdown_joins_workers() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn scoped_for_covers_every_index_once() {
+        let n = 1003;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        scoped_for(n, 7, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scoped_for_zero_is_noop() {
+        scoped_for(0, 4, |_r| panic!("must not be called"));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(100, 8, |i| i * i);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * i));
+    }
+
+    #[test]
+    fn par_map_single_chunk() {
+        assert_eq!(par_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,154 @@
+//! The Fig-4 corpus: a synthetic stand-in for the SuiteSparse square
+//! matrices the paper evaluates (2694 matrices, sparsity ∈ [0.98, 0.999999],
+//! n ∈ [64, 36720]).
+//!
+//! We reproduce the *distributional axes* that decide GCOO wins/losses:
+//! a mixture over structural families, log-uniform dimensions, and the
+//! paper's sparsity range. Sizes are scaled down by default (simulating a
+//! 36720² walk per matrix × 2694 matrices is pointless on CPU); the spec is
+//! explicit so benches can scale up.
+
+use super::patterns::Pattern;
+use crate::rng::Rng;
+
+/// Corpus parameters (defaults mirror the paper, scaled).
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub count: usize,
+    pub min_n: usize,
+    pub max_n: usize,
+    pub min_sparsity: f64,
+    pub max_sparsity: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            count: 2694,               // the paper's matrix count
+            min_n: 64,
+            max_n: 4096,               // paper: 36720 (scaled for CPU walkers)
+            min_sparsity: 0.98,
+            max_sparsity: 0.999999,
+            seed: 0x5EED_C0DE,
+        }
+    }
+}
+
+/// One corpus member: enough metadata to regenerate the matrix on demand.
+#[derive(Clone, Debug)]
+pub struct CorpusEntry {
+    pub id: usize,
+    pub pattern: Pattern,
+    pub n: usize,
+    pub sparsity: f64,
+    pub seed: u64,
+}
+
+impl CorpusEntry {
+    pub fn materialize(&self) -> crate::ndarray::Mat {
+        let mut rng = Rng::new(self.seed);
+        super::patterns::generate(self.pattern, self.n, self.sparsity, &mut rng)
+    }
+}
+
+/// SuiteSparse-like family mixture: applications skew toward banded/FEM and
+/// diagonal-ish structure, with a graph tail. Weights sum to 100.
+const MIXTURE: [(Pattern, u64); 6] = [
+    (Pattern::Banded, 30),
+    (Pattern::Diagonal, 20),
+    (Pattern::BlockDiagonal, 15),
+    (Pattern::PowerLawRows, 15),
+    (Pattern::Uniform, 15),
+    (Pattern::DenseColumns, 5),
+];
+
+/// Generate corpus *metadata* (cheap); materialize entries lazily.
+pub fn corpus(spec: &CorpusSpec) -> Vec<CorpusEntry> {
+    let mut rng = Rng::new(spec.seed);
+    let ln_lo = (spec.min_n as f64).ln();
+    let ln_hi = (spec.max_n as f64).ln();
+    (0..spec.count)
+        .map(|id| {
+            // log-uniform n (SuiteSparse dims span 3 decades)
+            let n = (ln_lo + rng.next_f64() * (ln_hi - ln_lo)).exp().round() as usize;
+            // sparsity: log-uniform in (1 - s) over the paper's range
+            let d_lo = (1.0 - spec.max_sparsity).ln();
+            let d_hi = (1.0 - spec.min_sparsity).ln();
+            let density = (d_lo + rng.next_f64() * (d_hi - d_lo)).exp();
+            let sparsity = 1.0 - density;
+            // mixture draw
+            let mut ticket = rng.below(100);
+            let mut pattern = Pattern::Uniform;
+            for (p, w) in MIXTURE {
+                if ticket < w {
+                    pattern = p;
+                    break;
+                }
+                ticket -= w;
+            }
+            CorpusEntry { id, pattern, n: n.max(spec.min_n), sparsity, seed: rng.fork(id as u64).next_u64() }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_respects_spec_ranges() {
+        let spec = CorpusSpec { count: 500, ..Default::default() };
+        let entries = corpus(&spec);
+        assert_eq!(entries.len(), 500);
+        for e in &entries {
+            assert!((spec.min_n..=spec.max_n + 1).contains(&e.n), "n={}", e.n);
+            assert!(e.sparsity >= spec.min_sparsity - 1e-9);
+            assert!(e.sparsity <= spec.max_sparsity + 1e-9);
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let spec = CorpusSpec { count: 50, ..Default::default() };
+        let a = corpus(&spec);
+        let b = corpus(&spec);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.n, x.seed, x.pattern), (y.n, y.seed, y.pattern));
+        }
+    }
+
+    #[test]
+    fn corpus_covers_every_family() {
+        let entries = corpus(&CorpusSpec { count: 300, ..Default::default() });
+        for p in Pattern::ALL {
+            assert!(
+                entries.iter().any(|e| e.pattern == p),
+                "family {} missing from corpus",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn materialize_small_entry() {
+        let entries = corpus(&CorpusSpec {
+            count: 5,
+            min_n: 32,
+            max_n: 64,
+            ..Default::default()
+        });
+        let m = entries[0].materialize();
+        assert_eq!(m.rows, entries[0].n);
+        assert!(m.sparsity() > 0.5);
+    }
+
+    #[test]
+    fn size_distribution_spans_decades() {
+        let entries = corpus(&CorpusSpec { count: 1000, ..Default::default() });
+        let small = entries.iter().filter(|e| e.n < 256).count();
+        let large = entries.iter().filter(|e| e.n > 1024).count();
+        assert!(small > 100, "too few small matrices: {small}");
+        assert!(large > 100, "too few large matrices: {large}");
+    }
+}

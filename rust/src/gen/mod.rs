@@ -1,0 +1,17 @@
+//! Matrix generators — the workload side of every experiment.
+//!
+//! `patterns` provides the structural families (uniform, diagonal, banded,
+//! block-diagonal, power-law rows); `corpus` builds the Fig-4 stand-in for
+//! the SuiteSparse collection; `selected` synthesizes analogs of the paper's
+//! 14 Table III matrices.
+
+mod patterns;
+mod corpus;
+mod selected;
+
+pub use patterns::{
+    uniform, diagonal, banded, block_diagonal, power_law_rows, dense_columns, Pattern,
+    generate,
+};
+pub use corpus::{corpus, CorpusSpec, CorpusEntry};
+pub use selected::{selected_matrices, SelectedSpec, SELECTED};

@@ -1,0 +1,286 @@
+//! Structural matrix families.
+//!
+//! Values mirror `python ref.random_sparse`: standard-normal with tiny
+//! magnitudes pushed away from zero so nnz is stable across conversions.
+
+use crate::ndarray::Mat;
+use crate::rng::Rng;
+
+/// A named structural family, used by corpus generation and the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// iid nonzero placement — the paper's random corpus.
+    Uniform,
+    /// nonzeros on/near the diagonal — the paper's loss case (no bv reuse).
+    Diagonal,
+    /// nonzeros inside a ± bandwidth around the diagonal.
+    Banded,
+    /// dense blocks on the diagonal (structural/FEM-like).
+    BlockDiagonal,
+    /// per-row nnz follows a power law (graph/web-like).
+    PowerLawRows,
+    /// a few fully-dense columns — maximal bv reuse.
+    DenseColumns,
+}
+
+impl Pattern {
+    pub const ALL: [Pattern; 6] = [
+        Pattern::Uniform,
+        Pattern::Diagonal,
+        Pattern::Banded,
+        Pattern::BlockDiagonal,
+        Pattern::PowerLawRows,
+        Pattern::DenseColumns,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::Uniform => "uniform",
+            Pattern::Diagonal => "diagonal",
+            Pattern::Banded => "banded",
+            Pattern::BlockDiagonal => "block_diagonal",
+            Pattern::PowerLawRows => "power_law_rows",
+            Pattern::DenseColumns => "dense_columns",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Pattern> {
+        Pattern::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// Dispatch on the family.
+pub fn generate(pattern: Pattern, n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    match pattern {
+        Pattern::Uniform => uniform(n, sparsity, rng),
+        Pattern::Diagonal => diagonal(n, sparsity, rng),
+        Pattern::Banded => banded(n, sparsity, rng),
+        Pattern::BlockDiagonal => block_diagonal(n, sparsity, rng),
+        Pattern::PowerLawRows => power_law_rows(n, sparsity, rng),
+        Pattern::DenseColumns => dense_columns(n, sparsity, rng),
+    }
+}
+
+/// iid placement with per-entry probability `1 - sparsity`.
+pub fn uniform(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let mut m = Mat::zeros(n, n);
+    let p = 1.0 - sparsity;
+    for v in m.data.iter_mut() {
+        if rng.coin(p) {
+            *v = rng.nonzero_value();
+        }
+    }
+    m
+}
+
+/// Nonzeros packed onto diagonals nearest the main one until the nnz budget
+/// (≈ (1−s)·n²) is spent — the nemeth11/plbuckle-style structure.
+pub fn diagonal(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let mut m = Mat::zeros(n, n);
+    let budget = (((1.0 - sparsity) * (n * n) as f64).round() as usize).max(1);
+    let mut placed = 0;
+    let mut d = 0i64;
+    while placed < budget && (d.unsigned_abs() as usize) < n {
+        for offset in [d, -d] {
+            if offset == 0 && d != 0 {
+                continue;
+            }
+            let len = n - offset.unsigned_abs() as usize;
+            for i in 0..len {
+                if placed >= budget {
+                    break;
+                }
+                let (r, c) = if offset >= 0 {
+                    (i, i + offset as usize)
+                } else {
+                    (i + (-offset) as usize, i)
+                };
+                if m[(r, c)] == 0.0 {
+                    m[(r, c)] = rng.nonzero_value();
+                    placed += 1;
+                }
+            }
+        }
+        d += 1;
+    }
+    m
+}
+
+/// Random placement restricted to a band sized so expected nnz matches.
+pub fn banded(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let budget = (1.0 - sparsity) * (n * n) as f64;
+    // band entries ≈ n·(2h+1); fill ~1/3 of the band.
+    let fill = 0.34;
+    let half = (((budget / fill) / n as f64 - 1.0) / 2.0).max(0.0).round() as usize;
+    let half = half.min(n - 1);
+    let mut m = Mat::zeros(n, n);
+    for i in 0..n {
+        let lo = i.saturating_sub(half);
+        let hi = (i + half + 1).min(n);
+        for j in lo..hi {
+            if rng.coin(fill) {
+                m[(i, j)] = rng.nonzero_value();
+            }
+        }
+    }
+    m
+}
+
+/// Dense square blocks along the diagonal; block size chosen to hit the
+/// nnz budget.
+pub fn block_diagonal(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let budget = ((1.0 - sparsity) * (n * n) as f64).max(1.0);
+    // k blocks of size b: nnz ≈ n·b ⇒ b ≈ budget / n.
+    let b = ((budget / n as f64).round() as usize).clamp(1, n);
+    let mut m = Mat::zeros(n, n);
+    let mut start = 0;
+    while start < n {
+        let end = (start + b).min(n);
+        for i in start..end {
+            for j in start..end {
+                m[(i, j)] = rng.nonzero_value();
+            }
+        }
+        start = end;
+    }
+    m
+}
+
+/// Zipf-ish row lengths: a few heavy rows, many light rows (graph-like).
+pub fn power_law_rows(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let budget = (((1.0 - sparsity) * (n * n) as f64).round() as usize).max(n);
+    // weights ∝ 1/(rank+1); normalize to the budget.
+    let weights: Vec<f64> = (0..n).map(|i| 1.0 / (i + 1) as f64).collect();
+    let wsum: f64 = weights.iter().sum();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order); // heavy rows land at random positions
+    let mut m = Mat::zeros(n, n);
+    for (rank, &row) in order.iter().enumerate() {
+        let k = ((budget as f64) * weights[rank] / wsum).round() as usize;
+        let k = k.clamp(1, n);
+        for j in rng.sample_indices(n, k) {
+            m[(row, j)] = rng.nonzero_value();
+        }
+    }
+    m
+}
+
+/// `k` fully-dense columns, k chosen from the nnz budget — maximal
+/// same-column runs inside every band (GCOO's best case).
+pub fn dense_columns(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let budget = ((1.0 - sparsity) * (n * n) as f64).max(1.0);
+    let k = ((budget / n as f64).round() as usize).clamp(1, n);
+    let mut m = Mat::zeros(n, n);
+    for j in rng.sample_indices(n, k) {
+        for i in 0..n {
+            m[(i, j)] = rng.nonzero_value();
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparsity_close(m: &Mat, target: f64, tol: f64) {
+        let actual = m.sparsity();
+        assert!(
+            (actual - target).abs() < tol,
+            "sparsity {actual} vs target {target}"
+        );
+    }
+
+    #[test]
+    fn uniform_hits_target_sparsity() {
+        let mut rng = Rng::new(1);
+        sparsity_close(&uniform(128, 0.9, &mut rng), 0.9, 0.02);
+        sparsity_close(&uniform(128, 0.99, &mut rng), 0.99, 0.01);
+    }
+
+    #[test]
+    fn diagonal_mass_near_diagonal() {
+        let mut rng = Rng::new(2);
+        let m = diagonal(64, 0.95, &mut rng);
+        sparsity_close(&m, 0.95, 0.02);
+        for i in 0..64 {
+            for j in 0..64 {
+                if m[(i, j)] != 0.0 {
+                    assert!(i.abs_diff(j) <= 3, "entry far off diagonal at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn banded_within_band() {
+        let mut rng = Rng::new(3);
+        let m = banded(64, 0.9, &mut rng);
+        let mut max_off = 0usize;
+        for i in 0..64 {
+            for j in 0..64 {
+                if m[(i, j)] != 0.0 {
+                    max_off = max_off.max(i.abs_diff(j));
+                }
+            }
+        }
+        assert!(max_off <= 16, "bandwidth too wide: {max_off}");
+        assert!(m.nnz() > 0);
+    }
+
+    #[test]
+    fn block_diagonal_blocks_are_dense() {
+        let mut rng = Rng::new(4);
+        let m = block_diagonal(64, 0.9, &mut rng);
+        // every nonzero's mirror within its block is nonzero
+        sparsity_close(&m, 0.9, 0.05);
+        for i in 0..64 {
+            for j in 0..64 {
+                if m[(i, j)] != 0.0 {
+                    assert_ne!(m[(j, i)], 0.0, "block not symmetric-dense at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn power_law_rows_skewed() {
+        let mut rng = Rng::new(5);
+        let m = power_law_rows(128, 0.95, &mut rng);
+        let mut lens: Vec<usize> =
+            (0..128).map(|i| m.row(i).iter().filter(|v| **v != 0.0).count()).collect();
+        lens.sort_unstable();
+        // heaviest row should dominate the median by a wide margin
+        assert!(lens[127] >= 4 * lens[64].max(1), "rows not skewed: {:?}", &lens[120..]);
+        assert!(lens.iter().all(|&l| l >= 1), "every row has >= 1 entry");
+    }
+
+    #[test]
+    fn dense_columns_are_dense() {
+        let mut rng = Rng::new(6);
+        let m = dense_columns(64, 0.95, &mut rng);
+        let k = (0..64).filter(|&j| (0..64).all(|i| m[(i, j)] != 0.0)).count();
+        assert!(k >= 1);
+        assert_eq!(m.nnz(), k * 64, "all nonzeros must sit in full columns");
+    }
+
+    #[test]
+    fn generate_dispatch_covers_all() {
+        let mut rng = Rng::new(7);
+        for p in Pattern::ALL {
+            let m = generate(p, 32, 0.9, &mut rng);
+            assert!(m.nnz() > 0, "{} generated an empty matrix", p.name());
+            assert_eq!(Pattern::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Pattern::from_name("nope"), None);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        for p in Pattern::ALL {
+            let a = generate(p, 32, 0.9, &mut Rng::new(42));
+            let b = generate(p, 32, 0.9, &mut Rng::new(42));
+            assert_eq!(a, b, "{} not deterministic", p.name());
+        }
+    }
+}

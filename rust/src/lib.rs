@@ -1,0 +1,35 @@
+//! gcoospdm — reproduction of "Efficient Sparse-Dense Matrix-Matrix
+//! Multiplication on GPUs Using the Customized Sparse Storage Format"
+//! (Shi, Wang, Chu; 2020) as a three-layer rust + JAX/Pallas system.
+//!
+//! Layer map (see DESIGN.md):
+//! * build path (python, once): Pallas kernels + JAX graphs → `artifacts/`
+//! * request path (this crate): [`runtime`] loads the AOT artifacts via
+//!   PJRT, [`coordinator`] routes/batches SpDM jobs onto them, [`serve`]
+//!   exposes the TCP serving loop.
+//! * experiments: [`simgpu`] replays kernel memory traces on the paper's
+//!   three GPUs (Table II) to regenerate every figure; [`gen`] provides
+//!   the workloads; [`roofline`] / [`autotune`] the analysis layers.
+//!
+//! Substrate modules ([`rng`], [`json`], [`exec`], [`bench`], [`prop`],
+//! [`ndarray`]) exist because the build environment is fully offline —
+//! see DESIGN.md §2 for the substitution table.
+
+pub mod ndarray;
+pub mod rng;
+pub mod json;
+pub mod exec;
+pub mod bench;
+pub mod prop;
+pub mod sparse;
+pub mod gen;
+pub mod simgpu;
+pub mod roofline;
+pub mod convert;
+pub mod autotune;
+pub mod runtime;
+pub mod coordinator;
+pub mod serve;
+pub mod figures;
+pub mod cli;
+pub mod config;

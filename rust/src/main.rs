@@ -1,0 +1,305 @@
+//! gcoospdm CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info      — artifact registry + device table
+//!   run       — one SpDM through the full stack (convert→select→PJRT)
+//!   serve     — start the TCP serving loop
+//!   client    — drive a running server with synthetic requests
+//!   simulate  — simgpu report for one (n, sparsity, pattern, device)
+//!   autotune  — tune (p, b) for a matrix spec
+//!   figures   — regenerate paper tables/figures (--fig 1|4|5|6|7|10|13|14|15|table1|all)
+
+use std::sync::Arc;
+
+use gcoospdm::cli::{self, FlagSpec};
+use gcoospdm::coordinator::{Algo, Coordinator, CoordinatorConfig, SpdmRequest};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::Registry;
+use gcoospdm::serve::{Client, Server, ServerConfig};
+use gcoospdm::simgpu::{self, WalkConfig};
+use gcoospdm::sparse::Gcoo;
+use gcoospdm::{autotune, figures};
+
+const SUBCOMMANDS: [(&str, &str); 7] = [
+    ("info", "artifact registry + simulated device table"),
+    ("run", "run one SpDM end to end through PJRT"),
+    ("serve", "start the TCP serving loop"),
+    ("client", "send synthetic requests to a server"),
+    ("simulate", "simgpu kernel report"),
+    ("autotune", "tune (p, b) for a matrix spec"),
+    ("figures", "regenerate paper tables/figures"),
+];
+
+fn flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts)" },
+        FlagSpec { name: "n", takes_value: true, help: "matrix dimension" },
+        FlagSpec { name: "sparsity", takes_value: true, help: "sparsity in [0,1)" },
+        FlagSpec { name: "pattern", takes_value: true, help: "uniform|diagonal|banded|block_diagonal|power_law_rows|dense_columns" },
+        FlagSpec { name: "seed", takes_value: true, help: "rng seed" },
+        FlagSpec { name: "algo", takes_value: true, help: "auto|gcoo|gcoo_noreuse|csr|dense_xla|dense_pallas" },
+        FlagSpec { name: "verify", takes_value: false, help: "check against CPU oracle" },
+        FlagSpec { name: "addr", takes_value: true, help: "server address (default 127.0.0.1:7077)" },
+        FlagSpec { name: "workers", takes_value: true, help: "coordinator workers" },
+        FlagSpec { name: "count", takes_value: true, help: "request / corpus count" },
+        FlagSpec { name: "device", takes_value: true, help: "GTX980|TitanX|P100" },
+        FlagSpec { name: "fig", takes_value: true, help: "figure id or 'all'" },
+        FlagSpec { name: "max-n", takes_value: true, help: "scale cap for corpus figures" },
+        FlagSpec { name: "full", takes_value: false, help: "paper-scale corpus sizes" },
+        FlagSpec { name: "config", takes_value: true, help: "TOML config file (serve)" },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(&argv, &flags()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", cli::usage("gcoospdm", &SUBCOMMANDS, &flags()));
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "info" => cmd_info(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "simulate" => cmd_simulate(&args),
+        "autotune" => cmd_autotune(&args),
+        "figures" => cmd_figures(&args),
+        "" => {
+            println!("{}", cli::usage("gcoospdm", &SUBCOMMANDS, &flags()));
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_registry(args: &cli::Args) -> Result<Registry, String> {
+    Registry::load(args.get_str("artifacts", "artifacts")).map_err(|e| e.to_string())
+}
+
+fn device(args: &cli::Args) -> Result<&'static simgpu::DeviceConfig, String> {
+    match args.get_str("device", "TitanX").as_str() {
+        "GTX980" => Ok(&simgpu::GTX980),
+        "TitanX" => Ok(&simgpu::TITANX),
+        "P100" => Ok(&simgpu::P100),
+        other => Err(format!("unknown device {other}")),
+    }
+}
+
+fn gen_matrix(args: &cli::Args) -> Result<(Mat, Mat, usize, f64), String> {
+    let n = args.get_usize("n", 512)?;
+    let sparsity = args.get_f64("sparsity", 0.99)?;
+    let seed = args.get_u64("seed", 42)?;
+    let pattern = gen::Pattern::from_name(&args.get_str("pattern", "uniform"))
+        .ok_or("unknown pattern")?;
+    let mut rng = Rng::new(seed);
+    let a = gen::generate(pattern, n, sparsity, &mut rng);
+    let b = Mat::randn(n, n, &mut rng);
+    Ok((a, b, n, sparsity))
+}
+
+fn cmd_info(args: &cli::Args) -> Result<(), String> {
+    let reg = load_registry(args)?;
+    println!("artifacts dir: {}", reg.dir.display());
+    println!("{:<40} {:>6} {:>10}", "name", "n", "capacity");
+    for a in &reg.artifacts {
+        println!(
+            "{:<40} {:>6} {:>10}",
+            a.name,
+            a.n,
+            a.capacity().map(|c| c.to_string()).unwrap_or_else(|| "-".into())
+        );
+    }
+    println!("\nsimulated devices (paper Table II):");
+    println!("{:<8} {:>4}x{:<4} {:>8} {:>10}", "name", "SMs", "cores", "TFLOPS", "GB/s");
+    for d in simgpu::ALL_DEVICES {
+        println!(
+            "{:<8} {:>4}x{:<4} {:>8.2} {:>10.0}",
+            d.name, d.sms, d.cores_per_sm, d.peak_tflops, d.mem_bw_gbps
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &cli::Args) -> Result<(), String> {
+    let reg = Arc::new(load_registry(args)?);
+    let (a, b, n, sparsity) = gen_matrix(args)?;
+    let algo = match args.get_str("algo", "auto").as_str() {
+        "auto" => None,
+        s => Some(Algo::from_str(s).ok_or_else(|| format!("unknown algo {s}"))?),
+    };
+    let coord = Coordinator::new(reg, CoordinatorConfig::default());
+    let mut req = SpdmRequest::new(1, a, b);
+    req.algo_hint = algo;
+    req.verify = args.has("verify");
+    let resp = coord.run_sync(req);
+    match &resp.error {
+        Some(e) => return Err(e.clone()),
+        None => {
+            println!(
+                "n={n} sparsity={sparsity:.4} → algo={} artifact={} n_exec={}",
+                resp.algo.as_str(),
+                resp.artifact,
+                resp.n_exec
+            );
+            println!(
+                "convert {:.3} ms | kernel {:.3} ms | total {:.3} ms | verified: {:?}",
+                resp.convert_s * 1e3,
+                resp.kernel_s * 1e3,
+                resp.total_s * 1e3,
+                resp.verified
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<(), String> {
+    // Precedence: --config file < explicit flags < built-in defaults.
+    let mut sys = match args.get("config") {
+        Some(path) => gcoospdm::config::SystemConfig::from_file(path)?,
+        None => gcoospdm::config::SystemConfig::default(),
+    };
+    if let Some(addr) = args.get("addr") {
+        sys.server_addr = addr.to_string();
+    }
+    if let Some(w) = args.get("workers") {
+        sys.coordinator.workers = w.parse().map_err(|_| "--workers: bad integer")?;
+    }
+    if let Some(dir) = args.get("artifacts") {
+        sys.artifacts_dir = dir.to_string();
+    }
+    let reg = Arc::new(Registry::load(&sys.artifacts_dir).map_err(|e| e.to_string())?);
+    let coord = Arc::new(Coordinator::new(reg, sys.coordinator));
+    let scfg = ServerConfig { addr: sys.server_addr.clone() };
+    let server = Server::bind(&scfg, coord).map_err(|e| e.to_string())?;
+    println!("serving on {}", server.local_addr().map_err(|e| e.to_string())?);
+    server.run().map_err(|e| e.to_string())
+}
+
+fn cmd_client(args: &cli::Args) -> Result<(), String> {
+    let addr = args.get_str("addr", "127.0.0.1:7077");
+    let count = args.get_usize("count", 8)?;
+    let n = args.get_usize("n", 256)?;
+    let sparsity = args.get_f64("sparsity", 0.99)?;
+    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
+    for i in 0..count {
+        let r = client.spdm_synthetic(
+            i as u64,
+            n,
+            sparsity,
+            &args.get_str("pattern", "uniform"),
+            args.get_u64("seed", 1)? + i as u64,
+            &args.get_str("algo", "auto"),
+            args.has("verify"),
+        )?;
+        println!(
+            "req {}: ok={} algo={:?} kernel {:?} ms total {:?} ms verified={:?}",
+            i, r.ok, r.algo, r.kernel_ms, r.total_ms, r.verified
+        );
+    }
+    let m = client.metrics(9999)?;
+    println!("\nserver metrics:\n{}", m.metrics.unwrap_or_default());
+    Ok(())
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<(), String> {
+    let dev = device(args)?;
+    let (a, _b, n, sparsity) = gen_matrix(args)?;
+    let gcoo = Gcoo::from_dense(&a, 8);
+    let reports = simgpu::simulate_all(&gcoo, dev, &WalkConfig::default());
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "algo", "dram", "l2", "shm", "l1_tex", "time_ms", "eff_gflops"
+    );
+    for r in reports {
+        println!(
+            "{:<8} {:>12} {:>12} {:>12} {:>12} {:>12.4} {:>10.2}",
+            r.algo,
+            r.counters.dram,
+            r.counters.l2,
+            r.counters.shm,
+            r.counters.l1_tex,
+            r.time_s() * 1e3,
+            r.effective_gflops(n, sparsity)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_autotune(args: &cli::Args) -> Result<(), String> {
+    let dev = device(args)?;
+    let (a, _b, _n, _s) = gen_matrix(args)?;
+    let gcoo = Gcoo::from_dense(&a, 8);
+    let mut tuner = autotune::Autotuner::new(dev);
+    let stats = autotune::MatrixStats::measure(&gcoo);
+    println!(
+        "stats: nnz={} sparsity={:.4} reuse_fraction={:.3} band_skew={:.2}",
+        stats.nnz,
+        stats.sparsity(),
+        stats.reuse_fraction,
+        stats.band_skew
+    );
+    println!("\nanalytic ranking:");
+    for c in tuner.rank(&stats).iter().take(6) {
+        println!("  p={:<3} b={:<4} predicted={:.0}", c.p, c.b, c.predicted_cost);
+    }
+    let choice = tuner.tune(&gcoo);
+    println!(
+        "\nchosen: p={} b={} (simulated {:.4} ms on {})",
+        choice.p,
+        choice.b,
+        choice.measured_s.unwrap_or(0.0) * 1e3,
+        dev.name
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &cli::Args) -> Result<(), String> {
+    let fig = args.get_str("fig", "all");
+    let full = args.has("full");
+    let count = args.get_usize("count", if full { 2694 } else { 200 })?;
+    let max_n = args.get_usize("max-n", if full { 4096 } else { 1024 })?;
+    let run = |name: &str| -> bool { fig == "all" || fig == name };
+    if run("1") {
+        figures::fig1_roofline().print();
+    }
+    if run("table1") {
+        figures::table1_memory().print();
+    }
+    if run("4") {
+        figures::fig4_public_hist(count, max_n).print();
+    }
+    if run("5") {
+        figures::fig5_selected(if full { 4096 } else { 1024 }).print();
+    }
+    if run("6") {
+        figures::fig6_random_hist(count, max_n.max(2048)).print();
+    }
+    if run("7") || run("8") || run("9") {
+        figures::fig7_9_time_vs_sparsity().print();
+    }
+    if run("10") || run("11") || run("12") {
+        figures::fig10_12_perf_vs_size().print();
+    }
+    if run("13") {
+        figures::fig13_breakdown().print();
+    }
+    if run("14") {
+        figures::fig14_instructions().print();
+    }
+    if run("15") {
+        figures::fig15_scaling().print();
+    }
+    println!("CSV series written under results/");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Roofline model (paper Fig 1 and §II-A).
+//!
+//! attainable(r) = min(peak_flops, r × dram_bandwidth): below the ridge
+//! point the kernel is memory-bound and throughput grows linearly in the
+//! operational intensity r; above it the kernel is compute-bound.
+
+use crate::simgpu::{DeviceConfig, WalkConfig, simulate_dense};
+
+/// Attainable GFLOPS at operational intensity `r` (FLOPs/byte).
+pub fn attainable_gflops(dev: &DeviceConfig, r: f64) -> f64 {
+    (dev.peak_flops().min(r * dev.dram_bw())) / 1e9
+}
+
+/// Ridge point: the intensity where the kernel turns compute-bound.
+pub fn ridge_point(dev: &DeviceConfig) -> f64 {
+    dev.peak_flops() / dev.dram_bw()
+}
+
+/// One point of the Fig-1 "cuBLAS measured" curve: simulate the dense GEMM
+/// at size n and report (r, achieved GFLOPS).
+pub fn gemm_point(dev: &DeviceConfig, n: usize) -> (f64, f64) {
+    let rep = simulate_dense(n, dev, &WalkConfig::default());
+    let r = crate::simgpu::estimate_r(&rep);
+    let gflops = rep.flops as f64 / rep.time_s() / 1e9;
+    (r, gflops)
+}
+
+/// The theoretical curve sampled log-uniformly over [r_lo, r_hi].
+pub fn theoretical_curve(dev: &DeviceConfig, r_lo: f64, r_hi: f64, points: usize) -> Vec<(f64, f64)> {
+    (0..points)
+        .map(|i| {
+            let t = i as f64 / (points - 1).max(1) as f64;
+            let r = r_lo * (r_hi / r_lo).powf(t);
+            (r, attainable_gflops(dev, r))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::{GTX980, TITANX};
+
+    #[test]
+    fn memory_bound_region_linear() {
+        let r = ridge_point(&TITANX);
+        let y1 = attainable_gflops(&TITANX, r / 8.0);
+        let y2 = attainable_gflops(&TITANX, r / 4.0);
+        assert!((y2 / y1 - 2.0).abs() < 1e-9, "linear below ridge");
+    }
+
+    #[test]
+    fn compute_bound_region_flat() {
+        let r = ridge_point(&GTX980);
+        let y1 = attainable_gflops(&GTX980, r * 2.0);
+        let y2 = attainable_gflops(&GTX980, r * 20.0);
+        assert_eq!(y1, y2);
+        assert!((y1 - GTX980.peak_tflops * 1e3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ridge_points_match_table2() {
+        // GTX980: 4981/224 ≈ 22.2 FLOPs/byte; TitanX: 10970/433 ≈ 25.3.
+        assert!((ridge_point(&GTX980) - 4.981e12 / 224e9).abs() < 1e-9);
+        assert!(ridge_point(&TITANX) > ridge_point(&GTX980));
+    }
+
+    #[test]
+    fn gemm_sits_near_but_under_roof() {
+        let (r, gflops) = gemm_point(&TITANX, 2048);
+        let roof = attainable_gflops(&TITANX, r);
+        assert!(gflops <= roof * 1.001, "measured {gflops} exceeds roof {roof}");
+        assert!(gflops > 0.2 * roof, "GEMM should be within 5x of the roof");
+    }
+
+    #[test]
+    fn theoretical_curve_monotone() {
+        let pts = theoretical_curve(&TITANX, 0.1, 100.0, 32);
+        assert_eq!(pts.len(), 32);
+        for w in pts.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9);
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! Engine: PJRT CPU client + compile cache + typed SpDM execution helpers.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that this xla_extension
+//! (0.5.1) rejects; the text parser reassigns ids (see aot recipe notes in
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{ArtifactMeta, Registry, RuntimeError};
+use crate::ndarray::Mat;
+use crate::sparse::{Ell, GcooPadded};
+
+/// Result of one executed SpDM: the product and the kernel wall time.
+#[derive(Clone, Debug)]
+pub struct SpdmOutput {
+    pub c: Mat,
+    pub kernel_s: f64,
+    pub artifact: String,
+}
+
+/// PJRT client with a per-artifact compile cache. `Send + Sync` via the
+/// internal mutex; one engine is shared by all coordinator workers.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// compile timings per artifact (observability; tests assert caching).
+    compile_log: Mutex<Vec<(String, f64)>>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine, RuntimeError> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+            compile_log: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(
+        &self,
+        meta: &ArtifactMeta,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.compile_log
+            .lock()
+            .unwrap()
+            .push((meta.name.clone(), t0.elapsed().as_secs_f64()));
+        self.cache.lock().unwrap().insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of distinct artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.lock().unwrap().clone()
+    }
+
+    /// Execute an artifact on literal inputs; unwraps the 1-tuple output
+    /// into an (n, n) matrix.
+    fn execute(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[xla::Literal],
+    ) -> Result<SpdmOutput, RuntimeError> {
+        let exe = self.load(meta)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let kernel_s = t0.elapsed().as_secs_f64();
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        if data.len() != meta.n * meta.n {
+            return Err(RuntimeError::Shape(format!(
+                "{}: output length {} != {}²",
+                meta.name,
+                data.len(),
+                meta.n
+            )));
+        }
+        Ok(SpdmOutput {
+            c: Mat::from_vec(meta.n, meta.n, data),
+            kernel_s,
+            artifact: meta.name.clone(),
+        })
+    }
+
+    /// Run GCOOSpDM: pick the artifact from `reg`, check shapes, execute.
+    pub fn run_gcoo(
+        &self,
+        reg: &Registry,
+        padded: &GcooPadded,
+        b: &Mat,
+        reuse: bool,
+    ) -> Result<SpdmOutput, RuntimeError> {
+        let algo = if reuse { "gcoo" } else { "gcoo_noreuse" };
+        let n = b.rows;
+        let meta = reg.select(algo, n, padded.cap)?;
+        let cap = meta.param("cap").expect("gcoo artifact has cap");
+        // Re-pad if the artifact's cap differs from the provided padding.
+        let (vals, rows, cols) = if cap == padded.cap {
+            (padded.vals.clone(), padded.rows.clone(), padded.cols.clone())
+        } else {
+            repad(padded, cap)
+        };
+        check(b.rows == meta.n && b.cols == meta.n, || {
+            format!("B is {}x{}, artifact n={}", b.rows, b.cols, meta.n)
+        })?;
+        check(padded.g * padded.p == meta.n, || {
+            format!("A bands {}x{} != n={}", padded.g, padded.p, meta.n)
+        })?;
+        let g = padded.g;
+        let lits = vec![
+            lit_f32(&vals, &[g, cap])?,
+            lit_i32(&rows, &[g, cap])?,
+            lit_i32(&cols, &[g, cap])?,
+            lit_f32(&b.data, &[n, n])?,
+        ];
+        self.execute(meta, &lits)
+    }
+
+    /// Run the CSR (cuSPARSE-analog) kernel.
+    pub fn run_csr(&self, reg: &Registry, ell: &Ell, b: &Mat) -> Result<SpdmOutput, RuntimeError> {
+        let n = b.rows;
+        let meta = reg.select("csr", n, ell.rowcap)?;
+        let rowcap = meta.param("rowcap").expect("csr artifact has rowcap");
+        let (vals, cols) = if rowcap == ell.rowcap {
+            (ell.vals.clone(), ell.cols.clone())
+        } else {
+            repad_ell(ell, rowcap)
+        };
+        check(ell.n == meta.n && b.rows == meta.n && b.cols == meta.n, || {
+            format!("shape mismatch: ell.n={} b={}x{} n={}", ell.n, b.rows, b.cols, meta.n)
+        })?;
+        let lits = vec![
+            lit_f32(&vals, &[n, rowcap])?,
+            lit_i32(&cols, &[n, rowcap])?,
+            lit_f32(&b.data, &[n, n])?,
+        ];
+        self.execute(meta, &lits)
+    }
+
+    /// Run the GCOO SpMV extension kernel: y = A·x (paper future work).
+    pub fn run_gcoo_spmv(
+        &self,
+        reg: &Registry,
+        padded: &GcooPadded,
+        x: &[f32],
+    ) -> Result<(Vec<f32>, f64, String), RuntimeError> {
+        let n = x.len();
+        let meta = reg.select("gcoo_spmv", n, padded.cap)?;
+        let cap = meta.param("cap").expect("spmv artifact has cap");
+        let (vals, rows, cols) = if cap == padded.cap {
+            (padded.vals.clone(), padded.rows.clone(), padded.cols.clone())
+        } else {
+            repad(padded, cap)
+        };
+        check(padded.g * padded.p == meta.n && n == meta.n, || {
+            format!("spmv shapes: A bands {}x{}, x len {}, artifact n={}", padded.g, padded.p, n, meta.n)
+        })?;
+        let g = padded.g;
+        let lits = vec![
+            lit_f32(&vals, &[g, cap])?,
+            lit_i32(&rows, &[g, cap])?,
+            lit_i32(&cols, &[g, cap])?,
+            lit_f32(x, &[n])?,
+        ];
+        let exe = self.load(meta)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let kernel_s = t0.elapsed().as_secs_f64();
+        let out = result.to_tuple1()?;
+        let y = out.to_vec::<f32>()?;
+        check(y.len() == n, || format!("spmv output {} != {}", y.len(), n))?;
+        Ok((y, kernel_s, meta.name.clone()))
+    }
+
+    /// Run a dense baseline ("dense_xla" = the vendor GEMM, "dense_pallas"
+    /// = the explicit tiled kernel).
+    pub fn run_dense(
+        &self,
+        reg: &Registry,
+        algo: &str,
+        a: &Mat,
+        b: &Mat,
+    ) -> Result<SpdmOutput, RuntimeError> {
+        let n = b.rows;
+        let meta = reg.select(algo, n, 0)?;
+        check(a.rows == n && a.cols == n && b.cols == n, || {
+            format!("dense shapes {}x{} / {}x{}", a.rows, a.cols, b.rows, b.cols)
+        })?;
+        let lits = vec![lit_f32(&a.data, &[n, n])?, lit_f32(&b.data, &[n, n])?];
+        self.execute(meta, &lits)
+    }
+}
+
+fn check(ok: bool, msg: impl FnOnce() -> String) -> Result<(), RuntimeError> {
+    if ok {
+        Ok(())
+    } else {
+        Err(RuntimeError::Shape(msg()))
+    }
+}
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal, RuntimeError> {
+    let expect: usize = dims.iter().product();
+    if data.len() != expect {
+        return Err(RuntimeError::Shape(format!("f32 literal {} != {:?}", data.len(), dims)));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal, RuntimeError> {
+    let expect: usize = dims.iter().product();
+    if data.len() != expect {
+        return Err(RuntimeError::Shape(format!("i32 literal {} != {:?}", data.len(), dims)));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Re-pad device GCOO slabs to a different capacity.
+fn repad(p: &GcooPadded, cap: usize) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
+    let mut vals = vec![0.0f32; p.g * cap];
+    let mut rows = vec![0i32; p.g * cap];
+    let mut cols = vec![0i32; p.g * cap];
+    let copy = p.cap.min(cap);
+    for gi in 0..p.g {
+        vals[gi * cap..gi * cap + copy].copy_from_slice(&p.vals[gi * p.cap..gi * p.cap + copy]);
+        rows[gi * cap..gi * cap + copy].copy_from_slice(&p.rows[gi * p.cap..gi * p.cap + copy]);
+        cols[gi * cap..gi * cap + copy].copy_from_slice(&p.cols[gi * p.cap..gi * p.cap + copy]);
+    }
+    (vals, rows, cols)
+}
+
+fn repad_ell(e: &Ell, rowcap: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut vals = vec![0.0f32; e.n * rowcap];
+    let mut cols = vec![0i32; e.n * rowcap];
+    let copy = e.rowcap.min(rowcap);
+    for i in 0..e.n {
+        vals[i * rowcap..i * rowcap + copy]
+            .copy_from_slice(&e.vals[i * e.rowcap..i * e.rowcap + copy]);
+        cols[i * rowcap..i * rowcap + copy]
+            .copy_from_slice(&e.cols[i * e.rowcap..i * e.rowcap + copy]);
+    }
+    (vals, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repad_grows_and_shrinks_consistently() {
+        let p = GcooPadded {
+            g: 2,
+            cap: 2,
+            p: 2,
+            n: 4,
+            vals: vec![1.0, 2.0, 3.0, 4.0],
+            rows: vec![0, 1, 0, 1],
+            cols: vec![0, 1, 2, 3],
+        };
+        let (v, r, c) = repad(&p, 3);
+        assert_eq!(v, vec![1.0, 2.0, 0.0, 3.0, 4.0, 0.0]);
+        assert_eq!(r, vec![0, 1, 0, 0, 1, 0]);
+        assert_eq!(c, vec![0, 1, 0, 2, 3, 0]);
+    }
+
+    #[test]
+    fn repad_ell_grows() {
+        let e = Ell { n: 2, rowcap: 1, vals: vec![5.0, 6.0], cols: vec![1, 0] };
+        let (v, c) = repad_ell(&e, 2);
+        assert_eq!(v, vec![5.0, 0.0, 6.0, 0.0]);
+        assert_eq!(c, vec![1, 0, 0, 0]);
+    }
+
+    // Engine tests that need a PJRT client + real artifacts live in
+    // rust/tests/runtime_integration.rs (they require `make artifacts`).
+}

@@ -1,0 +1,45 @@
+//! Runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) via the `xla`
+//! crate's PJRT CPU client and executes them from the request path.
+//!
+//! Python never runs here: the manifest + HLO text files are the entire
+//! interface between the build path and this layer.
+
+mod registry;
+mod engine;
+
+pub use registry::{ArtifactMeta, InputSpec, Registry};
+pub use engine::{Engine, SpdmOutput};
+
+/// Errors from the runtime layer.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// manifest.json missing/invalid or artifact file unreadable.
+    Manifest(String),
+    /// No compiled variant can serve the request.
+    NoVariant { algo: String, n: usize, needed_cap: usize },
+    /// PJRT/XLA failure.
+    Xla(String),
+    /// Input shape does not match the artifact.
+    Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Manifest(m) => write!(f, "manifest error: {m}"),
+            RuntimeError::NoVariant { algo, n, needed_cap } => {
+                write!(f, "no {algo} artifact for n={n} cap>={needed_cap}")
+            }
+            RuntimeError::Xla(m) => write!(f, "xla error: {m}"),
+            RuntimeError::Shape(m) => write!(f, "shape error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}

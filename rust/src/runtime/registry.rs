@@ -1,0 +1,242 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python -m compile.aot`) and answers variant-selection queries — e.g.
+//! "the smallest-capacity gcoo executable for n=512 that fits 1300 nonzeros
+//! per band". Capacity routing is a real scheduling decision: smaller caps
+//! run fewer scan iterations, so picking the tightest fit is a performance
+//! lever (see EXPERIMENTS.md §Perf).
+
+use std::path::{Path, PathBuf};
+
+use super::RuntimeError;
+use crate::json;
+
+/// One input tensor of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub algo: String,
+    pub n: usize,
+    /// Kernel parameters (p, tb, cap / rp, rowcap / tm…).
+    pub params: Vec<(String, usize)>,
+    pub inputs: Vec<InputSpec>,
+    pub file: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// GCOO band capacity or ELL row capacity, when applicable.
+    pub fn capacity(&self) -> Option<usize> {
+        self.param("cap").or_else(|| self.param("rowcap"))
+    }
+}
+
+/// Parsed manifest + lookup indexes.
+pub struct Registry {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Registry {
+    /// Load from an artifacts directory containing `manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            RuntimeError::Manifest(format!("{}: {e}", manifest_path.display()))
+        })?;
+        Self::from_manifest_json(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn from_manifest_json(text: &str, dir: PathBuf) -> Result<Registry, RuntimeError> {
+        let root = json::parse(text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| RuntimeError::Manifest("missing 'artifacts' array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_str = |k: &str| -> Result<String, RuntimeError> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| RuntimeError::Manifest(format!("artifact missing '{k}'")))
+            };
+            let name = get_str("name")?;
+            let algo = get_str("algo")?;
+            let n = a
+                .get("n")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| RuntimeError::Manifest(format!("{name}: missing n")))?;
+            let mut params = Vec::new();
+            if let Some(json::Value::Obj(kvs)) = a.get("params") {
+                for (k, v) in kvs {
+                    if let Some(x) = v.as_usize() {
+                        params.push((k.clone(), x));
+                    }
+                }
+            }
+            let mut inputs = Vec::new();
+            if let Some(arr) = a.get("inputs").and_then(|v| v.as_arr()) {
+                for inp in arr {
+                    inputs.push(InputSpec {
+                        name: inp
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or_default()
+                            .to_string(),
+                        dtype: inp
+                            .get("dtype")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("float32")
+                            .to_string(),
+                        shape: inp
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .map(|xs| xs.iter().filter_map(|x| x.as_usize()).collect())
+                            .unwrap_or_default(),
+                    });
+                }
+            }
+            let file = dir.join(get_str("file")?);
+            artifacts.push(ArtifactMeta { name, algo, n, params, inputs, file });
+        }
+        Ok(Registry { artifacts, dir })
+    }
+
+    /// All variants of an algorithm at dimension n.
+    pub fn variants(&self, algo: &str, n: usize) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.algo == algo && a.n == n).collect()
+    }
+
+    /// Smallest-capacity variant that fits `needed_cap` (gcoo/csr), or the
+    /// unique variant for dense algorithms.
+    pub fn select(
+        &self,
+        algo: &str,
+        n: usize,
+        needed_cap: usize,
+    ) -> Result<&ArtifactMeta, RuntimeError> {
+        self.variants(algo, n)
+            .into_iter()
+            .filter(|a| a.capacity().map_or(true, |c| c >= needed_cap))
+            .min_by_key(|a| a.capacity().unwrap_or(0))
+            .ok_or(RuntimeError::NoVariant { algo: algo.to_string(), n, needed_cap })
+    }
+
+    /// Dimensions for which `algo` has at least one artifact, sorted.
+    pub fn sizes(&self, algo: &str) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.algo == algo)
+            .map(|a| a.n)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Smallest exported n that is >= the requested dimension (requests are
+    /// zero-padded up to it by the coordinator).
+    pub fn fit_size(&self, algo: &str, n: usize) -> Option<usize> {
+        self.sizes(algo).into_iter().find(|&s| s >= n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "schema": 1,
+      "artifacts": [
+        {"name": "gcoo_n256_cap64", "algo": "gcoo", "n": 256,
+         "params": {"p": 8, "tb": 128, "cap": 64},
+         "inputs": [{"name": "values", "dtype": "float32", "shape": [32, 64]}],
+         "file": "gcoo_n256_cap64.hlo.txt"},
+        {"name": "gcoo_n256_cap256", "algo": "gcoo", "n": 256,
+         "params": {"p": 8, "tb": 128, "cap": 256},
+         "inputs": [], "file": "gcoo_n256_cap256.hlo.txt"},
+        {"name": "dense_xla_n256", "algo": "dense_xla", "n": 256,
+         "params": {}, "inputs": [], "file": "dense_xla_n256.hlo.txt"},
+        {"name": "gcoo_n512_cap128", "algo": "gcoo", "n": 512,
+         "params": {"p": 8, "tb": 128, "cap": 128},
+         "inputs": [], "file": "gcoo_n512_cap128.hlo.txt"}
+      ]
+    }"#;
+
+    fn reg() -> Registry {
+        Registry::from_manifest_json(SAMPLE, PathBuf::from("/tmp/arts")).unwrap()
+    }
+
+    #[test]
+    fn parses_artifacts() {
+        let r = reg();
+        assert_eq!(r.artifacts.len(), 4);
+        assert_eq!(r.artifacts[0].param("cap"), Some(64));
+        assert_eq!(r.artifacts[0].inputs[0].shape, vec![32, 64]);
+    }
+
+    #[test]
+    fn select_smallest_sufficient_cap() {
+        let r = reg();
+        assert_eq!(r.select("gcoo", 256, 50).unwrap().name, "gcoo_n256_cap64");
+        assert_eq!(r.select("gcoo", 256, 65).unwrap().name, "gcoo_n256_cap256");
+        assert_eq!(r.select("gcoo", 256, 64).unwrap().name, "gcoo_n256_cap64");
+    }
+
+    #[test]
+    fn select_errors_when_nothing_fits() {
+        let r = reg();
+        assert!(matches!(
+            r.select("gcoo", 256, 1000),
+            Err(RuntimeError::NoVariant { .. })
+        ));
+        assert!(r.select("gcoo", 1024, 1).is_err());
+    }
+
+    #[test]
+    fn dense_has_no_capacity_constraint() {
+        let r = reg();
+        assert_eq!(r.select("dense_xla", 256, usize::MAX).unwrap().name, "dense_xla_n256");
+    }
+
+    #[test]
+    fn sizes_and_fit() {
+        let r = reg();
+        assert_eq!(r.sizes("gcoo"), vec![256, 512]);
+        assert_eq!(r.fit_size("gcoo", 100), Some(256));
+        assert_eq!(r.fit_size("gcoo", 256), Some(256));
+        assert_eq!(r.fit_size("gcoo", 300), Some(512));
+        assert_eq!(r.fit_size("gcoo", 9999), None);
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(Registry::from_manifest_json("{}", PathBuf::new()).is_err());
+        assert!(Registry::from_manifest_json("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // When `make artifacts` has run, the real manifest must parse and
+        // contain every algorithm family at every exported size.
+        if let Ok(r) = Registry::load("artifacts") {
+            for algo in ["gcoo", "gcoo_noreuse", "csr", "dense_pallas", "dense_xla"] {
+                assert!(!r.sizes(algo).is_empty(), "missing {algo}");
+            }
+        }
+    }
+}

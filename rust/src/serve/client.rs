@@ -1,0 +1,101 @@
+//! Blocking TCP client for the serving protocol.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use super::protocol::{parse_response, Response};
+use crate::json::Value;
+
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    fn round_trip(&mut self, line: &str) -> Result<Response, String> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| e.to_string())?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf).map_err(|e| e.to_string())?;
+        parse_response(buf.trim())
+    }
+
+    pub fn ping(&mut self, id: u64) -> Result<Response, String> {
+        self.round_trip(&crate::json::write(
+            &Value::obj().field("id", id).field("type", "ping").build(),
+        ))
+    }
+
+    pub fn metrics(&mut self, id: u64) -> Result<Response, String> {
+        self.round_trip(&crate::json::write(
+            &Value::obj().field("id", id).field("type", "metrics").build(),
+        ))
+    }
+
+    pub fn shutdown(&mut self, id: u64) -> Result<Response, String> {
+        self.round_trip(&crate::json::write(
+            &Value::obj().field("id", id).field("type", "shutdown").build(),
+        ))
+    }
+
+    /// Synthetic-workload SpDM request.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spdm_synthetic(
+        &mut self,
+        id: u64,
+        n: usize,
+        sparsity: f64,
+        pattern: &str,
+        seed: u64,
+        algo: &str,
+        verify: bool,
+    ) -> Result<Response, String> {
+        let line = crate::json::write(
+            &Value::obj()
+                .field("id", id)
+                .field("type", "spdm")
+                .field("n", n)
+                .field("payload", "synthetic")
+                .field("sparsity", sparsity)
+                .field("pattern", pattern)
+                .field("seed", seed)
+                .field("algo", algo)
+                .field("verify", verify)
+                .build(),
+        );
+        self.round_trip(&line)
+    }
+
+    /// Inline-payload SpDM request.
+    pub fn spdm_inline(
+        &mut self,
+        id: u64,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        verify: bool,
+    ) -> Result<Response, String> {
+        let to_arr = |xs: &[f32]| Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect());
+        let line = crate::json::write(
+            &Value::obj()
+                .field("id", id)
+                .field("type", "spdm")
+                .field("n", n)
+                .field("payload", "inline")
+                .field("a", to_arr(a))
+                .field("b", to_arr(b))
+                .field("verify", verify)
+                .build(),
+        );
+        self.round_trip(&line)
+    }
+}

@@ -1,0 +1,16 @@
+//! Serving layer: line-delimited-JSON protocol over TCP, server and client.
+//!
+//! The request path is rust-only: a request either carries inline matrix
+//! data or (for benchmarking and the examples) a synthetic-workload spec the
+//! server materializes with [`crate::gen`] before handing the job to the
+//! coordinator.
+
+mod protocol;
+mod server;
+mod client;
+mod trace;
+
+pub use protocol::{Request, Response, Payload, parse_request, render_response, parse_response};
+pub use server::{Server, ServerConfig};
+pub use client::Client;
+pub use trace::{TraceSpec, TraceItem, ReplayReport, generate as generate_trace, replay as replay_trace};

@@ -1,0 +1,247 @@
+//! Wire protocol: one JSON object per line.
+//!
+//! Requests:
+//!   {"id":1,"type":"spdm","n":256,"payload":"synthetic","sparsity":0.99,
+//!    "pattern":"uniform","seed":42,"algo":"auto","verify":false}
+//!   {"id":2,"type":"spdm","n":4,"payload":"inline","a":[...16 floats],
+//!    "b":[...16 floats]}
+//!   {"id":3,"type":"metrics"}    {"id":4,"type":"ping"}
+//!
+//! Responses:
+//!   {"id":1,"ok":true,"algo":"gcoo","artifact":"gcoo_n256_…","n_exec":256,
+//!    "convert_ms":0.8,"kernel_ms":3.1,"total_ms":4.2,"verified":null,
+//!    "checksum":123.5}
+//!   {"id":3,"ok":true,"metrics":"…"}    {"id":1,"ok":false,"error":"…"}
+
+use crate::coordinator::Algo;
+use crate::json::{self, Value};
+
+/// How the A/B operands arrive.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Synthetic { sparsity: f64, pattern: String, seed: u64 },
+    Inline { a: Vec<f32>, b: Vec<f32> },
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Spdm {
+        id: u64,
+        n: usize,
+        payload: Payload,
+        algo: Option<Algo>,
+        verify: bool,
+    },
+    Metrics { id: u64 },
+    Ping { id: u64 },
+    Shutdown { id: u64 },
+}
+
+/// A server response (subset of fields depending on request type).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+    pub algo: Option<String>,
+    pub artifact: Option<String>,
+    pub n_exec: Option<usize>,
+    pub convert_ms: Option<f64>,
+    pub kernel_ms: Option<f64>,
+    pub total_ms: Option<f64>,
+    pub verified: Option<bool>,
+    pub checksum: Option<f64>,
+    pub metrics: Option<String>,
+}
+
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = json::parse(line).map_err(|e| e.to_string())?;
+    let id = v.get("id").and_then(Value::as_u64).ok_or("missing id")?;
+    match v.get("type").and_then(Value::as_str).ok_or("missing type")? {
+        "ping" => Ok(Request::Ping { id }),
+        "metrics" => Ok(Request::Metrics { id }),
+        "shutdown" => Ok(Request::Shutdown { id }),
+        "spdm" => {
+            let n = v.get("n").and_then(Value::as_usize).ok_or("missing n")?;
+            if n == 0 {
+                return Err("n must be positive".into());
+            }
+            let payload = match v.get("payload").and_then(Value::as_str).unwrap_or("synthetic") {
+                "synthetic" => Payload::Synthetic {
+                    sparsity: v.get("sparsity").and_then(Value::as_f64).unwrap_or(0.99),
+                    pattern: v
+                        .get("pattern")
+                        .and_then(Value::as_str)
+                        .unwrap_or("uniform")
+                        .to_string(),
+                    seed: v.get("seed").and_then(Value::as_u64).unwrap_or(0),
+                },
+                "inline" => {
+                    let grab = |k: &str| -> Result<Vec<f32>, String> {
+                        v.get(k)
+                            .and_then(Value::as_arr)
+                            .ok_or(format!("missing {k}"))?
+                            .iter()
+                            .map(|x| x.as_f64().map(|f| f as f32).ok_or(format!("bad {k}")))
+                            .collect()
+                    };
+                    let a = grab("a")?;
+                    let b = grab("b")?;
+                    if a.len() != n * n || b.len() != n * n {
+                        return Err(format!("inline payload sizes {} / {} != n²={}", a.len(), b.len(), n * n));
+                    }
+                    Payload::Inline { a, b }
+                }
+                other => return Err(format!("unknown payload kind {other}")),
+            };
+            let algo = match v.get("algo").and_then(Value::as_str) {
+                None | Some("auto") => None,
+                Some(s) => Some(Algo::from_str(s).ok_or(format!("unknown algo {s}"))?),
+            };
+            Ok(Request::Spdm {
+                id,
+                n,
+                payload,
+                algo,
+                verify: v.get("verify").and_then(Value::as_bool).unwrap_or(false),
+            })
+        }
+        other => Err(format!("unknown request type {other}")),
+    }
+}
+
+pub fn render_response(r: &Response) -> String {
+    let mut b = Value::obj().field("id", r.id).field("ok", r.ok);
+    if let Some(e) = &r.error {
+        b = b.field("error", e.as_str());
+    }
+    if let Some(a) = &r.algo {
+        b = b.field("algo", a.as_str());
+    }
+    if let Some(a) = &r.artifact {
+        b = b.field("artifact", a.as_str());
+    }
+    if let Some(x) = r.n_exec {
+        b = b.field("n_exec", x);
+    }
+    if let Some(x) = r.convert_ms {
+        b = b.field("convert_ms", x);
+    }
+    if let Some(x) = r.kernel_ms {
+        b = b.field("kernel_ms", x);
+    }
+    if let Some(x) = r.total_ms {
+        b = b.field("total_ms", x);
+    }
+    if let Some(x) = r.verified {
+        b = b.field("verified", x);
+    }
+    if let Some(x) = r.checksum {
+        b = b.field("checksum", x);
+    }
+    if let Some(m) = &r.metrics {
+        b = b.field("metrics", m.as_str());
+    }
+    json::write(&b.build())
+}
+
+pub fn parse_response(line: &str) -> Result<Response, String> {
+    let v = json::parse(line).map_err(|e| e.to_string())?;
+    Ok(Response {
+        id: v.get("id").and_then(Value::as_u64).ok_or("missing id")?,
+        ok: v.get("ok").and_then(Value::as_bool).ok_or("missing ok")?,
+        error: v.get("error").and_then(Value::as_str).map(str::to_string),
+        algo: v.get("algo").and_then(Value::as_str).map(str::to_string),
+        artifact: v.get("artifact").and_then(Value::as_str).map(str::to_string),
+        n_exec: v.get("n_exec").and_then(Value::as_usize),
+        convert_ms: v.get("convert_ms").and_then(Value::as_f64),
+        kernel_ms: v.get("kernel_ms").and_then(Value::as_f64),
+        total_ms: v.get("total_ms").and_then(Value::as_f64),
+        verified: v.get("verified").and_then(Value::as_bool),
+        checksum: v.get("checksum").and_then(Value::as_f64),
+        metrics: v.get("metrics").and_then(Value::as_str).map(str::to_string),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_synthetic_request() {
+        let r = parse_request(
+            r#"{"id":1,"type":"spdm","n":256,"payload":"synthetic","sparsity":0.99,"pattern":"banded","seed":7,"algo":"gcoo","verify":true}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Spdm { id, n, payload, algo, verify } => {
+                assert_eq!((id, n, verify), (1, 256, true));
+                assert_eq!(algo, Some(Algo::Gcoo));
+                assert_eq!(
+                    payload,
+                    Payload::Synthetic { sparsity: 0.99, pattern: "banded".into(), seed: 7 }
+                );
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn parse_inline_request_checks_sizes() {
+        let ok = r#"{"id":2,"type":"spdm","n":2,"payload":"inline","a":[1,0,0,1],"b":[1,2,3,4]}"#;
+        assert!(matches!(parse_request(ok), Ok(Request::Spdm { .. })));
+        let bad = r#"{"id":2,"type":"spdm","n":2,"payload":"inline","a":[1],"b":[1,2,3,4]}"#;
+        assert!(parse_request(bad).is_err());
+    }
+
+    #[test]
+    fn parse_control_requests() {
+        assert!(matches!(parse_request(r#"{"id":3,"type":"ping"}"#), Ok(Request::Ping { id: 3 })));
+        assert!(matches!(
+            parse_request(r#"{"id":4,"type":"metrics"}"#),
+            Ok(Request::Metrics { id: 4 })
+        ));
+        assert!(matches!(
+            parse_request(r#"{"id":5,"type":"shutdown"}"#),
+            Ok(Request::Shutdown { id: 5 })
+        ));
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        assert!(parse_request("garbage").is_err());
+        assert!(parse_request(r#"{"type":"spdm"}"#).is_err()); // no id
+        assert!(parse_request(r#"{"id":1,"type":"spdm"}"#).is_err()); // no n
+        assert!(parse_request(r#"{"id":1,"type":"spdm","n":0}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"type":"warp"}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"type":"spdm","n":4,"algo":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let r = Response {
+            id: 9,
+            ok: true,
+            algo: Some("gcoo".into()),
+            artifact: Some("gcoo_n256_p8_tb128_cap256".into()),
+            n_exec: Some(256),
+            convert_ms: Some(0.5),
+            kernel_ms: Some(2.25),
+            total_ms: Some(3.5),
+            verified: Some(true),
+            checksum: Some(42.5),
+            ..Default::default()
+        };
+        let parsed = parse_response(&render_response(&r)).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn error_response_round_trip() {
+        let r = Response { id: 1, ok: false, error: Some("no artifact".into()), ..Default::default() };
+        let parsed = parse_response(&render_response(&r)).unwrap();
+        assert_eq!(parsed.error.as_deref(), Some("no artifact"));
+        assert!(!parsed.ok);
+    }
+}

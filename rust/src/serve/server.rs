@@ -1,0 +1,220 @@
+//! TCP server: accepts line-delimited JSON requests, materializes synthetic
+//! workloads, and drives the coordinator.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::protocol::{parse_request, render_response, Payload, Request, Response};
+use crate::coordinator::{Coordinator, SpdmRequest};
+use crate::gen;
+use crate::ndarray::Mat;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7077".into() }
+    }
+}
+
+/// The serving front end. Owns the listener; the coordinator is shared.
+pub struct Server {
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(cfg: &ServerConfig, coordinator: Arc<Coordinator>) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        Ok(Server { listener, coordinator, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (useful when binding port 0 in tests).
+    pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Handle for requesting shutdown from another thread.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop; returns when a shutdown request arrives or `stop` is set.
+    /// Connections are handled on their own threads; jobs funnel into the
+    /// shared coordinator whose queue provides the backpressure.
+    pub fn run(self) -> std::io::Result<()> {
+        self.listener.set_nonblocking(true)?;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _addr)) => {
+                    let coord = Arc::clone(&self.coordinator);
+                    let stop = Arc::clone(&self.stop);
+                    conns.push(std::thread::spawn(move || {
+                        let _ = handle_connection(stream, &coord, &stop);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    // Read timeout so idle connections re-check `stop` — otherwise a client
+    // holding an open connection would pin this handler past shutdown.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        // NB: on timeout, read_line may have appended a *partial* line;
+        // keep the buffer and let the next call complete it.
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF: client closed
+            Ok(_) => {
+                let request = line.trim().to_string();
+                line.clear();
+                if request.is_empty() {
+                    continue;
+                }
+                let resp = dispatch(&request, coord, stop);
+                writer.write_all(render_response(&resp).as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // timeout tick: loop to re-check stop
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Turn one request line into a response (pure-ish; unit tested directly).
+pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            return Response { id: 0, ok: false, error: Some(e), ..Default::default() }
+        }
+    };
+    match req {
+        Request::Ping { id } => Response { id, ok: true, ..Default::default() },
+        Request::Shutdown { id } => {
+            stop.store(true, Ordering::SeqCst);
+            Response { id, ok: true, ..Default::default() }
+        }
+        Request::Metrics { id } => Response {
+            id,
+            ok: true,
+            metrics: Some(coord.metrics().snapshot().render()),
+            ..Default::default()
+        },
+        Request::Spdm { id, n, payload, algo, verify } => {
+            let (a, b) = match materialize(n, &payload) {
+                Ok(ab) => ab,
+                Err(e) => {
+                    return Response { id, ok: false, error: Some(e), ..Default::default() }
+                }
+            };
+            let mut sreq = SpdmRequest::new(id, a, b);
+            sreq.algo_hint = algo;
+            sreq.verify = verify;
+            let resp = coord.run_sync(sreq);
+            if let Some(err) = resp.error {
+                return Response { id, ok: false, error: Some(err), ..Default::default() };
+            }
+            let checksum = resp.c.as_ref().map(|c| c.data.iter().map(|x| *x as f64).sum());
+            Response {
+                id,
+                ok: true,
+                algo: Some(resp.algo.as_str().to_string()),
+                artifact: Some(resp.artifact),
+                n_exec: Some(resp.n_exec),
+                convert_ms: Some(resp.convert_s * 1e3),
+                kernel_ms: Some(resp.kernel_s * 1e3),
+                total_ms: Some(resp.total_s * 1e3),
+                verified: resp.verified,
+                checksum,
+                ..Default::default()
+            }
+        }
+    }
+}
+
+fn materialize(n: usize, payload: &Payload) -> Result<(Mat, Mat), String> {
+    match payload {
+        Payload::Inline { a, b } => Ok((
+            Mat::from_vec(n, n, a.clone()),
+            Mat::from_vec(n, n, b.clone()),
+        )),
+        Payload::Synthetic { sparsity, pattern, seed } => {
+            let pat = gen::Pattern::from_name(pattern)
+                .ok_or_else(|| format!("unknown pattern {pattern}"))?;
+            let mut rng = Rng::new(*seed);
+            let a = gen::generate(pat, n, *sparsity, &mut rng);
+            let b = Mat::randn(n, n, &mut rng);
+            Ok((a, b))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn materialize_synthetic() {
+        let (a, b) = materialize(
+            32,
+            &Payload::Synthetic { sparsity: 0.9, pattern: "uniform".into(), seed: 1 },
+        )
+        .unwrap();
+        assert_eq!((a.rows, b.rows), (32, 32));
+        assert!(a.sparsity() > 0.8);
+    }
+
+    #[test]
+    fn materialize_unknown_pattern_errors() {
+        let r = materialize(8, &Payload::Synthetic { sparsity: 0.5, pattern: "x".into(), seed: 0 });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn materialize_inline() {
+        let (a, _b) = materialize(
+            2,
+            &Payload::Inline { a: vec![1.0, 0.0, 0.0, 1.0], b: vec![5.0; 4] },
+        )
+        .unwrap();
+        assert_eq!(a[(1, 1)], 1.0);
+    }
+    // dispatch() against a live coordinator is covered by
+    // rust/tests/serve_integration.rs.
+}

@@ -1,0 +1,235 @@
+//! Workload traces: synthetic request schedules for open-loop load testing
+//! of the serving stack (Poisson arrivals, mixed shapes/sparsities), plus a
+//! replayer that measures per-request latency against the schedule.
+//!
+//! This is the serving-framework side of the evaluation: the paper measures
+//! kernels in isolation; a deployable system also needs load behavior under
+//! arrival pressure (queueing delay vs service time).
+
+use crate::rng::Rng;
+
+/// Specification of a synthetic workload trace.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub requests: usize,
+    /// Mean arrival rate (requests/second) for the Poisson process.
+    pub rate_rps: f64,
+    /// Candidate matrix sizes (sampled uniformly).
+    pub sizes: Vec<usize>,
+    /// Candidate sparsities (sampled uniformly).
+    pub sparsities: Vec<f64>,
+    /// Candidate structural patterns (names from gen::Pattern).
+    pub patterns: Vec<String>,
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            requests: 64,
+            rate_rps: 20.0,
+            sizes: vec![128, 256, 512],
+            sparsities: vec![0.95, 0.98, 0.99, 0.995],
+            patterns: vec!["uniform".into(), "banded".into(), "power_law_rows".into()],
+            seed: 0x712ACE,
+        }
+    }
+}
+
+/// One scheduled request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceItem {
+    pub id: u64,
+    /// Arrival offset from trace start, seconds.
+    pub arrival_s: f64,
+    pub n: usize,
+    pub sparsity: f64,
+    pub pattern: String,
+    pub seed: u64,
+}
+
+/// Generate the schedule: exponential inter-arrivals at `rate_rps`,
+/// independent uniform draws for the shape mix. Deterministic per seed.
+pub fn generate(spec: &TraceSpec) -> Vec<TraceItem> {
+    assert!(spec.rate_rps > 0.0, "rate must be positive");
+    assert!(!spec.sizes.is_empty() && !spec.sparsities.is_empty() && !spec.patterns.is_empty());
+    let mut rng = Rng::new(spec.seed);
+    let mut t = 0.0;
+    (0..spec.requests)
+        .map(|id| {
+            // exponential inter-arrival: -ln(U)/λ
+            let u = rng.next_f64().max(1e-12);
+            t += -u.ln() / spec.rate_rps;
+            TraceItem {
+                id: id as u64,
+                arrival_s: t,
+                n: spec.sizes[rng.index(spec.sizes.len())],
+                sparsity: spec.sparsities[rng.index(spec.sparsities.len())],
+                pattern: spec.patterns[rng.index(spec.patterns.len())].clone(),
+                seed: rng.next_u64(),
+            }
+        })
+        .collect()
+}
+
+/// Replay statistics.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub completed: usize,
+    pub failed: usize,
+    pub wall_s: f64,
+    /// End-to-end latency per request (arrival → completion), seconds.
+    pub latency_s: Vec<f64>,
+    /// Time each request waited past its scheduled arrival before issue.
+    pub lateness_s: Vec<f64>,
+}
+
+impl ReplayReport {
+    pub fn p(&self, pct: f64) -> f64 {
+        if self.latency_s.is_empty() {
+            0.0
+        } else {
+            crate::ndarray::percentile(&self.latency_s, pct)
+        }
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Open-loop replay: issue each item at its scheduled arrival (sleeping as
+/// needed; if the executor falls behind, lateness accumulates — that *is*
+/// the signal), calling `run` synchronously per item from this thread's
+/// pacing loop with results collected via worker threads.
+pub fn replay<F>(items: &[TraceItem], concurrency: usize, run: F) -> ReplayReport
+where
+    F: Fn(&TraceItem) -> Result<(), String> + Send + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    let started = Instant::now();
+    let failed = AtomicUsize::new(0);
+    let latencies = Mutex::new(Vec::with_capacity(items.len()));
+    let lateness = Mutex::new(Vec::with_capacity(items.len()));
+    let next = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..concurrency.max(1) {
+            s.spawn(|| loop {
+                let idx = next.fetch_add(1, Ordering::SeqCst);
+                if idx >= items.len() {
+                    break;
+                }
+                let item = &items[idx];
+                // pace to the schedule
+                let target = Duration::from_secs_f64(item.arrival_s);
+                let now = started.elapsed();
+                if now < target {
+                    std::thread::sleep(target - now);
+                }
+                let late = (started.elapsed().as_secs_f64() - item.arrival_s).max(0.0);
+                let issue = Instant::now();
+                match run(item) {
+                    Ok(()) => {
+                        let total = late + issue.elapsed().as_secs_f64();
+                        latencies.lock().unwrap().push(total);
+                        lateness.lock().unwrap().push(late);
+                    }
+                    Err(_) => {
+                        failed.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            });
+        }
+    });
+
+    let latency_s = latencies.into_inner().unwrap();
+    ReplayReport {
+        completed: latency_s.len(),
+        failed: failed.into_inner(),
+        wall_s: started.elapsed().as_secs_f64(),
+        latency_s,
+        lateness_s: lateness.into_inner().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_monotone() {
+        let spec = TraceSpec::default();
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert_eq!(a.len(), spec.requests);
+    }
+
+    #[test]
+    fn arrival_rate_approximately_honored() {
+        let spec = TraceSpec { requests: 2000, rate_rps: 100.0, ..Default::default() };
+        let items = generate(&spec);
+        let span = items.last().unwrap().arrival_s;
+        let measured = items.len() as f64 / span;
+        assert!((measured - 100.0).abs() < 15.0, "rate {measured}");
+    }
+
+    #[test]
+    fn mix_draws_from_spec() {
+        let spec = TraceSpec::default();
+        for item in generate(&spec) {
+            assert!(spec.sizes.contains(&item.n));
+            assert!(spec.sparsities.contains(&item.sparsity));
+            assert!(spec.patterns.contains(&item.pattern));
+        }
+    }
+
+    #[test]
+    fn replay_runs_everything() {
+        let spec = TraceSpec { requests: 20, rate_rps: 2000.0, ..Default::default() };
+        let items = generate(&spec);
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        let report = replay(&items, 4, |_item| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            Ok(())
+        });
+        assert_eq!(report.completed, 20);
+        assert_eq!(report.failed, 0);
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 20);
+        assert!(report.p(50.0) >= 0.0);
+        assert!(report.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn replay_counts_failures() {
+        let spec = TraceSpec { requests: 10, rate_rps: 5000.0, ..Default::default() };
+        let items = generate(&spec);
+        let report = replay(&items, 2, |item| {
+            if item.id % 2 == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(report.completed, 5);
+        assert_eq!(report.failed, 5);
+    }
+
+    #[test]
+    fn lateness_accumulates_when_saturated() {
+        // 1 worker, instantaneous schedule, slow service ⇒ lateness grows.
+        let spec = TraceSpec { requests: 6, rate_rps: 1e6, ..Default::default() };
+        let items = generate(&spec);
+        let report = replay(&items, 1, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            Ok(())
+        });
+        let max_late = report.lateness_s.iter().copied().fold(0.0, f64::max);
+        assert!(max_late > 0.015, "expected queueing lateness, got {max_late}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Set-associative LRU cache with sector granularity — used for both the
+//! shared L2 and the per-SM L1/texture caches.
+//!
+//! Addresses are byte addresses; a lookup touches one 32-byte sector inside
+//! a 128-byte line. A hit requires the *sector* to be present (sectored
+//! fill, as on Maxwell/Pascal): a miss on a resident line fills just that
+//! sector. LRU is per-set over lines.
+
+use super::device::{LINE, SECTOR};
+
+
+#[derive(Clone, Debug)]
+struct LineState {
+    tag: u64,
+    sectors: u8, // bitmask of valid sectors
+    last_use: u64,
+}
+
+/// One cache level.
+pub struct Cache {
+    sets: Vec<Vec<LineState>>, // per-set vector of ways
+    ways: usize,
+    set_count: usize,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    /// Build with `bytes` capacity and `ways` associativity.
+    pub fn new(bytes: usize, ways: usize) -> Self {
+        let lines = (bytes / LINE).max(1);
+        let set_count = (lines / ways).max(1);
+        Cache {
+            sets: vec![Vec::with_capacity(ways); set_count],
+            ways,
+            set_count,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access one sector; returns true on hit.
+    pub fn access(&mut self, addr: u64) -> bool {
+        self.tick += 1;
+        let line_addr = addr / LINE as u64;
+        let sector_idx = ((addr % LINE as u64) / SECTOR as u64) as u8;
+        let sector_bit = 1u8 << sector_idx;
+        let set_idx = (line_addr % self.set_count as u64) as usize;
+        let tag = line_addr / self.set_count as u64;
+        let set = &mut self.sets[set_idx];
+
+        if let Some(line) = set.iter_mut().find(|l| l.tag == tag) {
+            line.last_use = self.tick;
+            if line.sectors & sector_bit != 0 {
+                self.hits += 1;
+                return true;
+            }
+            // sector miss on resident line: fill the sector
+            line.sectors |= sector_bit;
+            self.misses += 1;
+            return false;
+        }
+        // line miss: allocate (evict LRU if full)
+        if set.len() >= self.ways {
+            let lru = set
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, l)| l.last_use)
+                .map(|(i, _)| i)
+                .unwrap();
+            set.swap_remove(lru);
+        }
+        set.push(LineState { tag, sectors: sector_bit, last_use: self.tick });
+        self.misses += 1;
+        false
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Capacity in bytes (for assertions).
+    pub fn capacity(&self) -> usize {
+        self.set_count * self.ways * LINE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = Cache::new(64 * 1024, 8);
+        assert!(!c.access(0x1000)); // cold miss
+        assert!(c.access(0x1000)); // hit
+        assert!(c.access(0x1008)); // same sector
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn sectored_fill_misses_per_sector() {
+        let mut c = Cache::new(64 * 1024, 8);
+        assert!(!c.access(0x0)); // sector 0
+        assert!(!c.access(0x20)); // sector 1 of the same line: still a miss
+        assert!(c.access(0x0));
+        assert!(c.access(0x20));
+        assert_eq!(c.misses, 2);
+    }
+
+    #[test]
+    fn capacity_eviction() {
+        // 2 lines total, 1 way, 2 sets. Lines mapping to the same set evict
+        // each other.
+        let mut c = Cache::new(2 * LINE, 1);
+        assert_eq!(c.capacity(), 2 * LINE);
+        let a = 0u64;
+        let b = (2 * LINE) as u64; // same set as a (set index = line % 2)
+        assert!(!c.access(a));
+        assert!(!c.access(b)); // evicts a
+        assert!(!c.access(a)); // miss again
+    }
+
+    #[test]
+    fn lru_keeps_hot_line() {
+        // 1 set, 2 ways.
+        let mut c = Cache::new(2 * LINE, 2);
+        let a = 0u64;
+        let b = LINE as u64 * 1; // set 0 if set_count == 1
+        let d = LINE as u64 * 2;
+        assert!(!c.access(a));
+        assert!(!c.access(b));
+        assert!(c.access(a)); // a now MRU
+        assert!(!c.access(d)); // evicts b (LRU)
+        assert!(c.access(a), "hot line evicted by LRU");
+    }
+
+    #[test]
+    fn streaming_large_working_set_mostly_misses() {
+        let mut c = Cache::new(64 * 1024, 8);
+        for i in 0..10_000u64 {
+            c.access(i * SECTOR as u64 * 7); // stride past capacity
+        }
+        assert!(c.misses > 9_000);
+    }
+
+    #[test]
+    fn working_set_within_capacity_hits_on_second_pass() {
+        let mut c = Cache::new(64 * 1024, 8);
+        let sectors = 64 * 1024 / SECTOR;
+        for i in 0..sectors as u64 {
+            c.access(i * SECTOR as u64);
+        }
+        c.reset_stats();
+        for i in 0..sectors as u64 {
+            c.access(i * SECTOR as u64);
+        }
+        let hit_rate = c.hits as f64 / (c.hits + c.misses) as f64;
+        assert!(hit_rate > 0.95, "hit rate {hit_rate}");
+    }
+}

@@ -1,0 +1,101 @@
+//! Bottleneck cost model: transaction counts → estimated kernel time.
+//!
+//! Roofline-style: the kernel takes as long as its most saturated resource
+//! (compute, DRAM, L2, shared memory), plus a fixed launch overhead. This is
+//! the same modeling lens the paper uses (§II-A "algorithms for SpDM are
+//! generally memory-bound … one should design the algorithm to increase r").
+
+use super::device::{DeviceConfig, SECTOR};
+use super::mem::Counters;
+
+/// Per-resource times and the winning bottleneck.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelEstimate {
+    pub time_s: f64,
+    pub t_compute: f64,
+    pub t_dram: f64,
+    pub t_l2: f64,
+    pub t_shm: f64,
+    pub bottleneck: &'static str,
+}
+
+/// A shared-memory transaction serves up to a 128-byte warp access.
+const SHM_TRANSACTION_BYTES: f64 = 128.0;
+
+pub fn estimate_time(counters: &Counters, flops: u64, dev: &DeviceConfig) -> KernelEstimate {
+    let t_compute = flops as f64 / dev.peak_flops();
+    let t_dram = (counters.dram as f64 * SECTOR as f64) / dev.dram_bw();
+    let t_l2 = (counters.l2 as f64 * SECTOR as f64) / dev.l2_bw();
+    let t_shm = (counters.shm as f64 * SHM_TRANSACTION_BYTES) / dev.shm_bw();
+    let (bottleneck, t_max) = [
+        ("compute", t_compute),
+        ("dram", t_dram),
+        ("l2", t_l2),
+        ("shm", t_shm),
+    ]
+    .into_iter()
+    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    .unwrap();
+    KernelEstimate {
+        time_s: t_max + dev.launch_overhead_s,
+        t_compute,
+        t_dram,
+        t_l2,
+        t_shm,
+        bottleneck,
+    }
+}
+
+/// Operational intensity r = FLOPs per byte of DRAM traffic (§II-A).
+pub fn operational_intensity(counters: &Counters, flops: u64) -> f64 {
+    let bytes = (counters.dram as f64) * SECTOR as f64;
+    if bytes == 0.0 {
+        f64::INFINITY
+    } else {
+        flops as f64 / bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::{GTX980, P100, TITANX};
+
+    #[test]
+    fn compute_bound_when_no_traffic() {
+        let c = Counters::default();
+        let e = estimate_time(&c, 1_000_000_000, &TITANX);
+        assert_eq!(e.bottleneck, "compute");
+        assert!((e.time_s - (1e9 / TITANX.peak_flops() + TITANX.launch_overhead_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dram_bound_when_traffic_heavy() {
+        let c = Counters { dram: 1 << 30, l2: 1 << 30, shm: 0, l1_tex: 0 };
+        let e = estimate_time(&c, 1000, &GTX980);
+        assert_eq!(e.bottleneck, "dram");
+        assert!(e.t_dram > e.t_l2, "same sectors, slower bus");
+    }
+
+    #[test]
+    fn faster_memory_helps_memory_bound_kernels() {
+        let c = Counters { dram: 1 << 28, l2: 1 << 28, shm: 100, l1_tex: 100 };
+        let slow = estimate_time(&c, 1000, &GTX980).time_s;
+        let fast = estimate_time(&c, 1000, &P100).time_s;
+        assert!(fast < slow, "P100 HBM must beat GTX980 GDDR5");
+    }
+
+    #[test]
+    fn launch_overhead_floors_tiny_kernels() {
+        let c = Counters { dram: 1, l2: 1, shm: 1, l1_tex: 0 };
+        let e = estimate_time(&c, 10, &TITANX);
+        assert!(e.time_s >= TITANX.launch_overhead_s);
+    }
+
+    #[test]
+    fn operational_intensity_formula() {
+        let c = Counters { dram: 100, ..Default::default() };
+        assert!((operational_intensity(&c, 6400) - 2.0).abs() < 1e-12);
+        assert!(operational_intensity(&Counters::default(), 10).is_infinite());
+    }
+}

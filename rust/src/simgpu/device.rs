@@ -1,0 +1,139 @@
+//! Device configurations — Table II of the paper, plus the microarchitectural
+//! constants the memory model needs (L2 size, line/sector geometry, warp
+//! width). L2 sizes and shared-memory bandwidth follow the public Maxwell /
+//! Pascal specifications for the three cards.
+
+/// Parameters of one simulated GPU.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceConfig {
+    pub name: &'static str,
+    pub sms: usize,
+    pub cores_per_sm: usize,
+    /// Peak single-precision TFLOPS (Table II).
+    pub peak_tflops: f64,
+    /// DRAM bandwidth in GB/s (Table II).
+    pub mem_bw_gbps: f64,
+    /// L2 cache size in bytes.
+    pub l2_bytes: usize,
+    /// Per-SM L1/texture cache size in bytes.
+    pub l1_bytes: usize,
+    /// L2 aggregate bandwidth relative to DRAM (Maxwell/Pascal ≈ 2–3×).
+    pub l2_bw_ratio: f64,
+    /// Shared-memory bytes/cycle per SM (128B = 32 banks × 4B).
+    pub shm_bytes_per_cycle: f64,
+    /// Kernel launch + tail latency in seconds (measured µs-scale on all
+    /// three cards; gives cuBLAS its small-n advantage, §IV-B).
+    pub launch_overhead_s: f64,
+}
+
+impl DeviceConfig {
+    /// Core clock implied by Table II: peak = sms·cores·2·clock.
+    pub fn clock_ghz(&self) -> f64 {
+        self.peak_tflops * 1e12 / (self.sms as f64 * self.cores_per_sm as f64 * 2.0) / 1e9
+    }
+
+    /// Aggregate shared-memory bandwidth in bytes/s.
+    pub fn shm_bw(&self) -> f64 {
+        self.sms as f64 * self.shm_bytes_per_cycle * self.clock_ghz() * 1e9
+    }
+
+    /// L2 bandwidth in bytes/s.
+    pub fn l2_bw(&self) -> f64 {
+        self.mem_bw_gbps * 1e9 * self.l2_bw_ratio
+    }
+
+    pub fn dram_bw(&self) -> f64 {
+        self.mem_bw_gbps * 1e9
+    }
+
+    pub fn peak_flops(&self) -> f64 {
+        self.peak_tflops * 1e12
+    }
+}
+
+/// GTX 980 (Maxwell GM204): 16 SMs × 128 cores, 4.981 TFLOPS, 224 GB/s.
+pub const GTX980: DeviceConfig = DeviceConfig {
+    name: "GTX980",
+    sms: 16,
+    cores_per_sm: 128,
+    peak_tflops: 4.981,
+    mem_bw_gbps: 224.0,
+    l2_bytes: 2 * 1024 * 1024,
+    l1_bytes: 24 * 1024,
+    l2_bw_ratio: 2.5,
+    shm_bytes_per_cycle: 128.0,
+    launch_overhead_s: 5e-6,
+};
+
+/// Titan X Pascal (GP102): 28 SMs × 128 cores, 10.97 TFLOPS, 433 GB/s.
+pub const TITANX: DeviceConfig = DeviceConfig {
+    name: "TitanX",
+    sms: 28,
+    cores_per_sm: 128,
+    peak_tflops: 10.97,
+    mem_bw_gbps: 433.0,
+    l2_bytes: 3 * 1024 * 1024,
+    l1_bytes: 48 * 1024,
+    l2_bw_ratio: 2.5,
+    shm_bytes_per_cycle: 128.0,
+    launch_overhead_s: 5e-6,
+};
+
+/// Tesla P100 (GP100): 56 SMs × 64 cores, 9.5 TFLOPS, 732 GB/s HBM2.
+pub const P100: DeviceConfig = DeviceConfig {
+    name: "P100",
+    sms: 56,
+    cores_per_sm: 64,
+    peak_tflops: 9.5,
+    mem_bw_gbps: 732.0,
+    l2_bytes: 4 * 1024 * 1024,
+    l1_bytes: 24 * 1024,
+    l2_bw_ratio: 2.5,
+    shm_bytes_per_cycle: 128.0,
+    launch_overhead_s: 5e-6,
+};
+
+pub const ALL_DEVICES: [&DeviceConfig; 3] = [&GTX980, &TITANX, &P100];
+
+/// Warp width (threads issuing one coalesced access).
+pub const WARP: usize = 32;
+/// DRAM/L2 sector granularity in bytes (the unit nvprof transactions count).
+pub const SECTOR: usize = 32;
+/// L2/L1 cache line in bytes.
+pub const LINE: usize = 128;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        assert_eq!(GTX980.sms * GTX980.cores_per_sm, 2048);
+        assert_eq!(TITANX.sms * TITANX.cores_per_sm, 3584);
+        assert_eq!(P100.sms * P100.cores_per_sm, 3584);
+        assert!((GTX980.peak_tflops - 4.981).abs() < 1e-9);
+        assert!((TITANX.mem_bw_gbps - 433.0).abs() < 1e-9);
+        assert!((P100.mem_bw_gbps - 732.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn implied_clocks_plausible() {
+        // All three cards clock between 1.0 and 1.5 GHz.
+        for dev in ALL_DEVICES {
+            let ghz = dev.clock_ghz();
+            assert!((1.0..1.6).contains(&ghz), "{}: {ghz}", dev.name);
+        }
+    }
+
+    #[test]
+    fn bandwidth_orderings() {
+        // P100 HBM2 out-bandwidths both GDDR5 cards; paper attributes its
+        // better cuSPARSE showing to exactly this.
+        assert!(P100.dram_bw() > TITANX.dram_bw());
+        assert!(TITANX.dram_bw() > GTX980.dram_bw());
+        for dev in ALL_DEVICES {
+            assert!(dev.l2_bw() > dev.dram_bw());
+            assert!(dev.shm_bw() > dev.l2_bw(), "{}", dev.name);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! The memory system: warp coalescer → per-SM L1/tex → shared L2 → DRAM,
+//! plus shared-memory transaction accounting.
+//!
+//! Counters correspond 1:1 to the nvprof metrics the paper profiles in
+//! Fig 14: `dram` (dram_read/write_transactions), `l2` (l2_read/write_
+//! transactions), `shm` (shared_load/store_transactions) and `l1_tex`
+//! (tex_cache_transactions / unified L1 on Maxwell+Pascal).
+
+use super::cache::Cache;
+use super::device::{DeviceConfig, SECTOR, WARP};
+
+/// Which path a global access takes. cuSPARSE's csrmm-era loads went
+/// through L2 (generic global path, L1 bypassed for global loads on
+/// Maxwell/Pascal); GCOOSpDM's B gathers use the read-only/texture path,
+/// which is why the paper sees `tex_l1_trans` only for GCOOSpDM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Space {
+    /// Global memory via L2 only (generic load/store path).
+    GlobalL2,
+    /// Global memory via the per-SM texture/read-only L1, then L2.
+    GlobalTex,
+    /// Shared memory (on-SM scratchpad).
+    Shared,
+}
+
+/// Transaction counters (the Fig-14 y-axis).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    pub dram: u64,
+    pub l2: u64,
+    pub shm: u64,
+    pub l1_tex: u64,
+}
+
+impl Counters {
+    pub fn total_mem_transactions(&self) -> u64 {
+        self.dram + self.l2 + self.shm + self.l1_tex
+    }
+
+    pub fn scale(&self, factor: f64) -> Counters {
+        Counters {
+            dram: (self.dram as f64 * factor).round() as u64,
+            l2: (self.l2 as f64 * factor).round() as u64,
+            shm: (self.shm as f64 * factor).round() as u64,
+            l1_tex: (self.l1_tex as f64 * factor).round() as u64,
+        }
+    }
+}
+
+/// Memory system of one simulated device.
+pub struct MemorySystem {
+    l2: Cache,
+    /// One L1/tex cache per SM that the sampled thread blocks run on.
+    l1s: Vec<Cache>,
+    pub counters: Counters,
+    l1_bytes: usize,
+}
+
+impl MemorySystem {
+    pub fn new(dev: &DeviceConfig, sampled_sms: usize) -> Self {
+        MemorySystem {
+            l2: Cache::new(dev.l2_bytes, 16),
+            l1s: (0..sampled_sms.max(1)).map(|_| Cache::new(dev.l1_bytes, 4)).collect(),
+            counters: Counters::default(),
+            l1_bytes: dev.l1_bytes,
+        }
+    }
+
+    /// Issue one warp-wide access: `addrs` are the per-thread byte
+    /// addresses (up to WARP of them), `sm` the SM the block runs on.
+    /// The coalescer collapses them to unique sectors, then each sector
+    /// traverses the hierarchy.
+    pub fn warp_access(&mut self, space: Space, addrs: &[u64], sm: usize) {
+        debug_assert!(addrs.len() <= WARP);
+        match space {
+            Space::Shared => {
+                // Bank-conflict model: broadcast (all same address) = 1
+                // transaction; otherwise one transaction per distinct bank
+                // conflict group. With distinct banks it is also 1; we count
+                // conflict groups = max #addresses mapping to one bank.
+                let mut bank_counts = [0u8; 32];
+                let mut distinct = Vec::with_capacity(addrs.len());
+                for &a in addrs {
+                    if !distinct.contains(&a) {
+                        distinct.push(a);
+                    }
+                }
+                for &a in &distinct {
+                    bank_counts[((a / 4) % 32) as usize] += 1;
+                }
+                let conflict_groups = bank_counts.iter().copied().max().unwrap_or(1).max(1);
+                self.counters.shm += conflict_groups as u64;
+            }
+            Space::GlobalL2 => {
+                for sector in coalesce(addrs) {
+                    self.counters.l2 += 1;
+                    if !self.l2.access(sector) {
+                        self.counters.dram += 1;
+                    }
+                }
+            }
+            Space::GlobalTex => {
+                let l1_idx = sm % self.l1s.len();
+                let l1 = &mut self.l1s[l1_idx];
+                for sector in coalesce(addrs) {
+                    self.counters.l1_tex += 1;
+                    if !l1.access(sector) {
+                        self.counters.l2 += 1;
+                        if !self.l2.access(sector) {
+                            self.counters.dram += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Contiguous warp load: `threads` consecutive 4-byte words from `base`.
+    /// Fast path (perf: no per-thread address vector / sort): a contiguous
+    /// span covers the sector range [base/S, (base+4t-1)/S] directly.
+    pub fn warp_load_contiguous(&mut self, space: Space, base: u64, threads: usize, sm: usize) {
+        let threads = threads.min(WARP);
+        if threads == 0 {
+            return;
+        }
+        match space {
+            Space::Shared => {
+                // consecutive words spread over banks: conflict-free
+                self.counters.shm += 1;
+            }
+            Space::GlobalL2 => {
+                let first = base / SECTOR as u64;
+                let last = (base + 4 * threads as u64 - 1) / SECTOR as u64;
+                for s in first..=last {
+                    self.counters.l2 += 1;
+                    if !self.l2.access(s * SECTOR as u64) {
+                        self.counters.dram += 1;
+                    }
+                }
+            }
+            Space::GlobalTex => {
+                let l1_idx = sm % self.l1s.len();
+                let first = base / SECTOR as u64;
+                let last = (base + 4 * threads as u64 - 1) / SECTOR as u64;
+                for s in first..=last {
+                    let addr = s * SECTOR as u64;
+                    self.counters.l1_tex += 1;
+                    if !self.l1s[l1_idx].access(addr) {
+                        self.counters.l2 += 1;
+                        if !self.l2.access(addr) {
+                            self.counters.dram += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Shared-memory broadcast (all lanes read one address): exactly one
+    /// transaction, no bank conflicts (perf fast path for the GCOO scan).
+    #[inline]
+    pub fn shared_broadcast(&mut self) {
+        self.counters.shm += 1;
+    }
+
+    /// Reset only the counters (keep cache state warm).
+    pub fn reset_counters(&mut self) {
+        self.counters = Counters::default();
+    }
+
+    /// For tests: L1 capacity actually configured.
+    pub fn l1_capacity(&self) -> usize {
+        self.l1_bytes
+    }
+}
+
+/// Collapse per-thread addresses to unique sector addresses.
+fn coalesce(addrs: &[u64]) -> Vec<u64> {
+    let mut sectors: Vec<u64> = addrs.iter().map(|a| a / SECTOR as u64 * SECTOR as u64).collect();
+    sectors.sort_unstable();
+    sectors.dedup();
+    sectors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::TITANX;
+
+    #[test]
+    fn coalesced_warp_is_four_sectors() {
+        // 32 threads × 4B consecutive = 128B = 4 sectors of 32B.
+        let mut ms = MemorySystem::new(&TITANX, 1);
+        ms.warp_load_contiguous(Space::GlobalL2, 0, 32, 0);
+        assert_eq!(ms.counters.l2, 4);
+        assert_eq!(ms.counters.dram, 4); // all cold
+    }
+
+    #[test]
+    fn scattered_warp_is_32_sectors() {
+        let mut ms = MemorySystem::new(&TITANX, 1);
+        let addrs: Vec<u64> = (0..32u64).map(|t| t * 4096).collect();
+        ms.warp_access(Space::GlobalL2, &addrs, 0);
+        assert_eq!(ms.counters.l2, 32);
+    }
+
+    #[test]
+    fn l2_hit_suppresses_dram() {
+        let mut ms = MemorySystem::new(&TITANX, 1);
+        ms.warp_load_contiguous(Space::GlobalL2, 0, 32, 0);
+        let dram_before = ms.counters.dram;
+        ms.warp_load_contiguous(Space::GlobalL2, 0, 32, 0);
+        assert_eq!(ms.counters.dram, dram_before, "second pass must hit L2");
+        assert_eq!(ms.counters.l2, 8);
+    }
+
+    #[test]
+    fn tex_path_counts_l1_and_filters_l2() {
+        let mut ms = MemorySystem::new(&TITANX, 1);
+        ms.warp_load_contiguous(Space::GlobalTex, 0, 32, 0);
+        assert_eq!(ms.counters.l1_tex, 4);
+        assert_eq!(ms.counters.l2, 4);
+        ms.warp_load_contiguous(Space::GlobalTex, 0, 32, 0);
+        assert_eq!(ms.counters.l1_tex, 8);
+        assert_eq!(ms.counters.l2, 4, "L1 hit must not reach L2");
+    }
+
+    #[test]
+    fn shared_broadcast_is_one_transaction() {
+        let mut ms = MemorySystem::new(&TITANX, 1);
+        let addrs = vec![0x100u64; 32];
+        ms.warp_access(Space::Shared, &addrs, 0);
+        assert_eq!(ms.counters.shm, 1);
+    }
+
+    #[test]
+    fn shared_conflict_free_is_one_transaction() {
+        let mut ms = MemorySystem::new(&TITANX, 1);
+        let addrs: Vec<u64> = (0..32u64).map(|t| t * 4).collect(); // distinct banks
+        ms.warp_access(Space::Shared, &addrs, 0);
+        assert_eq!(ms.counters.shm, 1);
+    }
+
+    #[test]
+    fn shared_bank_conflicts_serialize() {
+        let mut ms = MemorySystem::new(&TITANX, 1);
+        // stride 8B = 2 words: banks 0,2,4,…,30 each hit twice → 2-way conflict
+        let addrs: Vec<u64> = (0..32u64).map(|t| t * 8).collect();
+        ms.warp_access(Space::Shared, &addrs, 0);
+        assert_eq!(ms.counters.shm, 2);
+        // stride 128B = 32 words: all 32 threads on bank 0 → fully serialized
+        let worst: Vec<u64> = (0..32u64).map(|t| t * 128).collect();
+        ms.warp_access(Space::Shared, &worst, 0);
+        assert_eq!(ms.counters.shm, 2 + 32);
+    }
+
+    #[test]
+    fn counters_scale() {
+        let c = Counters { dram: 10, l2: 20, shm: 30, l1_tex: 40 };
+        let s = c.scale(2.5);
+        assert_eq!(s, Counters { dram: 25, l2: 50, shm: 75, l1_tex: 100 });
+    }
+
+    #[test]
+    fn per_sm_l1s_are_independent() {
+        let mut ms = MemorySystem::new(&TITANX, 2);
+        ms.warp_load_contiguous(Space::GlobalTex, 0, 32, 0);
+        let l2_after_first = ms.counters.l2;
+        // Same data from a different SM: L1 cold there, but L2 is warm.
+        ms.warp_load_contiguous(Space::GlobalTex, 0, 32, 1);
+        assert_eq!(ms.counters.l2, l2_after_first + 4);
+        assert_eq!(ms.counters.dram, 4, "L2 absorbed the second SM's miss");
+    }
+}

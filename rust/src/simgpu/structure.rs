@@ -1,0 +1,243 @@
+//! Sparse-structure providers for the walkers.
+//!
+//! Walkers only need *where* the nonzeros are, not their values. Two
+//! providers: [`GcooStructure`] adapts a real [`Gcoo`] matrix; and
+//! [`SyntheticUniform`] generates uniform-random structure lazily per band /
+//! row, which lets the figure sweeps reach the paper's n = 14000 without
+//! ever materializing an n² dense matrix.
+
+use crate::rng::Rng;
+use crate::sparse::{Csr, Gcoo};
+
+/// One band's entries, (col, row)-sorted, rows band-local.
+#[derive(Clone, Debug, Default)]
+pub struct BandEntries {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+}
+
+impl BandEntries {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Structural view of a square sparse matrix, band- and row-addressable.
+pub trait SparseStructure {
+    /// Square dimension.
+    fn n(&self) -> usize;
+    /// Band height (GCOO p).
+    fn p(&self) -> usize;
+    fn num_bands(&self) -> usize {
+        self.n().div_ceil(self.p())
+    }
+    /// Band `gi`'s entries, (col, row)-sorted.
+    fn band(&self, gi: usize) -> BandEntries;
+    /// Column indices of row `i` (sorted).
+    fn row_cols(&self, i: usize) -> Vec<u32>;
+    /// Total nonzeros.
+    fn nnz(&self) -> u64;
+}
+
+/// Adapter over a real GCOO matrix (plus a CSR view for row access).
+pub struct GcooStructure {
+    bands: Vec<BandEntries>,
+    rows: Vec<Vec<u32>>,
+    n: usize,
+    p: usize,
+    nnz: u64,
+}
+
+impl GcooStructure {
+    pub fn new(gcoo: &Gcoo) -> Self {
+        let g = gcoo.num_groups();
+        let mut bands = Vec::with_capacity(g);
+        let mut rows: Vec<Vec<u32>> = vec![Vec::new(); gcoo.n_rows];
+        for gi in 0..g {
+            let mut be = BandEntries::default();
+            for (r, c, _v) in gcoo.group(gi) {
+                be.rows.push(r);
+                be.cols.push(c);
+                rows[gi * gcoo.p + r as usize].push(c);
+            }
+            bands.push(be);
+        }
+        for r in rows.iter_mut() {
+            r.sort_unstable();
+        }
+        GcooStructure { bands, rows, n: gcoo.n_cols, p: gcoo.p, nnz: gcoo.nnz() as u64 }
+    }
+
+    pub fn from_csr(csr: &Csr, p: usize) -> Self {
+        Self::new(&Gcoo::from_csr(csr, p))
+    }
+}
+
+impl SparseStructure for GcooStructure {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn p(&self) -> usize {
+        self.p
+    }
+    fn band(&self, gi: usize) -> BandEntries {
+        self.bands[gi].clone()
+    }
+    fn row_cols(&self, i: usize) -> Vec<u32> {
+        self.rows[i].clone()
+    }
+    fn nnz(&self) -> u64 {
+        self.nnz
+    }
+}
+
+/// Lazily-generated uniform structure: entry (i, j) is nonzero with
+/// probability `density`, realized deterministically per (seed, band).
+/// Band and row views are *consistent in distribution* (not element-wise
+/// identical — the walkers never cross-reference them).
+pub struct SyntheticUniform {
+    pub n: usize,
+    pub p: usize,
+    pub density: f64,
+    pub seed: u64,
+}
+
+impl SyntheticUniform {
+    pub fn new(n: usize, sparsity: f64, p: usize, seed: u64) -> Self {
+        SyntheticUniform { n, p, density: 1.0 - sparsity, seed }
+    }
+
+    /// Deterministic draw of k ≈ Binomial(cells, density) via normal approx.
+    fn draw_count(&self, cells: usize, rng: &mut Rng) -> usize {
+        let mean = cells as f64 * self.density;
+        let sd = (cells as f64 * self.density * (1.0 - self.density)).sqrt();
+        let x = mean + sd * rng.normal();
+        x.round().clamp(0.0, cells as f64) as usize
+    }
+}
+
+impl SparseStructure for SyntheticUniform {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn band(&self, gi: usize) -> BandEntries {
+        let band_rows = ((gi + 1) * self.p).min(self.n) - gi * self.p;
+        let cells = band_rows * self.n;
+        let mut rng = Rng::new(self.seed ^ (gi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let k = self.draw_count(cells, &mut rng);
+        // Sample k distinct cells in (col, row) order: cell id = col*band_rows+row.
+        let ids = rng.sample_indices(cells, k);
+        let mut be = BandEntries { rows: Vec::with_capacity(k), cols: Vec::with_capacity(k) };
+        for id in ids {
+            be.cols.push((id / band_rows) as u32);
+            be.rows.push((id % band_rows) as u32);
+        }
+        be
+    }
+
+    fn row_cols(&self, i: usize) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed ^ 0xABCD ^ (i as u64).wrapping_mul(0xD129_0E2B_53F1_76C5));
+        let k = self.draw_count(self.n, &mut rng);
+        rng.sample_indices(self.n, k).into_iter().map(|x| x as u32).collect()
+    }
+
+    fn nnz(&self) -> u64 {
+        (self.n as f64 * self.n as f64 * self.density).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::ndarray::Mat;
+
+    #[test]
+    fn gcoo_structure_matches_matrix() {
+        let mut rng = Rng::new(1);
+        let a = gen::uniform(64, 0.9, &mut rng);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let s = GcooStructure::new(&gcoo);
+        assert_eq!(s.n(), 64);
+        assert_eq!(s.nnz(), a.nnz() as u64);
+        let total: usize = (0..s.num_bands()).map(|gi| s.band(gi).len()).sum();
+        assert_eq!(total as u64, s.nnz());
+        let row_total: usize = (0..64).map(|i| s.row_cols(i).len()).sum();
+        assert_eq!(row_total as u64, s.nnz());
+    }
+
+    #[test]
+    fn gcoo_structure_band_sorted() {
+        let mut rng = Rng::new(2);
+        let a = gen::uniform(32, 0.8, &mut rng);
+        let s = GcooStructure::new(&Gcoo::from_dense(&a, 8));
+        for gi in 0..s.num_bands() {
+            let be = s.band(gi);
+            for k in 1..be.len() {
+                assert!(
+                    (be.cols[k - 1], be.rows[k - 1]) < (be.cols[k], be.rows[k]),
+                    "band {gi} unsorted at {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_band_has_no_col_runs() {
+        let s = GcooStructure::new(&Gcoo::from_dense(&Mat::eye(32), 8));
+        for gi in 0..4 {
+            let be = s.band(gi);
+            for k in 1..be.len() {
+                assert_ne!(be.cols[k - 1], be.cols[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_counts_near_expectation() {
+        let s = SyntheticUniform::new(2048, 0.99, 8, 7);
+        let total: usize = (0..s.num_bands()).map(|gi| s.band(gi).len()).sum();
+        let expect = 2048.0 * 2048.0 * 0.01;
+        let rel = (total as f64 - expect).abs() / expect;
+        assert!(rel < 0.1, "total {total} vs expected {expect}");
+    }
+
+    #[test]
+    fn synthetic_band_sorted_and_in_range() {
+        let s = SyntheticUniform::new(256, 0.95, 8, 3);
+        let be = s.band(5);
+        assert!(!be.is_empty());
+        for k in 0..be.len() {
+            assert!(be.rows[k] < 8);
+            assert!(be.cols[k] < 256);
+            if k > 0 {
+                assert!((be.cols[k - 1], be.rows[k - 1]) < (be.cols[k], be.rows[k]));
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_deterministic() {
+        let s1 = SyntheticUniform::new(128, 0.9, 8, 42);
+        let s2 = SyntheticUniform::new(128, 0.9, 8, 42);
+        assert_eq!(s1.band(3).cols, s2.band(3).cols);
+        assert_eq!(s1.row_cols(17), s2.row_cols(17));
+    }
+
+    #[test]
+    fn synthetic_last_partial_band() {
+        let s = SyntheticUniform::new(30, 0.5, 8, 1);
+        assert_eq!(s.num_bands(), 4);
+        let be = s.band(3); // 6 rows only
+        assert!(be.rows.iter().all(|&r| r < 6));
+    }
+}

@@ -1,0 +1,243 @@
+//! BSR — block sparse row storage (format-library extension).
+//!
+//! Block-structured matrices (the `block_diagonal` family; FEM/structural
+//! problems in Table III) waste GCOO index space: every nonzero carries
+//! 8 bytes of coordinates. BSR stores dense `bs×bs` blocks with one
+//! coordinate pair per *block*, cutting index overhead by bs² and making
+//! block-level kernels (dense micro-GEMMs per block) possible. Included to
+//! quantify the format trade-off against Table I (see `bsr_elements`).
+
+use super::{FormatError, ToDense};
+use crate::ndarray::Mat;
+
+/// Block sparse row: like CSR over a (n/bs × n/bs) grid of blocks; each
+/// stored block is a dense row-major `bs×bs` tile in `blocks`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bsr {
+    pub n: usize,
+    pub bs: usize,
+    /// block-row pointer, length n/bs + 1
+    pub row_ptr: Vec<u32>,
+    /// block-column index per stored block
+    pub cols: Vec<u32>,
+    /// concatenated bs×bs tiles, row-major within each tile
+    pub blocks: Vec<f32>,
+}
+
+impl Bsr {
+    /// Build from dense; a block is stored iff it has any nonzero.
+    pub fn from_dense(a: &Mat, bs: usize) -> Result<Self, FormatError> {
+        if bs == 0 || a.rows % bs != 0 || a.cols % bs != 0 || a.rows != a.cols {
+            return Err(FormatError::Invalid(format!(
+                "bs={bs} must divide square dims {}x{}",
+                a.rows, a.cols
+            )));
+        }
+        let nb = a.rows / bs;
+        let mut row_ptr = vec![0u32; nb + 1];
+        let mut cols = Vec::new();
+        let mut blocks = Vec::new();
+        for bi in 0..nb {
+            for bj in 0..nb {
+                let mut any = false;
+                'scan: for i in 0..bs {
+                    for j in 0..bs {
+                        if a[(bi * bs + i, bj * bs + j)] != 0.0 {
+                            any = true;
+                            break 'scan;
+                        }
+                    }
+                }
+                if any {
+                    cols.push(bj as u32);
+                    for i in 0..bs {
+                        for j in 0..bs {
+                            blocks.push(a[(bi * bs + i, bj * bs + j)]);
+                        }
+                    }
+                }
+            }
+            row_ptr[bi + 1] = cols.len() as u32;
+        }
+        Ok(Bsr { n: a.rows, bs, row_ptr, cols, blocks })
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Stored nonzero *slots* (including explicit zeros inside blocks).
+    pub fn stored_values(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Fill efficiency: true nonzeros / stored slots (1.0 = perfectly
+    /// block-aligned structure; low values mean BSR wastes space).
+    pub fn fill_efficiency(&self) -> f64 {
+        let nnz = self.blocks.iter().filter(|v| **v != 0.0).count();
+        if self.blocks.is_empty() {
+            1.0
+        } else {
+            nnz as f64 / self.blocks.len() as f64
+        }
+    }
+
+    /// Element count analogous to Table I:
+    /// stored values + one col index per block + block-row pointer.
+    pub fn elements(&self) -> usize {
+        self.stored_values() + self.num_blocks() + self.row_ptr.len()
+    }
+
+    /// Block-level SpDM: C = A·B using dense bs×bs micro-GEMMs per block —
+    /// the kernel structure BSR enables (CPU reference implementation).
+    pub fn spdm(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.n);
+        let bs = self.bs;
+        let mut c = Mat::zeros(self.n, b.cols);
+        let nb = self.n / bs;
+        for bi in 0..nb {
+            for k in self.row_ptr[bi] as usize..self.row_ptr[bi + 1] as usize {
+                let bj = self.cols[k] as usize;
+                let tile = &self.blocks[k * bs * bs..(k + 1) * bs * bs];
+                // micro-GEMM: C[bi*bs.., :] += tile · B[bj*bs.., :]
+                for i in 0..bs {
+                    for l in 0..bs {
+                        let a_il = tile[i * bs + l];
+                        if a_il == 0.0 {
+                            continue;
+                        }
+                        let brow = b.row(bj * bs + l);
+                        let crow = c.row_mut(bi * bs + i);
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += a_il * bv;
+                        }
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    pub fn validate(&self) -> Result<(), FormatError> {
+        let nb = self.n / self.bs;
+        if self.row_ptr.len() != nb + 1 || self.row_ptr[0] != 0 {
+            return Err(FormatError::Invalid("row_ptr shape".into()));
+        }
+        if *self.row_ptr.last().unwrap() as usize != self.num_blocks() {
+            return Err(FormatError::Invalid("row_ptr end".into()));
+        }
+        if self.blocks.len() != self.num_blocks() * self.bs * self.bs {
+            return Err(FormatError::Invalid("blocks length".into()));
+        }
+        for bi in 0..nb {
+            let r = self.row_ptr[bi] as usize..self.row_ptr[bi + 1] as usize;
+            let cols = &self.cols[r];
+            if cols.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(FormatError::Invalid(format!("block row {bi} unsorted")));
+            }
+            if cols.iter().any(|&c| c as usize >= nb) {
+                return Err(FormatError::Invalid(format!("block row {bi} col range")));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ToDense for Bsr {
+    fn to_dense(&self) -> Mat {
+        let bs = self.bs;
+        let mut m = Mat::zeros(self.n, self.n);
+        let nb = self.n / bs;
+        for bi in 0..nb {
+            for k in self.row_ptr[bi] as usize..self.row_ptr[bi + 1] as usize {
+                let bj = self.cols[k] as usize;
+                for i in 0..bs {
+                    for j in 0..bs {
+                        m[(bi * bs + i, bj * bs + j)] = self.blocks[k * bs * bs + i * bs + j];
+                    }
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Rng;
+
+    #[test]
+    fn round_trip_block_diagonal() {
+        let mut rng = Rng::new(1);
+        let a = gen::block_diagonal(64, 0.9, &mut rng);
+        let bsr = Bsr::from_dense(&a, 4).unwrap();
+        bsr.validate().unwrap();
+        assert_eq!(bsr.to_dense(), a);
+    }
+
+    #[test]
+    fn round_trip_uniform() {
+        let mut rng = Rng::new(2);
+        let a = gen::uniform(48, 0.9, &mut rng);
+        let bsr = Bsr::from_dense(&a, 8).unwrap();
+        bsr.validate().unwrap();
+        assert_eq!(bsr.to_dense(), a);
+    }
+
+    #[test]
+    fn spdm_matches_oracle() {
+        let mut rng = Rng::new(3);
+        let a = gen::block_diagonal(32, 0.8, &mut rng);
+        let b = crate::ndarray::Mat::randn(32, 16, &mut rng);
+        let bsr = Bsr::from_dense(&a, 4).unwrap();
+        let c = bsr.spdm(&b);
+        assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn fill_efficiency_discriminates_structure() {
+        let mut rng = Rng::new(4);
+        // block-aligned structure: high efficiency
+        let blocky = Bsr::from_dense(&gen::block_diagonal(64, 0.9, &mut rng), 4).unwrap();
+        // scattered structure: low efficiency at the same sparsity
+        let scattered = Bsr::from_dense(&gen::uniform(64, 0.9, &mut rng), 4).unwrap();
+        assert!(
+            blocky.fill_efficiency() > scattered.fill_efficiency() + 0.2,
+            "blocky {} vs scattered {}",
+            blocky.fill_efficiency(),
+            scattered.fill_efficiency()
+        );
+    }
+
+    #[test]
+    fn elements_beat_gcoo_for_block_structure() {
+        // For block-aligned matrices, BSR stores fewer elements than GCOO.
+        let mut rng = Rng::new(5);
+        let a = gen::block_diagonal(64, 0.9, &mut rng);
+        let bsr = Bsr::from_dense(&a, 4).unwrap();
+        let gcoo_elems = crate::sparse::gcoo_elements(a.nnz(), 64, 8);
+        assert!(
+            bsr.elements() < gcoo_elems,
+            "bsr {} vs gcoo {}",
+            bsr.elements(),
+            gcoo_elems
+        );
+    }
+
+    #[test]
+    fn rejects_bad_block_size() {
+        let a = crate::ndarray::Mat::zeros(10, 10);
+        assert!(Bsr::from_dense(&a, 3).is_err());
+        assert!(Bsr::from_dense(&a, 0).is_err());
+    }
+
+    #[test]
+    fn empty_matrix_valid() {
+        let bsr = Bsr::from_dense(&crate::ndarray::Mat::zeros(16, 16), 4).unwrap();
+        assert_eq!(bsr.num_blocks(), 0);
+        bsr.validate().unwrap();
+        assert_eq!(bsr.fill_efficiency(), 1.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! COO — the coordinate storage format (paper §II-C).
+
+use super::{FormatError, ToDense};
+use crate::ndarray::Mat;
+
+/// Coordinate format: parallel `rows/cols/vals` arrays, row-major ordered
+/// (sorted by (row, col)) as in the paper's example.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coo {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn from_dense(a: &Mat) -> Self {
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..a.rows {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    rows.push(i as u32);
+                    cols.push(j as u32);
+                    vals.push(v);
+                }
+            }
+        }
+        Coo { n_rows: a.rows, n_cols: a.cols, rows, cols, vals }
+    }
+
+    /// Build from triplets (any order); sorts to canonical (row, col) order.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(u32, u32, f32)],
+    ) -> Result<Self, FormatError> {
+        let mut sorted: Vec<&(u32, u32, f32)> = triplets.iter().collect();
+        sorted.sort_by_key(|(r, c, _)| (*r, *c));
+        let mut rows = Vec::with_capacity(triplets.len());
+        let mut cols = Vec::with_capacity(triplets.len());
+        let mut vals = Vec::with_capacity(triplets.len());
+        let mut prev: Option<(u32, u32)> = None;
+        for &&(r, c, v) in &sorted {
+            if r as usize >= n_rows || c as usize >= n_cols {
+                return Err(FormatError::Invalid(format!("({r},{c}) out of {n_rows}x{n_cols}")));
+            }
+            if prev == Some((r, c)) {
+                return Err(FormatError::Invalid(format!("duplicate entry ({r},{c})")));
+            }
+            prev = Some((r, c));
+            if v != 0.0 {
+                rows.push(r);
+                cols.push(c);
+                vals.push(v);
+            }
+        }
+        Ok(Coo { n_rows, n_cols, rows, cols, vals })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.n_rows * self.n_cols) as f64
+    }
+
+    /// Structural validation: lengths agree, indices in range, canonical order.
+    pub fn validate(&self) -> Result<(), FormatError> {
+        if self.rows.len() != self.vals.len() || self.cols.len() != self.vals.len() {
+            return Err(FormatError::Invalid("array length mismatch".into()));
+        }
+        let mut prev: Option<(u32, u32)> = None;
+        for k in 0..self.nnz() {
+            let (r, c) = (self.rows[k], self.cols[k]);
+            if r as usize >= self.n_rows || c as usize >= self.n_cols {
+                return Err(FormatError::Invalid(format!("entry {k} out of range")));
+            }
+            if let Some(p) = prev {
+                if (r, c) <= p {
+                    return Err(FormatError::Invalid(format!("entry {k} not (row,col)-sorted")));
+                }
+            }
+            prev = Some((r, c));
+        }
+        Ok(())
+    }
+
+    /// Iterate (row, col, val).
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.nnz()).map(move |k| (self.rows[k], self.cols[k], self.vals[k]))
+    }
+}
+
+impl ToDense for Coo {
+    fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n_rows, self.n_cols);
+        for (r, c, v) in self.iter() {
+            m[(r as usize, c as usize)] += v;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Rng;
+
+    #[test]
+    fn paper_example() {
+        // The 4x4 example from §II-C.
+        #[rustfmt::skip]
+        let a = Mat::from_vec(4, 4, vec![
+            7.0, 0.0, 0.0, 8.0,
+            0.0, 10.0, 0.0, 0.0,
+            9.0, 0.0, 0.0, 0.0,
+            0.0, 0.0, 6.0, 3.0,
+        ]);
+        let coo = Coo::from_dense(&a);
+        assert_eq!(coo.vals, vec![7.0, 8.0, 10.0, 9.0, 6.0, 3.0]);
+        assert_eq!(coo.rows, vec![0, 0, 1, 2, 3, 3]);
+        assert_eq!(coo.cols, vec![0, 3, 1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn round_trip() {
+        let mut rng = Rng::new(1);
+        let a = gen::uniform(48, 0.85, &mut rng);
+        let coo = Coo::from_dense(&a);
+        assert_eq!(coo.to_dense(), a);
+        coo.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = Coo::from_dense(&Mat::zeros(8, 8));
+        assert_eq!(coo.nnz(), 0);
+        assert_eq!(coo.sparsity(), 1.0);
+        coo.validate().unwrap();
+    }
+
+    #[test]
+    fn from_triplets_sorts() {
+        let coo = Coo::from_triplets(4, 4, &[(3, 1, 2.0), (0, 2, 1.0)]).unwrap();
+        assert_eq!(coo.rows, vec![0, 3]);
+        coo.validate().unwrap();
+    }
+
+    #[test]
+    fn from_triplets_rejects_duplicates_and_oob() {
+        assert!(Coo::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0)]).is_err());
+        assert!(Coo::from_triplets(2, 2, &[(2, 0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn from_triplets_drops_explicit_zeros() {
+        let coo = Coo::from_triplets(2, 2, &[(0, 0, 0.0), (1, 1, 5.0)]).unwrap();
+        assert_eq!(coo.nnz(), 1);
+    }
+
+    #[test]
+    fn validate_catches_unsorted() {
+        let mut coo = Coo::from_dense(&Mat::eye(4));
+        coo.rows.swap(0, 3);
+        assert!(coo.validate().is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! CSR — compressed sparse row (the format cuSPARSE's csrmm consumes).
+
+use super::{Coo, FormatError, ToDense};
+use crate::ndarray::Mat;
+
+/// Compressed sparse row: `row_ptr` has `n_rows + 1` entries;
+/// row `i`'s entries live at `row_ptr[i]..row_ptr[i+1]`, column-sorted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_dense(a: &Mat) -> Self {
+        let mut row_ptr = Vec::with_capacity(a.rows + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..a.rows {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    cols.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        Csr { n_rows: a.rows, n_cols: a.cols, row_ptr, cols, vals }
+    }
+
+    /// COO (canonical order) → CSR in one pass.
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut row_ptr = vec![0u32; coo.n_rows + 1];
+        for &r in &coo.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.n_rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr {
+            n_rows: coo.n_rows,
+            n_cols: coo.n_cols,
+            row_ptr,
+            cols: coo.cols.clone(),
+            vals: coo.vals.clone(),
+        }
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut rows = Vec::with_capacity(self.nnz());
+        for i in 0..self.n_rows {
+            for _ in self.row_range(i) {
+                rows.push(i as u32);
+            }
+        }
+        Coo {
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            rows,
+            cols: self.cols.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize
+    }
+
+    /// Entries of row `i` as (col, val) pairs.
+    pub fn row_entries(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.row_range(i).map(move |k| (self.cols[k], self.vals[k]))
+    }
+
+    /// Max nonzeros in any row — determines the ELL rowcap the artifact needs.
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.n_rows).map(|i| self.row_range(i).len()).max().unwrap_or(0)
+    }
+
+    pub fn validate(&self) -> Result<(), FormatError> {
+        if self.row_ptr.len() != self.n_rows + 1 {
+            return Err(FormatError::Invalid("row_ptr length".into()));
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.nnz() {
+            return Err(FormatError::Invalid("row_ptr endpoints".into()));
+        }
+        if self.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err(FormatError::Invalid("row_ptr not monotone".into()));
+        }
+        for i in 0..self.n_rows {
+            let r = self.row_range(i);
+            let cols = &self.cols[r];
+            if cols.iter().any(|&c| c as usize >= self.n_cols) {
+                return Err(FormatError::Invalid(format!("row {i}: col out of range")));
+            }
+            if cols.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(FormatError::Invalid(format!("row {i}: cols not sorted")));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ToDense for Csr {
+    fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n_rows, self.n_cols);
+        for i in 0..self.n_rows {
+            for (c, v) in self.row_entries(i) {
+                m[(i, c as usize)] += v;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Rng;
+
+    #[test]
+    fn round_trip_dense() {
+        let mut rng = Rng::new(2);
+        let a = gen::uniform(40, 0.9, &mut rng);
+        let csr = Csr::from_dense(&a);
+        assert_eq!(csr.to_dense(), a);
+        csr.validate().unwrap();
+    }
+
+    #[test]
+    fn coo_csr_coo_identity() {
+        let mut rng = Rng::new(3);
+        let a = gen::uniform(32, 0.7, &mut rng);
+        let coo = Coo::from_dense(&a);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.to_coo(), coo);
+    }
+
+    #[test]
+    fn row_entries_and_max_row_nnz() {
+        #[rustfmt::skip]
+        let a = Mat::from_vec(3, 4, vec![
+            1.0, 0.0, 2.0, 0.0,
+            0.0, 0.0, 0.0, 0.0,
+            3.0, 4.0, 5.0, 0.0,
+        ]);
+        let csr = Csr::from_dense(&a);
+        assert_eq!(csr.row_entries(0).collect::<Vec<_>>(), vec![(0, 1.0), (2, 2.0)]);
+        assert_eq!(csr.row_entries(1).count(), 0);
+        assert_eq!(csr.max_row_nnz(), 3);
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let csr = Csr::from_dense(&Mat::zeros(5, 5));
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.max_row_nnz(), 0);
+        csr.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_bad_row_ptr() {
+        let mut csr = Csr::from_dense(&Mat::eye(4));
+        csr.row_ptr[2] = 5;
+        assert!(csr.validate().is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Table I — memory consumption of the storage formats.
+//!
+//! The paper counts *elements* (indices and values weigh one unit each):
+//!   CSR  = 2·nnz + n
+//!   COO  = 3·nnz
+//!   GCOO = 3·nnz + 2·⌊(n+p−1)/p⌋     (gIdxes + nnzPerGroup per group)
+//! `FootprintBytes` additionally reports real bytes for f32 values / u32
+//! indices, which is what the simulator's DRAM traffic model consumes.
+
+/// Element counts per Table I.
+pub fn coo_elements(nnz: usize) -> usize {
+    3 * nnz
+}
+
+pub fn csr_elements(nnz: usize, n: usize) -> usize {
+    2 * nnz + n
+}
+
+pub fn gcoo_elements(nnz: usize, n: usize, p: usize) -> usize {
+    3 * nnz + 2 * n.div_ceil(p)
+}
+
+/// Byte-level footprint (f32 values, u32 indices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FootprintBytes {
+    pub values: usize,
+    pub indices: usize,
+}
+
+impl FootprintBytes {
+    pub fn total(&self) -> usize {
+        self.values + self.indices
+    }
+}
+
+pub fn coo_bytes(nnz: usize) -> FootprintBytes {
+    FootprintBytes { values: 4 * nnz, indices: 8 * nnz }
+}
+
+pub fn csr_bytes(nnz: usize, n: usize) -> FootprintBytes {
+    FootprintBytes { values: 4 * nnz, indices: 4 * nnz + 4 * (n + 1) }
+}
+
+pub fn gcoo_bytes(nnz: usize, n: usize, p: usize) -> FootprintBytes {
+    let groups = n.div_ceil(p);
+    FootprintBytes { values: 4 * nnz, indices: 8 * nnz + 8 * groups }
+}
+
+pub fn dense_bytes(n: usize) -> FootprintBytes {
+    FootprintBytes { values: 4 * n * n, indices: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_element_formulas() {
+        let (nnz, n, p) = (1000, 100, 8);
+        assert_eq!(coo_elements(nnz), 3000);
+        assert_eq!(csr_elements(nnz, n), 2100);
+        assert_eq!(gcoo_elements(nnz, n, p), 3000 + 2 * 13);
+    }
+
+    #[test]
+    fn gcoo_overhead_vs_coo_is_per_group_only() {
+        // GCOO = COO + 2 elements per group, exactly as Table I states.
+        for &(n, p) in &[(64usize, 8usize), (100, 7), (1, 1)] {
+            let d = gcoo_elements(500, n, p) - coo_elements(500);
+            assert_eq!(d, 2 * n.div_ceil(p));
+        }
+    }
+
+    #[test]
+    fn csr_beats_coo_in_elements_when_nnz_exceeds_n() {
+        let (nnz, n) = (5000, 1000);
+        assert!(csr_elements(nnz, n) < coo_elements(nnz));
+    }
+
+    #[test]
+    fn byte_footprints_positive_and_ordered() {
+        let (nnz, n, p) = (10_000, 4000, 32);
+        let coo = coo_bytes(nnz).total();
+        let csr = csr_bytes(nnz, n).total();
+        let gcoo = gcoo_bytes(nnz, n, p).total();
+        assert!(csr < coo, "CSR should be smallest for nnz >> n");
+        assert!(coo <= gcoo, "GCOO adds per-group overhead to COO");
+        // sparse formats beat dense at this sparsity (nnz/n^2 ≈ 0.000625)
+        assert!(gcoo < dense_bytes(n).total());
+    }
+
+    #[test]
+    fn dense_crossover_in_bytes() {
+        // At 1/3 density, COO (12 bytes/entry) equals dense (4 bytes/slot):
+        // nnz = n^2/3 ⇒ 12·nnz = 4·n². Below that density sparse wins.
+        let n = 300;
+        let nnz_eq = n * n / 3;
+        assert_eq!(coo_bytes(nnz_eq).total(), dense_bytes(n).total());
+        assert!(coo_bytes(nnz_eq - 100).total() < dense_bytes(n).total());
+    }
+}

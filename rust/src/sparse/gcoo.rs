@@ -1,0 +1,392 @@
+//! GCOO — the paper's grouped COO format (§III-A) plus the padded device
+//! forms (`GcooPadded`, `Ell`) whose layouts match the AOT kernel inputs.
+
+use super::{Csr, FormatError, ToDense};
+use crate::ndarray::Mat;
+
+/// Grouped COO. Groups are bands of `p` consecutive rows (DESIGN.md §3);
+/// per-group COO entries are stored *concatenated* exactly as the paper
+/// lays them out: `vals/rows/cols` plus `g_idxes` (start offset of each
+/// group) and `nnz_per_group`. Row indices are band-local (`0..p`); within
+/// a band entries are sorted by `(col, row)` — the order the bv-reuse scan
+/// of Algorithm 2 depends on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Gcoo {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Band height (the paper's p).
+    pub p: usize,
+    pub vals: Vec<f32>,
+    /// Band-local row index of each entry (0..p).
+    pub rows: Vec<u32>,
+    /// Absolute column index of each entry.
+    pub cols: Vec<u32>,
+    /// Start offset of each group in the concatenated arrays (paper gIdxes).
+    pub g_idxes: Vec<u32>,
+    /// Nonzeros per group (paper nnzPerGroup).
+    pub nnz_per_group: Vec<u32>,
+}
+
+impl Gcoo {
+    /// Number of groups g = ceil(n_rows / p) (paper uses floor((n+p-1)/p)).
+    pub fn num_groups(&self) -> usize {
+        self.n_rows.div_ceil(self.p)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Paper Algorithm 1 (single-threaded reference; the parallel version
+    /// lives in crate::convert). Step 1 counts per-group nonzeros and fills
+    /// `g_idxes`/`nnz_per_group`; step 2 scatters entries into place.
+    pub fn from_dense(a: &Mat, p: usize) -> Self {
+        assert!(p > 0);
+        let g = a.rows.div_ceil(p);
+        // Step 1: count nnz per group.
+        let mut nnz_per_group = vec![0u32; g];
+        for i in 0..a.rows {
+            let band = i / p;
+            nnz_per_group[band] += a.row(i).iter().filter(|v| **v != 0.0).count() as u32;
+        }
+        let mut g_idxes = vec![0u32; g];
+        for gi in 1..g {
+            g_idxes[gi] = g_idxes[gi - 1] + nnz_per_group[gi - 1];
+        }
+        let total: usize = nnz_per_group.iter().map(|&x| x as usize).sum();
+        // Step 2: allocate and fill, sorted by (col, row) within each band.
+        let mut vals = vec![0.0f32; total];
+        let mut rows = vec![0u32; total];
+        let mut cols = vec![0u32; total];
+        for gi in 0..g {
+            let lo = gi * p;
+            let hi = ((gi + 1) * p).min(a.rows);
+            // Column-major walk over the band gives (col, row) order directly.
+            let mut k = g_idxes[gi] as usize;
+            for j in 0..a.cols {
+                for i in lo..hi {
+                    let v = a[(i, j)];
+                    if v != 0.0 {
+                        vals[k] = v;
+                        rows[k] = (i - lo) as u32;
+                        cols[k] = j as u32;
+                        k += 1;
+                    }
+                }
+            }
+            debug_assert_eq!(k, (g_idxes[gi] + nnz_per_group[gi]) as usize);
+        }
+        Gcoo { n_rows: a.rows, n_cols: a.cols, p, vals, rows, cols, g_idxes, nnz_per_group }
+    }
+
+    /// CSR → GCOO without densifying (bucket rows into bands, sort each band).
+    pub fn from_csr(csr: &Csr, p: usize) -> Self {
+        assert!(p > 0);
+        let g = csr.n_rows.div_ceil(p);
+        let mut nnz_per_group = vec![0u32; g];
+        for i in 0..csr.n_rows {
+            nnz_per_group[i / p] += csr.row_range(i).len() as u32;
+        }
+        let mut g_idxes = vec![0u32; g];
+        for gi in 1..g {
+            g_idxes[gi] = g_idxes[gi - 1] + nnz_per_group[gi - 1];
+        }
+        let total = csr.nnz();
+        let mut entries: Vec<(u32, u32, f32)> = Vec::with_capacity(total);
+        let mut vals = Vec::with_capacity(total);
+        let mut rows = Vec::with_capacity(total);
+        let mut cols = Vec::with_capacity(total);
+        for gi in 0..g {
+            entries.clear();
+            let lo = gi * p;
+            let hi = ((gi + 1) * p).min(csr.n_rows);
+            for i in lo..hi {
+                for (c, v) in csr.row_entries(i) {
+                    entries.push((c, (i - lo) as u32, v));
+                }
+            }
+            entries.sort_by_key(|&(c, r, _)| (c, r));
+            for &(c, r, v) in &entries {
+                vals.push(v);
+                rows.push(r);
+                cols.push(c);
+            }
+        }
+        Gcoo {
+            n_rows: csr.n_rows,
+            n_cols: csr.n_cols,
+            p,
+            vals,
+            rows,
+            cols,
+            g_idxes,
+            nnz_per_group,
+        }
+    }
+
+    /// Group `gi`'s entries as (band-local row, col, val).
+    pub fn group(&self, gi: usize) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        let lo = self.g_idxes[gi] as usize;
+        let hi = lo + self.nnz_per_group[gi] as usize;
+        (lo..hi).map(move |k| (self.rows[k], self.cols[k], self.vals[k]))
+    }
+
+    /// Largest per-group nnz — the capacity the padded device form needs.
+    pub fn max_group_nnz(&self) -> usize {
+        self.nnz_per_group.iter().copied().max().unwrap_or(0) as usize
+    }
+
+    /// Count of same-column adjacent pairs — the paper's reuse opportunity
+    /// metric ("(1−s)·n nonzeros share a column"); drives the autotuner and
+    /// explains Fig 5's diagonal-matrix losses.
+    pub fn reuse_pairs(&self) -> usize {
+        let mut pairs = 0;
+        for gi in 0..self.num_groups() {
+            let lo = self.g_idxes[gi] as usize;
+            let hi = lo + self.nnz_per_group[gi] as usize;
+            for k in lo + 1..hi {
+                if self.cols[k] == self.cols[k - 1] {
+                    pairs += 1;
+                }
+            }
+        }
+        pairs
+    }
+
+    pub fn validate(&self) -> Result<(), FormatError> {
+        let g = self.num_groups();
+        if self.g_idxes.len() != g || self.nnz_per_group.len() != g {
+            return Err(FormatError::Invalid("group array lengths".into()));
+        }
+        let total: usize = self.nnz_per_group.iter().map(|&x| x as usize).sum();
+        if total != self.nnz() {
+            return Err(FormatError::Invalid("nnz_per_group sum != nnz".into()));
+        }
+        for gi in 0..g {
+            let expect = if gi == 0 {
+                0
+            } else {
+                self.g_idxes[gi - 1] + self.nnz_per_group[gi - 1]
+            };
+            if self.g_idxes[gi] != expect {
+                return Err(FormatError::Invalid(format!("g_idxes[{gi}] != prefix sum")));
+            }
+            let band_rows = ((gi + 1) * self.p).min(self.n_rows) - gi * self.p;
+            let mut prev: Option<(u32, u32)> = None;
+            for (r, c, _v) in self.group(gi) {
+                if r as usize >= band_rows || c as usize >= self.n_cols {
+                    return Err(FormatError::Invalid(format!("group {gi}: entry out of range")));
+                }
+                if let Some(p) = prev {
+                    if (c, r) <= p {
+                        return Err(FormatError::Invalid(format!(
+                            "group {gi}: not (col,row)-sorted"
+                        )));
+                    }
+                }
+                prev = Some((c, r));
+            }
+        }
+        Ok(())
+    }
+
+    /// Pad to the device layout the `gcoo_*` artifacts expect.
+    pub fn pad(&self, cap: usize) -> Result<GcooPadded, FormatError> {
+        let need = self.max_group_nnz();
+        if need > cap {
+            return Err(FormatError::CapacityExceeded {
+                which: "gcoo band".into(),
+                needed: need,
+                cap,
+            });
+        }
+        let g = self.num_groups();
+        let mut vals = vec![0.0f32; g * cap];
+        let mut rows = vec![0i32; g * cap];
+        let mut cols = vec![0i32; g * cap];
+        for gi in 0..g {
+            for (k, (r, c, v)) in self.group(gi).enumerate() {
+                vals[gi * cap + k] = v;
+                rows[gi * cap + k] = r as i32;
+                cols[gi * cap + k] = c as i32;
+            }
+        }
+        Ok(GcooPadded { g, cap, p: self.p, n: self.n_cols, vals, rows, cols })
+    }
+}
+
+impl ToDense for Gcoo {
+    fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n_rows, self.n_cols);
+        for gi in 0..self.num_groups() {
+            for (r, c, v) in self.group(gi) {
+                m[(gi * self.p + r as usize, c as usize)] += v;
+            }
+        }
+        m
+    }
+}
+
+/// Device-layout GCOO: `(g, cap)` row-major slabs, zero padded — byte-for-
+/// byte the arrays fed to the `gcoo_*` PJRT executables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GcooPadded {
+    pub g: usize,
+    pub cap: usize,
+    pub p: usize,
+    pub n: usize,
+    pub vals: Vec<f32>,
+    pub rows: Vec<i32>,
+    pub cols: Vec<i32>,
+}
+
+/// Device-layout padded CSR (ELL): `(n, rowcap)` slabs for the `csr_*`
+/// artifacts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ell {
+    pub n: usize,
+    pub rowcap: usize,
+    pub vals: Vec<f32>,
+    pub cols: Vec<i32>,
+}
+
+impl Ell {
+    pub fn from_csr(csr: &Csr, rowcap: usize) -> Result<Self, FormatError> {
+        let need = csr.max_row_nnz();
+        if need > rowcap {
+            return Err(FormatError::CapacityExceeded {
+                which: "ell row".into(),
+                needed: need,
+                cap: rowcap,
+            });
+        }
+        let n = csr.n_rows;
+        let mut vals = vec![0.0f32; n * rowcap];
+        let mut cols = vec![0i32; n * rowcap];
+        for i in 0..n {
+            for (k, (c, v)) in csr.row_entries(i).enumerate() {
+                vals[i * rowcap + k] = v;
+                cols[i * rowcap + k] = c as i32;
+            }
+        }
+        Ok(Ell { n, rowcap, vals, cols })
+    }
+}
+
+impl ToDense for Ell {
+    fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n, self.n);
+        for i in 0..self.n {
+            for k in 0..self.rowcap {
+                let v = self.vals[i * self.rowcap + k];
+                if v != 0.0 {
+                    m[(i, self.cols[i * self.rowcap + k] as usize)] += v;
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Rng;
+
+    #[test]
+    fn paper_fig2_example_rowband_reading() {
+        // The paper's 4x4 example, grouped with p=2 under the row-band
+        // reading (DESIGN.md §3): band 0 = rows {0,1}, band 1 = rows {2,3}.
+        #[rustfmt::skip]
+        let a = Mat::from_vec(4, 4, vec![
+            7.0, 0.0, 0.0, 8.0,
+            0.0, 10.0, 0.0, 0.0,
+            9.0, 0.0, 0.0, 0.0,
+            0.0, 0.0, 6.0, 3.0,
+        ]);
+        let gcoo = Gcoo::from_dense(&a, 2);
+        assert_eq!(gcoo.num_groups(), 2);
+        assert_eq!(gcoo.nnz_per_group, vec![3, 3]);
+        assert_eq!(gcoo.g_idxes, vec![0, 3]);
+        // band 0 sorted by (col,row): (0,r0,7), (1,r1,10), (3,r0,8)
+        let g0: Vec<_> = gcoo.group(0).collect();
+        assert_eq!(g0, vec![(0, 0, 7.0), (1, 1, 10.0), (0, 3, 8.0)]);
+        // band 1: (0,r0,9), (2,r1,6), (3,r1,3)
+        let g1: Vec<_> = gcoo.group(1).collect();
+        assert_eq!(g1, vec![(0, 0, 9.0), (1, 2, 6.0), (1, 3, 3.0)]);
+        gcoo.validate().unwrap();
+        assert_eq!(gcoo.to_dense(), a);
+    }
+
+    #[test]
+    fn round_trip_uniform() {
+        let mut rng = Rng::new(4);
+        let a = gen::uniform(64, 0.9, &mut rng);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        gcoo.validate().unwrap();
+        assert_eq!(gcoo.to_dense(), a);
+    }
+
+    #[test]
+    fn from_csr_matches_from_dense() {
+        let mut rng = Rng::new(5);
+        let a = gen::uniform(48, 0.8, &mut rng);
+        let via_dense = Gcoo::from_dense(&a, 8);
+        let via_csr = Gcoo::from_csr(&Csr::from_dense(&a), 8);
+        assert_eq!(via_dense, via_csr);
+    }
+
+    #[test]
+    fn p_not_dividing_n_rows() {
+        let mut rng = Rng::new(6);
+        let a = gen::uniform(30, 0.7, &mut rng); // 30 rows, p=8 -> last band 6 rows
+        let gcoo = Gcoo::from_dense(&a, 8);
+        assert_eq!(gcoo.num_groups(), 4);
+        gcoo.validate().unwrap();
+        assert_eq!(gcoo.to_dense(), a);
+    }
+
+    #[test]
+    fn pad_round_trip_and_capacity() {
+        let mut rng = Rng::new(7);
+        let a = gen::uniform(32, 0.9, &mut rng);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(gcoo.max_group_nnz()).unwrap();
+        assert_eq!(padded.vals.len(), padded.g * padded.cap);
+        assert!(gcoo.pad(gcoo.max_group_nnz().saturating_sub(1)).is_err());
+    }
+
+    #[test]
+    fn reuse_pairs_dense_column() {
+        // A single dense column inside one band: p nonzeros, p-1 reuse pairs.
+        let mut a = Mat::zeros(8, 8);
+        for i in 0..8 {
+            a[(i, 3)] = 1.0;
+        }
+        let gcoo = Gcoo::from_dense(&a, 8);
+        assert_eq!(gcoo.reuse_pairs(), 7);
+        // Diagonal: no two entries share a column at all.
+        let diag = Gcoo::from_dense(&Mat::eye(8), 8);
+        assert_eq!(diag.reuse_pairs(), 0);
+    }
+
+    #[test]
+    fn ell_round_trip_and_capacity() {
+        let mut rng = Rng::new(8);
+        let a = gen::uniform(32, 0.85, &mut rng);
+        let csr = Csr::from_dense(&a);
+        let ell = Ell::from_csr(&csr, csr.max_row_nnz()).unwrap();
+        assert_eq!(ell.to_dense(), a);
+        assert!(Ell::from_csr(&csr, csr.max_row_nnz().saturating_sub(1)).is_err());
+    }
+
+    #[test]
+    fn validate_catches_broken_prefix() {
+        let mut rng = Rng::new(9);
+        let a = gen::uniform(32, 0.8, &mut rng);
+        let mut gcoo = Gcoo::from_dense(&a, 8);
+        gcoo.g_idxes[1] += 1;
+        assert!(gcoo.validate().is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration: the coordinator end to end — routing, batching, verification,
+//! backpressure, metrics, failure injection. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use gcoospdm::coordinator::{Algo, Coordinator, CoordinatorConfig, SpdmRequest};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::Registry;
+
+fn registry() -> Option<Arc<Registry>> {
+    match Registry::load("artifacts") {
+        Ok(r) => Some(Arc::new(r)),
+        Err(e) => {
+            eprintln!("skipping coordinator integration ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn request(id: u64, n: usize, sparsity: f64, seed: u64, verify: bool) -> SpdmRequest {
+    let mut rng = Rng::new(seed);
+    let a = gen::uniform(n, sparsity, &mut rng);
+    let b = Mat::randn(n, n, &mut rng);
+    let mut req = SpdmRequest::new(id, a, b);
+    req.verify = verify;
+    req
+}
+
+#[test]
+fn sparse_request_routes_to_gcoo_and_verifies() {
+    let Some(reg) = registry() else { return };
+    let coord = Coordinator::new(reg, CoordinatorConfig { workers: 1, ..Default::default() });
+    let resp = coord.run_sync(request(1, 256, 0.99, 1, true));
+    assert!(resp.ok(), "{:?}", resp.error);
+    assert_eq!(resp.algo, Algo::Gcoo);
+    assert_eq!(resp.verified, Some(true));
+    assert!(resp.kernel_s > 0.0);
+    assert!(resp.convert_s > 0.0);
+}
+
+#[test]
+fn dense_request_routes_to_dense() {
+    let Some(reg) = registry() else { return };
+    let coord = Coordinator::new(reg, CoordinatorConfig { workers: 1, ..Default::default() });
+    let resp = coord.run_sync(request(2, 256, 0.30, 2, true));
+    assert!(resp.ok());
+    assert_eq!(resp.algo, Algo::DenseXla);
+    assert_eq!(resp.verified, Some(true));
+}
+
+#[test]
+fn hint_forces_algorithm() {
+    let Some(reg) = registry() else { return };
+    let coord = Coordinator::new(reg, CoordinatorConfig { workers: 1, ..Default::default() });
+    let mut req = request(3, 256, 0.99, 3, true);
+    req.algo_hint = Some(Algo::Csr);
+    let resp = coord.run_sync(req);
+    assert!(resp.ok(), "{:?}", resp.error);
+    assert_eq!(resp.algo, Algo::Csr);
+    assert_eq!(resp.verified, Some(true));
+}
+
+#[test]
+fn odd_size_request_pads_and_trims() {
+    let Some(reg) = registry() else { return };
+    let coord = Coordinator::new(reg, CoordinatorConfig { workers: 1, ..Default::default() });
+    let resp = coord.run_sync(request(4, 200, 0.99, 4, true));
+    assert!(resp.ok(), "{:?}", resp.error);
+    assert_eq!(resp.n_exec, 256, "200 should pad up to the 256 artifact");
+    assert_eq!(resp.verified, Some(true));
+    assert_eq!(resp.c.as_ref().unwrap().rows, 200, "result trimmed back");
+}
+
+#[test]
+fn oversized_request_fails_cleanly() {
+    let Some(reg) = registry() else { return };
+    let coord = Coordinator::new(reg, CoordinatorConfig { workers: 1, ..Default::default() });
+    let resp = coord.run_sync(request(5, 2048, 0.999, 5, false));
+    assert!(!resp.ok(), "no artifact covers n=2048; must fail with an error");
+}
+
+#[test]
+fn non_square_request_rejected() {
+    let Some(reg) = registry() else { return };
+    let coord = Coordinator::new(reg, CoordinatorConfig { workers: 1, ..Default::default() });
+    let mut rng = Rng::new(6);
+    let req = SpdmRequest::new(6, Mat::randn(8, 16, &mut rng), Mat::randn(16, 16, &mut rng));
+    let resp = coord.run_sync(req);
+    assert!(!resp.ok());
+    assert!(resp.error.unwrap().contains("shape"));
+}
+
+#[test]
+fn concurrent_mixed_workload_completes_with_metrics() {
+    let Some(reg) = registry() else { return };
+    let coord = Coordinator::new(
+        reg,
+        CoordinatorConfig { workers: 2, queue_cap: 16, ..Default::default() },
+    );
+    // Mixed sizes + sparsities; batcher groups the same-n jobs.
+    let mut receivers = Vec::new();
+    for i in 0..10u64 {
+        let n = if i % 2 == 0 { 256 } else { 200 };
+        let s = if i % 3 == 0 { 0.5 } else { 0.99 };
+        receivers.push(coord.submit(request(i, n, s, 10 + i, true)));
+    }
+    let mut ok = 0;
+    for rx in receivers {
+        let resp = rx.recv().unwrap();
+        assert!(resp.ok(), "{:?}", resp.error);
+        assert_eq!(resp.verified, Some(true));
+        ok += 1;
+    }
+    assert_eq!(ok, 10);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.completed, 10);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.verify_failures, 0);
+    assert!(snap.per_algo.get("gcoo").copied().unwrap_or(0) > 0);
+    assert!(snap.per_algo.get("dense_xla").copied().unwrap_or(0) > 0);
+    assert!(snap.p99_s >= snap.p50_s);
+}
+
+#[test]
+fn shutdown_drains() {
+    let Some(reg) = registry() else { return };
+    let coord = Coordinator::new(reg, CoordinatorConfig { workers: 1, ..Default::default() });
+    let rx = coord.submit(request(1, 256, 0.99, 20, false));
+    coord.shutdown();
+    // The submitted job must have been completed before shutdown returned.
+    assert!(rx.recv().unwrap().ok());
+}

@@ -1,0 +1,112 @@
+//! Cross-language format agreement: the python builders
+//! (compile/kernels/ref.py) and the rust `sparse` module must produce
+//! byte-identical GCOO/ELL layouts for the same matrix.
+//!
+//! The fixture (tests_fixtures/format_fixture.json, written by
+//! python/scripts/write_fixtures.py) uses a closed-form matrix rule so both
+//! sides construct exactly the same input without sharing an RNG.
+
+use gcoospdm::json;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::sparse::{Csr, Ell, Gcoo};
+
+fn rule_matrix(n: usize) -> Mat {
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            if (i * 31 + j * 17) % 7 == 0 {
+                a[(i, j)] = ((i + 2 * j) % 5 + 1) as f32;
+            }
+        }
+    }
+    a
+}
+
+fn load_fixture() -> Option<json::Value> {
+    let text = std::fs::read_to_string("tests_fixtures/format_fixture.json").ok()?;
+    json::parse(&text).ok()
+}
+
+#[test]
+fn gcoo_layout_matches_python() {
+    let Some(fx) = load_fixture() else {
+        eprintln!("fixture missing; run python/scripts/write_fixtures.py");
+        return;
+    };
+    let n = fx.get("n").unwrap().as_usize().unwrap();
+    let p = fx.get("p").unwrap().as_usize().unwrap();
+    let a = rule_matrix(n);
+    let gcoo = Gcoo::from_dense(&a, p);
+    assert_eq!(gcoo.nnz(), fx.get("nnz").unwrap().as_usize().unwrap());
+
+    let bands = fx.get("gcoo_bands").unwrap().as_arr().unwrap();
+    assert_eq!(bands.len(), gcoo.num_groups());
+    for (gi, band) in bands.iter().enumerate() {
+        let want_vals: Vec<f32> = band
+            .get("vals")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let want_rows: Vec<u32> = band
+            .get("rows")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap() as u32)
+            .collect();
+        let want_cols: Vec<u32> = band
+            .get("cols")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap() as u32)
+            .collect();
+        let got: Vec<(u32, u32, f32)> = gcoo.group(gi).collect();
+        let got_rows: Vec<u32> = got.iter().map(|e| e.0).collect();
+        let got_cols: Vec<u32> = got.iter().map(|e| e.1).collect();
+        let got_vals: Vec<f32> = got.iter().map(|e| e.2).collect();
+        assert_eq!(got_rows, want_rows, "band {gi} rows");
+        assert_eq!(got_cols, want_cols, "band {gi} cols");
+        assert_eq!(got_vals, want_vals, "band {gi} vals");
+    }
+}
+
+#[test]
+fn ell_layout_matches_python() {
+    let Some(fx) = load_fixture() else {
+        return;
+    };
+    let n = fx.get("n").unwrap().as_usize().unwrap();
+    let a = rule_matrix(n);
+    let csr = Csr::from_dense(&a);
+    let ell = Ell::from_csr(&csr, n).unwrap();
+    let rows = fx.get("ell_rows").unwrap().as_arr().unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        let want_vals: Vec<f32> = row
+            .get("vals")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let k = want_vals.len();
+        assert_eq!(&ell.vals[i * n..i * n + k], &want_vals[..], "row {i} vals");
+        // rest of the row must be zero padding
+        assert!(ell.vals[i * n + k..(i + 1) * n].iter().all(|v| *v == 0.0));
+        let want_cols: Vec<i32> = row
+            .get("cols")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap() as i32)
+            .collect();
+        assert_eq!(&ell.cols[i * n..i * n + k], &want_cols[..], "row {i} cols");
+    }
+}

@@ -1,0 +1,202 @@
+//! Property-based invariants (via the in-repo `prop` substrate): format
+//! round trips, conversion equivalences, simulator monotonicity, selector
+//! sanity, queue behavior — the proptest-style layer of the test suite.
+
+use gcoospdm::convert;
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::prop::{check, Config};
+use gcoospdm::rng::Rng;
+use gcoospdm::simgpu::{self, GcooStructure, SyntheticUniform, WalkConfig, TITANX};
+use gcoospdm::sparse::{Coo, Csr, Ell, Gcoo, ToDense};
+
+/// A random matrix case for format properties.
+#[derive(Debug)]
+struct MatCase {
+    n: usize,
+    p: usize,
+    pattern: gen::Pattern,
+    sparsity: f64,
+    seed: u64,
+}
+
+fn mat_case(g: &mut gcoospdm::prop::Gen) -> MatCase {
+    let n = 8 * g.usize_in(1, (g.size / 2).max(2)); // multiples of 8 up to ~size*4
+    MatCase {
+        n,
+        p: *g.pick(&[1usize, 2, 4, 8, 16]),
+        pattern: *g.pick(&gen::Pattern::ALL),
+        sparsity: g.f64_in(0.0, 0.999),
+        seed: g.rng.next_u64(),
+    }
+}
+
+fn materialize(c: &MatCase) -> Mat {
+    let mut rng = Rng::new(c.seed);
+    gen::generate(c.pattern, c.n, c.sparsity, &mut rng)
+}
+
+#[test]
+fn prop_every_format_round_trips() {
+    check(Config { cases: 48, ..Default::default() }, mat_case, |c| {
+        let a = materialize(c);
+        let coo = Coo::from_dense(&a);
+        if coo.to_dense() != a {
+            return Err("coo round trip".into());
+        }
+        let csr = Csr::from_dense(&a);
+        if csr.to_dense() != a {
+            return Err("csr round trip".into());
+        }
+        let gcoo = Gcoo::from_dense(&a, c.p);
+        gcoo.validate().map_err(|e| e.to_string())?;
+        if gcoo.to_dense() != a {
+            return Err("gcoo round trip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conversion_paths_agree() {
+    check(Config { cases: 32, ..Default::default() }, mat_case, |c| {
+        let a = materialize(c);
+        let direct = Gcoo::from_dense(&a, c.p);
+        let via_csr = Gcoo::from_csr(&Csr::from_dense(&a), c.p);
+        if direct != via_csr {
+            return Err("from_dense != from_csr".into());
+        }
+        let (parallel, _t) = convert::dense_to_gcoo_parallel(&a, c.p, 3);
+        if parallel != direct {
+            return Err("parallel != sequential".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_padded_forms_preserve_values() {
+    check(Config { cases: 32, ..Default::default() }, mat_case, |c| {
+        let a = materialize(c);
+        let gcoo = Gcoo::from_dense(&a, c.p);
+        let cap = gcoo.max_group_nnz().max(1);
+        let padded = gcoo.pad(cap).map_err(|e| e.to_string())?;
+        // sum of padded vals == sum of matrix (padding adds zeros only)
+        let sum_pad: f64 = padded.vals.iter().map(|v| *v as f64).sum();
+        let sum_mat: f64 = a.data.iter().map(|v| *v as f64).sum();
+        if (sum_pad - sum_mat).abs() > 1e-3 * sum_mat.abs().max(1.0) {
+            return Err(format!("value sum drift: {sum_pad} vs {sum_mat}"));
+        }
+        let csr = Csr::from_dense(&a);
+        let ell = Ell::from_csr(&csr, csr.max_row_nnz().max(1)).map_err(|e| e.to_string())?;
+        if ell.to_dense() != a {
+            return Err("ell round trip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_footprint_formulas_match_structures() {
+    check(Config { cases: 32, ..Default::default() }, mat_case, |c| {
+        let a = materialize(c);
+        let gcoo = Gcoo::from_dense(&a, c.p);
+        // Table I formula vs actual array lengths (elements).
+        let actual = gcoo.vals.len() + gcoo.rows.len() + gcoo.cols.len()
+            + gcoo.g_idxes.len() + gcoo.nnz_per_group.len();
+        let formula = gcoospdm::sparse::gcoo_elements(gcoo.nnz(), c.n, c.p);
+        if actual != formula {
+            return Err(format!("gcoo elements {actual} != formula {formula}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reuse_never_increases_tex_traffic() {
+    // The bv-reuse scan can only remove B fetches, never add them.
+    check(
+        Config { cases: 12, max_size: 24, ..Default::default() },
+        |g| MatCase {
+            n: 8 * g.usize_in(4, 24),
+            p: 8,
+            pattern: *g.pick(&gen::Pattern::ALL),
+            sparsity: g.f64_in(0.5, 0.995),
+            seed: g.rng.next_u64(),
+        },
+        |c| {
+            let a = materialize(c);
+            let st = GcooStructure::new(&Gcoo::from_dense(&a, 8));
+            let cfg = WalkConfig { sample_blocks: 16, ..Default::default() };
+            let (with, f1) = simgpu::gcoo_walk(&st, &TITANX, &cfg, true);
+            let (without, f2) = simgpu::gcoo_walk(&st, &TITANX, &cfg, false);
+            if f1 != f2 {
+                return Err("flops must not depend on reuse".into());
+            }
+            if with.l1_tex > without.l1_tex {
+                return Err(format!("reuse added traffic: {} > {}", with.l1_tex, without.l1_tex));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_time_decreases_with_sparsity() {
+    // On synthetic uniform structure, higher sparsity ⇒ less work ⇒ faster
+    // (for both sparse kernels). Dense stays constant by construction.
+    check(
+        Config { cases: 10, max_size: 16, ..Default::default() },
+        |g| (512 + 128 * g.usize_in(0, 8), g.f64_in(0.8, 0.95), g.rng.next_u64()),
+        |&(n, s, seed)| {
+            let cfg = WalkConfig { sample_blocks: 24, ..Default::default() };
+            let lo = SyntheticUniform::new(n, s, 8, seed);
+            let hi = SyntheticUniform::new(n, (s + 0.04).min(0.9995), 8, seed);
+            let t_lo = simgpu::simulate_gcoo(&lo, &TITANX, &cfg, true).time_s();
+            let t_hi = simgpu::simulate_gcoo(&hi, &TITANX, &cfg, true).time_s();
+            if t_hi > t_lo * 1.05 {
+                return Err(format!("sparser slower: {t_hi} vs {t_lo} (n={n}, s={s})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_queue_batches_are_affine_and_complete() {
+    use gcoospdm::coordinator::BoundedQueue;
+    check(
+        Config { cases: 24, ..Default::default() },
+        |g| {
+            let len = g.usize_in(1, 40);
+            (0..len).map(|_| g.usize_in(0, 3)).collect::<Vec<usize>>()
+        },
+        |shapes| {
+            let q = BoundedQueue::new(shapes.len().max(1));
+            for (i, &s) in shapes.iter().enumerate() {
+                q.try_push((s, i)).map_err(|_| "push failed")?;
+            }
+            q.close();
+            let mut seen = vec![false; shapes.len()];
+            while let Some(batch) = q.pop_batch(8, |h, c| h.0 == c.0) {
+                let shape = batch[0].0;
+                if batch.len() > 8 {
+                    return Err("batch exceeded max".into());
+                }
+                for (s, i) in batch {
+                    if s != shape {
+                        return Err("mixed shapes in batch".into());
+                    }
+                    if seen[i] {
+                        return Err(format!("job {i} delivered twice"));
+                    }
+                    seen[i] = true;
+                }
+            }
+            if !seen.iter().all(|&x| x) {
+                return Err("jobs lost".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,180 @@
+//! Integration: the PJRT engine executing real AOT artifacts against the
+//! CPU oracle. Requires `make artifacts` (tests no-op with a notice
+//! otherwise, so `cargo test` stays runnable on a fresh clone).
+
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::sparse::{Csr, Ell, Gcoo};
+
+fn setup() -> Option<(Registry, Engine)> {
+    let reg = match Registry::load("artifacts") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping runtime integration ({e}); run `make artifacts`");
+            return None;
+        }
+    };
+    let engine = Engine::new().expect("PJRT CPU client");
+    Some((reg, engine))
+}
+
+fn spdm_case(n: usize, sparsity: f64, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let a = gen::uniform(n, sparsity, &mut rng);
+    let b = Mat::randn(n, n, &mut rng);
+    let oracle = a.matmul(&b);
+    (a, b, oracle)
+}
+
+#[test]
+fn gcoo_artifact_matches_oracle() {
+    let Some((reg, engine)) = setup() else { return };
+    let (a, b, oracle) = spdm_case(256, 0.99, 1);
+    let gcoo = Gcoo::from_dense(&a, 8);
+    let padded = gcoo.pad(gcoo.max_group_nnz()).unwrap();
+    let out = engine.run_gcoo(&reg, &padded, &b, true).unwrap();
+    assert!(
+        out.c.allclose(&oracle, 1e-3, 1e-3),
+        "max diff {}",
+        out.c.max_abs_diff(&oracle)
+    );
+    assert!(out.kernel_s > 0.0);
+    assert!(out.artifact.starts_with("gcoo_n256"));
+}
+
+#[test]
+fn gcoo_noreuse_matches_reuse() {
+    let Some((reg, engine)) = setup() else { return };
+    let (a, b, _oracle) = spdm_case(256, 0.98, 2);
+    let gcoo = Gcoo::from_dense(&a, 8);
+    let padded = gcoo.pad(gcoo.max_group_nnz()).unwrap();
+    let with = engine.run_gcoo(&reg, &padded, &b, true).unwrap();
+    let without = engine.run_gcoo(&reg, &padded, &b, false).unwrap();
+    assert_eq!(with.c, without.c, "reuse flag must not change numerics");
+}
+
+#[test]
+fn csr_artifact_matches_oracle() {
+    let Some((reg, engine)) = setup() else { return };
+    let (a, b, oracle) = spdm_case(256, 0.99, 3);
+    let csr = Csr::from_dense(&a);
+    let ell = Ell::from_csr(&csr, csr.max_row_nnz()).unwrap();
+    let out = engine.run_csr(&reg, &ell, &b).unwrap();
+    assert!(out.c.allclose(&oracle, 1e-3, 1e-3));
+}
+
+#[test]
+fn dense_artifacts_match_oracle() {
+    let Some((reg, engine)) = setup() else { return };
+    let mut rng = Rng::new(4);
+    let a = Mat::randn(256, 256, &mut rng);
+    let b = Mat::randn(256, 256, &mut rng);
+    let oracle = a.matmul(&b);
+    for algo in ["dense_xla", "dense_pallas"] {
+        let out = engine.run_dense(&reg, algo, &a, &b).unwrap();
+        assert!(
+            out.c.allclose(&oracle, 1e-2, 1e-2),
+            "{algo}: max diff {}",
+            out.c.max_abs_diff(&oracle)
+        );
+    }
+}
+
+#[test]
+fn capacity_routing_picks_smallest_fitting() {
+    let Some((reg, _engine)) = setup() else { return };
+    // caps at n=256 are {64, 256, 1024}
+    assert_eq!(reg.select("gcoo", 256, 10).unwrap().param("cap"), Some(64));
+    assert_eq!(reg.select("gcoo", 256, 100).unwrap().param("cap"), Some(256));
+    assert_eq!(reg.select("gcoo", 256, 1000).unwrap().param("cap"), Some(1024));
+    assert!(reg.select("gcoo", 256, 5000).is_err());
+}
+
+#[test]
+fn engine_compile_cache_reuses_executables() {
+    let Some((reg, engine)) = setup() else { return };
+    let (a, b, _) = spdm_case(256, 0.99, 5);
+    let gcoo = Gcoo::from_dense(&a, 8);
+    let padded = gcoo.pad(gcoo.max_group_nnz()).unwrap();
+    engine.run_gcoo(&reg, &padded, &b, true).unwrap();
+    let after_first = engine.compiled_count();
+    engine.run_gcoo(&reg, &padded, &b, true).unwrap();
+    assert_eq!(engine.compiled_count(), after_first, "second run must hit the cache");
+    assert_eq!(engine.compile_log().len(), after_first);
+}
+
+#[test]
+fn engine_repads_to_artifact_capacity() {
+    let Some((reg, engine)) = setup() else { return };
+    // Provide padding at a non-exported cap; engine must re-pad to cap=64.
+    let (a, b, oracle) = spdm_case(256, 0.995, 6);
+    let gcoo = Gcoo::from_dense(&a, 8);
+    let padded = gcoo.pad(37).unwrap_or_else(|_| gcoo.pad(gcoo.max_group_nnz()).unwrap());
+    let out = engine.run_gcoo(&reg, &padded, &b, true).unwrap();
+    assert!(out.c.allclose(&oracle, 1e-3, 1e-3));
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some((reg, engine)) = setup() else { return };
+    let mut rng = Rng::new(7);
+    let a = Mat::randn(256, 256, &mut rng);
+    let b_bad = Mat::randn(128, 128, &mut rng);
+    // B at an exported size but different from A's: select() finds the
+    // n=128-fitting artifact only if one exists; shapes must be caught.
+    let err = engine.run_dense(&reg, "dense_xla", &a, &b_bad);
+    assert!(err.is_err());
+}
+
+#[test]
+fn spmv_extension_matches_oracle() {
+    let Some((reg, engine)) = setup() else { return };
+    let mut rng = Rng::new(21);
+    let a = gen::uniform(256, 0.99, &mut rng);
+    let x: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+    let gcoo = Gcoo::from_dense(&a, 8);
+    let padded = gcoo.pad(gcoo.max_group_nnz()).unwrap();
+    let (y, kernel_s, artifact) = engine.run_gcoo_spmv(&reg, &padded, &x).unwrap();
+    assert!(artifact.starts_with("gcoo_spmv_n256"));
+    assert!(kernel_s > 0.0);
+    let oracle = a.matmul(&Mat::from_vec(256, 1, x));
+    for (i, (got, want)) in y.iter().zip(&oracle.data).enumerate() {
+        assert!((got - want).abs() < 1e-3, "y[{i}]: {got} vs {want}");
+    }
+}
+
+#[test]
+fn spmv_rejects_oversized_band() {
+    let Some((reg, engine)) = setup() else { return };
+    let mut rng = Rng::new(22);
+    let a = gen::uniform(256, 0.2, &mut rng); // dense: bands exceed any cap
+    let gcoo = Gcoo::from_dense(&a, 8);
+    let padded = gcoo.pad(gcoo.max_group_nnz()).unwrap();
+    let x = vec![1.0f32; 256];
+    assert!(engine.run_gcoo_spmv(&reg, &padded, &x).is_err());
+}
+
+#[test]
+fn structured_patterns_execute_correctly() {
+    let Some((reg, engine)) = setup() else { return };
+    for (i, pattern) in [gen::Pattern::Diagonal, gen::Pattern::DenseColumns, gen::Pattern::Banded]
+        .into_iter()
+        .enumerate()
+    {
+        let mut rng = Rng::new(100 + i as u64);
+        let a = gen::generate(pattern, 256, 0.99, &mut rng);
+        let b = Mat::randn(256, 256, &mut rng);
+        let oracle = a.matmul(&b);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(gcoo.max_group_nnz().max(1)).unwrap();
+        let out = engine.run_gcoo(&reg, &padded, &b, true).unwrap();
+        assert!(
+            out.c.allclose(&oracle, 1e-3, 1e-3),
+            "{}: max diff {}",
+            pattern.name(),
+            out.c.max_abs_diff(&oracle)
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! Integration: the TCP serving loop — protocol round trips against a live
+//! server backed by real artifacts. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use gcoospdm::coordinator::{Coordinator, CoordinatorConfig};
+use gcoospdm::runtime::Registry;
+use gcoospdm::serve::{Client, Server, ServerConfig};
+
+/// Boot a server on an ephemeral port; returns (addr, server thread handle).
+fn boot() -> Option<(String, std::thread::JoinHandle<()>)> {
+    let reg = match Registry::load("artifacts") {
+        Ok(r) => Arc::new(r),
+        Err(e) => {
+            eprintln!("skipping serve integration ({e}); run `make artifacts`");
+            return None;
+        }
+    };
+    let coord = Arc::new(Coordinator::new(
+        reg,
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    ));
+    let server = Server::bind(&ServerConfig { addr: "127.0.0.1:0".into() }, coord).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    Some((addr, handle))
+}
+
+#[test]
+fn full_protocol_session() {
+    let Some((addr, handle)) = boot() else { return };
+    let mut client = Client::connect(&addr).unwrap();
+
+    // ping
+    let r = client.ping(1).unwrap();
+    assert!(r.ok);
+    assert_eq!(r.id, 1);
+
+    // synthetic spdm, auto-routed, verified
+    let r = client.spdm_synthetic(2, 256, 0.99, "uniform", 7, "auto", true).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    assert_eq!(r.algo.as_deref(), Some("gcoo"));
+    assert_eq!(r.verified, Some(true));
+    assert!(r.kernel_ms.unwrap() > 0.0);
+    assert!(r.checksum.is_some());
+
+    // forced dense
+    let r = client.spdm_synthetic(3, 256, 0.99, "uniform", 7, "dense_xla", true).unwrap();
+    assert!(r.ok);
+    assert_eq!(r.algo.as_deref(), Some("dense_xla"));
+    assert_eq!(r.verified, Some(true));
+
+    // inline payload: 2x2 identity times known B
+    let a = vec![1.0, 0.0, 0.0, 1.0];
+    let b = vec![5.0, 6.0, 7.0, 8.0];
+    let r = client.spdm_inline(4, 2, &a, &b, true).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    assert_eq!(r.verified, Some(true));
+    assert!((r.checksum.unwrap() - 26.0).abs() < 1e-3, "sum of B entries");
+
+    // deterministic checksum: same synthetic request twice
+    let c1 = client.spdm_synthetic(5, 128, 0.95, "banded", 3, "auto", false).unwrap();
+    let c2 = client.spdm_synthetic(6, 128, 0.95, "banded", 3, "auto", false).unwrap();
+    assert_eq!(c1.checksum, c2.checksum);
+
+    // error path: bogus pattern
+    let r = client.spdm_synthetic(7, 64, 0.9, "not_a_pattern", 0, "auto", false).unwrap();
+    assert!(!r.ok);
+    assert!(r.error.unwrap().contains("pattern"));
+
+    // metrics reflect the traffic
+    let m = client.metrics(8).unwrap();
+    assert!(m.ok);
+    let text = m.metrics.unwrap();
+    assert!(text.contains("completed"), "{text}");
+
+    // shutdown terminates the accept loop
+    let r = client.shutdown(9).unwrap();
+    assert!(r.ok);
+    handle.join().unwrap();
+}
+
+#[test]
+fn multiple_clients() {
+    let Some((addr, handle)) = boot() else { return };
+    let mut joins = Vec::new();
+    for c in 0..3u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let r = client
+                .spdm_synthetic(100 + c, 128, 0.99, "uniform", c, "auto", true)
+                .unwrap();
+            assert!(r.ok, "{:?}", r.error);
+            assert_eq!(r.verified, Some(true));
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mut client = Client::connect(&addr).unwrap();
+    client.shutdown(999).unwrap();
+    handle.join().unwrap();
+}
