@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI for the gcoospdm crate: the tier-1 verify plus full target coverage.
+#
+#   ./ci.sh            # build + test + compile all benches/examples
+#
+# The crate is std-only (offline build; see DESIGN.md §2), so no network or
+# vendored registry is required.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== target coverage: benches + examples compile =="
+cargo build --benches --examples
+
+echo "CI OK"

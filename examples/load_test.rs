@@ -20,7 +20,7 @@ fn main() {
         CoordinatorConfig { workers: 2, queue_cap: 32, ..Default::default() },
     ));
     let metrics = coord.metrics();
-    let server = Server::bind(&ServerConfig { addr: "127.0.0.1:0".into() }, coord).unwrap();
+    let server = Server::bind(&ServerConfig::ephemeral(), coord).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let server_thread = std::thread::spawn(move || server.run().unwrap());
 

@@ -3,7 +3,7 @@
 The matrix is defined by a closed-form rule (no RNG) so rust can reconstruct
 it exactly:  a[i,j] = ((i + 2j) % 5) + 1  if (i*31 + j*17) % 7 == 0 else 0.
 
-Usage: cd python && python scripts/write_fixtures.py ../tests_fixtures
+Usage: cd python && python scripts/write_fixtures.py ../rust/tests_fixtures
 """
 
 import json
@@ -26,7 +26,10 @@ def rule_matrix(n):
 
 
 def main():
-    out_dir = sys.argv[1] if len(sys.argv) > 1 else "../tests_fixtures"
+    # Default to the location rust/tests/format_fixtures.rs reads, relative
+    # to this script (works from any cwd).
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(repo, "rust", "tests_fixtures")
     os.makedirs(out_dir, exist_ok=True)
     n, p = 32, 8
     a = rule_matrix(n)

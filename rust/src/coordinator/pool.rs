@@ -55,11 +55,12 @@ struct Job {
 
 /// The serving coordinator.
 ///
-/// The `xla` crate's PJRT handles are `!Send` (internally `Rc`), so the
-/// engine cannot be shared across threads: **each worker owns a full PJRT
-/// client and compile cache** (the per-worker device-context pattern of
-/// GPU serving stacks). The batcher keeps shape-affine jobs on one worker so
-/// per-worker compile caches stay hot.
+/// **Each worker owns a full engine and compile cache** — the per-worker
+/// device-context pattern of GPU serving stacks (under PJRT the client
+/// handles are `!Send`, so sharing one engine across threads is not an
+/// option; the substrate engine keeps the same ownership shape). The batcher
+/// keeps shape-affine jobs on one worker so per-worker compile caches stay
+/// hot.
 pub struct Coordinator {
     queue: Arc<BoundedQueue<Job>>,
     metrics: Arc<Metrics>,

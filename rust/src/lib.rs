@@ -4,9 +4,10 @@
 //!
 //! Layer map (see DESIGN.md):
 //! * build path (python, once): Pallas kernels + JAX graphs → `artifacts/`
-//! * request path (this crate): [`runtime`] loads the AOT artifacts via
-//!   PJRT, [`coordinator`] routes/batches SpDM jobs onto them, [`serve`]
-//!   exposes the TCP serving loop.
+//! * request path (this crate): [`runtime`] loads the AOT artifacts and
+//!   executes them (reference CPU kernels offline, PJRT in the full build —
+//!   DESIGN.md §2), [`coordinator`] routes/batches SpDM jobs onto them,
+//!   [`serve`] exposes the TCP serving loop.
 //! * experiments: [`simgpu`] replays kernel memory traces on the paper's
 //!   three GPUs (Table II) to regenerate every figure; [`gen`] provides
 //!   the workloads; [`roofline`] / [`autotune`] the analysis layers.

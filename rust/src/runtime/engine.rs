@@ -1,11 +1,16 @@
-//! Engine: PJRT CPU client + compile cache + typed SpDM execution helpers.
+//! Engine: artifact loader + compile cache + typed SpDM execution helpers.
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
-//! serialized protos carry 64-bit instruction ids that this xla_extension
-//! (0.5.1) rejects; the text parser reassigns ids (see aot recipe notes in
-//! /opt/xla-example/README.md).
+//! The offline build image has no PJRT/XLA runtime (DESIGN.md §2), so
+//! execution is provided by the substrate: each artifact's computation is
+//! carried out by a reference CPU kernel dispatched on the artifact's
+//! `algo`, operating on exactly the device-layout arrays the AOT executable
+//! would consume (padded GCOO slabs, ELL slabs, row-major dense). The
+//! observable engine behavior is preserved: artifacts must exist on disk to
+//! load, loading is cached per artifact name, and `compile_log` records
+//! load/compile timings — so the registry routing, capacity re-padding and
+//! caching logic upstream is exercised for real.
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -21,11 +26,12 @@ pub struct SpdmOutput {
     pub artifact: String,
 }
 
-/// PJRT client with a per-artifact compile cache. `Send + Sync` via the
-/// internal mutex; one engine is shared by all coordinator workers.
+/// Execution engine with a per-artifact compile cache. `Send + Sync` via the
+/// internal mutexes; the coordinator still builds one engine per worker (the
+/// per-worker device-context pattern it would need under PJRT).
 pub struct Engine {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Names of artifacts already loaded ("compiled").
+    cache: Mutex<HashSet<String>>,
     /// compile timings per artifact (observability; tests assert caching).
     compile_log: Mutex<Vec<(String, f64)>>,
 }
@@ -33,34 +39,32 @@ pub struct Engine {
 impl Engine {
     pub fn new() -> Result<Engine, RuntimeError> {
         Ok(Engine {
-            client: xla::PjRtClient::cpu()?,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(HashSet::new()),
             compile_log: Mutex::new(Vec::new()),
         })
     }
 
+    /// Backing execution platform.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "cpu-substrate".to_string()
     }
 
-    /// Load + compile an artifact (cached).
-    pub fn load(
-        &self,
-        meta: &ArtifactMeta,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
-        if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
-            return Ok(exe.clone());
+    /// Load an artifact (cached). The artifact file must exist and be
+    /// readable — a registry entry alone is not runnable.
+    fn load(&self, meta: &ArtifactMeta) -> Result<(), RuntimeError> {
+        if self.cache.lock().unwrap().contains(&meta.name) {
+            return Ok(());
         }
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&meta.file)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        std::fs::File::open(&meta.file).map_err(|e| {
+            RuntimeError::Exec(format!("{}: {e}", meta.file.display()))
+        })?;
         self.compile_log
             .lock()
             .unwrap()
             .push((meta.name.clone(), t0.elapsed().as_secs_f64()));
-        self.cache.lock().unwrap().insert(meta.name.clone(), exe.clone());
-        Ok(exe)
+        self.cache.lock().unwrap().insert(meta.name.clone());
+        Ok(())
     }
 
     /// Number of distinct artifacts compiled so far.
@@ -70,34 +74,6 @@ impl Engine {
 
     pub fn compile_log(&self) -> Vec<(String, f64)> {
         self.compile_log.lock().unwrap().clone()
-    }
-
-    /// Execute an artifact on literal inputs; unwraps the 1-tuple output
-    /// into an (n, n) matrix.
-    fn execute(
-        &self,
-        meta: &ArtifactMeta,
-        inputs: &[xla::Literal],
-    ) -> Result<SpdmOutput, RuntimeError> {
-        let exe = self.load(meta)?;
-        let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let kernel_s = t0.elapsed().as_secs_f64();
-        let out = result.to_tuple1()?;
-        let data = out.to_vec::<f32>()?;
-        if data.len() != meta.n * meta.n {
-            return Err(RuntimeError::Shape(format!(
-                "{}: output length {} != {}²",
-                meta.name,
-                data.len(),
-                meta.n
-            )));
-        }
-        Ok(SpdmOutput {
-            c: Mat::from_vec(meta.n, meta.n, data),
-            kernel_s,
-            artifact: meta.name.clone(),
-        })
     }
 
     /// Run GCOOSpDM: pick the artifact from `reg`, check shapes, execute.
@@ -112,6 +88,7 @@ impl Engine {
         let n = b.rows;
         let meta = reg.select(algo, n, padded.cap)?;
         let cap = meta.param("cap").expect("gcoo artifact has cap");
+        check_gcoo_slabs(padded)?;
         // Re-pad if the artifact's cap differs from the provided padding.
         let (vals, rows, cols) = if cap == padded.cap {
             (padded.vals.clone(), padded.rows.clone(), padded.cols.clone())
@@ -124,14 +101,11 @@ impl Engine {
         check(padded.g * padded.p == meta.n, || {
             format!("A bands {}x{} != n={}", padded.g, padded.p, meta.n)
         })?;
-        let g = padded.g;
-        let lits = vec![
-            lit_f32(&vals, &[g, cap])?,
-            lit_i32(&rows, &[g, cap])?,
-            lit_i32(&cols, &[g, cap])?,
-            lit_f32(&b.data, &[n, n])?,
-        ];
-        self.execute(meta, &lits)
+        self.load(meta)?;
+        let t0 = Instant::now();
+        let c = gcoo_spdm_cpu(&vals, &rows, &cols, padded.g, cap, padded.p, b);
+        let kernel_s = t0.elapsed().as_secs_f64();
+        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone() })
     }
 
     /// Run the CSR (cuSPARSE-analog) kernel.
@@ -139,6 +113,17 @@ impl Engine {
         let n = b.rows;
         let meta = reg.select("csr", n, ell.rowcap)?;
         let rowcap = meta.param("rowcap").expect("csr artifact has rowcap");
+        check(
+            ell.vals.len() == ell.n * ell.rowcap && ell.cols.len() == ell.n * ell.rowcap,
+            || {
+                format!(
+                    "ell slabs: lengths {}/{} != n*rowcap {}",
+                    ell.vals.len(),
+                    ell.cols.len(),
+                    ell.n * ell.rowcap
+                )
+            },
+        )?;
         let (vals, cols) = if rowcap == ell.rowcap {
             (ell.vals.clone(), ell.cols.clone())
         } else {
@@ -147,12 +132,11 @@ impl Engine {
         check(ell.n == meta.n && b.rows == meta.n && b.cols == meta.n, || {
             format!("shape mismatch: ell.n={} b={}x{} n={}", ell.n, b.rows, b.cols, meta.n)
         })?;
-        let lits = vec![
-            lit_f32(&vals, &[n, rowcap])?,
-            lit_i32(&cols, &[n, rowcap])?,
-            lit_f32(&b.data, &[n, n])?,
-        ];
-        self.execute(meta, &lits)
+        self.load(meta)?;
+        let t0 = Instant::now();
+        let c = ell_spdm_cpu(&vals, &cols, meta.n, rowcap, b);
+        let kernel_s = t0.elapsed().as_secs_f64();
+        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone() })
     }
 
     /// Run the GCOO SpMV extension kernel: y = A·x (paper future work).
@@ -165,6 +149,7 @@ impl Engine {
         let n = x.len();
         let meta = reg.select("gcoo_spmv", n, padded.cap)?;
         let cap = meta.param("cap").expect("spmv artifact has cap");
+        check_gcoo_slabs(padded)?;
         let (vals, rows, cols) = if cap == padded.cap {
             (padded.vals.clone(), padded.rows.clone(), padded.cols.clone())
         } else {
@@ -173,20 +158,10 @@ impl Engine {
         check(padded.g * padded.p == meta.n && n == meta.n, || {
             format!("spmv shapes: A bands {}x{}, x len {}, artifact n={}", padded.g, padded.p, n, meta.n)
         })?;
-        let g = padded.g;
-        let lits = vec![
-            lit_f32(&vals, &[g, cap])?,
-            lit_i32(&rows, &[g, cap])?,
-            lit_i32(&cols, &[g, cap])?,
-            lit_f32(x, &[n])?,
-        ];
-        let exe = self.load(meta)?;
+        self.load(meta)?;
         let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let y = gcoo_spmv_cpu(&vals, &rows, &cols, padded.g, cap, padded.p, x);
         let kernel_s = t0.elapsed().as_secs_f64();
-        let out = result.to_tuple1()?;
-        let y = out.to_vec::<f32>()?;
-        check(y.len() == n, || format!("spmv output {} != {}", y.len(), n))?;
         Ok((y, kernel_s, meta.name.clone()))
     }
 
@@ -204,8 +179,11 @@ impl Engine {
         check(a.rows == n && a.cols == n && b.cols == n, || {
             format!("dense shapes {}x{} / {}x{}", a.rows, a.cols, b.rows, b.cols)
         })?;
-        let lits = vec![lit_f32(&a.data, &[n, n])?, lit_f32(&b.data, &[n, n])?];
-        self.execute(meta, &lits)
+        self.load(meta)?;
+        let t0 = Instant::now();
+        let c = a.matmul(b);
+        let kernel_s = t0.elapsed().as_secs_f64();
+        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone() })
     }
 }
 
@@ -217,22 +195,96 @@ fn check(ok: bool, msg: impl FnOnce() -> String) -> Result<(), RuntimeError> {
     }
 }
 
-fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal, RuntimeError> {
-    let expect: usize = dims.iter().product();
-    if data.len() != expect {
-        return Err(RuntimeError::Shape(format!("f32 literal {} != {:?}", data.len(), dims)));
-    }
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+/// Slab lengths must match the declared (g, cap) geometry — `GcooPadded`
+/// fields are public, so a hand-built value can be inconsistent; reject it
+/// as a shape error rather than panicking mid-kernel.
+fn check_gcoo_slabs(p: &GcooPadded) -> Result<(), RuntimeError> {
+    let want = p.g * p.cap;
+    check(
+        p.vals.len() == want && p.rows.len() == want && p.cols.len() == want,
+        || {
+            format!(
+                "gcoo slabs: lengths {}/{}/{} != g*cap {}",
+                p.vals.len(),
+                p.rows.len(),
+                p.cols.len(),
+                want
+            )
+        },
+    )
 }
 
-fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal, RuntimeError> {
-    let expect: usize = dims.iter().product();
-    if data.len() != expect {
-        return Err(RuntimeError::Shape(format!("i32 literal {} != {:?}", data.len(), dims)));
+/// Reference GCOOSpDM over the padded device slabs: every stored nonzero
+/// scatters its scaled B row into C (padding slots hold 0.0 and vanish).
+/// Mirrors paper Algorithm 2's output indexing: C row = band·p + local row.
+fn gcoo_spdm_cpu(
+    vals: &[f32],
+    rows: &[i32],
+    cols: &[i32],
+    g: usize,
+    cap: usize,
+    p: usize,
+    b: &Mat,
+) -> Mat {
+    let n = b.cols;
+    let mut c = Mat::zeros(g * p, n);
+    for gi in 0..g {
+        for k in 0..cap {
+            let v = vals[gi * cap + k];
+            if v == 0.0 {
+                continue;
+            }
+            let row = gi * p + rows[gi * cap + k] as usize;
+            let brow = b.row(cols[gi * cap + k] as usize);
+            let crow = c.row_mut(row);
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += v * bv;
+            }
+        }
     }
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+    c
+}
+
+/// Reference GCOO SpMV over the same slabs: y[band·p + row] += v · x[col].
+fn gcoo_spmv_cpu(
+    vals: &[f32],
+    rows: &[i32],
+    cols: &[i32],
+    g: usize,
+    cap: usize,
+    p: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; g * p];
+    for gi in 0..g {
+        for k in 0..cap {
+            let v = vals[gi * cap + k];
+            if v == 0.0 {
+                continue;
+            }
+            y[gi * p + rows[gi * cap + k] as usize] += v * x[cols[gi * cap + k] as usize];
+        }
+    }
+    y
+}
+
+/// Reference ELL (padded CSR) SpDM.
+fn ell_spdm_cpu(vals: &[f32], cols: &[i32], n: usize, rowcap: usize, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(n, b.cols);
+    for i in 0..n {
+        for k in 0..rowcap {
+            let v = vals[i * rowcap + k];
+            if v == 0.0 {
+                continue;
+            }
+            let brow = b.row(cols[i * rowcap + k] as usize);
+            let crow = c.row_mut(i);
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += v * bv;
+            }
+        }
+    }
+    c
 }
 
 /// Re-pad device GCOO slabs to a different capacity.
@@ -265,6 +317,10 @@ fn repad_ell(e: &Ell, rowcap: usize) -> (Vec<f32>, Vec<i32>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gen;
+    use crate::rng::Rng;
+    use crate::sparse::{Csr, Gcoo};
+    use std::path::PathBuf;
 
     #[test]
     fn repad_grows_and_shrinks_consistently() {
@@ -291,6 +347,107 @@ mod tests {
         assert_eq!(c, vec![1, 0, 0, 0]);
     }
 
-    // Engine tests that need a PJRT client + real artifacts live in
+    #[test]
+    fn gcoo_cpu_kernel_matches_oracle() {
+        let mut rng = Rng::new(41);
+        let a = gen::uniform(64, 0.95, &mut rng);
+        let b = Mat::randn(64, 48, &mut rng);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(gcoo.max_group_nnz().max(1)).unwrap();
+        let c = gcoo_spdm_cpu(
+            &padded.vals,
+            &padded.rows,
+            &padded.cols,
+            padded.g,
+            padded.cap,
+            padded.p,
+            &b,
+        );
+        assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn spmv_cpu_kernel_matches_oracle() {
+        let mut rng = Rng::new(45);
+        let a = gen::uniform(48, 0.9, &mut rng);
+        let x: Vec<f32> = (0..48).map(|_| rng.normal() as f32).collect();
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(gcoo.max_group_nnz().max(1)).unwrap();
+        let y = gcoo_spmv_cpu(
+            &padded.vals,
+            &padded.rows,
+            &padded.cols,
+            padded.g,
+            padded.cap,
+            padded.p,
+            &x,
+        );
+        let oracle = a.matmul(&Mat::from_vec(48, 1, x));
+        assert_eq!(y.len(), 48);
+        for (i, (got, want)) in y.iter().zip(&oracle.data).enumerate() {
+            assert!((got - want).abs() < 1e-4, "y[{i}]: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn ell_cpu_kernel_matches_oracle() {
+        let mut rng = Rng::new(43);
+        let a = gen::uniform(48, 0.9, &mut rng);
+        let b = Mat::randn(48, 48, &mut rng);
+        let csr = Csr::from_dense(&a);
+        let ell = Ell::from_csr(&csr, csr.max_row_nnz().max(1)).unwrap();
+        let c = ell_spdm_cpu(&ell.vals, &ell.cols, ell.n, ell.rowcap, &b);
+        assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4));
+    }
+
+    /// Registry whose one gcoo artifact (n=16, cap=16) has no backing file.
+    fn missing_file_registry() -> Registry {
+        let manifest = r#"{"artifacts": [
+            {"name": "gcoo_n16_cap16", "algo": "gcoo", "n": 16,
+             "params": {"p": 8, "cap": 16}, "inputs": [],
+             "file": "definitely_missing.hlo.txt"}
+        ]}"#;
+        Registry::from_manifest_json(manifest, PathBuf::from("/nonexistent-artifacts-dir"))
+            .unwrap()
+    }
+
+    #[test]
+    fn engine_errors_on_missing_artifact_file() {
+        // Registry entries without backing files must fail to load, exactly
+        // like the PJRT engine would.
+        let reg = missing_file_registry();
+        let engine = Engine::new().unwrap();
+        let mut rng = Rng::new(44);
+        let a = Mat::eye(16); // 8 nnz per band: fits the cap=16 artifact
+        let b = Mat::randn(16, 16, &mut rng);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(16).unwrap();
+        let err = engine.run_gcoo(&reg, &padded, &b, true);
+        assert!(matches!(err, Err(RuntimeError::Exec(_))), "{err:?}");
+        assert_eq!(engine.compiled_count(), 0);
+    }
+
+    #[test]
+    fn inconsistent_padded_slabs_rejected_as_shape_error() {
+        // GcooPadded fields are public; a hand-built value with short slabs
+        // must come back as a Shape error, not a panic.
+        let reg = missing_file_registry();
+        let engine = Engine::new().unwrap();
+        let mut rng = Rng::new(46);
+        let b = Mat::randn(16, 16, &mut rng);
+        let padded = GcooPadded {
+            g: 2,
+            cap: 16,
+            p: 8,
+            n: 16,
+            vals: vec![1.0; 3], // short: should be g*cap = 32
+            rows: vec![0; 32],
+            cols: vec![0; 32],
+        };
+        let err = engine.run_gcoo(&reg, &padded, &b, true);
+        assert!(matches!(err, Err(RuntimeError::Shape(_))), "{err:?}");
+    }
+
+    // Engine runs against a real artifacts directory live in
     // rust/tests/runtime_integration.rs (they require `make artifacts`).
 }

@@ -1,8 +1,12 @@
-//! Runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) via the `xla`
-//! crate's PJRT CPU client and executes them from the request path.
+//! Runtime — loads the AOT artifacts (`artifacts/*.hlo.txt` + manifest.json)
+//! and executes them from the request path.
 //!
-//! Python never runs here: the manifest + HLO text files are the entire
-//! interface between the build path and this layer.
+//! Python never runs here: the manifest + artifact files are the entire
+//! interface between the build path and this layer. In the offline build
+//! image the PJRT/XLA client is unavailable, so [`Engine`] executes each
+//! artifact with a reference CPU kernel dispatched on the artifact's `algo`
+//! (DESIGN.md §2) while keeping the PJRT engine's observable contract:
+//! artifacts must exist on disk, loads are cached, timings are logged.
 
 mod registry;
 mod engine;
@@ -17,8 +21,8 @@ pub enum RuntimeError {
     Manifest(String),
     /// No compiled variant can serve the request.
     NoVariant { algo: String, n: usize, needed_cap: usize },
-    /// PJRT/XLA failure.
-    Xla(String),
+    /// Executor failure (artifact unreadable / backend error).
+    Exec(String),
     /// Input shape does not match the artifact.
     Shape(String),
 }
@@ -30,16 +34,10 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::NoVariant { algo, n, needed_cap } => {
                 write!(f, "no {algo} artifact for n={n} cap>={needed_cap}")
             }
-            RuntimeError::Xla(m) => write!(f, "xla error: {m}"),
+            RuntimeError::Exec(m) => write!(f, "executor error: {m}"),
             RuntimeError::Shape(m) => write!(f, "shape error: {m}"),
         }
     }
 }
 
 impl std::error::Error for RuntimeError {}
-
-impl From<xla::Error> for RuntimeError {
-    fn from(e: xla::Error) -> Self {
-        RuntimeError::Xla(e.to_string())
-    }
-}

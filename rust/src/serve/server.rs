@@ -23,6 +23,15 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    /// Bind to an OS-assigned ephemeral port. Tests and examples must use
+    /// this (never the fixed default) so parallel runs cannot collide; read
+    /// the actual address back via [`Server::local_addr`].
+    pub fn ephemeral() -> Self {
+        ServerConfig { addr: "127.0.0.1:0".into() }
+    }
+}
+
 /// The serving front end. Owns the listener; the coordinator is shared.
 pub struct Server {
     listener: TcpListener,
@@ -214,6 +223,24 @@ mod tests {
         )
         .unwrap();
         assert_eq!(a[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn ephemeral_binding_assigns_distinct_free_ports() {
+        use crate::coordinator::{Coordinator, CoordinatorConfig};
+        use crate::runtime::Registry;
+        let reg = Arc::new(
+            Registry::from_manifest_json(r#"{"artifacts": []}"#, "/nope".into()).unwrap(),
+        );
+        let coord = Arc::new(Coordinator::new(
+            reg,
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        ));
+        let s1 = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+        let s2 = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+        let (a1, a2) = (s1.local_addr().unwrap(), s2.local_addr().unwrap());
+        assert_ne!(a1.port(), 0, "OS must have assigned a real port");
+        assert_ne!(a1.port(), a2.port(), "parallel binds must not collide");
     }
     // dispatch() against a live coordinator is covered by
     // rust/tests/serve_integration.rs.

@@ -382,6 +382,75 @@ mod tests {
     }
 
     #[test]
+    fn ragged_last_band_prefix_and_intra_band_order() {
+        let mut rng = Rng::new(21);
+        let a = gen::uniform(30, 0.7, &mut rng); // 30 rows, p=8 -> last band 6 rows
+        let gcoo = Gcoo::from_dense(&a, 8);
+        assert_eq!(gcoo.num_groups(), 4);
+        // g_idxes is exactly the exclusive prefix sum of nnz_per_group.
+        let mut expect = 0u32;
+        for gi in 0..4 {
+            assert_eq!(gcoo.g_idxes[gi], expect, "g_idxes[{gi}]");
+            expect += gcoo.nnz_per_group[gi];
+        }
+        assert_eq!(expect as usize, gcoo.nnz());
+        // Entries stay inside their band and are strictly (col, row)-sorted.
+        for gi in 0..4 {
+            let band_rows = if gi == 3 { 6 } else { 8 };
+            let entries: Vec<_> = gcoo.group(gi).collect();
+            assert!(entries.iter().all(|e| (e.0 as usize) < band_rows), "band {gi} row range");
+            for w in entries.windows(2) {
+                assert!((w[0].1, w[0].0) < (w[1].1, w[1].0), "band {gi} not (col,row)-sorted");
+            }
+        }
+        assert_eq!(gcoo.to_dense(), a);
+    }
+
+    #[test]
+    fn all_zero_band_yields_empty_group() {
+        // Rows 8..16 stay zero: the middle band must become an empty group
+        // that the prefix structure simply skips over.
+        let mut a = Mat::zeros(24, 24);
+        let mut rng = Rng::new(22);
+        for i in (0..8).chain(16..24) {
+            for j in 0..24 {
+                if rng.coin(0.3) {
+                    a[(i, j)] = rng.nonzero_value();
+                }
+            }
+        }
+        assert!(a.nnz() > 0);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        assert_eq!(gcoo.num_groups(), 3);
+        assert_eq!(gcoo.nnz_per_group[1], 0, "middle band must be empty");
+        assert_eq!(gcoo.g_idxes[1], gcoo.g_idxes[2], "empty group spans no entries");
+        assert_eq!(gcoo.group(1).count(), 0);
+        gcoo.validate().unwrap();
+        assert_eq!(gcoo.to_dense(), a);
+    }
+
+    #[test]
+    fn single_column_matrix() {
+        // One column: every entry has col 0, so (col,row) order reduces to
+        // ascending band-local rows.
+        let mut a = Mat::zeros(20, 1);
+        for i in [0usize, 3, 7, 8, 12, 19] {
+            a[(i, 0)] = (i + 1) as f32;
+        }
+        let gcoo = Gcoo::from_dense(&a, 8);
+        assert_eq!(gcoo.num_groups(), 3);
+        assert_eq!(gcoo.nnz_per_group, vec![3, 2, 1]);
+        assert_eq!(gcoo.g_idxes, vec![0, 3, 5]);
+        assert!(gcoo.cols.iter().all(|&c| c == 0));
+        for gi in 0..3 {
+            let rows: Vec<u32> = gcoo.group(gi).map(|e| e.0).collect();
+            assert!(rows.windows(2).all(|w| w[0] < w[1]), "band {gi} rows not ascending");
+        }
+        gcoo.validate().unwrap();
+        assert_eq!(gcoo.to_dense(), a);
+    }
+
+    #[test]
     fn validate_catches_broken_prefix() {
         let mut rng = Rng::new(9);
         let a = gen::uniform(32, 0.8, &mut rng);

@@ -20,7 +20,7 @@ fn boot() -> Option<(String, std::thread::JoinHandle<()>)> {
         reg,
         CoordinatorConfig { workers: 1, ..Default::default() },
     ));
-    let server = Server::bind(&ServerConfig { addr: "127.0.0.1:0".into() }, coord).unwrap();
+    let server = Server::bind(&ServerConfig::ephemeral(), coord).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let handle = std::thread::spawn(move || {
         let _ = server.run();
