@@ -17,4 +17,7 @@ cargo test -q
 echo "== target coverage: benches + examples compile =="
 cargo build --benches --examples
 
+echo "== perf: serve_hotpath quick mode (req/s + copies-avoided per PR) =="
+cargo bench --bench serve_hotpath -- --quick
+
 echo "CI OK"

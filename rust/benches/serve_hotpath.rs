@@ -1,0 +1,186 @@
+//! Serving hot-path benchmark: requests/sec through the coordinator at
+//! fixed seeds, plus the allocations-avoided counters, and an A/B of the
+//! zero-copy arena pipeline against a faithful replica of the pre-arena
+//! copy-heavy path (pad A → convert → pad again → clone slabs).
+//!
+//! The engine only needs artifact files to *exist*, so the bench fabricates
+//! a runnable registry under `target/` — no `make artifacts` required.
+//!
+//!   cargo bench --bench serve_hotpath            # full run
+//!   cargo bench --bench serve_hotpath -- --quick # CI quick mode (ci.sh)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use gcoospdm::convert;
+use gcoospdm::coordinator::{
+    process_one_ws, Coordinator, CoordinatorConfig, Selector, SpdmRequest, Workspace,
+};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::sparse::GcooPadded;
+
+fn registry() -> Registry {
+    let dir = PathBuf::from("target/serve_hotpath_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n256_cap64", "algo": "gcoo", "n": 256,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n256_cap256", "algo": "gcoo", "n": 256,
+         "params": {"p": 8, "cap": 256}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n256_cap1024", "algo": "gcoo", "n": 256,
+         "params": {"p": 8, "cap": 1024}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n256_rowcap128", "algo": "csr", "n": 256,
+         "params": {"rp": 8, "rowcap": 128}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n256", "algo": "dense_xla", "n": 256,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+/// Fixed-seed workload: alternating exact-size (256) and padded (200)
+/// sparse requests, with every 5th request dense-routed.
+fn workload(count: usize) -> Vec<SpdmRequest> {
+    (0..count)
+        .map(|i| {
+            let mut rng = Rng::new(1000 + i as u64);
+            let n = if i % 2 == 0 { 256 } else { 200 };
+            let sparsity = if i % 5 == 4 { 0.5 } else { 0.99 };
+            let a = gen::uniform(n, sparsity, &mut rng);
+            let b = Mat::randn(n, n, &mut rng);
+            SpdmRequest::new(i as u64, a, b)
+        })
+        .collect()
+}
+
+/// The pre-arena request path, replicated faithfully for the A/B: stats
+/// scan, pad A to a guessed size, full GCOO build, re-pad to the artifact
+/// capacity, clone the slabs (the old `engine.run_gcoo` always cloned),
+/// pad B — every step a fresh allocation.
+fn baseline_one(engine: &Engine, reg: &Registry, cfg: &CoordinatorConfig, req: &SpdmRequest) -> Mat {
+    let n = req.a.rows;
+    let pad = |m: &Mat, to: usize| {
+        let mut out = Mat::zeros(to, to);
+        for i in 0..m.rows {
+            out.row_mut(i)[..m.cols].copy_from_slice(m.row(i));
+        }
+        out
+    };
+    // old stats scan (sparsity + max row nnz)
+    let mut nnz = 0usize;
+    let mut max_row = 0usize;
+    for i in 0..n {
+        let rn = req.a.row(i).iter().filter(|v| **v != 0.0).count();
+        nnz += rn;
+        max_row = max_row.max(rn);
+    }
+    let sparsity = 1.0 - nnz as f64 / (n * n) as f64;
+    // guess-convert at fit size
+    let n_exec_guess = reg.fit_size("gcoo", n).unwrap_or(n);
+    let a_pad = pad(&req.a, n_exec_guess);
+    let (gcoo, _t) = convert::dense_to_gcoo_parallel(&a_pad, cfg.gcoo_p, cfg.convert_threads);
+    let selector = Selector::new(cfg.policy);
+    let plan = selector
+        .plan(reg, n, sparsity, gcoo.max_group_nnz(), max_row, None)
+        .expect("baseline plan");
+    let b_pad = pad(&req.b, plan.n_exec);
+    // re-pad to the artifact capacity, then clone the slabs like the old
+    // engine did even at matching cap
+    let padded = gcoo.pad(plan.cap.max(gcoo.max_group_nnz())).expect("baseline pad");
+    let cloned = GcooPadded {
+        g: padded.g,
+        cap: padded.cap,
+        p: padded.p,
+        n: padded.n,
+        vals: padded.vals.clone(),
+        rows: padded.rows.clone(),
+        cols: padded.cols.clone(),
+    };
+    let out = engine.run_gcoo(reg, &cloned, &b_pad, true).expect("baseline run");
+    // old trim always copied
+    let mut c = Mat::zeros(n, n);
+    for i in 0..n {
+        c.row_mut(i).copy_from_slice(&out.c.row(i)[..n]);
+    }
+    c
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 24 } else { 200 };
+    let reg = registry();
+    let cfg = CoordinatorConfig { workers: 2, ..Default::default() };
+    println!("serve_hotpath: {} requests, fixed seeds, quick={quick}", iters);
+
+    // --- Phase 1: process_one through the coordinator (queue + workers) ---
+    {
+        let coord = Coordinator::new(Arc::new(registry()), cfg);
+        let reqs = workload(iters);
+        let t0 = Instant::now();
+        let receivers: Vec<_> = reqs
+            .into_iter()
+            .map(|r| coord.submit(r).expect("queue open"))
+            .collect();
+        for rx in receivers {
+            let resp = rx.recv().expect("reply");
+            assert!(resp.ok(), "{:?}", resp.error);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics().snapshot();
+        println!(
+            "coordinator: {:.1} req/s  (p50 {:.2} ms, p99 {:.2} ms)",
+            iters as f64 / wall,
+            snap.p50_s * 1e3,
+            snap.p99_s * 1e3
+        );
+        println!(
+            "copy counters: {} B copied, {} allocations/copies avoided",
+            snap.bytes_copied, snap.copies_avoided
+        );
+        coord.shutdown();
+    }
+
+    // --- Phase 2: A/B on the sparse hot path (same seeds both sides) ---
+    {
+        // Keep only the gcoo-routed requests (n=256, sparsity 0.99): both
+        // sides of the A/B then exercise the same algorithm and artifact.
+        let sparse: Vec<SpdmRequest> = workload(iters)
+            .into_iter()
+            .filter(|r| r.a.rows == 256 && r.id % 5 != 4)
+            .collect();
+        let engine = Engine::new().unwrap();
+        let mut ws = Workspace::new();
+        // warm the arena + compile cache outside the timers
+        for r in sparse.iter().take(2) {
+            let _ = process_one_ws(&engine, &mut ws, &reg, &cfg, r, Instant::now());
+        }
+        let t0 = Instant::now();
+        for r in &sparse {
+            let resp = process_one_ws(&engine, &mut ws, &reg, &cfg, r, Instant::now());
+            assert!(resp.ok(), "{:?}", resp.error);
+        }
+        let arena_s = t0.elapsed().as_secs_f64();
+
+        for r in sparse.iter().take(2) {
+            let _ = baseline_one(&engine, &reg, &cfg, r);
+        }
+        let t1 = Instant::now();
+        for r in &sparse {
+            let _ = baseline_one(&engine, &reg, &cfg, r);
+        }
+        let base_s = t1.elapsed().as_secs_f64();
+
+        let arena_rps = sparse.len() as f64 / arena_s;
+        let base_rps = sparse.len() as f64 / base_s;
+        println!(
+            "direct sparse path: arena {:.1} req/s | baseline copy-path {:.1} req/s | speedup {:.2}x",
+            arena_rps,
+            base_rps,
+            arena_rps / base_rps
+        );
+    }
+}

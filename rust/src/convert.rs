@@ -27,6 +27,209 @@ impl ConvertTiming {
     }
 }
 
+/// Single-pass statistics over A — Algorithm 1's counting pass fused with
+/// the serving stats scan. One walk over every element yields sparsity,
+/// the per-row maximum (ELL row capacity), and the per-band nnz counts
+/// (GCOO band capacities) that the scatter pass then reuses verbatim, so
+/// planning never triggers a conversion and conversion never re-counts.
+///
+/// Band counts are independent of the execution padding: padding A from
+/// `n` to `n_exec` appends all-zero rows/columns, which add no nonzeros
+/// and leave every existing band's count unchanged.
+#[derive(Clone, Debug)]
+pub struct AStats {
+    pub rows: usize,
+    pub cols: usize,
+    /// Band height the counts were taken at.
+    pub p: usize,
+    pub nnz: usize,
+    pub max_row_nnz: usize,
+    /// Nonzeros per band of `p` consecutive rows (paper nnzPerGroup).
+    pub nnz_per_band: Vec<u32>,
+}
+
+impl AStats {
+    pub fn sparsity(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            return 1.0;
+        }
+        1.0 - self.nnz as f64 / total as f64
+    }
+
+    /// Largest per-band nnz — the GCOO device capacity the request needs.
+    pub fn max_band_nnz(&self) -> usize {
+        self.nnz_per_band.iter().copied().max().unwrap_or(0) as usize
+    }
+}
+
+/// The fused stats/counting pass (parallel over bands for large matrices;
+/// small ones scan serially — fork/join spawn cost would dominate the
+/// walk, and every request pays this pass).
+pub fn scan_stats(a: &Mat, p: usize, threads: usize) -> AStats {
+    assert!(p > 0);
+    let g = a.rows.div_ceil(p);
+    let band_counts = |gi: usize| -> (u32, u32) {
+        let lo = gi * p;
+        let hi = ((gi + 1) * p).min(a.rows);
+        let mut band = 0u32;
+        let mut max_row = 0u32;
+        for i in lo..hi {
+            let rn = a.row(i).iter().filter(|v| **v != 0.0).count() as u32;
+            band += rn;
+            max_row = max_row.max(rn);
+        }
+        (band, max_row)
+    };
+    let serial = threads <= 1 || a.rows * a.cols < (1 << 20);
+    let per_band: Vec<(u32, u32)> = if serial {
+        (0..g).map(band_counts).collect()
+    } else {
+        crate::exec::par_map(g, threads, band_counts)
+    };
+    let nnz_per_band: Vec<u32> = per_band.iter().map(|x| x.0).collect();
+    AStats {
+        rows: a.rows,
+        cols: a.cols,
+        p,
+        nnz: nnz_per_band.iter().map(|&x| x as usize).sum(),
+        max_row_nnz: per_band.iter().map(|x| x.1).max().unwrap_or(0) as usize,
+        nnz_per_band,
+    }
+}
+
+/// Collect one band's nonzeros into `scratch` as `(col, band-local row,
+/// val)`, sorted by `(col, row)` — **the** intra-band ordering the
+/// bv-reuse scan of Algorithm 2 and the cross-language fixtures depend on
+/// (DESIGN.md §3). Shared by every scatter path so the ordering invariant
+/// lives in exactly one place.
+fn collect_band_sorted(a: &Mat, lo: usize, hi: usize, scratch: &mut Vec<(u32, u32, f32)>) {
+    scratch.clear();
+    for i in lo..hi {
+        let local = (i - lo) as u32;
+        for (j, &x) in a.row(i).iter().enumerate() {
+            if x != 0.0 {
+                scratch.push((j as u32, local, x));
+            }
+        }
+    }
+    scratch.sort_unstable_by_key(|&(col, row, _)| (col, row));
+}
+
+/// Algorithm 1's scatter pass fused with device padding: write A's nonzeros
+/// directly into `(g = n_exec/p, cap)` GCOO slabs for an artifact of size
+/// `n_exec ≥ a.rows`, reusing the band counts from [`scan_stats`]. The
+/// padded A is never materialized (rows `a.rows..n_exec` are implicit
+/// zeros) and no intermediate [`Gcoo`] is built — this is the one and only
+/// conversion of A on the serving path. The output buffers are resized in
+/// place, so a per-worker workspace reaches a steady state with **zero
+/// per-request allocation** on the A side.
+pub fn dense_to_slabs_into(
+    a: &Mat,
+    stats: &AStats,
+    n_exec: usize,
+    cap: usize,
+    threads: usize,
+    vals: &mut Vec<f32>,
+    rows: &mut Vec<i32>,
+    cols: &mut Vec<i32>,
+) -> Result<(), FormatError> {
+    let p = stats.p;
+    debug_assert_eq!(stats.rows, a.rows);
+    let need = stats.max_band_nnz();
+    if need > cap {
+        return Err(FormatError::CapacityExceeded {
+            which: "gcoo band".into(),
+            needed: need,
+            cap,
+        });
+    }
+    if n_exec < a.rows {
+        return Err(FormatError::Invalid(format!(
+            "n_exec {n_exec} smaller than matrix rows {}",
+            a.rows
+        )));
+    }
+    let g = n_exec.div_ceil(p);
+    vals.clear();
+    vals.resize(g * cap, 0.0);
+    rows.clear();
+    rows.resize(g * cap, 0);
+    cols.clear();
+    cols.resize(g * cap, 0);
+    if cap == 0 || g == 0 {
+        return Ok(());
+    }
+    // Bands past a.rows hold only padding zeros — nothing to scatter.
+    let live_bands = a.rows.div_ceil(p).min(g);
+    // Same disjoint-slice hand-off as `dense_to_gcoo_parallel`: each band
+    // owns its cap-sized chunk of every slab.
+    let mut work: Vec<Option<(&mut [f32], &mut [i32], &mut [i32])>> = vals
+        .chunks_mut(cap)
+        .zip(rows.chunks_mut(cap))
+        .zip(cols.chunks_mut(cap))
+        .map(|((v, r), c)| Some((v, r, c)))
+        .collect();
+    let work_ptr = std::sync::Mutex::new(&mut work);
+    scoped_for(live_bands, threads, |range| {
+        let mut scratch: Vec<(u32, u32, f32)> = Vec::new();
+        for gi in range {
+            let (v, r, c) = {
+                let mut guard = work_ptr.lock().unwrap();
+                guard[gi].take().unwrap()
+            };
+            collect_band_sorted(a, gi * p, ((gi + 1) * p).min(a.rows), &mut scratch);
+            debug_assert_eq!(scratch.len(), stats.nnz_per_band[gi] as usize);
+            for (k, &(col, row, x)) in scratch.iter().enumerate() {
+                v[k] = x;
+                r[k] = row as i32;
+                c[k] = col as i32;
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Dense → ELL slabs in place (the CSR-path analog of
+/// [`dense_to_slabs_into`]): no padded A, no intermediate CSR. Rows past
+/// `a.rows` are implicit zeros.
+pub fn dense_to_ell_into(
+    a: &Mat,
+    n_exec: usize,
+    rowcap: usize,
+    vals: &mut Vec<f32>,
+    cols: &mut Vec<i32>,
+) -> Result<(), FormatError> {
+    if n_exec < a.rows {
+        return Err(FormatError::Invalid(format!(
+            "n_exec {n_exec} smaller than matrix rows {}",
+            a.rows
+        )));
+    }
+    vals.clear();
+    vals.resize(n_exec * rowcap, 0.0);
+    cols.clear();
+    cols.resize(n_exec * rowcap, 0);
+    for i in 0..a.rows {
+        let mut k = 0usize;
+        for (j, &x) in a.row(i).iter().enumerate() {
+            if x != 0.0 {
+                if k == rowcap {
+                    return Err(FormatError::CapacityExceeded {
+                        which: "ell row".into(),
+                        needed: a.row(i).iter().filter(|v| **v != 0.0).count(),
+                        cap: rowcap,
+                    });
+                }
+                vals[i * rowcap + k] = x;
+                cols[i * rowcap + k] = j as i32;
+                k += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Parallel Algorithm 1: dense → GCOO with `threads` workers.
 pub fn dense_to_gcoo_parallel(a: &Mat, p: usize, threads: usize) -> (Gcoo, ConvertTiming) {
     assert!(p > 0);
@@ -108,18 +311,7 @@ pub fn dense_to_gcoo_parallel(a: &Mat, p: usize, threads: usize) -> (Gcoo, Conve
                     let mut guard = work_ptr.lock().unwrap();
                     guard[gi].take().unwrap()
                 };
-                let lo = gi * p;
-                let hi = ((gi + 1) * p).min(a.rows);
-                scratch.clear();
-                for i in lo..hi {
-                    let local = (i - lo) as u32;
-                    for (j, &x) in a.row(i).iter().enumerate() {
-                        if x != 0.0 {
-                            scratch.push((j as u32, local, x));
-                        }
-                    }
-                }
-                scratch.sort_unstable_by_key(|&(col, row, _)| (col, row));
+                collect_band_sorted(a, gi * p, ((gi + 1) * p).min(a.rows), &mut scratch);
                 debug_assert_eq!(scratch.len(), v.len());
                 for (k, &(col, row, x)) in scratch.iter().enumerate() {
                     v[k] = x;
@@ -225,5 +417,106 @@ mod tests {
         let (ell, timing) = dense_to_ell(&a, 64).unwrap();
         assert_eq!(ell.to_dense(), a);
         assert!(timing.eo() >= 0.0);
+    }
+
+    #[test]
+    fn scan_stats_matches_direct_counts() {
+        let mut rng = Rng::new(7);
+        let a = gen::uniform(50, 0.85, &mut rng); // ragged: 50 rows, p=8
+        let stats = scan_stats(&a, 8, 3);
+        assert_eq!(stats.nnz, a.nnz());
+        assert!((stats.sparsity() - a.sparsity()).abs() < 1e-12);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        assert_eq!(
+            stats.nnz_per_band, gcoo.nnz_per_group,
+            "fused counts must equal Algorithm 1 pass 1"
+        );
+        assert_eq!(stats.max_band_nnz(), gcoo.max_group_nnz());
+        let max_row = (0..a.rows)
+            .map(|i| a.row(i).iter().filter(|v| **v != 0.0).count())
+            .max()
+            .unwrap();
+        assert_eq!(stats.max_row_nnz, max_row);
+    }
+
+    #[test]
+    fn slabs_into_equals_convert_then_pad() {
+        let mut rng = Rng::new(8);
+        let a = gen::uniform(64, 0.9, &mut rng);
+        let stats = scan_stats(&a, 8, 2);
+        let cap = stats.max_band_nnz() + 3;
+        let (mut v, mut r, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        dense_to_slabs_into(&a, &stats, 64, cap, 3, &mut v, &mut r, &mut c).unwrap();
+        let reference = Gcoo::from_dense(&a, 8).pad(cap).unwrap();
+        assert_eq!(v, reference.vals);
+        assert_eq!(r, reference.rows);
+        assert_eq!(c, reference.cols);
+    }
+
+    #[test]
+    fn slabs_into_pads_without_materializing_a() {
+        // n=30 request executed at n_exec=40: trailing bands are implicit
+        // zeros and the result must equal converting the padded matrix.
+        let mut rng = Rng::new(9);
+        let a = gen::uniform(30, 0.8, &mut rng);
+        let stats = scan_stats(&a, 8, 2);
+        let cap = stats.max_band_nnz().max(1);
+        let (mut v, mut r, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        dense_to_slabs_into(&a, &stats, 40, cap, 2, &mut v, &mut r, &mut c).unwrap();
+        let mut a_pad = Mat::zeros(40, 40);
+        for i in 0..30 {
+            a_pad.row_mut(i)[..30].copy_from_slice(a.row(i));
+        }
+        let reference = Gcoo::from_dense(&a_pad, 8).pad(cap).unwrap();
+        assert_eq!((v.len(), reference.g), (reference.vals.len(), 5));
+        assert_eq!(v, reference.vals);
+        assert_eq!(r, reference.rows);
+        assert_eq!(c, reference.cols);
+    }
+
+    #[test]
+    fn slabs_into_reuses_buffers_and_checks_capacity() {
+        let mut rng = Rng::new(10);
+        let a = gen::uniform(32, 0.9, &mut rng);
+        let stats = scan_stats(&a, 8, 1);
+        let (mut v, mut r, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        let cap = stats.max_band_nnz().max(1);
+        dense_to_slabs_into(&a, &stats, 32, cap, 1, &mut v, &mut r, &mut c).unwrap();
+        let ptr_before = v.as_ptr();
+        let cap_before = v.capacity();
+        // Second conversion at the same geometry must not reallocate.
+        dense_to_slabs_into(&a, &stats, 32, cap, 1, &mut v, &mut r, &mut c).unwrap();
+        assert_eq!(v.as_ptr(), ptr_before);
+        assert_eq!(v.capacity(), cap_before);
+        // Capacity overflow is a typed error, not a panic.
+        assert!(matches!(
+            dense_to_slabs_into(&a, &stats, 32, cap - 1, 1, &mut v, &mut r, &mut c),
+            Err(FormatError::CapacityExceeded { .. })
+        ));
+        // n_exec below the matrix size is rejected.
+        assert!(dense_to_slabs_into(&a, &stats, 16, cap, 1, &mut v, &mut r, &mut c).is_err());
+    }
+
+    #[test]
+    fn ell_into_matches_from_csr() {
+        let mut rng = Rng::new(11);
+        let a = gen::uniform(48, 0.9, &mut rng);
+        let csr = Csr::from_dense(&a);
+        let rowcap = csr.max_row_nnz() + 2;
+        let reference = Ell::from_csr(&csr, rowcap).unwrap();
+        let (mut v, mut c) = (Vec::new(), Vec::new());
+        dense_to_ell_into(&a, 48, rowcap, &mut v, &mut c).unwrap();
+        assert_eq!(v, reference.vals);
+        assert_eq!(c, reference.cols);
+        // Padded execution size: extra rows are all-zero slots.
+        dense_to_ell_into(&a, 50, rowcap, &mut v, &mut c).unwrap();
+        assert_eq!(v.len(), 50 * rowcap);
+        assert_eq!(&v[..48 * rowcap], &reference.vals[..]);
+        assert!(v[48 * rowcap..].iter().all(|&x| x == 0.0));
+        // Row overflow is a typed error.
+        assert!(matches!(
+            dense_to_ell_into(&a, 48, csr.max_row_nnz() - 1, &mut v, &mut c),
+            Err(FormatError::CapacityExceeded { .. })
+        ));
     }
 }

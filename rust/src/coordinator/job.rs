@@ -2,38 +2,9 @@
 
 use crate::ndarray::Mat;
 
-/// Algorithm families the coordinator can route to (== artifact `algo`s).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Algo {
-    Gcoo,
-    GcooNoreuse,
-    Csr,
-    DenseXla,
-    DensePallas,
-}
-
-impl Algo {
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            Algo::Gcoo => "gcoo",
-            Algo::GcooNoreuse => "gcoo_noreuse",
-            Algo::Csr => "csr",
-            Algo::DenseXla => "dense_xla",
-            Algo::DensePallas => "dense_pallas",
-        }
-    }
-
-    pub fn from_str(s: &str) -> Option<Algo> {
-        match s {
-            "gcoo" => Some(Algo::Gcoo),
-            "gcoo_noreuse" => Some(Algo::GcooNoreuse),
-            "csr" => Some(Algo::Csr),
-            "dense_xla" | "dense" => Some(Algo::DenseXla),
-            "dense_pallas" => Some(Algo::DensePallas),
-            _ => None,
-        }
-    }
-}
+/// Algorithm families (defined next to the planner in `runtime::plan`,
+/// re-exported here so coordinator users keep their import path).
+pub use crate::runtime::Algo;
 
 /// One SpDM request: C = A·B with A treated as sparse.
 #[derive(Clone, Debug)]
@@ -71,6 +42,12 @@ pub struct SpdmResponse {
     pub error: Option<String>,
     /// The result matrix (trimmed back to the request's n).
     pub c: Option<Mat>,
+    /// Host bytes copied moving A/B/C through the pipeline (pads, trims,
+    /// capacity re-pads). Zero on the steady-state matching-cap path.
+    pub bytes_copied: u64,
+    /// Materializations skipped by borrowing (matching-size B, matching-cap
+    /// slabs, matching-size C moved out instead of trimmed).
+    pub copies_avoided: u64,
 }
 
 impl SpdmResponse {
@@ -86,6 +63,8 @@ impl SpdmResponse {
             verified: None,
             error: Some(msg),
             c: None,
+            bytes_copied: 0,
+            copies_avoided: 0,
         }
     }
 

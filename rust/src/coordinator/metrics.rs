@@ -12,6 +12,13 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub errors: AtomicU64,
     pub verify_failures: AtomicU64,
+    /// Host bytes copied moving operands through the pipeline (pads,
+    /// trims, capacity re-pads) — the traffic the workspace arenas exist
+    /// to eliminate.
+    pub bytes_copied: AtomicU64,
+    /// Materializations skipped by borrowing (matching-size/matching-cap
+    /// zero-copy paths).
+    pub copies_avoided: AtomicU64,
     latencies_s: Mutex<Vec<f64>>,
     kernel_s: Mutex<Vec<f64>>,
     convert_s: Mutex<Vec<f64>>,
@@ -32,6 +39,8 @@ impl Metrics {
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             verify_failures: AtomicU64::new(0),
+            bytes_copied: AtomicU64::new(0),
+            copies_avoided: AtomicU64::new(0),
             latencies_s: Mutex::new(Vec::new()),
             kernel_s: Mutex::new(Vec::new()),
             convert_s: Mutex::new(Vec::new()),
@@ -52,6 +61,17 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A verified request disagreed with the CPU oracle.
+    pub fn record_verify_failure(&self) {
+        self.verify_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accumulate one request's copy accounting.
+    pub fn record_copy_traffic(&self, bytes_copied: u64, copies_avoided: u64) {
+        self.bytes_copied.fetch_add(bytes_copied, Ordering::Relaxed);
+        self.copies_avoided.fetch_add(copies_avoided, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies_s.lock().unwrap().clone();
         let ker = self.kernel_s.lock().unwrap().clone();
@@ -63,6 +83,8 @@ impl Metrics {
             completed,
             errors: self.errors.load(Ordering::Relaxed),
             verify_failures: self.verify_failures.load(Ordering::Relaxed),
+            bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
+            copies_avoided: self.copies_avoided.load(Ordering::Relaxed),
             throughput_rps: completed as f64 / elapsed.max(1e-9),
             p50_s: pct(&lat, 50.0),
             p95_s: pct(&lat, 95.0),
@@ -97,6 +119,8 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub errors: u64,
     pub verify_failures: u64,
+    pub bytes_copied: u64,
+    pub copies_avoided: u64,
     pub throughput_rps: f64,
     pub p50_s: f64,
     pub p95_s: f64,
@@ -109,18 +133,22 @@ pub struct MetricsSnapshot {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "requests: {} submitted / {} completed / {} errors\n\
+            "requests: {} submitted / {} completed / {} errors / {} verify failures\n\
              latency:  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms\n\
              phases:   kernel {:.3} ms  convert {:.3} ms (means)\n\
+             copies:   {} B copied / {} avoided (zero-copy borrows)\n\
              rate:     {:.1} req/s   per-algo: {:?}",
             self.submitted,
             self.completed,
             self.errors,
+            self.verify_failures,
             self.p50_s * 1e3,
             self.p95_s * 1e3,
             self.p99_s * 1e3,
             self.mean_kernel_s * 1e3,
             self.mean_convert_s * 1e3,
+            self.bytes_copied,
+            self.copies_avoided,
             self.throughput_rps,
             self.per_algo,
         )
@@ -139,13 +167,20 @@ mod tests {
         m.record_completion("gcoo", 0.020, 0.008, 0.004);
         m.record_completion("dense_xla", 0.030, 0.030, 0.0);
         m.record_error();
+        m.record_verify_failure();
+        m.record_copy_traffic(4096, 3);
+        m.record_copy_traffic(0, 2);
         let s = m.snapshot();
         assert_eq!(s.submitted, 3);
         assert_eq!(s.completed, 3);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.verify_failures, 1);
+        assert_eq!(s.bytes_copied, 4096);
+        assert_eq!(s.copies_avoided, 5);
         assert_eq!(s.per_algo["gcoo"], 2);
         assert!((s.p50_s - 0.020).abs() < 1e-12);
         assert!(s.throughput_rps > 0.0);
+        assert!(s.render().contains("4096 B copied / 5 avoided"));
     }
 
     #[test]

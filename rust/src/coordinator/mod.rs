@@ -1,7 +1,8 @@
 //! Coordinator — the L3 serving layer: bounded job queue with backpressure,
-//! algorithm selection (the sparsity/size routing policy the paper's
-//! conclusions prescribe), shape-affinity batching, a worker pool executing
-//! on the shared PJRT engine, and metrics.
+//! plan-first algorithm selection (the sparsity/size routing policy the
+//! paper's conclusions prescribe, resolved to a concrete artifact before
+//! any conversion), shape-affinity batching, a worker pool with per-worker
+//! engines + workspace arenas, and metrics.
 //!
 //! The paper's contribution is the kernel, so this layer is deliberately a
 //! *thin but real* serving stack (DESIGN.md §1 L3): everything a downstream
@@ -12,9 +13,15 @@ mod queue;
 mod selector;
 mod metrics;
 mod pool;
+mod workspace;
 
 pub use job::{Algo, SpdmRequest, SpdmResponse};
 pub use queue::BoundedQueue;
-pub use selector::{Selector, SelectorPolicy, Plan};
+pub use selector::{Selector, SelectorPolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use pool::{Coordinator, CoordinatorConfig};
+pub use pool::{process_one, process_one_ws, Coordinator, CoordinatorConfig, SubmitError};
+pub use workspace::Workspace;
+// The selector's output type lives next to the engine (`runtime::plan`);
+// keep the old `coordinator::Plan` name working.
+pub use crate::runtime::ExecPlan;
+pub use crate::runtime::ExecPlan as Plan;

@@ -1,11 +1,15 @@
 //! The coordinator proper: worker pool over the bounded queue, executing
-//! requests on the shared PJRT engine according to the selector's plan.
+//! requests on per-worker engines according to the selector's plan.
 //!
-//! Request lifecycle:
+//! Request lifecycle (the zero-copy pipeline):
 //!   submit → queue (backpressure) → batch dequeue (shape affinity) →
-//!   stats scan → [sparse path: timed GCOO/ELL conversion (EO)] →
-//!   plan → pad to the artifact grid → PJRT execute (KC) →
-//!   optional verification vs the CPU oracle → trim → reply + metrics.
+//!   **fused stats scan** (sparsity + max row nnz + band nnz, one pass) →
+//!   **plan** (algo + artifact + n_exec + cap resolved before any
+//!   conversion) → convert A **once**, directly into the worker's
+//!   workspace slabs at the artifact's capacity (EO) → execute on borrowed
+//!   slabs (KC; matching-cap = zero slab copies) → optional verification
+//!   vs the CPU oracle → trim (or move, when sizes match) → reply +
+//!   metrics (including the bytes-copied / copies-avoided pair).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -15,10 +19,11 @@ use super::job::{Algo, SpdmRequest, SpdmResponse};
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
 use super::selector::{Selector, SelectorPolicy};
+use super::workspace::Workspace;
 use crate::convert;
 use crate::ndarray::Mat;
 use crate::runtime::{Engine, Registry};
-use crate::sparse::{Csr, Ell};
+use crate::sparse::{EllSlabs, GcooSlabs};
 
 /// Coordinator tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +52,24 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Typed submission failure — the coordinator refusing a request is an
+/// expected condition (shutdown race), not a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The coordinator's queue is closed (shutdown started or completed).
+    ShutDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::ShutDown => write!(f, "coordinator is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 struct Job {
     req: SpdmRequest,
     enqueued: Instant,
@@ -55,12 +78,13 @@ struct Job {
 
 /// The serving coordinator.
 ///
-/// **Each worker owns a full engine and compile cache** — the per-worker
-/// device-context pattern of GPU serving stacks (under PJRT the client
-/// handles are `!Send`, so sharing one engine across threads is not an
-/// option; the substrate engine keeps the same ownership shape). The batcher
-/// keeps shape-affine jobs on one worker so per-worker compile caches stay
-/// hot.
+/// **Each worker owns a full engine, compile cache, and workspace arena** —
+/// the per-worker device-context pattern of GPU serving stacks (under PJRT
+/// the client handles are `!Send`, so sharing one engine across threads is
+/// not an option; the substrate engine keeps the same ownership shape, and
+/// the workspace must never be shared — see `workspace.rs`). The batcher
+/// keeps shape-affine jobs on one worker so per-worker compile caches and
+/// arena buffers stay hot at one geometry.
 pub struct Coordinator {
     queue: Arc<BoundedQueue<Job>>,
     metrics: Arc<Metrics>,
@@ -97,14 +121,19 @@ impl Coordinator {
                                 return;
                             }
                         };
+                        // Per-worker workspace arena, owned next to the
+                        // engine: reused across this worker's requests,
+                        // never shared (workspace.rs ownership rule).
+                        let mut ws = Workspace::new();
                         // Batch by matching request dimension: jobs padded to
                         // the same artifact stay on one warm executable.
                         while let Some(batch) = queue
                             .pop_batch(cfg.batch_max, |h, c| h.req.a.rows == c.req.a.rows)
                         {
                             for job in batch {
-                                let resp =
-                                    process_one(&engine, &registry, &cfg, &job.req, job.enqueued);
+                                let resp = process_one_ws(
+                                    &engine, &mut ws, &registry, &cfg, &job.req, job.enqueued,
+                                );
                                 if resp.ok() {
                                     metrics.record_completion(
                                         resp.algo.as_str(),
@@ -112,10 +141,12 @@ impl Coordinator {
                                         resp.kernel_s,
                                         resp.convert_s,
                                     );
+                                    metrics.record_copy_traffic(
+                                        resp.bytes_copied,
+                                        resp.copies_avoided,
+                                    );
                                     if resp.verified == Some(false) {
-                                        metrics
-                                            .verify_failures
-                                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                        metrics.record_verify_failure();
                                     }
                                 } else {
                                     metrics.record_error();
@@ -131,18 +162,31 @@ impl Coordinator {
     }
 
     /// Enqueue a request; the receiver yields the response when done.
-    /// Blocks when the queue is full (backpressure).
-    pub fn submit(&self, req: SpdmRequest) -> mpsc::Receiver<SpdmResponse> {
+    /// Blocks when the queue is full (backpressure). Returns
+    /// [`SubmitError::ShutDown`] instead of panicking when racing shutdown.
+    pub fn submit(&self, req: SpdmRequest) -> Result<mpsc::Receiver<SpdmResponse>, SubmitError> {
         let (tx, rx) = mpsc::channel();
+        // Count before pushing so `submitted >= completed` always holds in
+        // snapshots; undo on rejection.
         self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let accepted = self.queue.push(Job { req, enqueued: Instant::now(), reply: tx });
-        assert!(accepted, "coordinator is shut down");
-        rx
+        if !self.queue.push(Job { req, enqueued: Instant::now(), reply: tx }) {
+            self.metrics.submitted.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+            return Err(SubmitError::ShutDown);
+        }
+        Ok(rx)
     }
 
-    /// Submit and wait.
+    /// Submit and wait. Never panics: shutdown races and dropped reply
+    /// channels come back as failed responses (which `serve` maps to JSON
+    /// error replies).
     pub fn run_sync(&self, req: SpdmRequest) -> SpdmResponse {
-        self.submit(req).recv().expect("worker dropped reply channel")
+        let id = req.id;
+        match self.submit(req) {
+            Ok(rx) => rx.recv().unwrap_or_else(|_| {
+                SpdmResponse::failed(id, Algo::DenseXla, "worker dropped reply channel".into())
+            }),
+            Err(e) => SpdmResponse::failed(id, Algo::DenseXla, e.to_string()),
+        }
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -171,33 +215,36 @@ impl Drop for Coordinator {
     }
 }
 
-/// Zero-pad an n×n matrix to m×m (m ≥ n).
-fn pad_mat(a: &Mat, m: usize) -> Mat {
-    if a.rows == m && a.cols == m {
-        return a.clone();
-    }
-    let mut out = Mat::zeros(m, m);
-    for i in 0..a.rows {
-        out.row_mut(i)[..a.cols].copy_from_slice(a.row(i));
-    }
-    out
-}
-
-/// Trim an m×m result back to n×n.
+/// Trim an m×m result back to n×n (fresh allocation: the trimmed matrix is
+/// the caller-owned response payload).
 fn trim_mat(c: &Mat, n: usize) -> Mat {
-    if c.rows == n && c.cols == n {
-        return c.clone();
-    }
-    let mut out = Mat::zeros(n, n);
-    for i in 0..n {
-        out.row_mut(i).copy_from_slice(&c.row(i)[..n]);
-    }
+    let mut out = Mat::zeros(0, 0);
+    out.trim_from(c, n);
     out
 }
 
-/// Execute one request end to end (shared by workers and the CLI).
+/// Execute one request end to end with a throwaway workspace — the
+/// CLI/one-shot entry point. Serving workers use [`process_one_ws`] with
+/// their per-worker arena.
 pub fn process_one(
     engine: &Engine,
+    registry: &Registry,
+    cfg: &CoordinatorConfig,
+    req: &SpdmRequest,
+    enqueued: Instant,
+) -> SpdmResponse {
+    let mut ws = Workspace::new();
+    process_one_ws(engine, &mut ws, registry, cfg, req, enqueued)
+}
+
+/// Execute one request through the zero-copy pipeline: one fused stats
+/// scan, one plan (resolved before any conversion), **at most one
+/// conversion of A on every path** (directly into the workspace's device
+/// slabs), and zero slab copies when the planned capacity matches the
+/// artifact — which the plan guarantees by construction.
+pub fn process_one_ws(
+    engine: &Engine,
+    ws: &mut Workspace,
     registry: &Registry,
     cfg: &CoordinatorConfig,
     req: &SpdmRequest,
@@ -212,88 +259,111 @@ pub fn process_one(
         );
     }
 
-    // --- stats scan: sparsity + max row nnz in one pass ---
-    let mut nnz = 0usize;
-    let mut max_row = 0usize;
-    for i in 0..n {
-        let rn = req.a.row(i).iter().filter(|v| **v != 0.0).count();
-        nnz += rn;
-        max_row = max_row.max(rn);
-    }
-    let sparsity = 1.0 - nnz as f64 / (n * n) as f64;
+    // --- fused stats scan: sparsity + max row nnz + band nnz, one pass ---
+    // (This is also Algorithm 1's counting pass: the scatter below reuses
+    // the band counts, so conversion never re-scans A for sizes. Its time
+    // is billed into convert_s on the sparse paths only — there it
+    // replaces the counting pass that pre-refactor conversion timed
+    // itself, keeping EO comparable; dense requests convert nothing, as
+    // before.)
+    let t_stats = Instant::now();
+    let stats = convert::scan_stats(&req.a, cfg.gcoo_p, cfg.convert_threads);
+    let stats_s = t_stats.elapsed().as_secs_f64();
+    let sparsity = stats.sparsity();
 
-    // --- sparse-path conversion (timed: this is the paper's EO) ---
+    // --- plan once, before any conversion ---
     let selector = Selector::new(cfg.policy);
-    let want_sparse = req
-        .algo_hint
-        .map(|a| matches!(a, Algo::Gcoo | Algo::GcooNoreuse | Algo::Csr))
-        .unwrap_or(sparsity >= cfg.policy.gcoo_crossover);
-
-    let mut convert_s = 0.0;
-    let (gcoo, max_band) = if want_sparse {
-        let n_exec_guess = registry.fit_size("gcoo", n).unwrap_or(n);
-        let a_pad = pad_mat(&req.a, n_exec_guess);
-        let (g, timing) = convert::dense_to_gcoo_parallel(&a_pad, cfg.gcoo_p, cfg.convert_threads);
-        convert_s += timing.eo();
-        let mb = g.max_group_nnz();
-        (Some(g), mb)
-    } else {
-        (None, 0)
-    };
-
-    let plan = match selector.plan(registry, n, sparsity, max_band, max_row, req.algo_hint) {
+    let plan = match selector.plan(
+        registry,
+        n,
+        sparsity,
+        stats.max_band_nnz(),
+        stats.max_row_nnz,
+        req.algo_hint,
+    ) {
         Ok(p) => p,
-        Err(e) => return SpdmResponse::failed(req.id, Algo::DenseXla, e),
+        Err(e) => {
+            return SpdmResponse::failed(req.id, req.algo_hint.unwrap_or(Algo::DenseXla), e)
+        }
     };
 
-    let b_pad = pad_mat(&req.b, plan.n_exec);
+    let mut bytes_copied = 0u64;
+    let mut copies_avoided = 0u64;
+    let mut convert_s = 0.0;
+
+    // B: borrow the request's matrix when it is already at the execution
+    // size; otherwise pad into the arena (no fresh allocation steady-state).
+    let b_exec: &Mat = if req.b.rows == plan.n_exec && req.b.cols == plan.n_exec {
+        copies_avoided += 1;
+        &req.b
+    } else {
+        ws.b_pad.pad_from(&req.b, plan.n_exec);
+        bytes_copied += (req.b.rows * req.b.cols * 4) as u64;
+        &ws.b_pad
+    };
+
     let exec = match plan.algo {
         Algo::Gcoo | Algo::GcooNoreuse => {
-            let gcoo = match gcoo {
-                Some(g) if g.n_rows == plan.n_exec => g,
-                _ => {
-                    let t0 = Instant::now();
-                    let a_pad = pad_mat(&req.a, plan.n_exec);
-                    let (g, _t) =
-                        convert::dense_to_gcoo_parallel(&a_pad, cfg.gcoo_p, cfg.convert_threads);
-                    convert_s += t0.elapsed().as_secs_f64();
-                    g
-                }
-            };
+            // The one conversion of A: scatter straight into device slabs
+            // at the planned capacity (timed: the paper's EO). Padded A is
+            // never materialized.
             let t0 = Instant::now();
-            let cap = match registry
-                .select(plan.algo.as_str(), plan.n_exec, gcoo.max_group_nnz())
-            {
-                Ok(meta) => meta.param("cap").unwrap_or(gcoo.max_group_nnz()),
-                Err(e) => return SpdmResponse::failed(req.id, plan.algo, e.to_string()),
+            if let Err(e) = convert::dense_to_slabs_into(
+                &req.a,
+                &stats,
+                plan.n_exec,
+                plan.cap,
+                cfg.convert_threads,
+                &mut ws.gcoo_vals,
+                &mut ws.gcoo_rows,
+                &mut ws.gcoo_cols,
+            ) {
+                return SpdmResponse::failed(req.id, plan.algo, e.to_string());
+            }
+            convert_s += stats_s + t0.elapsed().as_secs_f64();
+            let slabs = GcooSlabs {
+                g: plan.n_exec.div_ceil(cfg.gcoo_p),
+                cap: plan.cap,
+                p: cfg.gcoo_p,
+                n: plan.n_exec,
+                vals: &ws.gcoo_vals,
+                rows: &ws.gcoo_rows,
+                cols: &ws.gcoo_cols,
             };
-            let padded = match gcoo.pad(cap) {
-                Ok(p) => p,
-                Err(e) => return SpdmResponse::failed(req.id, plan.algo, e.to_string()),
-            };
-            convert_s += t0.elapsed().as_secs_f64();
-            engine.run_gcoo(registry, &padded, &b_pad, plan.algo == Algo::Gcoo)
+            engine.run_gcoo_slabs(registry, slabs, b_exec, plan.algo == Algo::Gcoo)
         }
         Algo::Csr => {
             let t0 = Instant::now();
-            let a_pad = pad_mat(&req.a, plan.n_exec);
-            let csr = Csr::from_dense(&a_pad);
-            let rowcap = match registry.select("csr", plan.n_exec, csr.max_row_nnz()) {
-                Ok(meta) => meta.param("rowcap").unwrap_or(csr.max_row_nnz()),
-                Err(e) => return SpdmResponse::failed(req.id, plan.algo, e.to_string()),
+            if let Err(e) = convert::dense_to_ell_into(
+                &req.a,
+                plan.n_exec,
+                plan.cap,
+                &mut ws.ell_vals,
+                &mut ws.ell_cols,
+            ) {
+                return SpdmResponse::failed(req.id, plan.algo, e.to_string());
+            }
+            convert_s += stats_s + t0.elapsed().as_secs_f64();
+            let slabs = EllSlabs {
+                n: plan.n_exec,
+                rowcap: plan.cap,
+                vals: &ws.ell_vals,
+                cols: &ws.ell_cols,
             };
-            let ell = match Ell::from_csr(&csr, rowcap) {
-                Ok(e) => e,
-                Err(e) => return SpdmResponse::failed(req.id, plan.algo, e.to_string()),
-            };
-            convert_s += t0.elapsed().as_secs_f64();
-            engine.run_csr(registry, &ell, &b_pad)
+            engine.run_ell_slabs(registry, slabs, b_exec)
         }
         Algo::DenseXla | Algo::DensePallas => {
             let t0 = Instant::now();
-            let a_pad = pad_mat(&req.a, plan.n_exec);
+            let a_exec: &Mat = if n == plan.n_exec {
+                copies_avoided += 1;
+                &req.a
+            } else {
+                ws.a_pad.pad_from(&req.a, plan.n_exec);
+                bytes_copied += (n * n * 4) as u64;
+                &ws.a_pad
+            };
             convert_s += t0.elapsed().as_secs_f64();
-            engine.run_dense(registry, plan.algo.as_str(), &a_pad, &b_pad)
+            engine.run_dense(registry, plan.algo.as_str(), a_exec, b_exec)
         }
     };
 
@@ -301,7 +371,16 @@ pub fn process_one(
         Ok(o) => o,
         Err(e) => return SpdmResponse::failed(req.id, plan.algo, e.to_string()),
     };
-    let c = trim_mat(&out.c, n);
+    bytes_copied += out.copy.bytes_copied;
+    copies_avoided += out.copy.copies_avoided;
+    // Move the result out when it is already n×n; trim otherwise.
+    let c = if out.c.rows == n && out.c.cols == n {
+        copies_avoided += 1;
+        out.c
+    } else {
+        bytes_copied += (n * n * 4) as u64;
+        trim_mat(&out.c, n)
+    };
     let verified = if req.verify {
         let oracle = req.a.matmul(&req.b);
         Some(c.allclose(&oracle, 1e-3, 1e-2))
@@ -319,6 +398,8 @@ pub fn process_one(
         verified,
         error: None,
         c: Some(c),
+        bytes_copied,
+        copies_avoided,
     }
 }
 
@@ -328,23 +409,6 @@ mod tests {
     use crate::rng::Rng;
 
     #[test]
-    fn pad_and_trim_round_trip() {
-        let mut rng = Rng::new(1);
-        let a = Mat::randn(5, 5, &mut rng);
-        let padded = pad_mat(&a, 8);
-        assert_eq!(padded.rows, 8);
-        assert_eq!(padded[(4, 4)], a[(4, 4)]);
-        assert_eq!(padded[(7, 7)], 0.0);
-        assert_eq!(trim_mat(&padded, 5), a);
-    }
-
-    #[test]
-    fn pad_noop_when_sized() {
-        let a = Mat::eye(4);
-        assert_eq!(pad_mat(&a, 4), a);
-    }
-
-    #[test]
     fn padding_preserves_product() {
         // (pad A · pad B) trimmed == A · B — the identity the coordinator
         // relies on for odd request sizes.
@@ -352,10 +416,19 @@ mod tests {
         let a = Mat::randn(6, 6, &mut rng);
         let b = Mat::randn(6, 6, &mut rng);
         let c_direct = a.matmul(&b);
-        let c_padded = trim_mat(&pad_mat(&a, 8).matmul(&pad_mat(&b, 8)), 6);
+        let mut ws = Workspace::new();
+        ws.a_pad.pad_from(&a, 8);
+        ws.b_pad.pad_from(&b, 8);
+        let c_padded = trim_mat(&ws.a_pad.matmul(&ws.b_pad), 6);
         assert!(c_direct.allclose(&c_padded, 1e-6, 1e-6));
     }
 
+    #[test]
+    fn submit_error_is_typed_and_displayable() {
+        assert_eq!(SubmitError::ShutDown.to_string(), "coordinator is shut down");
+    }
+
     // Full coordinator round trips (needing PJRT + artifacts) are in
-    // rust/tests/coordinator_integration.rs.
+    // rust/tests/coordinator_integration.rs; zero-copy counter assertions
+    // are in rust/tests/zero_copy.rs.
 }

@@ -9,11 +9,16 @@
 //!   scaled to our artifact grid), route dense;
 //! * capacity fallback: if no compiled gcoo capacity fits the matrix's band
 //!   skew, degrade gcoo → csr → dense rather than failing.
+//!
+//! The selector now emits a fully resolved [`ExecPlan`] — algorithm,
+//! execution size, **and** the concrete artifact with its capacity — from
+//! the fused stats scan alone, before any conversion happens. The pipeline
+//! then converts A exactly once, straight into slabs of `plan.cap`.
 
 use super::job::Algo;
+use crate::convert;
 use crate::ndarray::Mat;
-use crate::runtime::Registry;
-use crate::sparse::{Csr, Gcoo};
+use crate::runtime::{ExecPlan, Registry};
 
 /// Tunable thresholds (defaults = the paper's findings).
 #[derive(Clone, Copy, Debug)]
@@ -30,16 +35,6 @@ impl Default for SelectorPolicy {
     }
 }
 
-/// The selector's decision for one request.
-#[derive(Clone, Debug)]
-pub struct Plan {
-    pub algo: Algo,
-    /// Exported size the request will be padded to.
-    pub n_exec: usize,
-    /// Why this algorithm won (observability / tests).
-    pub reason: &'static str,
-}
-
 pub struct Selector {
     pub policy: SelectorPolicy,
 }
@@ -49,8 +44,9 @@ impl Selector {
         Selector { policy }
     }
 
-    /// Decide the algorithm and execution size for A (n×n, sparsity s).
-    /// `max_band_nnz`/`max_row_nnz` gate capacity feasibility.
+    /// Decide algorithm, execution size, and artifact for A (n×n, sparsity
+    /// s). `max_band_nnz`/`max_row_nnz` come from the fused stats scan and
+    /// gate capacity feasibility — no conversion is needed to plan.
     pub fn plan(
         &self,
         reg: &Registry,
@@ -59,27 +55,41 @@ impl Selector {
         max_band_nnz: usize,
         max_row_nnz: usize,
         hint: Option<Algo>,
-    ) -> Result<Plan, String> {
+    ) -> Result<ExecPlan, String> {
         // Resolve the padded execution size per algorithm family.
         let fit = |algo: &str| reg.fit_size(algo, n);
 
         if let Some(algo) = hint {
             let n_exec = fit(algo.as_str())
                 .ok_or_else(|| format!("no {} artifact fits n={}", algo.as_str(), n))?;
-            return Ok(Plan { algo, n_exec, reason: "hint" });
+            let need = match algo {
+                Algo::Gcoo | Algo::GcooNoreuse => max_band_nnz,
+                Algo::Csr => max_row_nnz,
+                Algo::DenseXla | Algo::DensePallas => 0,
+            };
+            return ExecPlan::resolve(reg, algo, n_exec, need, "hint")
+                .map_err(|e| e.to_string());
         }
 
         let sparse_ok = n >= self.policy.min_sparse_n.min(reg.sizes("gcoo").first().copied().unwrap_or(usize::MAX));
         if sparsity >= self.policy.gcoo_crossover && sparse_ok {
             // GCOO first, capacity permitting.
             if let Some(n_exec) = fit("gcoo") {
-                if reg.select("gcoo", n_exec, max_band_nnz).is_ok() {
-                    return Ok(Plan { algo: Algo::Gcoo, n_exec, reason: "sparse-crossover" });
+                if let Ok(plan) =
+                    ExecPlan::resolve(reg, Algo::Gcoo, n_exec, max_band_nnz, "sparse-crossover")
+                {
+                    return Ok(plan);
                 }
             }
             if let Some(n_exec) = fit("csr") {
-                if reg.select("csr", n_exec, max_row_nnz).is_ok() {
-                    return Ok(Plan { algo: Algo::Csr, n_exec, reason: "gcoo-capacity-fallback" });
+                if let Ok(plan) = ExecPlan::resolve(
+                    reg,
+                    Algo::Csr,
+                    n_exec,
+                    max_row_nnz,
+                    "gcoo-capacity-fallback",
+                ) {
+                    return Ok(plan);
                 }
             }
         }
@@ -89,22 +99,20 @@ impl Selector {
         } else {
             "below-crossover"
         };
-        Ok(Plan { algo: Algo::DenseXla, n_exec, reason })
+        ExecPlan::resolve(reg, Algo::DenseXla, n_exec, 0, reason).map_err(|e| e.to_string())
     }
 
-    /// Convenience: plan directly from a dense A.
+    /// Convenience: plan directly from a dense A via one fused stats scan
+    /// (no conversion, unlike the old GCOO+CSR double build).
     pub fn plan_for(
         &self,
         reg: &Registry,
         a: &Mat,
         p: usize,
         hint: Option<Algo>,
-    ) -> Result<Plan, String> {
-        let sparsity = a.sparsity();
-        // Cheap structural bounds (no full conversion yet).
-        let gcoo = Gcoo::from_dense(a, p);
-        let csr = Csr::from_dense(a);
-        self.plan(reg, a.rows, sparsity, gcoo.max_group_nnz(), csr.max_row_nnz(), hint)
+    ) -> Result<ExecPlan, String> {
+        let stats = convert::scan_stats(a, p, 1);
+        self.plan(reg, a.rows, stats.sparsity(), stats.max_band_nnz(), stats.max_row_nnz, hint)
     }
 }
 
@@ -142,6 +150,16 @@ mod tests {
         assert_eq!(plan.algo, Algo::Gcoo);
         assert_eq!(plan.n_exec, 256);
         assert_eq!(plan.reason, "sparse-crossover");
+        // The plan is fully resolved: smallest cap ≥ 100 is 512.
+        assert_eq!(plan.cap, 512);
+        assert_eq!(plan.artifact, "gcoo_n256_cap512");
+    }
+
+    #[test]
+    fn tight_band_skew_picks_small_capacity() {
+        let plan = sel().plan(&reg(), 256, 0.995, 40, 20, None).unwrap();
+        assert_eq!(plan.cap, 64);
+        assert_eq!(plan.artifact, "gcoo_n256_cap64");
     }
 
     #[test]
@@ -149,6 +167,7 @@ mod tests {
         let plan = sel().plan(&reg(), 256, 0.5, 100, 50, None).unwrap();
         assert_eq!(plan.algo, Algo::DenseXla);
         assert_eq!(plan.reason, "below-crossover");
+        assert_eq!(plan.cap, 0);
     }
 
     #[test]
@@ -163,6 +182,7 @@ mod tests {
         let plan = sel().plan(&reg(), 256, 0.99, 600, 100, None).unwrap();
         assert_eq!(plan.algo, Algo::Csr);
         assert_eq!(plan.reason, "gcoo-capacity-fallback");
+        assert_eq!(plan.cap, 128);
         // rows also overflow → dense
         let plan = sel().plan(&reg(), 256, 0.99, 600, 200, None).unwrap();
         assert_eq!(plan.algo, Algo::DenseXla);
@@ -174,6 +194,15 @@ mod tests {
         let plan = sel().plan(&reg(), 256, 0.1, 10, 10, Some(Algo::Csr)).unwrap();
         assert_eq!(plan.algo, Algo::Csr);
         assert_eq!(plan.reason, "hint");
+        assert_eq!(plan.cap, 128);
+    }
+
+    #[test]
+    fn hint_with_impossible_capacity_errors_at_plan_time() {
+        // Capacity infeasibility surfaces from the planning pass itself —
+        // no conversion has happened yet when this fails.
+        let err = sel().plan(&reg(), 256, 0.99, 9999, 10, Some(Algo::Gcoo)).unwrap_err();
+        assert!(err.contains("gcoo"), "{err}");
     }
 
     #[test]
@@ -182,10 +211,22 @@ mod tests {
         // only dense_xla exists at 512; gcoo tops out at 256 → dense at 512
         assert_eq!(plan.algo, Algo::DenseXla);
         assert_eq!(plan.n_exec, 512);
+        assert_eq!(plan.artifact, "dense_xla_n512");
     }
 
     #[test]
     fn impossible_request_errors() {
         assert!(sel().plan(&reg(), 4096, 0.99, 10, 10, None).is_err());
+    }
+
+    #[test]
+    fn plan_for_uses_fused_stats() {
+        let mut rng = crate::rng::Rng::new(5);
+        let a = crate::gen::uniform(256, 0.995, &mut rng);
+        let plan = sel().plan_for(&reg(), &a, 8, None).unwrap();
+        assert_eq!(plan.algo, Algo::Gcoo);
+        // The resolved cap must cover the matrix's actual band skew.
+        let stats = crate::convert::scan_stats(&a, 8, 1);
+        assert!(plan.cap >= stats.max_band_nnz());
     }
 }

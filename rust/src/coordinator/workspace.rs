@@ -1,0 +1,174 @@
+//! Per-worker workspace arena: the reusable pad/convert/repad scratch
+//! buffers behind the zero-copy request pipeline.
+//!
+//! **Ownership rule: one `Workspace` per coordinator worker, owned next to
+//! that worker's engine, never shared.** Every buffer here is borrowed by
+//! in-flight slab views during a request (`GcooSlabs`/`EllSlabs` point
+//! straight into `gcoo_*`/`ell_*`), so sharing a workspace across threads —
+//! or across two concurrently processed requests — would corrupt the slabs
+//! an engine kernel is reading. The worker loop processes requests
+//! sequentially, so reuse is safe and steady-state serving does **zero
+//! per-request allocation on the A-side path**: every buffer is resized in
+//! place (`Vec::resize` / [`crate::ndarray::Mat::zero_into`]) and reaches a
+//! stable capacity after the first request of each shape.
+
+use crate::ndarray::Mat;
+
+/// Reusable per-worker scratch buffers (see module docs for the ownership
+/// rule). Fields are public so the pipeline can take disjoint borrows —
+/// e.g. GCOO slab views from `gcoo_*` while B is borrowed from `b_pad`.
+pub struct Workspace {
+    /// Padded-A scratch (dense path only; sparse paths never pad A).
+    pub a_pad: Mat,
+    /// Padded-B scratch (any path, when the request is below n_exec).
+    pub b_pad: Mat,
+    /// Device GCOO slab buffers, `g·cap` each (vals/rows/cols).
+    pub gcoo_vals: Vec<f32>,
+    pub gcoo_rows: Vec<i32>,
+    pub gcoo_cols: Vec<i32>,
+    /// Device ELL slab buffers, `n·rowcap` each (vals/cols).
+    pub ell_vals: Vec<f32>,
+    pub ell_cols: Vec<i32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace {
+            a_pad: Mat::zeros(0, 0),
+            b_pad: Mat::zeros(0, 0),
+            gcoo_vals: Vec::new(),
+            gcoo_rows: Vec::new(),
+            gcoo_cols: Vec::new(),
+            ell_vals: Vec::new(),
+            ell_cols: Vec::new(),
+        }
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Workspace::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convert;
+    use crate::gen;
+    use crate::ndarray::Mat;
+    use crate::prop::{check, Config};
+    use crate::sparse::Gcoo;
+
+    /// Workspace invariant: pad→trim through the arena buffers is the
+    /// identity for any (n, n_exec ≥ n), and the pad border is zero.
+    #[test]
+    fn prop_pad_trim_round_trip() {
+        check(
+            Config { cases: 48, base_seed: 0xA11, ..Default::default() },
+            |g| {
+                let n = g.usize_in(1, g.size.max(1));
+                let n_exec = n + g.usize_in(0, 24);
+                let a = Mat::randn(n, n, &mut g.rng);
+                (a, n_exec)
+            },
+            |(a, n_exec)| {
+                let n = a.rows;
+                let mut ws = Workspace::new();
+                ws.a_pad.pad_from(a, *n_exec);
+                if ws.a_pad.rows != *n_exec {
+                    return Err("pad size wrong".into());
+                }
+                for i in 0..*n_exec {
+                    for j in 0..*n_exec {
+                        let want = if i < n && j < n { a[(i, j)] } else { 0.0 };
+                        if ws.a_pad[(i, j)] != want {
+                            return Err(format!("pad[{i},{j}] = {}", ws.a_pad[(i, j)]));
+                        }
+                    }
+                }
+                ws.b_pad.trim_from(&ws.a_pad, n);
+                if &ws.b_pad != a {
+                    return Err("trim(pad(a)) != a".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Workspace invariant: converting into the arena slabs equals the
+    /// allocate-per-request reference pipeline (convert, then pad), and a
+    /// second conversion at the same geometry reuses the buffers.
+    #[test]
+    fn prop_slab_conversion_matches_reference() {
+        check(
+            Config { cases: 32, base_seed: 0xA12, max_size: 48, ..Default::default() },
+            |g| {
+                let n = g.usize_in(2, g.size.max(2));
+                let p = *g.pick(&[2usize, 4, 8]);
+                let sparsity = g.f64_in(0.5, 0.98);
+                let a = gen::uniform(n, sparsity, &mut g.rng);
+                let extra = g.usize_in(0, 8);
+                (a, p, extra)
+            },
+            |(a, p, extra)| {
+                let stats = convert::scan_stats(a, *p, 2);
+                let cap = stats.max_band_nnz().max(1) + extra;
+                let mut ws = Workspace::new();
+                convert::dense_to_slabs_into(
+                    a, &stats, a.rows, cap, 2,
+                    &mut ws.gcoo_vals, &mut ws.gcoo_rows, &mut ws.gcoo_cols,
+                )
+                .map_err(|e| e.to_string())?;
+                let reference = Gcoo::from_dense(a, *p).pad(cap).map_err(|e| e.to_string())?;
+                if ws.gcoo_vals != reference.vals
+                    || ws.gcoo_rows != reference.rows
+                    || ws.gcoo_cols != reference.cols
+                {
+                    return Err("arena slabs != reference convert-then-pad".into());
+                }
+                let ptr = ws.gcoo_vals.as_ptr();
+                convert::dense_to_slabs_into(
+                    a, &stats, a.rows, cap, 2,
+                    &mut ws.gcoo_vals, &mut ws.gcoo_rows, &mut ws.gcoo_cols,
+                )
+                .map_err(|e| e.to_string())?;
+                if ws.gcoo_vals.as_ptr() != ptr {
+                    return Err("steady-state conversion reallocated".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Workspace invariant: slab repad grow→shrink is the identity for any
+    /// grow capacity (grow then shrink back never loses entries).
+    #[test]
+    fn prop_repad_grow_shrink_idempotent() {
+        check(
+            Config { cases: 32, base_seed: 0xA13, max_size: 40, ..Default::default() },
+            |g| {
+                let n = g.usize_in(2, g.size.max(2));
+                let sparsity = g.f64_in(0.6, 0.95);
+                let a = gen::uniform(n, sparsity, &mut g.rng);
+                let grow = g.usize_in(1, 16);
+                (a, grow)
+            },
+            |(a, grow)| {
+                let gcoo = Gcoo::from_dense(a, 4);
+                let cap = gcoo.max_group_nnz().max(1);
+                let base = gcoo.pad(cap).map_err(|e| e.to_string())?;
+                let grown = base.as_slabs().repad(cap + grow);
+                if grown.as_slabs().repad(cap) != base {
+                    return Err("repad grow→shrink not identity".into());
+                }
+                // Growing must agree with padding directly at the capacity.
+                let direct = gcoo.pad(cap + grow).map_err(|e| e.to_string())?;
+                if grown != direct {
+                    return Err("repad(grow) != pad(grow)".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

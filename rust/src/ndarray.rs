@@ -34,6 +34,37 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Reset to a `rows`×`cols` zero matrix **in place**, reusing the
+    /// backing allocation when it is large enough. This is the arena
+    /// primitive behind the per-worker serving workspaces: steady-state
+    /// requests at a stable execution size never allocate.
+    pub fn zero_into(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// In-place pad: make `self` the `m`×`m` zero-padded copy of `src`
+    /// (top-left block), reusing `self`'s allocation.
+    pub fn pad_from(&mut self, src: &Mat, m: usize) {
+        assert!(src.rows <= m && src.cols <= m, "pad target smaller than source");
+        self.zero_into(m, m);
+        for i in 0..src.rows {
+            self.row_mut(i)[..src.cols].copy_from_slice(src.row(i));
+        }
+    }
+
+    /// In-place trim: make `self` the top-left `n`×`n` block of `src`,
+    /// reusing `self`'s allocation.
+    pub fn trim_from(&mut self, src: &Mat, n: usize) {
+        assert!(n <= src.rows && n <= src.cols, "trim larger than source");
+        self.zero_into(n, n);
+        for i in 0..n {
+            self.row_mut(i).copy_from_slice(&src.row(i)[..n]);
+        }
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
@@ -179,6 +210,37 @@ mod tests {
         let m = Mat::from_vec(2, 2, vec![0.0, 1.0, 0.0, 2.0]);
         assert_eq!(m.sparsity(), 0.5);
         assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn pad_trim_in_place_round_trip() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(5, 5, &mut rng);
+        let mut padded = Mat::zeros(0, 0);
+        padded.pad_from(&a, 8);
+        assert_eq!((padded.rows, padded.cols), (8, 8));
+        assert_eq!(padded[(4, 4)], a[(4, 4)]);
+        assert_eq!(padded[(7, 7)], 0.0);
+        let mut back = Mat::zeros(0, 0);
+        back.trim_from(&padded, 5);
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn zero_into_reuses_allocation() {
+        let mut m = Mat::zeros(16, 16);
+        let ptr = m.data.as_ptr();
+        m[(3, 3)] = 9.0;
+        m.zero_into(8, 8); // shrink: same buffer, fully zeroed
+        assert_eq!((m.rows, m.cols), (8, 8));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert_eq!(m.data.as_ptr(), ptr);
+        // pad_from at the same target size must not reallocate either.
+        let src = Mat::eye(4);
+        m.pad_from(&src, 8);
+        assert_eq!(m.data.as_ptr(), ptr);
+        assert_eq!(m[(2, 2)], 1.0);
+        assert_eq!(m[(6, 6)], 0.0);
     }
 
     #[test]

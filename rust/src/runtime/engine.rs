@@ -9,6 +9,12 @@
 //! load, loading is cached per artifact name, and `compile_log` records
 //! load/compile timings — so the registry routing, capacity re-padding and
 //! caching logic upstream is exercised for real.
+//!
+//! Execution consumes **borrowed slab views** (`GcooSlabs`/`EllSlabs`):
+//! every shape check runs before any slab materialization (cheap-fail
+//! first), and slabs are only copied when the artifact's capacity differs
+//! from the provided one — the matching-cap path is a true zero-copy
+//! borrow, accounted in each output's [`CopyStats`].
 
 use std::collections::HashSet;
 use std::sync::Mutex;
@@ -16,14 +22,32 @@ use std::time::Instant;
 
 use super::{ArtifactMeta, Registry, RuntimeError};
 use crate::ndarray::Mat;
-use crate::sparse::{Ell, GcooPadded};
+use crate::sparse::{Ell, EllSlabs, GcooPadded, GcooSlabs};
 
-/// Result of one executed SpDM: the product and the kernel wall time.
+/// Slab-movement accounting for one execution: bytes the engine had to
+/// copy (capacity re-pads) vs. materializations it skipped by borrowing
+/// the caller's slabs directly (the matching-capacity zero-copy path).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CopyStats {
+    pub bytes_copied: u64,
+    pub copies_avoided: u64,
+}
+
+impl CopyStats {
+    pub fn add(&mut self, other: CopyStats) {
+        self.bytes_copied += other.bytes_copied;
+        self.copies_avoided += other.copies_avoided;
+    }
+}
+
+/// Result of one executed SpDM: the product, the kernel wall time, and the
+/// slab-copy accounting.
 #[derive(Clone, Debug)]
 pub struct SpdmOutput {
     pub c: Mat,
     pub kernel_s: f64,
     pub artifact: String,
+    pub copy: CopyStats,
 }
 
 /// Execution engine with a per-artifact compile cache. `Send + Sync` via the
@@ -76,7 +100,7 @@ impl Engine {
         self.compile_log.lock().unwrap().clone()
     }
 
-    /// Run GCOOSpDM: pick the artifact from `reg`, check shapes, execute.
+    /// Run GCOOSpDM from an owned padded form (borrows it — no copy).
     pub fn run_gcoo(
         &self,
         reg: &Registry,
@@ -84,59 +108,100 @@ impl Engine {
         b: &Mat,
         reuse: bool,
     ) -> Result<SpdmOutput, RuntimeError> {
+        self.run_gcoo_slabs(reg, padded.as_slabs(), b, reuse)
+    }
+
+    /// Run GCOOSpDM over borrowed device slabs: pick the artifact from
+    /// `reg`, run **every shape check before any slab materialization**
+    /// (cheap-fail first), then execute — directly on the borrowed slabs
+    /// when the artifact capacity matches (zero copies), re-padding into a
+    /// local buffer only when it differs.
+    pub fn run_gcoo_slabs(
+        &self,
+        reg: &Registry,
+        slabs: GcooSlabs<'_>,
+        b: &Mat,
+        reuse: bool,
+    ) -> Result<SpdmOutput, RuntimeError> {
         let algo = if reuse { "gcoo" } else { "gcoo_noreuse" };
         let n = b.rows;
-        let meta = reg.select(algo, n, padded.cap)?;
+        let meta = reg.select(algo, n, slabs.cap)?;
         let cap = meta.param("cap").expect("gcoo artifact has cap");
-        check_gcoo_slabs(padded)?;
-        // Re-pad if the artifact's cap differs from the provided padding.
-        let (vals, rows, cols) = if cap == padded.cap {
-            (padded.vals.clone(), padded.rows.clone(), padded.cols.clone())
-        } else {
-            repad(padded, cap)
-        };
+        check_gcoo_slabs(&slabs)?;
         check(b.rows == meta.n && b.cols == meta.n, || {
             format!("B is {}x{}, artifact n={}", b.rows, b.cols, meta.n)
         })?;
-        check(padded.g * padded.p == meta.n, || {
-            format!("A bands {}x{} != n={}", padded.g, padded.p, meta.n)
+        check(slabs.g * slabs.p == meta.n, || {
+            format!("A bands {}x{} != n={}", slabs.g, slabs.p, meta.n)
         })?;
         self.load(meta)?;
+        // Borrow when the artifact's cap matches; re-pad only otherwise.
+        let mut copy = CopyStats::default();
+        let owned;
+        let (vals, rows, cols): (&[f32], &[i32], &[i32]) = if cap == slabs.cap {
+            copy.copies_avoided = 1;
+            (slabs.vals, slabs.rows, slabs.cols)
+        } else {
+            owned = slabs.repad(cap);
+            // Bill bytes actually copied from the source slabs (the grown
+            // tail is zero-filled, not moved) — same convention as the
+            // pool's pad accounting.
+            copy.bytes_copied = (slabs.g * slabs.cap.min(cap) * 12) as u64;
+            (owned.vals.as_slice(), owned.rows.as_slice(), owned.cols.as_slice())
+        };
         let t0 = Instant::now();
-        let c = gcoo_spdm_cpu(&vals, &rows, &cols, padded.g, cap, padded.p, b);
+        let c = gcoo_spdm_cpu(vals, rows, cols, slabs.g, cap, slabs.p, b);
         let kernel_s = t0.elapsed().as_secs_f64();
-        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone() })
+        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone(), copy })
     }
 
-    /// Run the CSR (cuSPARSE-analog) kernel.
+    /// Run the CSR (cuSPARSE-analog) kernel from an owned ELL (borrowed).
     pub fn run_csr(&self, reg: &Registry, ell: &Ell, b: &Mat) -> Result<SpdmOutput, RuntimeError> {
+        self.run_ell_slabs(reg, ell.as_slabs(), b)
+    }
+
+    /// Run the CSR kernel over borrowed ELL slabs; same contract as
+    /// [`Engine::run_gcoo_slabs`] — checks first, borrow when the row
+    /// capacity matches, re-pad otherwise.
+    pub fn run_ell_slabs(
+        &self,
+        reg: &Registry,
+        slabs: EllSlabs<'_>,
+        b: &Mat,
+    ) -> Result<SpdmOutput, RuntimeError> {
         let n = b.rows;
-        let meta = reg.select("csr", n, ell.rowcap)?;
+        let meta = reg.select("csr", n, slabs.rowcap)?;
         let rowcap = meta.param("rowcap").expect("csr artifact has rowcap");
         check(
-            ell.vals.len() == ell.n * ell.rowcap && ell.cols.len() == ell.n * ell.rowcap,
+            slabs.vals.len() == slabs.n * slabs.rowcap
+                && slabs.cols.len() == slabs.n * slabs.rowcap,
             || {
                 format!(
                     "ell slabs: lengths {}/{} != n*rowcap {}",
-                    ell.vals.len(),
-                    ell.cols.len(),
-                    ell.n * ell.rowcap
+                    slabs.vals.len(),
+                    slabs.cols.len(),
+                    slabs.n * slabs.rowcap
                 )
             },
         )?;
-        let (vals, cols) = if rowcap == ell.rowcap {
-            (ell.vals.clone(), ell.cols.clone())
-        } else {
-            repad_ell(ell, rowcap)
-        };
-        check(ell.n == meta.n && b.rows == meta.n && b.cols == meta.n, || {
-            format!("shape mismatch: ell.n={} b={}x{} n={}", ell.n, b.rows, b.cols, meta.n)
+        check(slabs.n == meta.n && b.rows == meta.n && b.cols == meta.n, || {
+            format!("shape mismatch: ell.n={} b={}x{} n={}", slabs.n, b.rows, b.cols, meta.n)
         })?;
         self.load(meta)?;
+        let mut copy = CopyStats::default();
+        let owned;
+        let (vals, cols): (&[f32], &[i32]) = if rowcap == slabs.rowcap {
+            copy.copies_avoided = 1;
+            (slabs.vals, slabs.cols)
+        } else {
+            owned = slabs.repad(rowcap);
+            copy.bytes_copied = (slabs.n * slabs.rowcap.min(rowcap) * 8) as u64;
+            (owned.vals.as_slice(), owned.cols.as_slice())
+        };
         let t0 = Instant::now();
-        let c = ell_spdm_cpu(&vals, &cols, meta.n, rowcap, b);
+        let c = ell_spdm_cpu(vals, cols, meta.n, rowcap, b);
         let kernel_s = t0.elapsed().as_secs_f64();
-        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone() })
+        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone(), copy })
     }
 
     /// Run the GCOO SpMV extension kernel: y = A·x (paper future work).
@@ -146,21 +211,24 @@ impl Engine {
         padded: &GcooPadded,
         x: &[f32],
     ) -> Result<(Vec<f32>, f64, String), RuntimeError> {
+        let slabs = padded.as_slabs();
         let n = x.len();
-        let meta = reg.select("gcoo_spmv", n, padded.cap)?;
+        let meta = reg.select("gcoo_spmv", n, slabs.cap)?;
         let cap = meta.param("cap").expect("spmv artifact has cap");
-        check_gcoo_slabs(padded)?;
-        let (vals, rows, cols) = if cap == padded.cap {
-            (padded.vals.clone(), padded.rows.clone(), padded.cols.clone())
-        } else {
-            repad(padded, cap)
-        };
-        check(padded.g * padded.p == meta.n && n == meta.n, || {
-            format!("spmv shapes: A bands {}x{}, x len {}, artifact n={}", padded.g, padded.p, n, meta.n)
+        check_gcoo_slabs(&slabs)?;
+        check(slabs.g * slabs.p == meta.n && n == meta.n, || {
+            format!("spmv shapes: A bands {}x{}, x len {}, artifact n={}", slabs.g, slabs.p, n, meta.n)
         })?;
         self.load(meta)?;
+        let owned;
+        let (vals, rows, cols): (&[f32], &[i32], &[i32]) = if cap == slabs.cap {
+            (slabs.vals, slabs.rows, slabs.cols)
+        } else {
+            owned = slabs.repad(cap);
+            (owned.vals.as_slice(), owned.rows.as_slice(), owned.cols.as_slice())
+        };
         let t0 = Instant::now();
-        let y = gcoo_spmv_cpu(&vals, &rows, &cols, padded.g, cap, padded.p, x);
+        let y = gcoo_spmv_cpu(vals, rows, cols, slabs.g, cap, slabs.p, x);
         let kernel_s = t0.elapsed().as_secs_f64();
         Ok((y, kernel_s, meta.name.clone()))
     }
@@ -183,7 +251,7 @@ impl Engine {
         let t0 = Instant::now();
         let c = a.matmul(b);
         let kernel_s = t0.elapsed().as_secs_f64();
-        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone() })
+        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone(), copy: CopyStats::default() })
     }
 }
 
@@ -195,10 +263,10 @@ fn check(ok: bool, msg: impl FnOnce() -> String) -> Result<(), RuntimeError> {
     }
 }
 
-/// Slab lengths must match the declared (g, cap) geometry — `GcooPadded`
-/// fields are public, so a hand-built value can be inconsistent; reject it
-/// as a shape error rather than panicking mid-kernel.
-fn check_gcoo_slabs(p: &GcooPadded) -> Result<(), RuntimeError> {
+/// Slab lengths must match the declared (g, cap) geometry — slab fields
+/// are public, so a hand-built value can be inconsistent; reject it as a
+/// shape error rather than panicking mid-kernel.
+fn check_gcoo_slabs(p: &GcooSlabs<'_>) -> Result<(), RuntimeError> {
     let want = p.g * p.cap;
     check(
         p.vals.len() == want && p.rows.len() == want && p.cols.len() == want,
@@ -287,33 +355,6 @@ fn ell_spdm_cpu(vals: &[f32], cols: &[i32], n: usize, rowcap: usize, b: &Mat) ->
     c
 }
 
-/// Re-pad device GCOO slabs to a different capacity.
-fn repad(p: &GcooPadded, cap: usize) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
-    let mut vals = vec![0.0f32; p.g * cap];
-    let mut rows = vec![0i32; p.g * cap];
-    let mut cols = vec![0i32; p.g * cap];
-    let copy = p.cap.min(cap);
-    for gi in 0..p.g {
-        vals[gi * cap..gi * cap + copy].copy_from_slice(&p.vals[gi * p.cap..gi * p.cap + copy]);
-        rows[gi * cap..gi * cap + copy].copy_from_slice(&p.rows[gi * p.cap..gi * p.cap + copy]);
-        cols[gi * cap..gi * cap + copy].copy_from_slice(&p.cols[gi * p.cap..gi * p.cap + copy]);
-    }
-    (vals, rows, cols)
-}
-
-fn repad_ell(e: &Ell, rowcap: usize) -> (Vec<f32>, Vec<i32>) {
-    let mut vals = vec![0.0f32; e.n * rowcap];
-    let mut cols = vec![0i32; e.n * rowcap];
-    let copy = e.rowcap.min(rowcap);
-    for i in 0..e.n {
-        vals[i * rowcap..i * rowcap + copy]
-            .copy_from_slice(&e.vals[i * e.rowcap..i * e.rowcap + copy]);
-        cols[i * rowcap..i * rowcap + copy]
-            .copy_from_slice(&e.cols[i * e.rowcap..i * e.rowcap + copy]);
-    }
-    (vals, cols)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,30 +363,9 @@ mod tests {
     use crate::sparse::{Csr, Gcoo};
     use std::path::PathBuf;
 
-    #[test]
-    fn repad_grows_and_shrinks_consistently() {
-        let p = GcooPadded {
-            g: 2,
-            cap: 2,
-            p: 2,
-            n: 4,
-            vals: vec![1.0, 2.0, 3.0, 4.0],
-            rows: vec![0, 1, 0, 1],
-            cols: vec![0, 1, 2, 3],
-        };
-        let (v, r, c) = repad(&p, 3);
-        assert_eq!(v, vec![1.0, 2.0, 0.0, 3.0, 4.0, 0.0]);
-        assert_eq!(r, vec![0, 1, 0, 0, 1, 0]);
-        assert_eq!(c, vec![0, 1, 0, 2, 3, 0]);
-    }
-
-    #[test]
-    fn repad_ell_grows() {
-        let e = Ell { n: 2, rowcap: 1, vals: vec![5.0, 6.0], cols: vec![1, 0] };
-        let (v, c) = repad_ell(&e, 2);
-        assert_eq!(v, vec![5.0, 0.0, 6.0, 0.0]);
-        assert_eq!(c, vec![1, 0, 0, 0]);
-    }
+    // Slab re-pad unit tests live next to the format (sparse/gcoo.rs);
+    // borrowed-vs-cloned execution equivalence and the zero-copy counter
+    // assertions live in rust/tests/zero_copy.rs.
 
     #[test]
     fn gcoo_cpu_kernel_matches_oracle() {

@@ -10,9 +10,11 @@
 
 mod registry;
 mod engine;
+mod plan;
 
 pub use registry::{ArtifactMeta, InputSpec, Registry};
-pub use engine::{Engine, SpdmOutput};
+pub use engine::{CopyStats, Engine, SpdmOutput};
+pub use plan::{Algo, ExecPlan};
 
 /// Errors from the runtime layer.
 #[derive(Debug)]

@@ -1,0 +1,141 @@
+//! Execution planning — the algorithm families the stack routes to and the
+//! per-request [`ExecPlan`] resolved **once, before any conversion**.
+//!
+//! The plan pins (algo, artifact, n_exec, cap) up front from the fused
+//! stats scan, so the request pipeline converts A exactly once, directly
+//! into device slabs of the chosen artifact's capacity. This kills the old
+//! guess-then-reconvert double path (convert at a guessed size, plan, then
+//! possibly convert again) and makes the engine's matching-cap check always
+//! succeed on the serving path — a true zero-copy borrow.
+
+use super::{Registry, RuntimeError};
+
+/// Algorithm families the coordinator can route to (== artifact `algo`s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Gcoo,
+    GcooNoreuse,
+    Csr,
+    DenseXla,
+    DensePallas,
+}
+
+impl Algo {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Algo::Gcoo => "gcoo",
+            Algo::GcooNoreuse => "gcoo_noreuse",
+            Algo::Csr => "csr",
+            Algo::DenseXla => "dense_xla",
+            Algo::DensePallas => "dense_pallas",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Algo> {
+        match s {
+            "gcoo" => Some(Algo::Gcoo),
+            "gcoo_noreuse" => Some(Algo::GcooNoreuse),
+            "csr" => Some(Algo::Csr),
+            "dense_xla" | "dense" => Some(Algo::DenseXla),
+            "dense_pallas" => Some(Algo::DensePallas),
+            _ => None,
+        }
+    }
+
+    /// Whether this family consumes a sparse device form of A.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Algo::Gcoo | Algo::GcooNoreuse | Algo::Csr)
+    }
+}
+
+/// One request's resolved execution plan: algorithm, padded execution size,
+/// the concrete artifact that will run it, and that artifact's device slab
+/// capacity (band cap for GCOO, row cap for CSR/ELL, 0 for dense).
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    pub algo: Algo,
+    /// Exported size the request will be padded to.
+    pub n_exec: usize,
+    /// Device slab capacity of the chosen artifact (0 for dense).
+    pub cap: usize,
+    /// Name of the artifact the engine will select for this plan.
+    pub artifact: String,
+    /// Why this algorithm won (observability / tests).
+    pub reason: &'static str,
+}
+
+impl ExecPlan {
+    /// Resolve the concrete artifact for `(algo, n_exec, needed_cap)` and
+    /// pin its capacity into the plan. Because `Registry::select` picks the
+    /// smallest capacity ≥ `needed_cap` — the same query the engine issues —
+    /// converting straight to `cap` guarantees the engine re-selects this
+    /// exact artifact and takes the borrow (no-repad) path.
+    pub fn resolve(
+        reg: &Registry,
+        algo: Algo,
+        n_exec: usize,
+        needed_cap: usize,
+        reason: &'static str,
+    ) -> Result<ExecPlan, RuntimeError> {
+        let meta = reg.select(algo.as_str(), n_exec, needed_cap)?;
+        Ok(ExecPlan {
+            algo,
+            n_exec,
+            cap: meta.capacity().unwrap_or(0),
+            artifact: meta.name.clone(),
+            reason,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn reg() -> Registry {
+        let manifest = r#"{"artifacts": [
+            {"name": "gcoo_n256_cap64", "algo": "gcoo", "n": 256,
+             "params": {"p": 8, "cap": 64}, "inputs": [], "file": "a.hlo.txt"},
+            {"name": "gcoo_n256_cap512", "algo": "gcoo", "n": 256,
+             "params": {"p": 8, "cap": 512}, "inputs": [], "file": "b.hlo.txt"},
+            {"name": "dense_xla_n256", "algo": "dense_xla", "n": 256,
+             "params": {}, "inputs": [], "file": "c.hlo.txt"}
+        ]}"#;
+        Registry::from_manifest_json(manifest, PathBuf::from("/nope")).unwrap()
+    }
+
+    #[test]
+    fn algo_round_trip() {
+        for a in [Algo::Gcoo, Algo::GcooNoreuse, Algo::Csr, Algo::DenseXla, Algo::DensePallas] {
+            assert_eq!(Algo::from_str(a.as_str()), Some(a));
+        }
+        assert_eq!(Algo::from_str("dense"), Some(Algo::DenseXla));
+        assert_eq!(Algo::from_str("bogus"), None);
+        assert!(Algo::Gcoo.is_sparse());
+        assert!(Algo::Csr.is_sparse());
+        assert!(!Algo::DenseXla.is_sparse());
+    }
+
+    #[test]
+    fn resolve_pins_smallest_fitting_capacity() {
+        let r = reg();
+        let plan = ExecPlan::resolve(&r, Algo::Gcoo, 256, 50, "test").unwrap();
+        assert_eq!(plan.cap, 64);
+        assert_eq!(plan.artifact, "gcoo_n256_cap64");
+        let plan = ExecPlan::resolve(&r, Algo::Gcoo, 256, 65, "test").unwrap();
+        assert_eq!(plan.cap, 512);
+    }
+
+    #[test]
+    fn resolve_dense_has_zero_cap() {
+        let plan = ExecPlan::resolve(&reg(), Algo::DenseXla, 256, 0, "test").unwrap();
+        assert_eq!(plan.cap, 0);
+        assert_eq!(plan.artifact, "dense_xla_n256");
+    }
+
+    #[test]
+    fn resolve_errors_when_capacity_exhausted() {
+        assert!(ExecPlan::resolve(&reg(), Algo::Gcoo, 256, 1000, "test").is_err());
+    }
+}

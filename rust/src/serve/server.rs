@@ -126,6 +126,10 @@ fn handle_connection(
 }
 
 /// Turn one request line into a response (pure-ish; unit tested directly).
+///
+/// Coordinator-side failures — including a submit racing shutdown, which
+/// `Coordinator::run_sync` surfaces as a failed `SpdmResponse` rather than
+/// a panic — come back as `{"ok":false,"error":…}` JSON replies.
 pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response {
     let req = match parse_request(line) {
         Ok(r) => r,

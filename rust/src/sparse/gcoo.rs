@@ -240,6 +240,63 @@ pub struct GcooPadded {
     pub cols: Vec<i32>,
 }
 
+impl GcooPadded {
+    /// Borrow the slabs as the view the engine consumes (no copy).
+    pub fn as_slabs(&self) -> GcooSlabs<'_> {
+        GcooSlabs {
+            g: self.g,
+            cap: self.cap,
+            p: self.p,
+            n: self.n,
+            vals: &self.vals,
+            rows: &self.rows,
+            cols: &self.cols,
+        }
+    }
+}
+
+/// Borrowed view of device-layout GCOO slabs — what the engine kernels
+/// actually consume. Obtained from [`GcooPadded::as_slabs`], or built
+/// directly over per-worker workspace buffers so the matching-capacity
+/// serving path executes with zero slab copies.
+#[derive(Clone, Copy, Debug)]
+pub struct GcooSlabs<'a> {
+    pub g: usize,
+    pub cap: usize,
+    pub p: usize,
+    pub n: usize,
+    pub vals: &'a [f32],
+    pub rows: &'a [i32],
+    pub cols: &'a [i32],
+}
+
+impl GcooSlabs<'_> {
+    /// Re-pad to a different band capacity, producing owned slabs. Growing
+    /// zero-fills the new tail of every band; shrinking keeps each band's
+    /// `cap`-prefix (lossless whenever the band's nnz fit the new capacity,
+    /// which the engine guarantees by selecting `cap ≥` the provided one).
+    pub fn repad(&self, cap: usize) -> GcooPadded {
+        let mut vals = vec![0.0f32; self.g * cap];
+        let mut rows = vec![0i32; self.g * cap];
+        let mut cols = vec![0i32; self.g * cap];
+        let copy = self.cap.min(cap);
+        for gi in 0..self.g {
+            vals[gi * cap..gi * cap + copy]
+                .copy_from_slice(&self.vals[gi * self.cap..gi * self.cap + copy]);
+            rows[gi * cap..gi * cap + copy]
+                .copy_from_slice(&self.rows[gi * self.cap..gi * self.cap + copy]);
+            cols[gi * cap..gi * cap + copy]
+                .copy_from_slice(&self.cols[gi * self.cap..gi * self.cap + copy]);
+        }
+        GcooPadded { g: self.g, cap, p: self.p, n: self.n, vals, rows, cols }
+    }
+
+    /// Total slab bytes at this geometry (f32 vals + i32 rows + i32 cols).
+    pub fn bytes(&self) -> usize {
+        self.g * self.cap * (4 + 4 + 4)
+    }
+}
+
 /// Device-layout padded CSR (ELL): `(n, rowcap)` slabs for the `csr_*`
 /// artifacts.
 #[derive(Clone, Debug, PartialEq)]
@@ -250,7 +307,42 @@ pub struct Ell {
     pub cols: Vec<i32>,
 }
 
+/// Borrowed view of ELL slabs (CSR-path analog of [`GcooSlabs`]).
+#[derive(Clone, Copy, Debug)]
+pub struct EllSlabs<'a> {
+    pub n: usize,
+    pub rowcap: usize,
+    pub vals: &'a [f32],
+    pub cols: &'a [i32],
+}
+
+impl EllSlabs<'_> {
+    /// Re-pad to a different row capacity, producing an owned `Ell`.
+    pub fn repad(&self, rowcap: usize) -> Ell {
+        let mut vals = vec![0.0f32; self.n * rowcap];
+        let mut cols = vec![0i32; self.n * rowcap];
+        let copy = self.rowcap.min(rowcap);
+        for i in 0..self.n {
+            vals[i * rowcap..i * rowcap + copy]
+                .copy_from_slice(&self.vals[i * self.rowcap..i * self.rowcap + copy]);
+            cols[i * rowcap..i * rowcap + copy]
+                .copy_from_slice(&self.cols[i * self.rowcap..i * self.rowcap + copy]);
+        }
+        Ell { n: self.n, rowcap, vals, cols }
+    }
+
+    /// Total slab bytes at this geometry (f32 vals + i32 cols).
+    pub fn bytes(&self) -> usize {
+        self.n * self.rowcap * (4 + 4)
+    }
+}
+
 impl Ell {
+    /// Borrow the slabs as the view the engine consumes (no copy).
+    pub fn as_slabs(&self) -> EllSlabs<'_> {
+        EllSlabs { n: self.n, rowcap: self.rowcap, vals: &self.vals, cols: &self.cols }
+    }
+
     pub fn from_csr(csr: &Csr, rowcap: usize) -> Result<Self, FormatError> {
         let need = csr.max_row_nnz();
         if need > rowcap {
@@ -448,6 +540,45 @@ mod tests {
         }
         gcoo.validate().unwrap();
         assert_eq!(gcoo.to_dense(), a);
+    }
+
+    #[test]
+    fn slab_repad_grows_and_shrinks_consistently() {
+        let p = GcooPadded {
+            g: 2,
+            cap: 2,
+            p: 2,
+            n: 4,
+            vals: vec![1.0, 2.0, 3.0, 4.0],
+            rows: vec![0, 1, 0, 1],
+            cols: vec![0, 1, 2, 3],
+        };
+        let grown = p.as_slabs().repad(3);
+        assert_eq!(grown.vals, vec![1.0, 2.0, 0.0, 3.0, 4.0, 0.0]);
+        assert_eq!(grown.rows, vec![0, 1, 0, 0, 1, 0]);
+        assert_eq!(grown.cols, vec![0, 1, 0, 2, 3, 0]);
+        // Shrinking back to the original capacity restores the original.
+        assert_eq!(grown.as_slabs().repad(2), p);
+    }
+
+    #[test]
+    fn ell_slab_repad_grows() {
+        let e = Ell { n: 2, rowcap: 1, vals: vec![5.0, 6.0], cols: vec![1, 0] };
+        let grown = e.as_slabs().repad(2);
+        assert_eq!(grown.vals, vec![5.0, 0.0, 6.0, 0.0]);
+        assert_eq!(grown.cols, vec![1, 0, 0, 0]);
+        assert_eq!(grown.as_slabs().repad(1), e);
+    }
+
+    #[test]
+    fn slab_views_borrow_without_copying() {
+        let mut rng = Rng::new(11);
+        let a = gen::uniform(32, 0.9, &mut rng);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(gcoo.max_group_nnz().max(1)).unwrap();
+        let slabs = padded.as_slabs();
+        assert!(std::ptr::eq(slabs.vals.as_ptr(), padded.vals.as_ptr()));
+        assert_eq!(slabs.bytes(), padded.g * padded.cap * 12);
     }
 
     #[test]

@@ -14,7 +14,7 @@ mod footprint;
 
 pub use coo::Coo;
 pub use csr::Csr;
-pub use gcoo::{Gcoo, GcooPadded, Ell};
+pub use gcoo::{Ell, EllSlabs, Gcoo, GcooPadded, GcooSlabs};
 pub use bsr::Bsr;
 pub use footprint::{
     FootprintBytes, coo_bytes, csr_bytes, gcoo_bytes, dense_bytes, coo_elements, csr_elements,

@@ -104,7 +104,7 @@ fn concurrent_mixed_workload_completes_with_metrics() {
     for i in 0..10u64 {
         let n = if i % 2 == 0 { 256 } else { 200 };
         let s = if i % 3 == 0 { 0.5 } else { 0.99 };
-        receivers.push(coord.submit(request(i, n, s, 10 + i, true)));
+        receivers.push(coord.submit(request(i, n, s, 10 + i, true)).expect("queue open"));
     }
     let mut ok = 0;
     for rx in receivers {
@@ -118,6 +118,8 @@ fn concurrent_mixed_workload_completes_with_metrics() {
     assert_eq!(snap.completed, 10);
     assert_eq!(snap.errors, 0);
     assert_eq!(snap.verify_failures, 0);
+    // Every n=256 request runs borrow-path slabs and matching-size B/C.
+    assert!(snap.copies_avoided > 0, "zero-copy paths must be exercised");
     assert!(snap.per_algo.get("gcoo").copied().unwrap_or(0) > 0);
     assert!(snap.per_algo.get("dense_xla").copied().unwrap_or(0) > 0);
     assert!(snap.p99_s >= snap.p50_s);
@@ -127,7 +129,7 @@ fn concurrent_mixed_workload_completes_with_metrics() {
 fn shutdown_drains() {
     let Some(reg) = registry() else { return };
     let coord = Coordinator::new(reg, CoordinatorConfig { workers: 1, ..Default::default() });
-    let rx = coord.submit(request(1, 256, 0.99, 20, false));
+    let rx = coord.submit(request(1, 256, 0.99, 20, false)).expect("queue open");
     coord.shutdown();
     // The submitted job must have been completed before shutdown returned.
     assert!(rx.recv().unwrap().ok());
