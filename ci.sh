@@ -2,11 +2,25 @@
 # CI for the gcoospdm crate: the tier-1 verify plus full target coverage.
 #
 #   ./ci.sh            # build + test + compile all benches/examples
+#   ./ci.sh --quick    # batching fast path: the batched-vs-sequential
+#                      # differential suite + the serve_hotpath quick bench
+#                      # (batched A/B included)
 #
 # The crate is std-only (offline build; see DESIGN.md §2), so no network or
 # vendored registry is required.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+if [[ "${1:-}" == "--quick" ]]; then
+  echo "== quick: batched-vs-sequential differential suite =="
+  cargo test -q --test batch_differential
+
+  echo "== quick: serve_hotpath (req/s, copies avoided, batched A/B) =="
+  cargo bench --bench serve_hotpath -- --quick
+
+  echo "CI quick OK"
+  exit 0
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
@@ -17,7 +31,7 @@ cargo test -q
 echo "== target coverage: benches + examples compile =="
 cargo build --benches --examples
 
-echo "== perf: serve_hotpath quick mode (req/s + copies-avoided per PR) =="
+echo "== perf: serve_hotpath quick mode (req/s + copies-avoided + batched A/B per PR) =="
 cargo bench --bench serve_hotpath -- --quick
 
 echo "CI OK"

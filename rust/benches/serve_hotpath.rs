@@ -1,7 +1,9 @@
 //! Serving hot-path benchmark: requests/sec through the coordinator at
-//! fixed seeds, plus the allocations-avoided counters, and an A/B of the
+//! fixed seeds, plus the allocations-avoided counters, an A/B of the
 //! zero-copy arena pipeline against a faithful replica of the pre-arena
-//! copy-heavy path (pad A → convert → pad again → clone slabs).
+//! copy-heavy path (pad A → convert → pad again → clone slabs), and a
+//! batched-vs-sequential A/B of fused multi-B execution (one A conversion
+//! + one wide kernel per batch vs one conversion per request).
 //!
 //! The engine only needs artifact files to *exist*, so the bench fabricates
 //! a runnable registry under `target/` — no `make artifacts` required.
@@ -15,7 +17,8 @@ use std::time::Instant;
 
 use gcoospdm::convert;
 use gcoospdm::coordinator::{
-    process_one_ws, Coordinator, CoordinatorConfig, Selector, SpdmRequest, Workspace,
+    process_batch_ws, process_one_ws, Coordinator, CoordinatorConfig, Selector, SpdmRequest,
+    Workspace,
 };
 use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
@@ -181,6 +184,69 @@ fn main() {
             arena_rps,
             base_rps,
             arena_rps / base_rps
+        );
+    }
+
+    // --- Phase 3: batched vs sequential A/B (shared A, fixed seeds) ---
+    // The fused-batch proposition at its cleanest: k requests sharing one A
+    // pay one conversion + one wide kernel when fused, k of each when
+    // sequential. Both sides run the identical request set; outputs are
+    // asserted bitwise identical before timing is reported.
+    {
+        let count = if quick { 24 } else { 120 };
+        let width = cfg.batch_max;
+        let engine = Engine::new().unwrap();
+        let mut rng = Rng::new(2000);
+        let a = gen::uniform(256, 0.99, &mut rng);
+        let reqs: Vec<SpdmRequest> = (0..count)
+            .map(|i| SpdmRequest::new(i as u64, a.clone(), Mat::randn(256, 256, &mut rng)))
+            .collect();
+
+        let mut ws_seq = Workspace::new();
+        for r in reqs.iter().take(2) {
+            let _ = process_one_ws(&engine, &mut ws_seq, &reg, &cfg, r, Instant::now());
+        }
+        let t0 = Instant::now();
+        let seq: Vec<_> = reqs
+            .iter()
+            .map(|r| process_one_ws(&engine, &mut ws_seq, &reg, &cfg, r, Instant::now()))
+            .collect();
+        let seq_s = t0.elapsed().as_secs_f64();
+
+        let mut ws_bat = Workspace::new();
+        {
+            let warm: Vec<(&SpdmRequest, Instant)> =
+                reqs.iter().take(width).map(|r| (r, Instant::now())).collect();
+            let _ = process_batch_ws(&engine, &mut ws_bat, &reg, &cfg, &warm);
+        }
+        let t1 = Instant::now();
+        let mut bat = Vec::with_capacity(count);
+        let mut batches = 0u64;
+        let mut amortized = 0u64;
+        for chunk in reqs.chunks(width) {
+            let jobs: Vec<(&SpdmRequest, Instant)> =
+                chunk.iter().map(|r| (r, Instant::now())).collect();
+            bat.extend(process_batch_ws(&engine, &mut ws_bat, &reg, &cfg, &jobs));
+            batches += 1;
+            amortized += (chunk.len() - 1) as u64;
+        }
+        let bat_s = t1.elapsed().as_secs_f64();
+
+        for (s, b) in seq.iter().zip(&bat) {
+            assert!(s.ok() && b.ok(), "{:?} / {:?}", s.error, b.error);
+            assert!(s.c == b.c, "batched C must be bitwise identical to sequential");
+        }
+        let seq_rps = count as f64 / seq_s;
+        let bat_rps = count as f64 / bat_s;
+        println!(
+            "batched vs sequential (width {width}): fused {:.1} req/s | sequential {:.1} req/s | speedup {:.2}x",
+            bat_rps,
+            seq_rps,
+            bat_rps / seq_rps
+        );
+        println!(
+            "batched: {count} jobs in {batches} batches, {amortized} conversions amortized ({} per batch at full width)",
+            width - 1
         );
     }
 }

@@ -121,9 +121,12 @@ fn collect_band_sorted(a: &Mat, lo: usize, hi: usize, scratch: &mut Vec<(u32, u3
 /// `n_exec ≥ a.rows`, reusing the band counts from [`scan_stats`]. The
 /// padded A is never materialized (rows `a.rows..n_exec` are implicit
 /// zeros) and no intermediate [`Gcoo`] is built — this is the one and only
-/// conversion of A on the serving path. The output buffers are resized in
-/// place, so a per-worker workspace reaches a steady state with **zero
-/// per-request allocation** on the A side.
+/// conversion of A on the serving path, and under fused batching
+/// (`pool::process_batch_ws`) its cost is paid once per shape-affine batch
+/// rather than once per request: the resulting slabs feed a single wide
+/// kernel over the batch's stacked B operands. The output buffers are
+/// resized in place, so a per-worker workspace reaches a steady state with
+/// **zero per-request allocation** on the A side.
 pub fn dense_to_slabs_into(
     a: &Mat,
     stats: &AStats,

@@ -6,7 +6,50 @@ use crate::ndarray::Mat;
 /// re-exported here so coordinator users keep their import path).
 pub use crate::runtime::Algo;
 
+/// Content signature of the A operand, computed **once at submit time** and
+/// used as the batch-affinity key: two requests may share a fused batch
+/// (one A conversion, one wide kernel) only when their signatures are
+/// equal. Dimensions and nnz are stored outright so equality is trivially
+/// sound on them; the value hash (FNV-1a over the f32 bit patterns, in
+/// storage order) distinguishes same-shape/same-nnz matrices with
+/// different content — the near-collision case the property tests pin.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ASig {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// FNV-1a64 over `(rows, cols, every element's to_bits())`.
+    pub hash: u64,
+}
+
+impl ASig {
+    pub fn of(a: &Mat) -> ASig {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(PRIME);
+        };
+        mix(a.rows as u64);
+        mix(a.cols as u64);
+        let mut nnz = 0usize;
+        for &v in &a.data {
+            if v != 0.0 {
+                nnz += 1;
+            }
+            mix(v.to_bits() as u64);
+        }
+        ASig { rows: a.rows, cols: a.cols, nnz, hash: h }
+    }
+}
+
 /// One SpDM request: C = A·B with A treated as sparse.
+///
+/// `a` is treated as immutable after construction: the batch-affinity
+/// signature is computed in [`SpdmRequest::new`], so mutating `a` in place
+/// afterwards would let the batcher fuse requests whose As differ. Build a
+/// fresh request instead.
 #[derive(Clone, Debug)]
 pub struct SpdmRequest {
     pub id: u64,
@@ -16,11 +59,14 @@ pub struct SpdmRequest {
     pub algo_hint: Option<Algo>,
     /// Verify the result against the CPU oracle (costs O(nnz·n)).
     pub verify: bool,
+    /// Batch-affinity key over `a` (see [`ASig`]), computed at submit.
+    pub a_sig: ASig,
 }
 
 impl SpdmRequest {
     pub fn new(id: u64, a: Mat, b: Mat) -> Self {
-        SpdmRequest { id, a, b, algo_hint: None, verify: false }
+        let a_sig = ASig::of(&a);
+        SpdmRequest { id, a, b, algo_hint: None, verify: false, a_sig }
     }
 }
 
@@ -91,5 +137,22 @@ mod tests {
         let r = SpdmResponse::failed(7, Algo::Gcoo, "boom".into());
         assert!(!r.ok());
         assert_eq!(r.id, 7);
+    }
+
+    #[test]
+    fn a_sig_is_content_sensitive() {
+        let mut rng = crate::rng::Rng::new(11);
+        let a = Mat::randn(6, 6, &mut rng);
+        assert_eq!(ASig::of(&a), ASig::of(&a.clone()), "equal matrices, equal signature");
+        // Same dims, same nnz, one value changed: hash must differ.
+        let mut a2 = a.clone();
+        a2[(2, 3)] += 1.0;
+        let (s1, s2) = (ASig::of(&a), ASig::of(&a2));
+        assert_eq!((s1.rows, s1.cols, s1.nnz), (s2.rows, s2.cols, s2.nnz));
+        assert_ne!(s1, s2, "value change must break the signature");
+        // Different placement of the same values: storage-order hash differs.
+        let b1 = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 2.0]);
+        let b2 = Mat::from_vec(2, 2, vec![0.0, 1.0, 2.0, 0.0]);
+        assert_ne!(ASig::of(&b1), ASig::of(&b2));
     }
 }

@@ -1,9 +1,12 @@
-//! Serving metrics: throughput counters and latency distributions.
+//! Serving metrics: throughput counters, latency distributions, and the
+//! fused-batch accounting (batch-width histogram + conversions amortized
+//! by executing a shape-affine batch with one A conversion).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::json::{self, Value};
 use crate::ndarray::percentile;
 
 /// Shared metrics sink (one per coordinator).
@@ -19,6 +22,15 @@ pub struct Metrics {
     /// Materializations skipped by borrowing (matching-size/matching-cap
     /// zero-copy paths).
     pub copies_avoided: AtomicU64,
+    /// Amortization credit of the fused batch path: width−1 per dequeued
+    /// batch (a width-w sparse batch converts its shared A once instead of
+    /// w times). Defined per *batch*, not per conversion actually skipped —
+    /// dense-routed batches convert nothing either way, so on mixed
+    /// traffic this is an upper bound on skipped conversions.
+    pub conversions_amortized: AtomicU64,
+    /// Batch-width histogram: `batch_widths[w]` counts dequeued batches of
+    /// width w (index 0 unused), so Σ w·batch_widths[w] = jobs processed.
+    batch_widths: Mutex<Vec<u64>>,
     latencies_s: Mutex<Vec<f64>>,
     kernel_s: Mutex<Vec<f64>>,
     convert_s: Mutex<Vec<f64>>,
@@ -41,6 +53,8 @@ impl Metrics {
             verify_failures: AtomicU64::new(0),
             bytes_copied: AtomicU64::new(0),
             copies_avoided: AtomicU64::new(0),
+            conversions_amortized: AtomicU64::new(0),
+            batch_widths: Mutex::new(Vec::new()),
             latencies_s: Mutex::new(Vec::new()),
             kernel_s: Mutex::new(Vec::new()),
             convert_s: Mutex::new(Vec::new()),
@@ -72,6 +86,23 @@ impl Metrics {
         self.copies_avoided.fetch_add(copies_avoided, Ordering::Relaxed);
     }
 
+    /// Record one dequeued batch of `width` jobs: bumps the width histogram
+    /// and credits width−1 amortized conversions (the A conversions the
+    /// fused execution path skipped relative to sequential processing).
+    pub fn record_batch(&self, width: usize) {
+        if width == 0 {
+            return;
+        }
+        let mut hist = self.batch_widths.lock().unwrap();
+        if hist.len() <= width {
+            hist.resize(width + 1, 0);
+        }
+        hist[width] += 1;
+        if width > 1 {
+            self.conversions_amortized.fetch_add((width - 1) as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies_s.lock().unwrap().clone();
         let ker = self.kernel_s.lock().unwrap().clone();
@@ -85,6 +116,8 @@ impl Metrics {
             verify_failures: self.verify_failures.load(Ordering::Relaxed),
             bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
             copies_avoided: self.copies_avoided.load(Ordering::Relaxed),
+            conversions_amortized: self.conversions_amortized.load(Ordering::Relaxed),
+            batch_hist: self.batch_widths.lock().unwrap().clone(),
             throughput_rps: completed as f64 / elapsed.max(1e-9),
             p50_s: pct(&lat, 50.0),
             p95_s: pct(&lat, 95.0),
@@ -121,6 +154,9 @@ pub struct MetricsSnapshot {
     pub verify_failures: u64,
     pub bytes_copied: u64,
     pub copies_avoided: u64,
+    pub conversions_amortized: u64,
+    /// `batch_hist[w]` = dequeued batches of width w (index 0 unused).
+    pub batch_hist: Vec<u64>,
     pub throughput_rps: f64,
     pub p50_s: f64,
     pub p95_s: f64,
@@ -131,12 +167,23 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Jobs accounted by the batch-width histogram (Σ w·batch_hist[w]) —
+    /// equals completed + errors once every dequeued batch is recorded.
+    pub fn batched_jobs(&self) -> u64 {
+        self.batch_hist
+            .iter()
+            .enumerate()
+            .map(|(w, &count)| w as u64 * count)
+            .sum()
+    }
+
     pub fn render(&self) -> String {
         format!(
             "requests: {} submitted / {} completed / {} errors / {} verify failures\n\
              latency:  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms\n\
              phases:   kernel {:.3} ms  convert {:.3} ms (means)\n\
              copies:   {} B copied / {} avoided (zero-copy borrows)\n\
+             batches:  width hist {:?} / {} conversions amortized\n\
              rate:     {:.1} req/s   per-algo: {:?}",
             self.submitted,
             self.completed,
@@ -149,8 +196,42 @@ impl MetricsSnapshot {
             self.mean_convert_s * 1e3,
             self.bytes_copied,
             self.copies_avoided,
+            self.batch_hist,
+            self.conversions_amortized,
             self.throughput_rps,
             self.per_algo,
+        )
+    }
+
+    /// Structured JSON form (the serve `stats` reply). Every counter the
+    /// text `render` shows, machine-readable; `batch_hist` is the width
+    /// histogram array (index = batch width, index 0 unused).
+    pub fn to_json(&self) -> String {
+        let hist = Value::Arr(self.batch_hist.iter().map(|&c| Value::from(c)).collect());
+        let per_algo = Value::Obj(
+            self.per_algo
+                .iter()
+                .map(|(k, v)| (k.to_string(), Value::from(*v)))
+                .collect(),
+        );
+        json::write(
+            &Value::obj()
+                .field("submitted", self.submitted)
+                .field("completed", self.completed)
+                .field("errors", self.errors)
+                .field("verify_failures", self.verify_failures)
+                .field("bytes_copied", self.bytes_copied)
+                .field("copies_avoided", self.copies_avoided)
+                .field("conversions_amortized", self.conversions_amortized)
+                .field("batch_hist", hist)
+                .field("throughput_rps", self.throughput_rps)
+                .field("p50_ms", self.p50_s * 1e3)
+                .field("p95_ms", self.p95_s * 1e3)
+                .field("p99_ms", self.p99_s * 1e3)
+                .field("mean_kernel_ms", self.mean_kernel_s * 1e3)
+                .field("mean_convert_ms", self.mean_convert_s * 1e3)
+                .field("per_algo", per_algo)
+                .build(),
         )
     }
 }
@@ -188,6 +269,39 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p99_s, 0.0);
+        assert_eq!(s.conversions_amortized, 0);
+        assert_eq!(s.batched_jobs(), 0);
         assert!(s.render().contains("0 completed"));
+    }
+
+    #[test]
+    fn batch_histogram_and_amortized_conversions() {
+        let m = Metrics::new();
+        // Batches of widths 3, 1, 3, 5 → 12 jobs, (2+0+2+4)=8 amortized.
+        for w in [3usize, 1, 3, 5] {
+            m.record_batch(w);
+        }
+        m.record_batch(0); // ignored
+        let s = m.snapshot();
+        assert_eq!(s.batch_hist[1], 1);
+        assert_eq!(s.batch_hist[3], 2);
+        assert_eq!(s.batch_hist[5], 1);
+        assert_eq!(s.batched_jobs(), 12);
+        assert_eq!(s.conversions_amortized, 8);
+        assert!(s.render().contains("8 conversions amortized"));
+    }
+
+    #[test]
+    fn snapshot_json_carries_batch_counters() {
+        let m = Metrics::new();
+        m.record_completion("gcoo", 0.010, 0.004, 0.002);
+        m.record_batch(4);
+        let text = m.snapshot().to_json();
+        let v = crate::json::parse(&text).expect("stats snapshot is valid JSON");
+        assert_eq!(v.get("completed").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("conversions_amortized").unwrap().as_u64(), Some(3));
+        let hist = v.get("batch_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist[4].as_u64(), Some(1));
+        assert_eq!(v.get("per_algo").unwrap().get("gcoo").unwrap().as_u64(), Some(1));
     }
 }

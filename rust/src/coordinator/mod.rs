@@ -1,8 +1,9 @@
 //! Coordinator — the L3 serving layer: bounded job queue with backpressure,
 //! plan-first algorithm selection (the sparsity/size routing policy the
 //! paper's conclusions prescribe, resolved to a concrete artifact before
-//! any conversion), shape-affinity batching, a worker pool with per-worker
-//! engines + workspace arenas, and metrics.
+//! any conversion), A-signature-keyed batching with fused multi-B
+//! execution (one conversion + one wide kernel per batch), a worker pool
+//! with per-worker engines + workspace arenas, and metrics.
 //!
 //! The paper's contribution is the kernel, so this layer is deliberately a
 //! *thin but real* serving stack (DESIGN.md §1 L3): everything a downstream
@@ -15,11 +16,14 @@ mod metrics;
 mod pool;
 mod workspace;
 
-pub use job::{Algo, SpdmRequest, SpdmResponse};
+pub use job::{ASig, Algo, SpdmRequest, SpdmResponse};
 pub use queue::BoundedQueue;
 pub use selector::{Selector, SelectorPolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use pool::{process_one, process_one_ws, Coordinator, CoordinatorConfig, SubmitError};
+pub use pool::{
+    batch_affine, process_batch_ws, process_one, process_one_ws, Coordinator,
+    CoordinatorConfig, SubmitError,
+};
 pub use workspace::Workspace;
 // The selector's output type lives next to the engine (`runtime::plan`);
 // keep the old `coordinator::Plan` name working.

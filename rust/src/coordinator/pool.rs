@@ -1,15 +1,19 @@
 //! The coordinator proper: worker pool over the bounded queue, executing
-//! requests on per-worker engines according to the selector's plan.
+//! **fused shape-affine batches** on per-worker engines according to the
+//! selector's plan.
 //!
-//! Request lifecycle (the zero-copy pipeline):
-//!   submit → queue (backpressure) → batch dequeue (shape affinity) →
-//!   **fused stats scan** (sparsity + max row nnz + band nnz, one pass) →
-//!   **plan** (algo + artifact + n_exec + cap resolved before any
-//!   conversion) → convert A **once**, directly into the worker's
-//!   workspace slabs at the artifact's capacity (EO) → execute on borrowed
-//!   slabs (KC; matching-cap = zero slab copies) → optional verification
-//!   vs the CPU oracle → trim (or move, when sizes match) → reply +
-//!   metrics (including the bytes-copied / copies-avoided pair).
+//! Request lifecycle (the zero-copy pipeline, batch-fused):
+//!   submit (A-signature computed) → queue (backpressure) → batch dequeue
+//!   keyed on [`batch_affine`] (equal `ASig` + equal algo hint, so the
+//!   batch provably shares one A) → **one fused stats scan** and **one
+//!   plan** for the whole batch → convert A **once** into the worker's
+//!   workspace slabs (EO, amortized over the batch) → stack the batch's B
+//!   operands column-wise into one wide `n_exec × width·n_exec` matrix →
+//!   **one wide kernel** (KC; matching-cap = zero slab copies) → scatter
+//!   the C column blocks back per request → optional verification vs the
+//!   CPU oracle → reply + metrics (copy counters, batch-width histogram,
+//!   conversions amortized). Width-1 batches take [`process_one_ws`], the
+//!   sequential special case the differential suite compares against.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -83,8 +87,9 @@ struct Job {
 /// the client handles are `!Send`, so sharing one engine across threads is
 /// not an option; the substrate engine keeps the same ownership shape, and
 /// the workspace must never be shared — see `workspace.rs`). The batcher
-/// keeps shape-affine jobs on one worker so per-worker compile caches and
-/// arena buffers stay hot at one geometry.
+/// keeps signature-affine jobs (one shared A) on one worker, which then
+/// executes each batch fused — one A conversion, one wide kernel — while
+/// per-worker compile caches and arena buffers stay hot at one geometry.
 pub struct Coordinator {
     queue: Arc<BoundedQueue<Job>>,
     metrics: Arc<Metrics>,
@@ -125,15 +130,21 @@ impl Coordinator {
                         // engine: reused across this worker's requests,
                         // never shared (workspace.rs ownership rule).
                         let mut ws = Workspace::new();
-                        // Batch by matching request dimension: jobs padded to
-                        // the same artifact stay on one warm executable.
+                        // Batch by A-signature (not rows: equal dimensions
+                        // alone would fuse different As — the regression
+                        // the signature key exists to prevent). A batch
+                        // shares one A, so the worker converts once and
+                        // runs one wide kernel over the stacked Bs.
                         while let Some(batch) = queue
-                            .pop_batch(cfg.batch_max, |h, c| h.req.a.rows == c.req.a.rows)
+                            .pop_batch(cfg.batch_max, |h, c| batch_affine(&h.req, &c.req))
                         {
-                            for job in batch {
-                                let resp = process_one_ws(
-                                    &engine, &mut ws, &registry, &cfg, &job.req, job.enqueued,
-                                );
+                            metrics.record_batch(batch.len());
+                            let jobs: Vec<(&SpdmRequest, Instant)> =
+                                batch.iter().map(|j| (&j.req, j.enqueued)).collect();
+                            let resps =
+                                process_batch_ws(&engine, &mut ws, &registry, &cfg, &jobs);
+                            drop(jobs);
+                            for (job, resp) in batch.iter().zip(resps) {
                                 if resp.ok() {
                                     metrics.record_completion(
                                         resp.algo.as_str(),
@@ -213,6 +224,19 @@ impl Drop for Coordinator {
             let _ = h.join();
         }
     }
+}
+
+/// Batch-affinity predicate: two requests may share a fused batch only if
+/// their submit-time signatures ([`crate::coordinator::ASig`]: dims + nnz
+/// + content hash) are equal and they agree on the algorithm hint, so one
+/// plan covers the whole batch. Rows-only matching is NOT sufficient: it
+/// would fuse different As and silently answer k−1 requests with the
+/// wrong product. The hash is the cheap dequeue key, not the proof —
+/// [`process_batch_ws`] re-screens with a full element-data comparison
+/// before fusing, so even a constructed hash collision cannot cross-wire
+/// results.
+pub fn batch_affine(a: &SpdmRequest, b: &SpdmRequest) -> bool {
+    a.a_sig == b.a_sig && a.algo_hint == b.algo_hint
 }
 
 /// Trim an m×m result back to n×n (fresh allocation: the trimmed matrix is
@@ -403,6 +427,244 @@ pub fn process_one_ws(
     }
 }
 
+/// Execute one shape-affine batch as a fused unit: convert the shared A
+/// **once**, stack the batch's B operands column-wise into one wide dense
+/// matrix, run **one** wide kernel, and scatter the C column blocks back
+/// into per-request responses (input order preserved).
+///
+/// Width 1 is the sequential special case ([`process_one_ws`]). The queue
+/// predicate ([`batch_affine`]) guarantees affinity, but this function is
+/// public, so it re-screens defensively: any job whose A signature, shape,
+/// or algorithm hint cannot join the fused unit is processed individually
+/// instead of poisoning the batch.
+pub fn process_batch_ws(
+    engine: &Engine,
+    ws: &mut Workspace,
+    registry: &Registry,
+    cfg: &CoordinatorConfig,
+    batch: &[(&SpdmRequest, Instant)],
+) -> Vec<SpdmResponse> {
+    if batch.is_empty() {
+        return Vec::new();
+    }
+    if batch.len() == 1 {
+        let (req, enq) = batch[0];
+        return vec![process_one_ws(engine, ws, registry, cfg, req, enq)];
+    }
+    let head = batch[0].0;
+    let n = head.a.rows;
+    let mut out: Vec<Option<SpdmResponse>> = batch.iter().map(|_| None).collect();
+    let mut fused: Vec<usize> = Vec::new();
+    for (i, (req, enq)) in batch.iter().enumerate() {
+        // The signature is the cheap dequeue key; the re-screen compares the
+        // actual element data (O(n²), dwarfed by the kernel) so fusion is
+        // sound even against a constructed 64-bit hash collision — a
+        // colliding request falls back to its own sequential execution.
+        let fusable = req.a.rows == n
+            && req.a.cols == n
+            && req.b.rows == n
+            && req.b.cols == n
+            && req.a_sig == head.a_sig
+            && req.algo_hint == head.algo_hint
+            && req.a.data == head.a.data;
+        if fusable {
+            fused.push(i);
+        } else {
+            out[i] = Some(process_one_ws(engine, ws, registry, cfg, req, *enq));
+        }
+    }
+    if fused.len() == 1 {
+        let i = fused[0];
+        out[i] = Some(process_one_ws(engine, ws, registry, cfg, batch[i].0, batch[i].1));
+    } else if !fused.is_empty() {
+        let jobs: Vec<(&SpdmRequest, Instant)> = fused.iter().map(|&i| batch[i]).collect();
+        let resps = process_fused(engine, ws, registry, cfg, &jobs);
+        for (&i, resp) in fused.iter().zip(resps) {
+            out[i] = Some(resp);
+        }
+    }
+    out.into_iter().map(|r| r.expect("every batch slot answered")).collect()
+}
+
+/// The fused execution core: all jobs share one square n×n A (equal
+/// signatures) and one algorithm hint; `jobs.len() >= 2`.
+fn process_fused(
+    engine: &Engine,
+    ws: &mut Workspace,
+    registry: &Registry,
+    cfg: &CoordinatorConfig,
+    jobs: &[(&SpdmRequest, Instant)],
+) -> Vec<SpdmResponse> {
+    let head = jobs[0].0;
+    let n = head.a.rows;
+    let k = jobs.len();
+    let fail_all = |algo: Algo, msg: String| -> Vec<SpdmResponse> {
+        jobs.iter().map(|(r, _)| SpdmResponse::failed(r.id, algo, msg.clone())).collect()
+    };
+
+    debug_assert!(jobs.iter().all(|(r, _)| r.a.data == head.a.data));
+
+    // One fused stats scan and one plan for the whole batch.
+    let t_stats = Instant::now();
+    let stats = convert::scan_stats(&head.a, cfg.gcoo_p, cfg.convert_threads);
+    let stats_s = t_stats.elapsed().as_secs_f64();
+    let selector = Selector::new(cfg.policy);
+    let mut plan = match selector.plan(
+        registry,
+        n,
+        stats.sparsity(),
+        stats.max_band_nnz(),
+        stats.max_row_nnz,
+        head.algo_hint,
+    ) {
+        Ok(p) => p,
+        Err(e) => return fail_all(head.algo_hint.unwrap_or(Algo::DenseXla), e),
+    };
+    plan.width = k;
+    let ne = plan.n_exec;
+
+    // Stack the B operands column-wise: wide B = [B_0 | B_1 | … | B_{k−1}],
+    // each block zero-padded from n to ne. Rows n..ne stay zero — A has no
+    // entries in those columns, so they contribute nothing to any product.
+    ws.b_stack.zero_into(ne, plan.width * ne);
+    for (j, (req, _)) in jobs.iter().enumerate() {
+        for i in 0..n {
+            ws.b_stack.row_mut(i)[j * ne..j * ne + n].copy_from_slice(req.b.row(i));
+        }
+    }
+    let b_bytes_each = (n * n * 4) as u64;
+
+    // Same EO accounting as `process_one_ws`: the stats scan bills into
+    // convert_s on the sparse paths only (dense converts nothing).
+    let mut convert_s = 0.0;
+    let mut head_bytes = 0u64; // once-per-batch copies (slab repad, dense A pad)
+    let (kernel_s, artifact, copy) = match plan.algo {
+        Algo::Gcoo | Algo::GcooNoreuse => {
+            // The batch's one and only A conversion — the invariant the
+            // differential suite asserts via convert_s/conversions_amortized.
+            let t0 = Instant::now();
+            if let Err(e) = convert::dense_to_slabs_into(
+                &head.a,
+                &stats,
+                ne,
+                plan.cap,
+                cfg.convert_threads,
+                &mut ws.gcoo_vals,
+                &mut ws.gcoo_rows,
+                &mut ws.gcoo_cols,
+            ) {
+                return fail_all(plan.algo, e.to_string());
+            }
+            convert_s += stats_s + t0.elapsed().as_secs_f64();
+            let slabs = GcooSlabs {
+                g: ne.div_ceil(cfg.gcoo_p),
+                cap: plan.cap,
+                p: cfg.gcoo_p,
+                n: ne,
+                vals: &ws.gcoo_vals,
+                rows: &ws.gcoo_rows,
+                cols: &ws.gcoo_cols,
+            };
+            match engine.run_gcoo_slabs_into(
+                registry,
+                slabs,
+                &ws.b_stack,
+                plan.algo == Algo::Gcoo,
+                &mut ws.c_stack,
+            ) {
+                Ok(s) => (s.kernel_s, s.artifact, s.copy),
+                Err(e) => return fail_all(plan.algo, e.to_string()),
+            }
+        }
+        Algo::Csr => {
+            let t0 = Instant::now();
+            if let Err(e) = convert::dense_to_ell_into(
+                &head.a,
+                ne,
+                plan.cap,
+                &mut ws.ell_vals,
+                &mut ws.ell_cols,
+            ) {
+                return fail_all(plan.algo, e.to_string());
+            }
+            convert_s += stats_s + t0.elapsed().as_secs_f64();
+            let slabs = EllSlabs {
+                n: ne,
+                rowcap: plan.cap,
+                vals: &ws.ell_vals,
+                cols: &ws.ell_cols,
+            };
+            match engine.run_ell_slabs_into(registry, slabs, &ws.b_stack, &mut ws.c_stack) {
+                Ok(s) => (s.kernel_s, s.artifact, s.copy),
+                Err(e) => return fail_all(plan.algo, e.to_string()),
+            }
+        }
+        Algo::DenseXla | Algo::DensePallas => {
+            let t0 = Instant::now();
+            let a_exec: &Mat = if n == ne {
+                &head.a
+            } else {
+                ws.a_pad.pad_from(&head.a, ne);
+                head_bytes += (n * n * 4) as u64;
+                &ws.a_pad
+            };
+            convert_s += t0.elapsed().as_secs_f64();
+            match engine.run_dense(registry, plan.algo.as_str(), a_exec, &ws.b_stack) {
+                Ok(o) => {
+                    let (ks, art, cp) = (o.kernel_s, o.artifact, o.copy);
+                    // Dense kernels return an owned wide C; stage it where
+                    // the scatter reads (replaces the staging allocation).
+                    ws.c_stack = o.c;
+                    (ks, art, cp)
+                }
+                Err(e) => return fail_all(plan.algo, e.to_string()),
+            }
+        }
+    };
+    head_bytes += copy.bytes_copied;
+
+    // Scatter: request j's C is the n×n top-left block of wide-C's j-th
+    // ne-column slice. Each output column accumulated the same ordered f32
+    // sum a width-1 run would have, so the scatter is bitwise-faithful to
+    // sequential execution.
+    let kernel_each = kernel_s / plan.width as f64;
+    let mut resps = Vec::with_capacity(k);
+    for (j, (req, enq)) in jobs.iter().enumerate() {
+        let mut c = Mat::zeros(n, n);
+        for i in 0..n {
+            c.row_mut(i).copy_from_slice(&ws.c_stack.row(i)[j * ne..j * ne + n]);
+        }
+        let verified = if req.verify {
+            let oracle = req.a.matmul(&req.b);
+            Some(c.allclose(&oracle, 1e-3, 1e-2))
+        } else {
+            None
+        };
+        resps.push(SpdmResponse {
+            id: req.id,
+            algo: plan.algo,
+            artifact: artifact.clone(),
+            n_exec: ne,
+            // The batch's one conversion (stats scan included) is billed to
+            // its first job; the other k−1 ride it for free — they are the
+            // conversions the amortized counter credits.
+            convert_s: if j == 0 { convert_s } else { 0.0 },
+            kernel_s: kernel_each,
+            total_s: enq.elapsed().as_secs_f64(),
+            verified,
+            error: None,
+            c: Some(c),
+            // Stacking B in and scattering C out are inherent to fusion and
+            // billed per job; once-per-batch copies go to the first job.
+            bytes_copied: b_bytes_each
+                + (n * n * 4) as u64
+                + if j == 0 { head_bytes } else { 0 },
+            copies_avoided: if j == 0 { copy.copies_avoided } else { 0 },
+        });
+    }
+    resps
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,7 +690,45 @@ mod tests {
         assert_eq!(SubmitError::ShutDown.to_string(), "coordinator is shut down");
     }
 
+    /// Regression for the rows-only affinity bug: two different As with
+    /// equal row counts must never share a fused batch. The old predicate
+    /// (`h.req.a.rows == c.req.a.rows`) grouped them, which under fused
+    /// execution would answer k−1 requests with the wrong A's product.
+    #[test]
+    fn different_a_same_rows_never_share_a_batch() {
+        use super::super::job::ASig;
+        let mut rng = Rng::new(31);
+        let b = Mat::randn(16, 16, &mut rng);
+        let a1 = Mat::randn(16, 16, &mut rng);
+        let a2 = Mat::randn(16, 16, &mut rng);
+        let mk = |id: u64, a: &Mat| SpdmRequest::new(id, a.clone(), b.clone());
+        assert!(
+            !batch_affine(&mk(0, &a1), &mk(1, &a2)),
+            "equal row counts must not imply batch affinity"
+        );
+        assert!(batch_affine(&mk(0, &a1), &mk(1, &a1)));
+        // A hint mismatch blocks fusion even with identical A.
+        let mut hinted = mk(2, &a1);
+        hinted.algo_hint = Some(Algo::Csr);
+        assert!(!batch_affine(&mk(0, &a1), &hinted));
+        // Through the queue: interleaved a1/a2 jobs dequeue as pure batches.
+        let q = BoundedQueue::new(8);
+        for (i, &a) in [&a1, &a2, &a1, &a2, &a1].iter().enumerate() {
+            assert!(q.try_push(mk(i as u64, a)).is_ok());
+        }
+        q.close();
+        let sig1 = ASig::of(&a1);
+        let mut widths = Vec::new();
+        while let Some(batch) = q.pop_batch(8, |h, c| batch_affine(h, c)) {
+            let first = batch[0].a_sig;
+            assert!(batch.iter().all(|r| r.a_sig == first), "mixed As fused into one batch");
+            widths.push((first == sig1, batch.len()));
+        }
+        assert_eq!(widths, vec![(true, 3), (false, 2)]);
+    }
+
     // Full coordinator round trips (needing PJRT + artifacts) are in
     // rust/tests/coordinator_integration.rs; zero-copy counter assertions
-    // are in rust/tests/zero_copy.rs.
+    // are in rust/tests/zero_copy.rs; batched-vs-sequential differential
+    // coverage is in rust/tests/batch_differential.rs.
 }

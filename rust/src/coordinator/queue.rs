@@ -1,10 +1,13 @@
-//! Bounded MPMC job queue with blocking backpressure and shape-affinity
+//! Bounded MPMC job queue with blocking backpressure and affinity-keyed
 //! batch dequeue.
 //!
 //! `push` blocks when the queue is full (producers feel backpressure instead
 //! of OOMing the coordinator); `pop_batch` removes up to `max` jobs that the
-//! caller's affinity predicate groups with the head job — the batcher that
-//! keeps one worker on one compiled executable while work for it exists.
+//! caller's affinity predicate groups with the head job. The coordinator
+//! keys the predicate on the A-signature (`pool::batch_affine`), so a
+//! dequeued batch provably shares one A operand and the worker executes it
+//! **fused**: one A conversion, one wide kernel over the stacked Bs, one
+//! warm compiled executable (see `pool.rs` and DESIGN.md §Batching).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

@@ -1,5 +1,7 @@
 //! Per-worker workspace arena: the reusable pad/convert/repad scratch
-//! buffers behind the zero-copy request pipeline.
+//! buffers behind the zero-copy request pipeline, plus the stacked-B /
+//! stacked-C wide buffers behind fused multi-B batch execution
+//! (DESIGN.md §Batching).
 //!
 //! **Ownership rule: one `Workspace` per coordinator worker, owned next to
 //! that worker's engine, never shared.** Every buffer here is borrowed by
@@ -29,6 +31,15 @@ pub struct Workspace {
     /// Device ELL slab buffers, `n·rowcap` each (vals/cols).
     pub ell_vals: Vec<f32>,
     pub ell_cols: Vec<i32>,
+    /// Fused-batch wide-B operand: the batch's B matrices stacked
+    /// column-wise into one `n_exec × width·n_exec` matrix (each block
+    /// zero-padded from its request's n). Reused across batches.
+    pub b_stack: Mat,
+    /// Fused-batch wide-C staging buffer the engine `_into` kernels write
+    /// to; per-request C blocks are scattered out of it. Reused across
+    /// batches (the dense batch path replaces it with the engine's owned
+    /// result instead — see `process_batch_ws`).
+    pub c_stack: Mat,
 }
 
 impl Workspace {
@@ -41,6 +52,8 @@ impl Workspace {
             gcoo_cols: Vec::new(),
             ell_vals: Vec::new(),
             ell_cols: Vec::new(),
+            b_stack: Mat::zeros(0, 0),
+            c_stack: Mat::zeros(0, 0),
         }
     }
 }

@@ -15,6 +15,13 @@
 //! first), and slabs are only copied when the artifact's capacity differs
 //! from the provided one — the matching-cap path is a true zero-copy
 //! borrow, accounted in each output's [`CopyStats`].
+//!
+//! The SpDM entry points accept a **wide B**: the dense operand may be
+//! `n × w·n` for any batch width `w ≥ 1` (the coordinator stacks a fused
+//! batch's B matrices column-wise), with the artifact still selected by
+//! `n = b.rows`. The `_into` variants write C into a caller-owned buffer
+//! (`Mat::zero_into`, allocation reused across calls) so per-worker
+//! workspaces can stage the wide result without a per-batch allocation.
 
 use std::collections::HashSet;
 use std::sync::Mutex;
@@ -45,6 +52,15 @@ impl CopyStats {
 #[derive(Clone, Debug)]
 pub struct SpdmOutput {
     pub c: Mat,
+    pub kernel_s: f64,
+    pub artifact: String,
+    pub copy: CopyStats,
+}
+
+/// Execution accounting without the result matrix — returned by the
+/// `_into` entry points, which write C into a caller-owned buffer.
+#[derive(Clone, Debug)]
+pub struct ExecStats {
     pub kernel_s: f64,
     pub artifact: String,
     pub copy: CopyStats,
@@ -123,13 +139,29 @@ impl Engine {
         b: &Mat,
         reuse: bool,
     ) -> Result<SpdmOutput, RuntimeError> {
+        let mut c = Mat::zeros(0, 0);
+        let s = self.run_gcoo_slabs_into(reg, slabs, b, reuse, &mut c)?;
+        Ok(SpdmOutput { c, kernel_s: s.kernel_s, artifact: s.artifact, copy: s.copy })
+    }
+
+    /// [`Engine::run_gcoo_slabs`], writing C into a caller-owned buffer
+    /// (reused across calls — the batch path's stacked-C staging). `b` may
+    /// be wide: `meta.n × w·meta.n` for a fused batch of width `w`.
+    pub fn run_gcoo_slabs_into(
+        &self,
+        reg: &Registry,
+        slabs: GcooSlabs<'_>,
+        b: &Mat,
+        reuse: bool,
+        c: &mut Mat,
+    ) -> Result<ExecStats, RuntimeError> {
         let algo = if reuse { "gcoo" } else { "gcoo_noreuse" };
         let n = b.rows;
         let meta = reg.select(algo, n, slabs.cap)?;
         let cap = meta.param("cap").expect("gcoo artifact has cap");
         check_gcoo_slabs(&slabs)?;
-        check(b.rows == meta.n && b.cols == meta.n, || {
-            format!("B is {}x{}, artifact n={}", b.rows, b.cols, meta.n)
+        check(b.rows == meta.n && b.cols > 0 && b.cols % meta.n == 0, || {
+            format!("B is {}x{}, artifact n={} (cols must be a positive multiple)", b.rows, b.cols, meta.n)
         })?;
         check(slabs.g * slabs.p == meta.n, || {
             format!("A bands {}x{} != n={}", slabs.g, slabs.p, meta.n)
@@ -150,9 +182,9 @@ impl Engine {
             (owned.vals.as_slice(), owned.rows.as_slice(), owned.cols.as_slice())
         };
         let t0 = Instant::now();
-        let c = gcoo_spdm_cpu(vals, rows, cols, slabs.g, cap, slabs.p, b);
+        gcoo_spdm_cpu(vals, rows, cols, slabs.g, cap, slabs.p, b, c);
         let kernel_s = t0.elapsed().as_secs_f64();
-        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone(), copy })
+        Ok(ExecStats { kernel_s, artifact: meta.name.clone(), copy })
     }
 
     /// Run the CSR (cuSPARSE-analog) kernel from an owned ELL (borrowed).
@@ -169,6 +201,20 @@ impl Engine {
         slabs: EllSlabs<'_>,
         b: &Mat,
     ) -> Result<SpdmOutput, RuntimeError> {
+        let mut c = Mat::zeros(0, 0);
+        let s = self.run_ell_slabs_into(reg, slabs, b, &mut c)?;
+        Ok(SpdmOutput { c, kernel_s: s.kernel_s, artifact: s.artifact, copy: s.copy })
+    }
+
+    /// [`Engine::run_ell_slabs`] into a caller-owned C buffer; `b` may be
+    /// wide (`meta.n × w·meta.n`), like the GCOO variant.
+    pub fn run_ell_slabs_into(
+        &self,
+        reg: &Registry,
+        slabs: EllSlabs<'_>,
+        b: &Mat,
+        c: &mut Mat,
+    ) -> Result<ExecStats, RuntimeError> {
         let n = b.rows;
         let meta = reg.select("csr", n, slabs.rowcap)?;
         let rowcap = meta.param("rowcap").expect("csr artifact has rowcap");
@@ -184,9 +230,10 @@ impl Engine {
                 )
             },
         )?;
-        check(slabs.n == meta.n && b.rows == meta.n && b.cols == meta.n, || {
-            format!("shape mismatch: ell.n={} b={}x{} n={}", slabs.n, b.rows, b.cols, meta.n)
-        })?;
+        check(
+            slabs.n == meta.n && b.rows == meta.n && b.cols > 0 && b.cols % meta.n == 0,
+            || format!("shape mismatch: ell.n={} b={}x{} n={}", slabs.n, b.rows, b.cols, meta.n),
+        )?;
         self.load(meta)?;
         let mut copy = CopyStats::default();
         let owned;
@@ -199,9 +246,9 @@ impl Engine {
             (owned.vals.as_slice(), owned.cols.as_slice())
         };
         let t0 = Instant::now();
-        let c = ell_spdm_cpu(vals, cols, meta.n, rowcap, b);
+        ell_spdm_cpu(vals, cols, meta.n, rowcap, b, c);
         let kernel_s = t0.elapsed().as_secs_f64();
-        Ok(SpdmOutput { c, kernel_s, artifact: meta.name.clone(), copy })
+        Ok(ExecStats { kernel_s, artifact: meta.name.clone(), copy })
     }
 
     /// Run the GCOO SpMV extension kernel: y = A·x (paper future work).
@@ -234,7 +281,7 @@ impl Engine {
     }
 
     /// Run a dense baseline ("dense_xla" = the vendor GEMM, "dense_pallas"
-    /// = the explicit tiled kernel).
+    /// = the explicit tiled kernel). `b` may be wide (`n × w·n`).
     pub fn run_dense(
         &self,
         reg: &Registry,
@@ -244,7 +291,7 @@ impl Engine {
     ) -> Result<SpdmOutput, RuntimeError> {
         let n = b.rows;
         let meta = reg.select(algo, n, 0)?;
-        check(a.rows == n && a.cols == n && b.cols == n, || {
+        check(a.rows == n && a.cols == n && b.cols > 0 && b.cols % n == 0, || {
             format!("dense shapes {}x{} / {}x{}", a.rows, a.cols, b.rows, b.cols)
         })?;
         self.load(meta)?;
@@ -285,6 +332,10 @@ fn check_gcoo_slabs(p: &GcooSlabs<'_>) -> Result<(), RuntimeError> {
 /// Reference GCOOSpDM over the padded device slabs: every stored nonzero
 /// scatters its scaled B row into C (padding slots hold 0.0 and vanish).
 /// Mirrors paper Algorithm 2's output indexing: C row = band·p + local row.
+/// C spans `b.cols` columns, so a stacked wide B yields the wide C whose
+/// `n`-column blocks are exactly the per-request products (each output
+/// column accumulates the same ordered f32 sum as a width-1 run — the
+/// bitwise identity the differential suite asserts).
 fn gcoo_spdm_cpu(
     vals: &[f32],
     rows: &[i32],
@@ -293,9 +344,9 @@ fn gcoo_spdm_cpu(
     cap: usize,
     p: usize,
     b: &Mat,
-) -> Mat {
-    let n = b.cols;
-    let mut c = Mat::zeros(g * p, n);
+    c: &mut Mat,
+) {
+    c.zero_into(g * p, b.cols);
     for gi in 0..g {
         for k in 0..cap {
             let v = vals[gi * cap + k];
@@ -310,7 +361,6 @@ fn gcoo_spdm_cpu(
             }
         }
     }
-    c
 }
 
 /// Reference GCOO SpMV over the same slabs: y[band·p + row] += v · x[col].
@@ -336,9 +386,9 @@ fn gcoo_spmv_cpu(
     y
 }
 
-/// Reference ELL (padded CSR) SpDM.
-fn ell_spdm_cpu(vals: &[f32], cols: &[i32], n: usize, rowcap: usize, b: &Mat) -> Mat {
-    let mut c = Mat::zeros(n, b.cols);
+/// Reference ELL (padded CSR) SpDM; wide-B capable like the GCOO kernel.
+fn ell_spdm_cpu(vals: &[f32], cols: &[i32], n: usize, rowcap: usize, b: &Mat, c: &mut Mat) {
+    c.zero_into(n, b.cols);
     for i in 0..n {
         for k in 0..rowcap {
             let v = vals[i * rowcap + k];
@@ -352,7 +402,6 @@ fn ell_spdm_cpu(vals: &[f32], cols: &[i32], n: usize, rowcap: usize, b: &Mat) ->
             }
         }
     }
-    c
 }
 
 #[cfg(test)]
@@ -374,7 +423,8 @@ mod tests {
         let b = Mat::randn(64, 48, &mut rng);
         let gcoo = Gcoo::from_dense(&a, 8);
         let padded = gcoo.pad(gcoo.max_group_nnz().max(1)).unwrap();
-        let c = gcoo_spdm_cpu(
+        let mut c = Mat::zeros(0, 0);
+        gcoo_spdm_cpu(
             &padded.vals,
             &padded.rows,
             &padded.cols,
@@ -382,8 +432,53 @@ mod tests {
             padded.cap,
             padded.p,
             &b,
+            &mut c,
         );
         assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4));
+        // The output buffer is caller-owned: a second run at the same
+        // geometry reuses the allocation (the stacked-C staging contract).
+        let ptr = c.data.as_ptr();
+        gcoo_spdm_cpu(
+            &padded.vals,
+            &padded.rows,
+            &padded.cols,
+            padded.g,
+            padded.cap,
+            padded.p,
+            &b,
+            &mut c,
+        );
+        assert_eq!(c.data.as_ptr(), ptr, "steady-state kernel output reallocated");
+    }
+
+    #[test]
+    fn gcoo_cpu_kernel_wide_b_blocks_match_narrow_runs() {
+        // Wide B = [B1 B2]: each n-column block of the wide C must be
+        // bitwise identical to the width-1 product with that B.
+        let mut rng = Rng::new(47);
+        let a = gen::uniform(32, 0.9, &mut rng);
+        let b1 = Mat::randn(32, 32, &mut rng);
+        let b2 = Mat::randn(32, 32, &mut rng);
+        let mut wide = Mat::zeros(32, 64);
+        for i in 0..32 {
+            wide.row_mut(i)[..32].copy_from_slice(b1.row(i));
+            wide.row_mut(i)[32..].copy_from_slice(b2.row(i));
+        }
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(gcoo.max_group_nnz().max(1)).unwrap();
+        let run = |b: &Mat| {
+            let mut c = Mat::zeros(0, 0);
+            gcoo_spdm_cpu(
+                &padded.vals, &padded.rows, &padded.cols, padded.g, padded.cap, padded.p, b,
+                &mut c,
+            );
+            c
+        };
+        let (cw, c1, c2) = (run(&wide), run(&b1), run(&b2));
+        for i in 0..32 {
+            assert_eq!(&cw.row(i)[..32], c1.row(i), "row {i} block 1");
+            assert_eq!(&cw.row(i)[32..], c2.row(i), "row {i} block 2");
+        }
     }
 
     #[test]
@@ -416,7 +511,8 @@ mod tests {
         let b = Mat::randn(48, 48, &mut rng);
         let csr = Csr::from_dense(&a);
         let ell = Ell::from_csr(&csr, csr.max_row_nnz().max(1)).unwrap();
-        let c = ell_spdm_cpu(&ell.vals, &ell.cols, ell.n, ell.rowcap, &b);
+        let mut c = Mat::zeros(0, 0);
+        ell_spdm_cpu(&ell.vals, &ell.cols, ell.n, ell.rowcap, &b, &mut c);
         assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4));
     }
 

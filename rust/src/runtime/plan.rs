@@ -62,6 +62,11 @@ pub struct ExecPlan {
     pub artifact: String,
     /// Why this algorithm won (observability / tests).
     pub reason: &'static str,
+    /// Number of requests this plan executes fused (shape-affine batch):
+    /// B operands are stacked column-wise into one `n_exec × width·n_exec`
+    /// operand and A is converted once. The selector resolves plans at
+    /// width 1; the batch path widens before execution.
+    pub width: usize,
 }
 
 impl ExecPlan {
@@ -84,6 +89,7 @@ impl ExecPlan {
             cap: meta.capacity().unwrap_or(0),
             artifact: meta.name.clone(),
             reason,
+            width: 1,
         })
     }
 }
@@ -123,6 +129,7 @@ mod tests {
         let plan = ExecPlan::resolve(&r, Algo::Gcoo, 256, 50, "test").unwrap();
         assert_eq!(plan.cap, 64);
         assert_eq!(plan.artifact, "gcoo_n256_cap64");
+        assert_eq!(plan.width, 1, "plans resolve at width 1; the batcher widens");
         let plan = ExecPlan::resolve(&r, Algo::Gcoo, 256, 65, "test").unwrap();
         assert_eq!(plan.cap, 512);
     }

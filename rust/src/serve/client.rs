@@ -41,6 +41,14 @@ impl Client {
         ))
     }
 
+    /// Structured metrics snapshot: the reply's `metrics` field is the
+    /// JSON-encoded `MetricsSnapshot` (parse it with `json::parse`).
+    pub fn stats(&mut self, id: u64) -> Result<Response, String> {
+        self.round_trip(&crate::json::write(
+            &Value::obj().field("id", id).field("type", "stats").build(),
+        ))
+    }
+
     pub fn shutdown(&mut self, id: u64) -> Result<Response, String> {
         self.round_trip(&crate::json::write(
             &Value::obj().field("id", id).field("type", "shutdown").build(),

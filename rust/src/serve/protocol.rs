@@ -6,6 +6,9 @@
 //!   {"id":2,"type":"spdm","n":4,"payload":"inline","a":[...16 floats],
 //!    "b":[...16 floats]}
 //!   {"id":3,"type":"metrics"}    {"id":4,"type":"ping"}
+//!   {"id":5,"type":"stats"}   — structured metrics: the reply's `metrics`
+//!   field carries the JSON-encoded snapshot (counters, latency, the
+//!   batch-width histogram, and `conversions_amortized`)
 //!
 //! Responses:
 //!   {"id":1,"ok":true,"algo":"gcoo","artifact":"gcoo_n256_…","n_exec":256,
@@ -34,6 +37,9 @@ pub enum Request {
         verify: bool,
     },
     Metrics { id: u64 },
+    /// Structured (JSON) metrics snapshot — the machine-readable sibling of
+    /// the human-oriented `Metrics` text render.
+    Stats { id: u64 },
     Ping { id: u64 },
     Shutdown { id: u64 },
 }
@@ -61,6 +67,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     match v.get("type").and_then(Value::as_str).ok_or("missing type")? {
         "ping" => Ok(Request::Ping { id }),
         "metrics" => Ok(Request::Metrics { id }),
+        "stats" => Ok(Request::Stats { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
         "spdm" => {
             let n = v.get("n").and_then(Value::as_usize).ok_or("missing n")?;
@@ -201,6 +208,10 @@ mod tests {
         assert!(matches!(
             parse_request(r#"{"id":4,"type":"metrics"}"#),
             Ok(Request::Metrics { id: 4 })
+        ));
+        assert!(matches!(
+            parse_request(r#"{"id":6,"type":"stats"}"#),
+            Ok(Request::Stats { id: 6 })
         ));
         assert!(matches!(
             parse_request(r#"{"id":5,"type":"shutdown"}"#),

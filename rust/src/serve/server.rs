@@ -149,6 +149,14 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
             metrics: Some(coord.metrics().snapshot().render()),
             ..Default::default()
         },
+        // Structured stats: the `metrics` field carries the JSON-encoded
+        // snapshot (incl. batch_hist + conversions_amortized).
+        Request::Stats { id } => Response {
+            id,
+            ok: true,
+            metrics: Some(coord.metrics().snapshot().to_json()),
+            ..Default::default()
+        },
         Request::Spdm { id, n, payload, algo, verify } => {
             let (a, b) = match materialize(n, &payload) {
                 Ok(ab) => ab,

@@ -1,0 +1,266 @@
+//! Differential lockdown of fused multi-B batch execution: for every
+//! corpus pattern and both sparse algorithms, executing a shape-affine
+//! batch fused (one A conversion, one wide kernel, column scatter) must be
+//! **bitwise identical** to executing the same requests sequentially
+//! through `process_one_ws` — at widths 1, 2, 5 and `batch_max`, including
+//! the ragged last batch — and a batch of k same-A requests must perform
+//! exactly one A conversion.
+//!
+//! Runnable without `make artifacts`: like `zero_copy.rs`, the engine only
+//! needs artifact *files to exist*, so a stub registry under `target/`
+//! suffices.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use gcoospdm::coordinator::{
+    process_batch_ws, process_one_ws, Algo, Coordinator, CoordinatorConfig, SpdmRequest,
+    SpdmResponse, Workspace,
+};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+
+/// Stub registry at n=64: two gcoo capacities (so some workloads borrow at
+/// cap 64 and others re-pad via cap 512), a csr variant wide enough for any
+/// 64-row matrix, and the dense fallback.
+fn runnable_registry() -> Registry {
+    let dir = PathBuf::from("target/batch_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+/// k requests sharing one A (clones → equal signatures), distinct Bs.
+fn same_a_requests(a: &Mat, k: usize, algo: Option<Algo>, rng: &mut Rng) -> Vec<SpdmRequest> {
+    (0..k)
+        .map(|i| {
+            let mut req =
+                SpdmRequest::new(i as u64, a.clone(), Mat::randn(a.rows, a.rows, rng));
+            req.algo_hint = algo;
+            // One oracle check per workload keeps the suite fast while still
+            // pinning both paths to the true product.
+            req.verify = i == 0;
+            req
+        })
+        .collect()
+}
+
+fn run_sequential(
+    engine: &Engine,
+    reg: &Registry,
+    cfg: &CoordinatorConfig,
+    reqs: &[SpdmRequest],
+) -> Vec<SpdmResponse> {
+    let mut ws = Workspace::new();
+    reqs.iter()
+        .map(|r| process_one_ws(engine, &mut ws, reg, cfg, r, Instant::now()))
+        .collect()
+}
+
+/// Chunk `reqs` into batches of `width` (last one ragged) and execute each
+/// fused. Asserts the one-conversion invariant on every multi-job batch:
+/// exactly the first job bills a conversion, the rest ride it for free.
+fn run_batched(
+    engine: &Engine,
+    reg: &Registry,
+    cfg: &CoordinatorConfig,
+    reqs: &[SpdmRequest],
+    width: usize,
+) -> Vec<SpdmResponse> {
+    let mut ws = Workspace::new();
+    let mut out = Vec::with_capacity(reqs.len());
+    for chunk in reqs.chunks(width) {
+        let jobs: Vec<(&SpdmRequest, Instant)> =
+            chunk.iter().map(|r| (r, Instant::now())).collect();
+        let resps = process_batch_ws(engine, &mut ws, reg, cfg, &jobs);
+        assert_eq!(resps.len(), chunk.len());
+        // Dense requests convert nothing, so the conversion-count invariant
+        // is only observable on the sparse paths.
+        if chunk.len() > 1 && resps.iter().all(|r| r.ok()) && resps[0].algo.is_sparse() {
+            assert!(
+                resps[0].convert_s > 0.0,
+                "the batch's one conversion is billed to its first job"
+            );
+            assert!(
+                resps[1..].iter().all(|r| r.convert_s == 0.0),
+                "a fused batch must convert A exactly once"
+            );
+        }
+        out.extend(resps);
+    }
+    out
+}
+
+fn assert_identical(seq: &[SpdmResponse], bat: &[SpdmResponse], ctx: &str) {
+    assert_eq!(seq.len(), bat.len(), "{ctx}: response counts");
+    for (i, (s, b)) in seq.iter().zip(bat).enumerate() {
+        assert!(s.ok(), "{ctx}[{i}] sequential failed: {:?}", s.error);
+        assert!(b.ok(), "{ctx}[{i}] batched failed: {:?}", b.error);
+        assert_eq!(s.id, b.id, "{ctx}[{i}] id");
+        assert_eq!(s.algo, b.algo, "{ctx}[{i}] algo");
+        assert_eq!(s.n_exec, b.n_exec, "{ctx}[{i}] n_exec");
+        assert_eq!(s.verified, b.verified, "{ctx}[{i}] verification verdicts");
+        assert!(
+            s.c == b.c,
+            "{ctx}[{i}]: batched C is not bitwise identical to sequential C"
+        );
+        if i == 0 {
+            assert_eq!(s.verified, Some(true), "{ctx}: oracle check on the first request");
+        }
+    }
+}
+
+/// The core differential: every corpus pattern × both sparse algorithms ×
+/// widths {1, 2, 5, batch_max}, with matching (n=64) and padded (n=60)
+/// request sizes, ragged final batches included.
+#[test]
+fn batched_execution_is_bitwise_identical_to_sequential() {
+    let reg = runnable_registry();
+    let engine = Engine::new().unwrap();
+    let cfg = CoordinatorConfig::default();
+    let widths = [1usize, 2, 5, cfg.batch_max];
+    let mut rng = Rng::new(0xBA7C);
+    for (pi, pattern) in gen::Pattern::ALL.iter().enumerate() {
+        // Alternate matching and padded-up execution sizes so stacking is
+        // exercised both at n == n_exec and across the pad border.
+        let n = if pi % 2 == 0 { 64 } else { 60 };
+        let a = gen::generate(*pattern, n, 0.95, &mut rng);
+        for algo in [Algo::Gcoo, Algo::Csr] {
+            for &w in &widths {
+                // 2 full batches plus a ragged remainder (for w >= 2).
+                let count = 2 * w + (w + 1) / 2;
+                let reqs = same_a_requests(&a, count, Some(algo), &mut rng);
+                let seq = run_sequential(&engine, &reg, &cfg, &reqs);
+                let bat = run_batched(&engine, &reg, &cfg, &reqs, w);
+                let ctx = format!("{}/{}/w{w}/n{n}", pattern.name(), algo.as_str());
+                assert_identical(&seq, &bat, &ctx);
+            }
+        }
+    }
+}
+
+/// The dense fallback also fuses correctly (stacked wide GEMM).
+#[test]
+fn batched_dense_matches_sequential() {
+    let reg = runnable_registry();
+    let engine = Engine::new().unwrap();
+    let cfg = CoordinatorConfig::default();
+    let mut rng = Rng::new(0xDE45);
+    for n in [64usize, 60] {
+        let a = gen::uniform(n, 0.4, &mut rng); // below crossover → dense
+        let reqs = same_a_requests(&a, 5, None, &mut rng);
+        let seq = run_sequential(&engine, &reg, &cfg, &reqs);
+        assert!(seq.iter().all(|r| r.algo == Algo::DenseXla));
+        let bat = run_batched(&engine, &reg, &cfg, &reqs, 5);
+        for (i, (s, b)) in seq.iter().zip(&bat).enumerate() {
+            assert!(s.ok() && b.ok(), "dense[{i}]: {:?} / {:?}", s.error, b.error);
+            assert!(s.c == b.c, "dense[{i}] not bitwise identical (n={n})");
+        }
+    }
+}
+
+/// Exactly one slab borrow per fused batch: with a matching-capacity
+/// artifact, the sequential path borrows once per request while the fused
+/// path borrows once per batch — direct `CopyStats` evidence that the
+/// batch ran one conversion + one kernel.
+#[test]
+fn fused_batch_borrows_slabs_once() {
+    let reg = runnable_registry();
+    let engine = Engine::new().unwrap();
+    let cfg = CoordinatorConfig::default();
+    let mut rng = Rng::new(0x51AB);
+    // Sparsity 0.97 keeps every band under the cap=64 artifact.
+    let a = gen::uniform(64, 0.97, &mut rng);
+    let reqs = same_a_requests(&a, 6, Some(Algo::Gcoo), &mut rng);
+    let seq = run_sequential(&engine, &reg, &cfg, &reqs);
+    let seq_avoided: u64 = seq.iter().map(|r| r.copies_avoided).sum();
+    assert!(
+        seq_avoided >= 3 * reqs.len() as u64,
+        "sequential: B borrow + slab borrow + C move per request"
+    );
+    let bat = run_batched(&engine, &reg, &cfg, &reqs, 6);
+    let bat_avoided: u64 = bat.iter().map(|r| r.copies_avoided).sum();
+    assert_eq!(
+        bat_avoided, 1,
+        "fused batch: one kernel invocation, one matching-cap slab borrow"
+    );
+    assert_identical(&seq, &bat, "copystats");
+}
+
+/// Mixed-signature traffic through the live coordinator: different As with
+/// equal row counts must come back with each request's own product, and
+/// the batch metrics must balance — Σ width·hist[width] equals jobs
+/// processed and `conversions_amortized` equals Σ (width−1)·hist[width],
+/// whatever widths the races produced.
+#[test]
+fn coordinator_fuses_safely_and_accounts_batches() {
+    let reg = Arc::new(runnable_registry());
+    let coord = Coordinator::new(
+        Arc::clone(&reg),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    );
+    let mut rng = Rng::new(0xC0);
+    let a1 = gen::uniform(64, 0.97, &mut rng);
+    let a2 = gen::uniform(64, 0.97, &mut rng); // same rows, different content
+    let mut receivers = Vec::new();
+    for i in 0..12u64 {
+        let a = if i % 2 == 0 { &a1 } else { &a2 };
+        let mut req = SpdmRequest::new(i, a.clone(), Mat::randn(64, 64, &mut rng));
+        req.algo_hint = Some(Algo::Gcoo);
+        req.verify = true; // the oracle catches any wrong-A fusion
+        receivers.push(coord.submit(req).expect("queue open"));
+    }
+    // One shape-invalid request lands in the error counters.
+    let bad = SpdmRequest::new(99, Mat::randn(8, 16, &mut rng), Mat::randn(16, 16, &mut rng));
+    receivers.push(coord.submit(bad).expect("queue open"));
+    let mut ok = 0;
+    let mut failed = 0;
+    for rx in receivers {
+        let resp = rx.recv().expect("reply delivered");
+        if resp.ok() {
+            assert_eq!(
+                resp.verified,
+                Some(true),
+                "request {} answered with the wrong A's product",
+                resp.id
+            );
+            ok += 1;
+        } else {
+            failed += 1;
+        }
+    }
+    assert_eq!((ok, failed), (12, 1));
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.completed, 12);
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.verify_failures, 0);
+    assert_eq!(
+        snap.batched_jobs(),
+        snap.completed + snap.errors,
+        "batch-width histogram sums to jobs processed"
+    );
+    let expected_amortized: u64 = snap
+        .batch_hist
+        .iter()
+        .enumerate()
+        .map(|(w, &count)| (w as u64).saturating_sub(1) * count)
+        .sum();
+    assert_eq!(
+        snap.conversions_amortized, expected_amortized,
+        "conversions_amortized is (width − 1) per dequeued batch"
+    );
+    coord.shutdown();
+}

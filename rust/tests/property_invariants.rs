@@ -1,8 +1,10 @@
 //! Property-based invariants (via the in-repo `prop` substrate): format
 //! round trips, conversion equivalences, simulator monotonicity, selector
-//! sanity, queue behavior — the proptest-style layer of the test suite.
+//! sanity, queue behavior, and the batch-affinity A-signature — the
+//! proptest-style layer of the test suite.
 
 use gcoospdm::convert;
+use gcoospdm::coordinator::{batch_affine, ASig, SpdmRequest};
 use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
 use gcoospdm::prop::{check, Config};
@@ -160,6 +162,80 @@ fn prop_sim_time_decreases_with_sparsity() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_a_signature_equal_matrices_equal_signature() {
+    // Soundness of the batch key: the signature is a pure function of the
+    // matrix content, its stored dims/nnz agree with the matrix, and a
+    // same-dims/same-nnz value perturbation (the near-collision case)
+    // always changes it — so the batcher cannot fuse different As.
+    check(Config { cases: 48, base_seed: 0xA51, ..Default::default() }, mat_case, |c| {
+        let a = materialize(c);
+        let sig = ASig::of(&a);
+        if sig != ASig::of(&a.clone()) {
+            return Err("equal matrices must have equal signatures".into());
+        }
+        if (sig.rows, sig.cols, sig.nnz) != (a.rows, a.cols, a.nnz()) {
+            return Err("signature dims/nnz disagree with the matrix".into());
+        }
+        if let Some(idx) = a.data.iter().position(|&v| v != 0.0) {
+            let mut near = a.clone();
+            near.data[idx] *= 2.0; // exponent bump: nonzero stays nonzero
+            let sig2 = ASig::of(&near);
+            if (sig2.rows, sig2.cols, sig2.nnz) != (sig.rows, sig.cols, sig.nnz) {
+                return Err("perturbation was supposed to preserve dims/nnz".into());
+            }
+            if sig2 == sig {
+                return Err("same-dims/same-nnz content change not detected".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_a_signature_inequality_is_safe_non_batching() {
+    // The unsound direction cannot happen: requests whose signatures differ
+    // never satisfy the batch predicate, and (for these generated cases)
+    // signatures only coincide when the content is identical.
+    check(
+        Config { cases: 32, base_seed: 0xA52, ..Default::default() },
+        |g| (mat_case(g), mat_case(g)),
+        |(c1, c2)| {
+            let (a1, a2) = (materialize(c1), materialize(c2));
+            let (b1, b2) = (Mat::zeros(a1.rows, a1.rows), Mat::zeros(a2.rows, a2.rows));
+            let r1 = SpdmRequest::new(1, a1, b1);
+            let r2 = SpdmRequest::new(2, a2, b2);
+            if r1.a_sig != r2.a_sig && batch_affine(&r1, &r2) {
+                return Err("unequal signatures must never batch".into());
+            }
+            if r1.a_sig == r2.a_sig && r1.a.data != r2.a.data {
+                return Err("signature collision on different content".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn a_signature_seeded_near_collision_does_not_batch() {
+    // Fixed-seed regression: same dims, same nnz, different values — the
+    // pair a rows+nnz key could not tell apart — must not batch.
+    let mut rng = Rng::new(0xBEEF);
+    let a1 = gen::uniform(32, 0.9, &mut rng);
+    let mut a2 = a1.clone();
+    let idx = a2.data.iter().position(|&v| v != 0.0).expect("nonzero entry");
+    a2.data[idx] *= 2.0;
+    assert_eq!(a1.nnz(), a2.nnz());
+    let r1 = SpdmRequest::new(1, a1, Mat::zeros(32, 32));
+    let r2 = SpdmRequest::new(2, a2, Mat::zeros(32, 32));
+    assert_eq!(
+        (r1.a_sig.rows, r1.a_sig.cols, r1.a_sig.nnz),
+        (r2.a_sig.rows, r2.a_sig.cols, r2.a_sig.nnz)
+    );
+    assert_ne!(r1.a_sig, r2.a_sig, "value hash must split the near-collision");
+    assert!(!batch_affine(&r1, &r2));
 }
 
 #[test]

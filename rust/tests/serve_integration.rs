@@ -1,5 +1,7 @@
 //! Integration: the TCP serving loop — protocol round trips against a live
-//! server backed by real artifacts. Requires `make artifacts`.
+//! server. The artifact-backed sessions require `make artifacts`; the
+//! stats-endpoint test fabricates a stub registry under `target/` (the
+//! engine only needs artifact files to exist) so it always runs.
 
 use std::sync::Arc;
 
@@ -79,6 +81,73 @@ fn full_protocol_session() {
     // shutdown terminates the accept loop
     let r = client.shutdown(9).unwrap();
     assert!(r.ok);
+    handle.join().unwrap();
+}
+
+/// Boot a server over a stub registry (no `make artifacts` needed).
+fn boot_stub() -> (String, std::thread::JoinHandle<()>) {
+    let dir = std::path::PathBuf::from("target/serve_stats_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    let reg = Arc::new(Registry::from_manifest_json(manifest, dir).expect("stub manifest"));
+    let coord = Arc::new(Coordinator::new(
+        reg,
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    ));
+    let server = Server::bind(&ServerConfig::ephemeral(), coord).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    (addr, handle)
+}
+
+/// The structured `stats` endpoint surfaces the batch metrics: the reply is
+/// machine-parseable JSON whose batch-width histogram sums to the jobs
+/// processed and whose `conversions_amortized` is (width−1) per batch.
+#[test]
+fn stats_endpoint_reports_batch_counters() {
+    let (addr, handle) = boot_stub();
+    let mut client = Client::connect(&addr).unwrap();
+    for i in 0..4u64 {
+        let r = client.spdm_synthetic(i, 64, 0.97, "uniform", 7 + i, "gcoo", true).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+        assert_eq!(r.verified, Some(true));
+    }
+    let s = client.stats(50).unwrap();
+    assert!(s.ok);
+    let text = s.metrics.expect("stats reply carries the JSON snapshot");
+    let v = gcoospdm::json::parse(&text).expect("stats payload is valid JSON");
+    assert_eq!(v.get("completed").unwrap().as_u64(), Some(4));
+    let errors = v.get("errors").unwrap().as_u64().unwrap();
+    let hist = v.get("batch_hist").unwrap().as_arr().unwrap();
+    let jobs: u64 = hist
+        .iter()
+        .enumerate()
+        .map(|(w, c)| w as u64 * c.as_u64().unwrap())
+        .sum();
+    assert_eq!(jobs, 4 + errors, "batch histogram sums to jobs processed");
+    let amortized = v.get("conversions_amortized").unwrap().as_u64().unwrap();
+    let expected: u64 = hist
+        .iter()
+        .enumerate()
+        .map(|(w, c)| (w as u64).saturating_sub(1) * c.as_u64().unwrap())
+        .sum();
+    assert_eq!(amortized, expected, "(width−1) per dequeued batch");
+    assert!(v.get("copies_avoided").unwrap().as_u64().is_some());
+    // The human-readable render carries the same counters.
+    let m = client.metrics(51).unwrap();
+    assert!(m.ok);
+    assert!(m.metrics.unwrap().contains("conversions amortized"));
+    client.shutdown(52).unwrap();
     handle.join().unwrap();
 }
 
