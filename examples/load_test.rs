@@ -1,13 +1,18 @@
 //! Open-loop load test: Poisson-arrival workload trace replayed against a
-//! live serving stack — queueing delay vs service time under pressure.
+//! live serving stack — queueing delay vs service time under pressure,
+//! with a shared-A pool exercising the operand-handle path (protocol v2):
+//! each pooled A is registered once (`put_a`), then multiplied by
+//! reference with synthetic Bs, so the report shows the store hit rate and
+//! the server's conversion amortization.
 //!
 //!   cargo run --release --example load_test [requests] [rate_rps]
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use gcoospdm::coordinator::{Coordinator, CoordinatorConfig};
 use gcoospdm::runtime::Registry;
-use gcoospdm::serve::{self, Client, Server, ServerConfig, TraceSpec};
+use gcoospdm::serve::{self, Client, ReplayOutcome, Server, ServerConfig, TraceSpec};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -19,11 +24,12 @@ fn main() {
         registry,
         CoordinatorConfig { workers: 2, queue_cap: 32, ..Default::default() },
     ));
-    let metrics = coord.metrics();
-    let server = Server::bind(&ServerConfig::ephemeral(), coord).unwrap();
+    let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let server_thread = std::thread::spawn(move || server.run().unwrap());
 
+    // A small pool of hot As under zipfian skew — the shape of real
+    // serving traffic (a few hot models dominate).
     let spec = TraceSpec {
         requests,
         rate_rps,
@@ -31,28 +37,55 @@ fn main() {
         sparsities: vec![0.98, 0.99, 0.995],
         patterns: vec!["uniform".into(), "banded".into()],
         seed: 0x10AD,
+        shared_a_pool: 3,
+        shared_a_zipf: 1.0,
     };
+    let pool = serve::shared_pool(&spec);
     let items = serve::generate_trace(&spec);
     println!(
-        "trace: {} requests over {:.1}s (λ={} rps) against {addr}",
+        "trace: {} requests over {:.1}s (λ={} rps), {} shared As (zipf {}), against {addr}",
         items.len(),
         items.last().unwrap().arrival_s,
-        rate_rps
+        rate_rps,
+        pool.len(),
+        spec.shared_a_zipf,
     );
 
-    // Each replay worker holds one connection (connection pool of 4).
-    let conns: Vec<std::sync::Mutex<Client>> = (0..4)
-        .map(|_| std::sync::Mutex::new(Client::connect(&addr).unwrap()))
+    // Each replay worker holds one connection (connection pool of 4);
+    // slot → a_handle fills lazily on first use (a store miss).
+    let conns: Vec<Mutex<Client>> = (0..4)
+        .map(|_| Mutex::new(Client::connect(&addr).unwrap()))
         .collect();
     let next_conn = std::sync::atomic::AtomicUsize::new(0);
+    let handles: Mutex<HashMap<usize, u64>> = Mutex::new(HashMap::new());
     let report = serve::replay_trace(&items, 4, |item| {
         let idx = next_conn.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % conns.len();
         let mut c = conns[idx].lock().unwrap();
-        let r = c
-            .spdm_synthetic(item.id, item.n, item.sparsity, &item.pattern, item.seed, "auto", false)
-            .map_err(|e| e)?;
+        let slot = item.a_slot.expect("pooled trace");
+        // Hold the map lock across the miss path so concurrent workers
+        // cannot double-register a slot and overcount misses (the server
+        // would dedup the handle, but the reported hit rate would skew).
+        // Registrations happen at most pool-size times, so the brief
+        // serialization is irrelevant to the measured traffic.
+        let (handle, outcome) = {
+            let mut map = handles.lock().unwrap();
+            match map.get(&slot).copied() {
+                Some(h) => (h, ReplayOutcome::StoreHit),
+                None => {
+                    let a = &pool[slot];
+                    let r = c.put_a_synthetic(item.id, a.n, a.sparsity, &a.pattern, a.seed, "auto")?;
+                    if !r.ok {
+                        return Err(r.error.unwrap_or_default());
+                    }
+                    let h = r.a_handle.expect("put_a reply carries the handle");
+                    map.insert(slot, h);
+                    (h, ReplayOutcome::StoreMiss)
+                }
+            }
+        };
+        let r = c.spdm_handle_synthetic_b(item.id, handle, item.seed, false)?;
         if r.ok {
-            Ok(())
+            Ok(outcome)
         } else {
             Err(r.error.unwrap_or_default())
         }
@@ -69,7 +102,13 @@ fn main() {
     );
     let max_late = report.lateness_s.iter().copied().fold(0.0, f64::max);
     println!("max queueing lateness: {:.1} ms", max_late * 1e3);
-    println!("\nserver metrics:\n{}", metrics.snapshot().render());
+    println!(
+        "operand store: {} hits / {} misses (hit rate {:.1}%)",
+        report.store_hits,
+        report.store_misses,
+        report.store_hit_rate() * 100.0
+    );
+    println!("\nserver metrics:\n{}", coord.snapshot().render());
     assert_eq!(report.failed, 0);
 
     drop(conns); // close pooled connections before asking for shutdown

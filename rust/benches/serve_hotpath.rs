@@ -1,9 +1,11 @@
 //! Serving hot-path benchmark: requests/sec through the coordinator at
 //! fixed seeds, plus the allocations-avoided counters, an A/B of the
 //! zero-copy arena pipeline against a faithful replica of the pre-arena
-//! copy-heavy path (pad A → convert → pad again → clone slabs), and a
+//! copy-heavy path (pad A → convert → pad again → clone slabs), a
 //! batched-vs-sequential A/B of fused multi-B execution (one A conversion
-//! + one wide kernel per batch vs one conversion per request).
+//! + one wide kernel per batch vs one conversion per request), and a
+//! handle-vs-inline A/B of the operand store (register A once, multiply
+//! by reference vs re-ship + re-convert per request — EO amortization).
 //!
 //! The engine only needs artifact files to *exist*, so the bench fabricates
 //! a runnable registry under `target/` — no `make artifacts` required.
@@ -17,8 +19,8 @@ use std::time::Instant;
 
 use gcoospdm::convert;
 use gcoospdm::coordinator::{
-    process_batch_ws, process_one_ws, Coordinator, CoordinatorConfig, Selector, SpdmRequest,
-    Workspace,
+    process_batch_ws, process_one_ws, BatchJob, Coordinator, CoordinatorConfig, Selector,
+    SpdmRequest, Workspace,
 };
 use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
@@ -65,7 +67,8 @@ fn workload(count: usize) -> Vec<SpdmRequest> {
 /// capacity, clone the slabs (the old `engine.run_gcoo` always cloned),
 /// pad B — every step a fresh allocation.
 fn baseline_one(engine: &Engine, reg: &Registry, cfg: &CoordinatorConfig, req: &SpdmRequest) -> Mat {
-    let n = req.a.rows;
+    let req_a = req.a.as_inline().expect("bench workload is inline");
+    let n = req_a.rows;
     let pad = |m: &Mat, to: usize| {
         let mut out = Mat::zeros(to, to);
         for i in 0..m.rows {
@@ -77,14 +80,14 @@ fn baseline_one(engine: &Engine, reg: &Registry, cfg: &CoordinatorConfig, req: &
     let mut nnz = 0usize;
     let mut max_row = 0usize;
     for i in 0..n {
-        let rn = req.a.row(i).iter().filter(|v| **v != 0.0).count();
+        let rn = req_a.row(i).iter().filter(|v| **v != 0.0).count();
         nnz += rn;
         max_row = max_row.max(rn);
     }
     let sparsity = 1.0 - nnz as f64 / (n * n) as f64;
     // guess-convert at fit size
     let n_exec_guess = reg.fit_size("gcoo", n).unwrap_or(n);
-    let a_pad = pad(&req.a, n_exec_guess);
+    let a_pad = pad(req_a, n_exec_guess);
     let (gcoo, _t) = convert::dense_to_gcoo_parallel(&a_pad, cfg.gcoo_p, cfg.convert_threads);
     let selector = Selector::new(cfg.policy);
     let plan = selector
@@ -153,17 +156,17 @@ fn main() {
         // sides of the A/B then exercise the same algorithm and artifact.
         let sparse: Vec<SpdmRequest> = workload(iters)
             .into_iter()
-            .filter(|r| r.a.rows == 256 && r.id % 5 != 4)
+            .filter(|r| r.a.as_inline().map(|a| a.rows) == Some(256) && r.id % 5 != 4)
             .collect();
         let engine = Engine::new().unwrap();
         let mut ws = Workspace::new();
         // warm the arena + compile cache outside the timers
         for r in sparse.iter().take(2) {
-            let _ = process_one_ws(&engine, &mut ws, &reg, &cfg, r, Instant::now());
+            let _ = process_one_ws(&engine, &mut ws, &reg, &cfg, r, None, Instant::now());
         }
         let t0 = Instant::now();
         for r in &sparse {
-            let resp = process_one_ws(&engine, &mut ws, &reg, &cfg, r, Instant::now());
+            let resp = process_one_ws(&engine, &mut ws, &reg, &cfg, r, None, Instant::now());
             assert!(resp.ok(), "{:?}", resp.error);
         }
         let arena_s = t0.elapsed().as_secs_f64();
@@ -204,19 +207,19 @@ fn main() {
 
         let mut ws_seq = Workspace::new();
         for r in reqs.iter().take(2) {
-            let _ = process_one_ws(&engine, &mut ws_seq, &reg, &cfg, r, Instant::now());
+            let _ = process_one_ws(&engine, &mut ws_seq, &reg, &cfg, r, None, Instant::now());
         }
         let t0 = Instant::now();
         let seq: Vec<_> = reqs
             .iter()
-            .map(|r| process_one_ws(&engine, &mut ws_seq, &reg, &cfg, r, Instant::now()))
+            .map(|r| process_one_ws(&engine, &mut ws_seq, &reg, &cfg, r, None, Instant::now()))
             .collect();
         let seq_s = t0.elapsed().as_secs_f64();
 
         let mut ws_bat = Workspace::new();
         {
-            let warm: Vec<(&SpdmRequest, Instant)> =
-                reqs.iter().take(width).map(|r| (r, Instant::now())).collect();
+            let warm: Vec<BatchJob<'_>> =
+                reqs.iter().take(width).map(|r| BatchJob::inline(r, Instant::now())).collect();
             let _ = process_batch_ws(&engine, &mut ws_bat, &reg, &cfg, &warm);
         }
         let t1 = Instant::now();
@@ -224,8 +227,8 @@ fn main() {
         let mut batches = 0u64;
         let mut amortized = 0u64;
         for chunk in reqs.chunks(width) {
-            let jobs: Vec<(&SpdmRequest, Instant)> =
-                chunk.iter().map(|r| (r, Instant::now())).collect();
+            let jobs: Vec<BatchJob<'_>> =
+                chunk.iter().map(|r| BatchJob::inline(r, Instant::now())).collect();
             bat.extend(process_batch_ws(&engine, &mut ws_bat, &reg, &cfg, &jobs));
             batches += 1;
             amortized += (chunk.len() - 1) as u64;
@@ -247,6 +250,82 @@ fn main() {
         println!(
             "batched: {count} jobs in {batches} batches, {amortized} conversions amortized ({} per batch at full width)",
             width - 1
+        );
+    }
+
+    // --- Phase 4: handle vs inline A/B (operand store, fixed seeds) ---
+    // The register-once proposition: k requests sharing one A pay one
+    // conversion total when A is registered (`put_a` + multiply-by-handle)
+    // vs one conversion per request when every request re-ships A inline.
+    // Both sides run through the live coordinator with identical operand
+    // values; outputs are asserted bitwise identical before reporting.
+    {
+        let count = if quick { 24 } else { 120 };
+        let mut rng = Rng::new(3000);
+        let a = gen::uniform(256, 0.99, &mut rng);
+        let bs: Vec<Mat> = (0..count).map(|_| Mat::randn(256, 256, &mut rng)).collect();
+
+        // Inline side: its own coordinator so the conversion counters are
+        // clean. Synchronous submits → width-1 batches → one conversion
+        // per request, the v1 cost model.
+        let coord = Coordinator::new(
+            Arc::new(registry()),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        );
+        // warm — its conversion is excluded from the reported count so the
+        // printed amortization line covers exactly the timed requests.
+        let warm = coord.run_sync(SpdmRequest::new(9999, a.clone(), bs[0].clone()));
+        assert!(warm.ok(), "{:?}", warm.error);
+        let inline_conv0 = coord.snapshot().conversions_total;
+        let t0 = Instant::now();
+        let inline: Vec<_> = bs
+            .iter()
+            .enumerate()
+            .map(|(i, b)| coord.run_sync(SpdmRequest::new(i as u64, a.clone(), b.clone())))
+            .collect();
+        let inline_s = t0.elapsed().as_secs_f64();
+        let inline_conversions = coord.snapshot().conversions_total - inline_conv0;
+        coord.shutdown();
+
+        // Handle side: register once, multiply by reference.
+        let coord = Coordinator::new(
+            Arc::new(registry()),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        );
+        let entry = coord.put_a(a.clone(), None).expect("put_a");
+        let warm = coord.run_sync(SpdmRequest::for_handle(9999, entry.handle, bs[0].clone()));
+        assert!(warm.ok(), "{:?}", warm.error);
+        let t1 = Instant::now();
+        let by_handle: Vec<_> = bs
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                coord.run_sync(SpdmRequest::for_handle(i as u64, entry.handle, b.clone()))
+            })
+            .collect();
+        let handle_s = t1.elapsed().as_secs_f64();
+        let handle_conversions = coord.snapshot().conversions_total;
+        coord.shutdown();
+
+        for (i, (l, h)) in inline.iter().zip(&by_handle).enumerate() {
+            assert!(l.ok() && h.ok(), "[{i}] {:?} / {:?}", l.error, h.error);
+            assert!(l.c == h.c, "[{i}] handle path must be bitwise identical to inline");
+        }
+        let inline_rps = count as f64 / inline_s;
+        let handle_rps = count as f64 / handle_s;
+        println!(
+            "handle vs inline (operand store): by-handle {:.1} req/s | inline {:.1} req/s | speedup {:.2}x",
+            handle_rps,
+            inline_rps,
+            handle_rps / inline_rps
+        );
+        println!(
+            "EO amortization: {count} requests paid {} conversions by handle (1 at put_a) vs {} inline",
+            handle_conversions, inline_conversions
+        );
+        assert_eq!(
+            handle_conversions, 1,
+            "handle traffic must convert exactly once (at registration)"
         );
     }
 }

@@ -1,5 +1,6 @@
 //! Job types crossing the coordinator boundary.
 
+use super::store::{OperandEntry, OperandId};
 use crate::ndarray::Mat;
 
 /// Algorithm families (defined next to the planner in `runtime::plan`,
@@ -44,29 +45,83 @@ impl ASig {
     }
 }
 
+/// How a request supplies its A operand: shipped inline with the request,
+/// or by reference to an A previously registered in the coordinator's
+/// [`super::OperandStore`] (`put_a` on the wire). Handle requests pay no
+/// A transfer, no signature hash, and no conversion — the store entry
+/// already holds the converted device slabs at the planned capacity.
+#[derive(Clone, Debug)]
+pub enum AOperand {
+    /// The dense A travels with the request (the v1 contract).
+    Inline(Mat),
+    /// Reference to a registered operand; resolved (and pinned) by
+    /// [`super::Coordinator::submit`].
+    Handle(OperandId),
+}
+
+impl AOperand {
+    /// The inline matrix, when this operand carries one.
+    pub fn as_inline(&self) -> Option<&Mat> {
+        match self {
+            AOperand::Inline(m) => Some(m),
+            AOperand::Handle(_) => None,
+        }
+    }
+
+    /// The operand handle, when this is a by-reference operand.
+    pub fn handle(&self) -> Option<OperandId> {
+        match self {
+            AOperand::Inline(_) => None,
+            AOperand::Handle(h) => Some(*h),
+        }
+    }
+}
+
 /// One SpDM request: C = A·B with A treated as sparse.
 ///
-/// `a` is treated as immutable after construction: the batch-affinity
-/// signature is computed in [`SpdmRequest::new`], so mutating `a` in place
-/// afterwards would let the batcher fuse requests whose As differ. Build a
-/// fresh request instead.
+/// An inline `a` is treated as immutable after construction: the
+/// batch-affinity signature is computed in [`SpdmRequest::new`], so
+/// mutating it in place afterwards would let the batcher fuse requests
+/// whose As differ. Build a fresh request instead.
 #[derive(Clone, Debug)]
 pub struct SpdmRequest {
     pub id: u64,
-    pub a: Mat,
+    pub a: AOperand,
     pub b: Mat,
     /// Force a specific algorithm (None = selector decides).
     pub algo_hint: Option<Algo>,
     /// Verify the result against the CPU oracle (costs O(nnz·n)).
     pub verify: bool,
-    /// Batch-affinity key over `a` (see [`ASig`]), computed at submit.
+    /// Batch-affinity key over A (see [`ASig`]): computed at construction
+    /// for inline operands; for handle operands a placeholder until
+    /// [`super::Coordinator::submit`] copies the store entry's signature in.
     pub a_sig: ASig,
 }
 
 impl SpdmRequest {
+    /// Inline-A request (the v1 constructor — unchanged call shape).
     pub fn new(id: u64, a: Mat, b: Mat) -> Self {
         let a_sig = ASig::of(&a);
-        SpdmRequest { id, a, b, algo_hint: None, verify: false, a_sig }
+        SpdmRequest { id, a: AOperand::Inline(a), b, algo_hint: None, verify: false, a_sig }
+    }
+
+    /// Handle-A request. The signature is a placeholder derived from the
+    /// handle (never equal across distinct handles); `Coordinator::submit`
+    /// replaces it with the registered entry's true content signature so
+    /// mixed handle/inline traffic batches on equal content.
+    pub fn for_handle(id: u64, handle: OperandId, b: Mat) -> Self {
+        let a_sig = ASig { rows: 0, cols: 0, nnz: 0, hash: handle.0 };
+        SpdmRequest { id, a: AOperand::Handle(handle), b, algo_hint: None, verify: false, a_sig }
+    }
+
+    /// The dense A this request multiplies by: the inline payload, or the
+    /// resolved store entry for handle requests. `None` when a handle has
+    /// not been resolved (or `entry` belongs to a different handle).
+    pub fn a_mat<'a>(&'a self, entry: Option<&'a OperandEntry>) -> Option<&'a Mat> {
+        match &self.a {
+            AOperand::Inline(m) => Some(m),
+            AOperand::Handle(h) => entry.filter(|e| e.handle == *h).map(|e| &e.a),
+        }
     }
 }
 
@@ -94,6 +149,10 @@ pub struct SpdmResponse {
     /// Materializations skipped by borrowing (matching-size B, matching-cap
     /// slabs, matching-size C moved out instead of trimmed).
     pub copies_avoided: u64,
+    /// Dense→sparse conversions this request actually performed: 1 on the
+    /// inline sparse paths (the batch head for fused execution), 0 for
+    /// handle requests served from cached slabs and for dense routing.
+    pub conversions: u64,
 }
 
 impl SpdmResponse {
@@ -111,6 +170,7 @@ impl SpdmResponse {
             c: None,
             bytes_copied: 0,
             copies_avoided: 0,
+            conversions: 0,
         }
     }
 

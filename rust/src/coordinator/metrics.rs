@@ -22,12 +22,19 @@ pub struct Metrics {
     /// Materializations skipped by borrowing (matching-size/matching-cap
     /// zero-copy paths).
     pub copies_avoided: AtomicU64,
-    /// Amortization credit of the fused batch path: width−1 per dequeued
-    /// batch (a width-w sparse batch converts its shared A once instead of
-    /// w times). Defined per *batch*, not per conversion actually skipped —
-    /// dense-routed batches convert nothing either way, so on mixed
-    /// traffic this is an upper bound on skipped conversions.
+    /// Amortization credit of the fused batch path: A conversions skipped
+    /// relative to one-at-a-time execution, credited per dequeued batch
+    /// from actual per-response accounting (jobs that would have converted
+    /// solo minus conversions the batch really performed). Exact on every
+    /// traffic mix: a width-w inline sparse batch credits w−1, dense
+    /// batches credit 0, and handle traffic credits 0 (it converts zero
+    /// whether fused or not — EO was paid at `put_a`).
     pub conversions_amortized: AtomicU64,
+    /// Dense→sparse conversions actually performed (the paper's EO
+    /// events): one per inline sparse request (one per *batch* under
+    /// fusion), one per registered operand — and **zero** per
+    /// multiply-by-handle, which is the whole point of the operand store.
+    pub conversions_total: AtomicU64,
     /// Batch-width histogram: `batch_widths[w]` counts dequeued batches of
     /// width w (index 0 unused), so Σ w·batch_widths[w] = jobs processed.
     batch_widths: Mutex<Vec<u64>>,
@@ -54,6 +61,7 @@ impl Metrics {
             bytes_copied: AtomicU64::new(0),
             copies_avoided: AtomicU64::new(0),
             conversions_amortized: AtomicU64::new(0),
+            conversions_total: AtomicU64::new(0),
             batch_widths: Mutex::new(Vec::new()),
             latencies_s: Mutex::new(Vec::new()),
             kernel_s: Mutex::new(Vec::new()),
@@ -86,9 +94,18 @@ impl Metrics {
         self.copies_avoided.fetch_add(copies_avoided, Ordering::Relaxed);
     }
 
-    /// Record one dequeued batch of `width` jobs: bumps the width histogram
-    /// and credits width−1 amortized conversions (the A conversions the
-    /// fused execution path skipped relative to sequential processing).
+    /// Record dense→sparse conversions actually performed (request paths
+    /// report theirs per response; `put_a` registration reports its one).
+    pub fn record_conversions(&self, count: u64) {
+        if count > 0 {
+            self.conversions_total.fetch_add(count, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one dequeued batch of `width` jobs in the width histogram.
+    /// The amortization credit is reported separately via
+    /// [`Metrics::record_amortized`] once the batch's responses reveal how
+    /// many conversions it actually skipped.
     pub fn record_batch(&self, width: usize) {
         if width == 0 {
             return;
@@ -98,8 +115,13 @@ impl Metrics {
             hist.resize(width + 1, 0);
         }
         hist[width] += 1;
-        if width > 1 {
-            self.conversions_amortized.fetch_add((width - 1) as u64, Ordering::Relaxed);
+    }
+
+    /// Credit A conversions a batch skipped relative to one-at-a-time
+    /// execution (computed by the worker from the batch's responses).
+    pub fn record_amortized(&self, skipped: u64) {
+        if skipped > 0 {
+            self.conversions_amortized.fetch_add(skipped, Ordering::Relaxed);
         }
     }
 
@@ -117,6 +139,13 @@ impl Metrics {
             bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
             copies_avoided: self.copies_avoided.load(Ordering::Relaxed),
             conversions_amortized: self.conversions_amortized.load(Ordering::Relaxed),
+            conversions_total: self.conversions_total.load(Ordering::Relaxed),
+            store_entries: 0,
+            store_bytes: 0,
+            store_budget_bytes: 0,
+            store_hits: 0,
+            store_misses: 0,
+            store_evictions: 0,
             batch_hist: self.batch_widths.lock().unwrap().clone(),
             throughput_rps: completed as f64 / elapsed.max(1e-9),
             p50_s: pct(&lat, 50.0),
@@ -155,6 +184,18 @@ pub struct MetricsSnapshot {
     pub bytes_copied: u64,
     pub copies_avoided: u64,
     pub conversions_amortized: u64,
+    /// Dense→sparse conversions actually performed (EO events). Constant
+    /// per handle under multiply-by-reference traffic: one at `put_a`,
+    /// zero per subsequent handle request.
+    pub conversions_total: u64,
+    /// Operand-store gauges, filled by `Coordinator::snapshot` (zero from
+    /// a bare `Metrics::snapshot`, which has no store in scope).
+    pub store_entries: u64,
+    pub store_bytes: u64,
+    pub store_budget_bytes: u64,
+    pub store_hits: u64,
+    pub store_misses: u64,
+    pub store_evictions: u64,
     /// `batch_hist[w]` = dequeued batches of width w (index 0 unused).
     pub batch_hist: Vec<u64>,
     pub throughput_rps: f64,
@@ -184,6 +225,7 @@ impl MetricsSnapshot {
              phases:   kernel {:.3} ms  convert {:.3} ms (means)\n\
              copies:   {} B copied / {} avoided (zero-copy borrows)\n\
              batches:  width hist {:?} / {} conversions amortized\n\
+             store:    {} operands / {} B of {} B budget / {} hits / {} misses / {} evictions / {} conversions total\n\
              rate:     {:.1} req/s   per-algo: {:?}",
             self.submitted,
             self.completed,
@@ -198,6 +240,13 @@ impl MetricsSnapshot {
             self.copies_avoided,
             self.batch_hist,
             self.conversions_amortized,
+            self.store_entries,
+            self.store_bytes,
+            self.store_budget_bytes,
+            self.store_hits,
+            self.store_misses,
+            self.store_evictions,
+            self.conversions_total,
             self.throughput_rps,
             self.per_algo,
         )
@@ -223,6 +272,13 @@ impl MetricsSnapshot {
                 .field("bytes_copied", self.bytes_copied)
                 .field("copies_avoided", self.copies_avoided)
                 .field("conversions_amortized", self.conversions_amortized)
+                .field("conversions_total", self.conversions_total)
+                .field("store_entries", self.store_entries)
+                .field("store_bytes", self.store_bytes)
+                .field("store_budget_bytes", self.store_budget_bytes)
+                .field("store_hits", self.store_hits)
+                .field("store_misses", self.store_misses)
+                .field("store_evictions", self.store_evictions)
                 .field("batch_hist", hist)
                 .field("throughput_rps", self.throughput_rps)
                 .field("p50_ms", self.p50_s * 1e3)
@@ -277,11 +333,14 @@ mod tests {
     #[test]
     fn batch_histogram_and_amortized_conversions() {
         let m = Metrics::new();
-        // Batches of widths 3, 1, 3, 5 → 12 jobs, (2+0+2+4)=8 amortized.
+        // Batches of widths 3, 1, 3, 5 → 12 jobs; the all-inline-sparse
+        // worker credit for those widths is (2+0+2+4)=8 amortized.
         for w in [3usize, 1, 3, 5] {
             m.record_batch(w);
+            m.record_amortized((w - 1) as u64);
         }
         m.record_batch(0); // ignored
+        m.record_amortized(0); // no-op
         let s = m.snapshot();
         assert_eq!(s.batch_hist[1], 1);
         assert_eq!(s.batch_hist[3], 2);
@@ -296,6 +355,7 @@ mod tests {
         let m = Metrics::new();
         m.record_completion("gcoo", 0.010, 0.004, 0.002);
         m.record_batch(4);
+        m.record_amortized(3);
         let text = m.snapshot().to_json();
         let v = crate::json::parse(&text).expect("stats snapshot is valid JSON");
         assert_eq!(v.get("completed").unwrap().as_u64(), Some(1));
@@ -303,5 +363,29 @@ mod tests {
         let hist = v.get("batch_hist").unwrap().as_arr().unwrap();
         assert_eq!(hist[4].as_u64(), Some(1));
         assert_eq!(v.get("per_algo").unwrap().get("gcoo").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn conversion_and_store_counters_surface() {
+        let m = Metrics::new();
+        m.record_conversions(1);
+        m.record_conversions(0); // no-op
+        m.record_conversions(2);
+        let mut s = m.snapshot();
+        assert_eq!(s.conversions_total, 3);
+        // Store gauges are merged in by Coordinator::snapshot; simulate.
+        s.store_entries = 2;
+        s.store_bytes = 4096;
+        s.store_budget_bytes = 8192;
+        s.store_hits = 7;
+        s.store_misses = 1;
+        s.store_evictions = 1;
+        assert!(s.render().contains("2 operands / 4096 B of 8192 B budget"));
+        assert!(s.render().contains("3 conversions total"));
+        let v = crate::json::parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("conversions_total").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("store_hits").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("store_bytes").unwrap().as_u64(), Some(4096));
+        assert_eq!(v.get("store_evictions").unwrap().as_u64(), Some(1));
     }
 }

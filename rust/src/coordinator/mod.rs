@@ -1,9 +1,12 @@
 //! Coordinator — the L3 serving layer: bounded job queue with backpressure,
 //! plan-first algorithm selection (the sparsity/size routing policy the
 //! paper's conclusions prescribe, resolved to a concrete artifact before
-//! any conversion), A-signature-keyed batching with fused multi-B
-//! execution (one conversion + one wide kernel per batch), a worker pool
-//! with per-worker engines + workspace arenas, and metrics.
+//! any conversion), a converted-operand store (`put_a` once,
+//! multiply-by-handle forever — registration pays the one conversion,
+//! handle traffic executes from cached slabs), operand-keyed batching with
+//! fused multi-B execution (one conversion + one wide kernel per batch; no
+//! conversion at all for cached operands), a worker pool with per-worker
+//! engines + workspace arenas, and metrics.
 //!
 //! The paper's contribution is the kernel, so this layer is deliberately a
 //! *thin but real* serving stack (DESIGN.md §1 L3): everything a downstream
@@ -14,15 +17,19 @@ mod queue;
 mod selector;
 mod metrics;
 mod pool;
+mod store;
 mod workspace;
 
-pub use job::{ASig, Algo, SpdmRequest, SpdmResponse};
+pub use job::{AOperand, ASig, Algo, SpdmRequest, SpdmResponse};
 pub use queue::BoundedQueue;
 pub use selector::{Selector, SelectorPolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use pool::{
-    batch_affine, process_batch_ws, process_one, process_one_ws, Coordinator,
+    batch_affine, process_batch_ws, process_one, process_one_ws, BatchJob, Coordinator,
     CoordinatorConfig, SubmitError,
+};
+pub use store::{
+    OperandEntry, OperandId, OperandPin, OperandStore, OperandSummary, StoreStats,
 };
 pub use workspace::Workspace;
 // The selector's output type lives next to the engine (`runtime::plan`);

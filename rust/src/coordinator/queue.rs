@@ -4,10 +4,13 @@
 //! `push` blocks when the queue is full (producers feel backpressure instead
 //! of OOMing the coordinator); `pop_batch` removes up to `max` jobs that the
 //! caller's affinity predicate groups with the head job. The coordinator
-//! keys the predicate on the A-signature (`pool::batch_affine`), so a
-//! dequeued batch provably shares one A operand and the worker executes it
-//! **fused**: one A conversion, one wide kernel over the stacked Bs, one
-//! warm compiled executable (see `pool.rs` and DESIGN.md §Batching).
+//! keys the predicate on the A operand (`pool::batch_affine`: handle
+//! equality for registered operands, the content signature otherwise), so
+//! a dequeued batch provably shares one A operand and the worker executes
+//! it **fused**: at most one A conversion (none when the operand is
+//! registered — the store's cached slabs serve the whole batch), one wide
+//! kernel over the stacked Bs, one warm compiled executable (see
+//! `pool.rs` and DESIGN.md §Batching).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

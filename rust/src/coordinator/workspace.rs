@@ -3,8 +3,9 @@
 //! stacked-C wide buffers behind fused multi-B batch execution
 //! (DESIGN.md §Batching).
 //!
-//! **Ownership rule: one `Workspace` per coordinator worker, owned next to
-//! that worker's engine, never shared.** Every buffer here is borrowed by
+//! **Ownership rule: mutable scratch per worker; immutable converted
+//! operands shared.** One `Workspace` per coordinator worker, owned next
+//! to that worker's engine, never shared: every buffer here is borrowed by
 //! in-flight slab views during a request (`GcooSlabs`/`EllSlabs` point
 //! straight into `gcoo_*`/`ell_*`), so sharing a workspace across threads —
 //! or across two concurrently processed requests — would corrupt the slabs
@@ -13,6 +14,13 @@
 //! per-request allocation on the A-side path**: every buffer is resized in
 //! place (`Vec::resize` / [`crate::ndarray::Mat::zero_into`]) and reaches a
 //! stable capacity after the first request of each shape.
+//!
+//! The *shared* half of the rule is the operand store
+//! (`coordinator/store.rs`): registered As and their converted device
+//! slabs are frozen at registration and shared into workers via `Arc`, so
+//! engines borrow cached slabs directly instead of scattering into this
+//! arena — handle traffic touches the workspace only for B padding and
+//! the stacked wide buffers.
 
 use crate::ndarray::Mat;
 

@@ -27,9 +27,35 @@ use std::collections::HashSet;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::plan::{Algo, ExecPlan};
 use super::{ArtifactMeta, Registry, RuntimeError};
 use crate::ndarray::Mat;
 use crate::sparse::{Ell, EllSlabs, GcooPadded, GcooSlabs};
+
+/// An operand's converted device form — what the coordinator's operand
+/// store caches at registration so handle traffic executes straight from
+/// slabs, skipping conversion entirely (the paper's EO, paid once per
+/// registered A instead of once per request).
+#[derive(Clone, Debug)]
+pub enum DeviceOperand {
+    /// GCOO slabs at the plan's `(g, cap)` geometry.
+    Gcoo(GcooPadded),
+    /// ELL slabs at the plan's `(n, rowcap)` geometry.
+    Ell(Ell),
+    /// Dense A padded to the plan's execution size.
+    Dense(Mat),
+}
+
+impl DeviceOperand {
+    /// Bytes held by this device form (the operand store's budget unit).
+    pub fn bytes(&self) -> usize {
+        match self {
+            DeviceOperand::Gcoo(p) => p.as_slabs().bytes(),
+            DeviceOperand::Ell(e) => e.as_slabs().bytes(),
+            DeviceOperand::Dense(m) => m.data.len() * 4,
+        }
+    }
+}
 
 /// Slab-movement accounting for one execution: bytes the engine had to
 /// copy (capacity re-pads) vs. materializations it skipped by borrowing
@@ -278,6 +304,51 @@ impl Engine {
         let y = gcoo_spmv_cpu(vals, rows, cols, slabs.g, cap, slabs.p, x);
         let kernel_s = t0.elapsed().as_secs_f64();
         Ok((y, kernel_s, meta.name.clone()))
+    }
+
+    /// Execute a resolved plan directly from a cached [`DeviceOperand`] —
+    /// the handle-path entry: no stats scan, no conversion, no padding of
+    /// A; the store already holds the device form at the plan's capacity,
+    /// so sparse execution takes the matching-cap borrow path. `b` may be
+    /// wide (`n_exec × w·n_exec`) for a fused batch; C is written into the
+    /// caller-owned buffer (the worker's stacked-C staging).
+    pub fn run_operand_into(
+        &self,
+        reg: &Registry,
+        plan: &ExecPlan,
+        op: &DeviceOperand,
+        b: &Mat,
+        c: &mut Mat,
+    ) -> Result<ExecStats, RuntimeError> {
+        match (plan.algo, op) {
+            (Algo::Gcoo | Algo::GcooNoreuse, DeviceOperand::Gcoo(p)) => {
+                self.run_gcoo_slabs_into(reg, p.as_slabs(), b, plan.algo == Algo::Gcoo, c)
+            }
+            (Algo::Csr, DeviceOperand::Ell(e)) => self.run_ell_slabs_into(reg, e.as_slabs(), b, c),
+            (Algo::DenseXla | Algo::DensePallas, DeviceOperand::Dense(a)) => {
+                let out = self.run_dense(reg, plan.algo.as_str(), a, b)?;
+                *c = out.c;
+                Ok(ExecStats { kernel_s: out.kernel_s, artifact: out.artifact, copy: out.copy })
+            }
+            _ => Err(RuntimeError::Shape(format!(
+                "device operand family does not match plan algo {}",
+                plan.algo.as_str()
+            ))),
+        }
+    }
+
+    /// [`Engine::run_operand_into`] returning an owned C (single-request
+    /// handle path).
+    pub fn run_operand(
+        &self,
+        reg: &Registry,
+        plan: &ExecPlan,
+        op: &DeviceOperand,
+        b: &Mat,
+    ) -> Result<SpdmOutput, RuntimeError> {
+        let mut c = Mat::zeros(0, 0);
+        let s = self.run_operand_into(reg, plan, op, b, &mut c)?;
+        Ok(SpdmOutput { c, kernel_s: s.kernel_s, artifact: s.artifact, copy: s.copy })
     }
 
     /// Run a dense baseline ("dense_xla" = the vendor GEMM, "dense_pallas"
@@ -562,6 +633,57 @@ mod tests {
         };
         let err = engine.run_gcoo(&reg, &padded, &b, true);
         assert!(matches!(err, Err(RuntimeError::Shape(_))), "{err:?}");
+    }
+
+    /// `run_operand` executes a cached device form at the plan's capacity
+    /// (borrow path, no repad) and rejects a plan/operand family mismatch
+    /// as a shape error rather than running the wrong kernel.
+    #[test]
+    fn run_operand_dispatches_and_rejects_family_mismatch() {
+        let dir = std::path::PathBuf::from("target/engine_operand_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("stub.hlo.txt"), b"stub").unwrap();
+        let manifest = r#"{"artifacts": [
+            {"name": "gcoo_n16_cap16", "algo": "gcoo", "n": 16,
+             "params": {"p": 8, "cap": 16}, "inputs": [], "file": "stub.hlo.txt"},
+            {"name": "dense_xla_n16", "algo": "dense_xla", "n": 16,
+             "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+        ]}"#;
+        let reg = Registry::from_manifest_json(manifest, dir).unwrap();
+        let engine = Engine::new().unwrap();
+        let mut rng = Rng::new(49);
+        let a = Mat::eye(16); // 8 nnz per band: fits the cap=16 artifact
+        let b = Mat::randn(16, 16, &mut rng);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let plan = ExecPlan {
+            algo: Algo::Gcoo,
+            n_exec: 16,
+            cap: 16,
+            artifact: "gcoo_n16_cap16".into(),
+            reason: "test",
+            width: 1,
+        };
+        let op = DeviceOperand::Gcoo(gcoo.pad(16).unwrap());
+        assert_eq!(op.bytes(), 2 * 16 * 12, "g·cap slabs at 12 B/slot");
+        let out = engine.run_operand(&reg, &plan, &op, &b).unwrap();
+        assert!(out.c.allclose(&a.matmul(&b), 1e-4, 1e-4));
+        assert_eq!(out.copy.copies_avoided, 1, "cached slabs at plan cap must borrow");
+        assert_eq!(out.copy.bytes_copied, 0);
+        // Plan/operand family mismatch → shape error, nothing executed.
+        let dense_plan = ExecPlan {
+            algo: Algo::DenseXla,
+            n_exec: 16,
+            cap: 0,
+            artifact: "dense_xla_n16".into(),
+            reason: "test",
+            width: 1,
+        };
+        let err = engine.run_operand(&reg, &dense_plan, &op, &b);
+        assert!(matches!(err, Err(RuntimeError::Shape(_))), "{err:?}");
+        // Dense operand runs the GEMM path, moving C into the caller buffer.
+        let dop = DeviceOperand::Dense(a.clone());
+        let out = engine.run_operand(&reg, &dense_plan, &dop, &b).unwrap();
+        assert!(out.c.allclose(&a.matmul(&b), 1e-4, 1e-4));
     }
 
     // Engine runs against a real artifacts directory live in

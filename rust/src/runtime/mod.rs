@@ -13,7 +13,7 @@ mod engine;
 mod plan;
 
 pub use registry::{ArtifactMeta, InputSpec, Registry};
-pub use engine::{CopyStats, Engine, ExecStats, SpdmOutput};
+pub use engine::{CopyStats, DeviceOperand, Engine, ExecStats, SpdmOutput};
 pub use plan::{Algo, ExecPlan};
 
 /// Errors from the runtime layer.

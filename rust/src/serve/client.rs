@@ -92,7 +92,6 @@ impl Client {
         b: &[f32],
         verify: bool,
     ) -> Result<Response, String> {
-        let to_arr = |xs: &[f32]| Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect());
         let line = crate::json::write(
             &Value::obj()
                 .field("id", id)
@@ -106,4 +105,116 @@ impl Client {
         );
         self.round_trip(&line)
     }
+
+    /// v2: register an inline A operand. The reply's `a_handle` names it;
+    /// `algo`/`artifact`/`n_exec`/`reason`/`convert_ms` expose the resolved
+    /// routing and the one-time conversion cost.
+    pub fn put_a_inline(
+        &mut self,
+        id: u64,
+        n: usize,
+        a: &[f32],
+        algo: &str,
+    ) -> Result<Response, String> {
+        let line = crate::json::write(
+            &Value::obj()
+                .field("id", id)
+                .field("type", "put_a")
+                .field("n", n)
+                .field("payload", "inline")
+                .field("a", to_arr(a))
+                .field("algo", algo)
+                .build(),
+        );
+        self.round_trip(&line)
+    }
+
+    /// v2: register a synthetic A operand (server-side generation).
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_a_synthetic(
+        &mut self,
+        id: u64,
+        n: usize,
+        sparsity: f64,
+        pattern: &str,
+        seed: u64,
+        algo: &str,
+    ) -> Result<Response, String> {
+        let line = crate::json::write(
+            &Value::obj()
+                .field("id", id)
+                .field("type", "put_a")
+                .field("n", n)
+                .field("payload", "synthetic")
+                .field("sparsity", sparsity)
+                .field("pattern", pattern)
+                .field("seed", seed)
+                .field("algo", algo)
+                .build(),
+        );
+        self.round_trip(&line)
+    }
+
+    /// v2: multiply a registered A by an inline B.
+    pub fn spdm_handle(
+        &mut self,
+        id: u64,
+        a_handle: u64,
+        b: &[f32],
+        verify: bool,
+    ) -> Result<Response, String> {
+        let line = crate::json::write(
+            &Value::obj()
+                .field("id", id)
+                .field("type", "spdm")
+                .field("a_handle", a_handle)
+                .field("b", to_arr(b))
+                .field("verify", verify)
+                .build(),
+        );
+        self.round_trip(&line)
+    }
+
+    /// v2: multiply a registered A by a synthetic (seeded) B — handle reuse
+    /// without shipping n² floats per request.
+    pub fn spdm_handle_synthetic_b(
+        &mut self,
+        id: u64,
+        a_handle: u64,
+        seed: u64,
+        verify: bool,
+    ) -> Result<Response, String> {
+        let line = crate::json::write(
+            &Value::obj()
+                .field("id", id)
+                .field("type", "spdm")
+                .field("a_handle", a_handle)
+                .field("seed", seed)
+                .field("verify", verify)
+                .build(),
+        );
+        self.round_trip(&line)
+    }
+
+    /// v2: drop a registered operand.
+    pub fn drop_a(&mut self, id: u64, a_handle: u64) -> Result<Response, String> {
+        self.round_trip(&crate::json::write(
+            &Value::obj()
+                .field("id", id)
+                .field("type", "drop_a")
+                .field("a_handle", a_handle)
+                .build(),
+        ))
+    }
+
+    /// v2: list registered operands (the reply's `handles` rows).
+    pub fn list_a(&mut self, id: u64) -> Result<Response, String> {
+        self.round_trip(&crate::json::write(
+            &Value::obj().field("id", id).field("type", "list_a").build(),
+        ))
+    }
+}
+
+fn to_arr(xs: &[f32]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
 }

@@ -1,16 +1,24 @@
 //! Serving layer: line-delimited-JSON protocol over TCP, server and client.
 //!
-//! The request path is rust-only: a request either carries inline matrix
-//! data or (for benchmarking and the examples) a synthetic-workload spec the
-//! server materializes with [`crate::gen`] before handing the job to the
-//! coordinator.
+//! The request path is rust-only: a request carries inline matrix data, a
+//! synthetic-workload spec the server materializes with [`crate::gen`], or
+//! (protocol v2) an `a_handle` referencing an operand registered once via
+//! `put_a` and served from the coordinator's converted-operand store —
+//! the register-once / multiply-by-reference contract that amortizes the
+//! paper's conversion overhead across all traffic sharing an A.
 
 mod protocol;
 mod server;
 mod client;
 mod trace;
 
-pub use protocol::{Request, Response, Payload, parse_request, render_response, parse_response};
+pub use protocol::{
+    parse_request, parse_response, render_response, APayload, BPayload, HandleInfo, Payload,
+    Request, Response,
+};
 pub use server::{Server, ServerConfig};
 pub use client::Client;
-pub use trace::{TraceSpec, TraceItem, ReplayReport, generate as generate_trace, replay as replay_trace};
+pub use trace::{
+    generate as generate_trace, replay as replay_trace, shared_pool, ReplayOutcome, ReplayReport,
+    SharedA, TraceItem, TraceSpec,
+};

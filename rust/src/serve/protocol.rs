@@ -1,6 +1,8 @@
-//! Wire protocol: one JSON object per line.
+//! Wire protocol: one JSON object per line. **v2** — additive over v1:
+//! every v1 line parses and behaves unchanged; v2 adds the operand-handle
+//! lifecycle (`put_a` / `drop_a` / `list_a`) and `spdm` by `a_handle`.
 //!
-//! Requests:
+//! v1 requests:
 //!   {"id":1,"type":"spdm","n":256,"payload":"synthetic","sparsity":0.99,
 //!    "pattern":"uniform","seed":42,"algo":"auto","verify":false}
 //!   {"id":2,"type":"spdm","n":4,"payload":"inline","a":[...16 floats],
@@ -8,15 +10,37 @@
 //!   {"id":3,"type":"metrics"}    {"id":4,"type":"ping"}
 //!   {"id":5,"type":"stats"}   — structured metrics: the reply's `metrics`
 //!   field carries the JSON-encoded snapshot (counters, latency, the
-//!   batch-width histogram, and `conversions_amortized`)
+//!   batch-width histogram, `conversions_total`, and the store gauges)
 //!
-//! Responses:
+//! v2 requests (operand handles — register A once, multiply by reference):
+//!   {"id":6,"type":"put_a","n":256,"payload":"synthetic","sparsity":0.99,
+//!    "pattern":"uniform","seed":42,"algo":"auto"}
+//!   {"id":7,"type":"put_a","n":4,"payload":"inline","a":[...16 floats]}
+//!     → {"id":7,"ok":true,"a_handle":3,"algo":"gcoo","artifact":"…",
+//!        "n_exec":256,"convert_ms":0.8,"reason":"sparse-crossover"}
+//!       (the resolved routing, so clients can introspect the plan)
+//!   {"id":8,"type":"spdm","a_handle":3,"b":[...floats],"verify":true}
+//!   {"id":9,"type":"spdm","a_handle":3,"seed":7}   — synthetic B; `n` is
+//!     optional on handle requests (the registered operand fixes it)
+//!   {"id":10,"type":"drop_a","a_handle":3}
+//!   {"id":11,"type":"list_a"}
+//!     → {"id":11,"ok":true,"handles":[{"a_handle":3,"n":256,"nnz":655,
+//!        "algo":"gcoo","artifact":"…","bytes":270336},…]}
+//!
+//! Responses (v1 shape, plus `a_handle`/`reason`/`handles` where relevant):
 //!   {"id":1,"ok":true,"algo":"gcoo","artifact":"gcoo_n256_…","n_exec":256,
 //!    "convert_ms":0.8,"kernel_ms":3.1,"total_ms":4.2,"verified":null,
 //!    "checksum":123.5}
 //!   {"id":3,"ok":true,"metrics":"…"}    {"id":1,"ok":false,"error":"…"}
+//!
+//! Validation happens at this boundary: non-finite floats in inline
+//! payloads are rejected (a NaN would make `ASig` bit-pattern equality
+//! disagree with the element-equality re-screen, silently demoting fusable
+//! batches), and synthetic parameters (`sparsity` ∈ [0, 1), known
+//! `pattern`) fail the request here instead of leaking into generation.
 
 use crate::coordinator::Algo;
+use crate::gen::Pattern;
 use crate::json::{self, Value};
 
 /// How the A/B operands arrive.
@@ -24,6 +48,24 @@ use crate::json::{self, Value};
 pub enum Payload {
     Synthetic { sparsity: f64, pattern: String, seed: u64 },
     Inline { a: Vec<f32>, b: Vec<f32> },
+    /// v2: A by reference to a registered operand; only B travels.
+    Handle { a_handle: u64, b: BPayload },
+}
+
+/// How a handle request supplies its B operand.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BPayload {
+    Inline(Vec<f32>),
+    /// Server-side `randn` B from this seed (benchmarks and load tests:
+    /// handle reuse without shipping n² floats per request).
+    Synthetic { seed: u64 },
+}
+
+/// How `put_a` supplies the operand to register.
+#[derive(Clone, Debug, PartialEq)]
+pub enum APayload {
+    Synthetic { sparsity: f64, pattern: String, seed: u64 },
+    Inline { a: Vec<f32> },
 }
 
 /// A parsed client request.
@@ -31,17 +73,37 @@ pub enum Payload {
 pub enum Request {
     Spdm {
         id: u64,
+        /// 0 on handle requests without an explicit `n` (the registered
+        /// operand fixes the size); positive and validated otherwise.
         n: usize,
         payload: Payload,
         algo: Option<Algo>,
         verify: bool,
     },
+    /// v2: register an A operand (plan + convert once, reply with the
+    /// handle and the resolved routing).
+    PutA { id: u64, n: usize, payload: APayload, algo: Option<Algo> },
+    /// v2: drop a registered operand.
+    DropA { id: u64, a_handle: u64 },
+    /// v2: list registered operands with their routing/cost summaries.
+    ListA { id: u64 },
     Metrics { id: u64 },
     /// Structured (JSON) metrics snapshot — the machine-readable sibling of
     /// the human-oriented `Metrics` text render.
     Stats { id: u64 },
     Ping { id: u64 },
     Shutdown { id: u64 },
+}
+
+/// One row of a `list_a` reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HandleInfo {
+    pub a_handle: u64,
+    pub n: usize,
+    pub nnz: usize,
+    pub algo: String,
+    pub artifact: String,
+    pub bytes: u64,
 }
 
 /// A server response (subset of fields depending on request type).
@@ -59,6 +121,59 @@ pub struct Response {
     pub verified: Option<bool>,
     pub checksum: Option<f64>,
     pub metrics: Option<String>,
+    /// v2: the operand handle (`put_a` replies; echoed on handle `spdm`).
+    pub a_handle: Option<u64>,
+    /// v2: why the plan chose its algorithm (`put_a` replies).
+    pub reason: Option<String>,
+    /// v2: `list_a` rows.
+    pub handles: Option<Vec<HandleInfo>>,
+}
+
+/// Pull a float array field, rejecting non-finite entries: a NaN in A
+/// would break `ASig` bit-pattern equality vs the element-equality
+/// re-screen (NaN != NaN), silently demoting fusable batches; Inf
+/// propagates garbage through every kernel. Reject both at the boundary.
+fn finite_floats(v: &Value, k: &str) -> Result<Vec<f32>, String> {
+    v.get(k)
+        .and_then(Value::as_arr)
+        .ok_or(format!("missing {k}"))?
+        .iter()
+        .map(|x| match x.as_f64() {
+            // Finiteness is checked on the f32 the pipeline actually
+            // stores: a finite f64 above f32::MAX (e.g. 1e39) saturates to
+            // Inf in the cast and must be rejected just like a wire-level
+            // Inf or NaN.
+            Some(f) if (f as f32).is_finite() => Ok(f as f32),
+            Some(f) => Err(format!("non-finite value {f} in {k}")),
+            None => Err(format!("bad {k}")),
+        })
+        .collect()
+}
+
+/// Validate synthetic-payload parameters at the protocol boundary: a
+/// sparsity outside [0, 1) (NaN included) or an unknown pattern name is a
+/// malformed request, not a generation-time surprise.
+fn synthetic_params(v: &Value) -> Result<(f64, String, u64), String> {
+    let sparsity = v.get("sparsity").and_then(Value::as_f64).unwrap_or(0.99);
+    if !(0.0..1.0).contains(&sparsity) {
+        return Err(format!("sparsity {sparsity} outside [0, 1)"));
+    }
+    let pattern = v
+        .get("pattern")
+        .and_then(Value::as_str)
+        .unwrap_or("uniform")
+        .to_string();
+    if Pattern::from_name(&pattern).is_none() {
+        return Err(format!("unknown pattern {pattern}"));
+    }
+    Ok((sparsity, pattern, v.get("seed").and_then(Value::as_u64).unwrap_or(0)))
+}
+
+fn parse_algo(v: &Value) -> Result<Option<Algo>, String> {
+    match v.get("algo").and_then(Value::as_str) {
+        None | Some("auto") => Ok(None),
+        Some(s) => Algo::from_str(s).map(Some).ok_or(format!("unknown algo {s}")),
+    }
 }
 
 pub fn parse_request(line: &str) -> Result<Request, String> {
@@ -70,31 +185,46 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "stats" => Ok(Request::Stats { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
         "spdm" => {
+            // v2: an `a_handle` field selects multiply-by-reference; `n`
+            // becomes optional (the registered operand fixes it) and only
+            // B travels — inline, or synthetic from `seed`. The key's mere
+            // presence commits to the handle path: a malformed value
+            // (string, negative, fractional) is an error, never a silent
+            // fall-through to a v1 synthetic multiply against the wrong A.
+            if let Some(ah) = v.get("a_handle") {
+                let a_handle = ah.as_u64().ok_or("invalid a_handle")?;
+                let n = v.get("n").and_then(Value::as_usize).unwrap_or(0);
+                let b = if v.get("b").is_some() {
+                    let b = finite_floats(&v, "b")?;
+                    if n > 0 && b.len() != n * n {
+                        return Err(format!("inline b size {} != n²={}", b.len(), n * n));
+                    }
+                    BPayload::Inline(b)
+                } else {
+                    BPayload::Synthetic {
+                        seed: v.get("seed").and_then(Value::as_u64).unwrap_or(0),
+                    }
+                };
+                return Ok(Request::Spdm {
+                    id,
+                    n,
+                    payload: Payload::Handle { a_handle, b },
+                    algo: parse_algo(&v)?,
+                    verify: v.get("verify").and_then(Value::as_bool).unwrap_or(false),
+                });
+            }
             let n = v.get("n").and_then(Value::as_usize).ok_or("missing n")?;
             if n == 0 {
                 return Err("n must be positive".into());
             }
             let payload = match v.get("payload").and_then(Value::as_str).unwrap_or("synthetic") {
-                "synthetic" => Payload::Synthetic {
-                    sparsity: v.get("sparsity").and_then(Value::as_f64).unwrap_or(0.99),
-                    pattern: v
-                        .get("pattern")
-                        .and_then(Value::as_str)
-                        .unwrap_or("uniform")
-                        .to_string(),
-                    seed: v.get("seed").and_then(Value::as_u64).unwrap_or(0),
-                },
+                "synthetic" => {
+                    let (sparsity, pattern, seed) = synthetic_params(&v)?;
+                    Payload::Synthetic { sparsity, pattern, seed }
+                }
                 "inline" => {
-                    let grab = |k: &str| -> Result<Vec<f32>, String> {
-                        v.get(k)
-                            .and_then(Value::as_arr)
-                            .ok_or(format!("missing {k}"))?
-                            .iter()
-                            .map(|x| x.as_f64().map(|f| f as f32).ok_or(format!("bad {k}")))
-                            .collect()
-                    };
-                    let a = grab("a")?;
-                    let b = grab("b")?;
+                    let a = finite_floats(&v, "a")?;
+                    let b = finite_floats(&v, "b")?;
                     if a.len() != n * n || b.len() != n * n {
                         return Err(format!("inline payload sizes {} / {} != n²={}", a.len(), b.len(), n * n));
                     }
@@ -102,18 +232,40 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 }
                 other => return Err(format!("unknown payload kind {other}")),
             };
-            let algo = match v.get("algo").and_then(Value::as_str) {
-                None | Some("auto") => None,
-                Some(s) => Some(Algo::from_str(s).ok_or(format!("unknown algo {s}"))?),
-            };
             Ok(Request::Spdm {
                 id,
                 n,
                 payload,
-                algo,
+                algo: parse_algo(&v)?,
                 verify: v.get("verify").and_then(Value::as_bool).unwrap_or(false),
             })
         }
+        "put_a" => {
+            let n = v.get("n").and_then(Value::as_usize).ok_or("missing n")?;
+            if n == 0 {
+                return Err("n must be positive".into());
+            }
+            let payload = match v.get("payload").and_then(Value::as_str).unwrap_or("synthetic") {
+                "synthetic" => {
+                    let (sparsity, pattern, seed) = synthetic_params(&v)?;
+                    APayload::Synthetic { sparsity, pattern, seed }
+                }
+                "inline" => {
+                    let a = finite_floats(&v, "a")?;
+                    if a.len() != n * n {
+                        return Err(format!("inline a size {} != n²={}", a.len(), n * n));
+                    }
+                    APayload::Inline { a }
+                }
+                other => return Err(format!("unknown payload kind {other}")),
+            };
+            Ok(Request::PutA { id, n, payload, algo: parse_algo(&v)? })
+        }
+        "drop_a" => {
+            let a_handle = v.get("a_handle").and_then(Value::as_u64).ok_or("missing a_handle")?;
+            Ok(Request::DropA { id, a_handle })
+        }
+        "list_a" => Ok(Request::ListA { id }),
         other => Err(format!("unknown request type {other}")),
     }
 }
@@ -150,6 +302,29 @@ pub fn render_response(r: &Response) -> String {
     if let Some(m) = &r.metrics {
         b = b.field("metrics", m.as_str());
     }
+    if let Some(h) = r.a_handle {
+        b = b.field("a_handle", h);
+    }
+    if let Some(reason) = &r.reason {
+        b = b.field("reason", reason.as_str());
+    }
+    if let Some(hs) = &r.handles {
+        let rows = Value::Arr(
+            hs.iter()
+                .map(|h| {
+                    Value::obj()
+                        .field("a_handle", h.a_handle)
+                        .field("n", h.n)
+                        .field("nnz", h.nnz)
+                        .field("algo", h.algo.as_str())
+                        .field("artifact", h.artifact.as_str())
+                        .field("bytes", h.bytes)
+                        .build()
+                })
+                .collect(),
+        );
+        b = b.field("handles", rows);
+    }
     json::write(&b.build())
 }
 
@@ -168,6 +343,22 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
         verified: v.get("verified").and_then(Value::as_bool),
         checksum: v.get("checksum").and_then(Value::as_f64),
         metrics: v.get("metrics").and_then(Value::as_str).map(str::to_string),
+        a_handle: v.get("a_handle").and_then(Value::as_u64),
+        reason: v.get("reason").and_then(Value::as_str).map(str::to_string),
+        handles: v.get("handles").and_then(Value::as_arr).map(|xs| {
+            xs.iter()
+                .filter_map(|x| {
+                    Some(HandleInfo {
+                        a_handle: x.get("a_handle")?.as_u64()?,
+                        n: x.get("n")?.as_usize()?,
+                        nnz: x.get("nnz")?.as_usize()?,
+                        algo: x.get("algo")?.as_str()?.to_string(),
+                        artifact: x.get("artifact")?.as_str()?.to_string(),
+                        bytes: x.get("bytes")?.as_u64()?,
+                    })
+                })
+                .collect()
+        }),
     })
 }
 
@@ -227,6 +418,190 @@ mod tests {
         assert!(parse_request(r#"{"id":1,"type":"spdm","n":0}"#).is_err());
         assert!(parse_request(r#"{"id":1,"type":"warp"}"#).is_err());
         assert!(parse_request(r#"{"id":1,"type":"spdm","n":4,"algo":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_handle_spdm_requests() {
+        // Inline B; n optional on handle requests.
+        let r = parse_request(r#"{"id":8,"type":"spdm","a_handle":3,"b":[1,2,3,4],"verify":true}"#)
+            .unwrap();
+        match r {
+            Request::Spdm { id, n, payload, algo, verify } => {
+                assert_eq!((id, n, verify), (8, 0, true));
+                assert_eq!(algo, None);
+                assert_eq!(
+                    payload,
+                    Payload::Handle { a_handle: 3, b: BPayload::Inline(vec![1.0, 2.0, 3.0, 4.0]) }
+                );
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Synthetic B from a seed; explicit n is validated against b when
+        // inline and carried through otherwise.
+        let r = parse_request(r#"{"id":9,"type":"spdm","a_handle":3,"seed":7,"algo":"gcoo"}"#)
+            .unwrap();
+        assert_eq!(
+            r,
+            Request::Spdm {
+                id: 9,
+                n: 0,
+                payload: Payload::Handle { a_handle: 3, b: BPayload::Synthetic { seed: 7 } },
+                algo: Some(Algo::Gcoo),
+                verify: false,
+            }
+        );
+        // Explicit n with a mismatched inline B fails at parse.
+        assert!(parse_request(
+            r#"{"id":8,"type":"spdm","a_handle":3,"n":4,"b":[1,2,3,4]}"#
+        )
+        .is_err());
+        // A malformed a_handle is an error, not a silent fall-through to
+        // the v1 synthetic path (which would multiply against the wrong A).
+        for bad in [
+            r#"{"id":8,"type":"spdm","a_handle":"3","n":64,"seed":7}"#,
+            r#"{"id":8,"type":"spdm","a_handle":-1,"n":64,"seed":7}"#,
+            r#"{"id":8,"type":"spdm","a_handle":3.5,"n":64,"seed":7}"#,
+        ] {
+            let err = parse_request(bad).unwrap_err();
+            assert!(err.contains("a_handle"), "{bad} → {err}");
+        }
+    }
+
+    #[test]
+    fn parse_put_a_requests() {
+        let r = parse_request(
+            r#"{"id":6,"type":"put_a","n":64,"payload":"synthetic","sparsity":0.99,"pattern":"banded","seed":5,"algo":"csr"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::PutA {
+                id: 6,
+                n: 64,
+                payload: APayload::Synthetic { sparsity: 0.99, pattern: "banded".into(), seed: 5 },
+                algo: Some(Algo::Csr),
+            }
+        );
+        let r = parse_request(r#"{"id":7,"type":"put_a","n":2,"payload":"inline","a":[1,0,0,1]}"#)
+            .unwrap();
+        assert_eq!(
+            r,
+            Request::PutA {
+                id: 7,
+                n: 2,
+                payload: APayload::Inline { a: vec![1.0, 0.0, 0.0, 1.0] },
+                algo: None,
+            }
+        );
+        // Size and positivity checks mirror v1 spdm.
+        assert!(parse_request(r#"{"id":7,"type":"put_a","n":2,"payload":"inline","a":[1]}"#).is_err());
+        assert!(parse_request(r#"{"id":7,"type":"put_a","n":0}"#).is_err());
+        assert!(parse_request(r#"{"id":7,"type":"put_a"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_handle_lifecycle_requests() {
+        assert_eq!(
+            parse_request(r#"{"id":10,"type":"drop_a","a_handle":3}"#).unwrap(),
+            Request::DropA { id: 10, a_handle: 3 }
+        );
+        assert!(parse_request(r#"{"id":10,"type":"drop_a"}"#).is_err(), "a_handle required");
+        assert_eq!(parse_request(r#"{"id":11,"type":"list_a"}"#).unwrap(), Request::ListA { id: 11 });
+    }
+
+    /// Satellite bugfix: non-finite floats in inline payloads are rejected
+    /// at the boundary — a NaN would split `ASig` equality from the
+    /// element-equality re-screen (NaN != NaN) and silently demote fusable
+    /// batches; Inf poisons every product.
+    #[test]
+    fn non_finite_inline_floats_rejected() {
+        // Our writer never emits bare NaN/Infinity tokens, but "1e999"
+        // overflows f64 parsing to +Inf — a real wire-level vector.
+        let inf = r#"{"id":2,"type":"spdm","n":2,"payload":"inline","a":[1,0,0,1e999],"b":[1,2,3,4]}"#;
+        let err = parse_request(inf).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+        let inf_b = r#"{"id":2,"type":"spdm","n":2,"payload":"inline","a":[1,0,0,1],"b":[1,2,3,-1e999]}"#;
+        assert!(parse_request(inf_b).unwrap_err().contains("non-finite"));
+        let put = r#"{"id":2,"type":"put_a","n":2,"payload":"inline","a":[1e999,0,0,1]}"#;
+        assert!(parse_request(put).unwrap_err().contains("non-finite"));
+        let handle_b = r#"{"id":2,"type":"spdm","a_handle":1,"b":[1e999]}"#;
+        assert!(parse_request(handle_b).unwrap_err().contains("non-finite"));
+        // A finite f64 beyond f32::MAX saturates to Inf in the cast the
+        // pipeline performs — it must be rejected like a literal Inf.
+        let overflow = r#"{"id":2,"type":"spdm","n":2,"payload":"inline","a":[1e39,0,0,1],"b":[1,2,3,4]}"#;
+        assert!(parse_request(overflow).unwrap_err().contains("non-finite"));
+        // The f32 edge itself stays valid.
+        let edge = r#"{"id":2,"type":"spdm","n":2,"payload":"inline","a":[3.4e38,0,0,1],"b":[1,2,3,4]}"#;
+        assert!(parse_request(edge).is_ok());
+    }
+
+    /// Satellite bugfix: synthetic parameters are validated at parse time —
+    /// sparsity outside [0, 1) and unknown pattern names fail the request
+    /// instead of flowing into generation.
+    #[test]
+    fn synthetic_params_validated_at_parse() {
+        for bad in [
+            r#"{"id":1,"type":"spdm","n":8,"payload":"synthetic","sparsity":1.0}"#,
+            r#"{"id":1,"type":"spdm","n":8,"payload":"synthetic","sparsity":-0.1}"#,
+            r#"{"id":1,"type":"spdm","n":8,"payload":"synthetic","sparsity":2.5}"#,
+            r#"{"id":1,"type":"put_a","n":8,"payload":"synthetic","sparsity":1.5}"#,
+        ] {
+            let err = parse_request(bad).unwrap_err();
+            assert!(err.contains("sparsity"), "{bad} → {err}");
+        }
+        for bad in [
+            r#"{"id":1,"type":"spdm","n":8,"payload":"synthetic","pattern":"not_a_pattern"}"#,
+            r#"{"id":1,"type":"put_a","n":8,"payload":"synthetic","pattern":"warp"}"#,
+        ] {
+            let err = parse_request(bad).unwrap_err();
+            assert!(err.contains("pattern"), "{bad} → {err}");
+        }
+        // The valid edges stay valid.
+        assert!(parse_request(r#"{"id":1,"type":"spdm","n":8,"payload":"synthetic","sparsity":0.0}"#).is_ok());
+        assert!(parse_request(r#"{"id":1,"type":"spdm","n":8,"payload":"synthetic","sparsity":0.999}"#).is_ok());
+    }
+
+    #[test]
+    fn v2_response_round_trip() {
+        let r = Response {
+            id: 6,
+            ok: true,
+            algo: Some("gcoo".into()),
+            artifact: Some("gcoo_n256_cap512".into()),
+            n_exec: Some(256),
+            convert_ms: Some(0.75),
+            a_handle: Some(3),
+            reason: Some("sparse-crossover".into()),
+            ..Default::default()
+        };
+        assert_eq!(parse_response(&render_response(&r)).unwrap(), r);
+        let r = Response {
+            id: 11,
+            ok: true,
+            handles: Some(vec![
+                HandleInfo {
+                    a_handle: 3,
+                    n: 256,
+                    nnz: 655,
+                    algo: "gcoo".into(),
+                    artifact: "gcoo_n256_cap512".into(),
+                    bytes: 270336,
+                },
+                HandleInfo {
+                    a_handle: 4,
+                    n: 64,
+                    nnz: 40,
+                    algo: "csr".into(),
+                    artifact: "csr_n64_rowcap64".into(),
+                    bytes: 18432,
+                },
+            ]),
+            ..Default::default()
+        };
+        assert_eq!(parse_response(&render_response(&r)).unwrap(), r);
+        // Empty list round-trips too.
+        let r = Response { id: 12, ok: true, handles: Some(vec![]), ..Default::default() };
+        assert_eq!(parse_response(&render_response(&r)).unwrap(), r);
     }
 
     #[test]

@@ -1,14 +1,19 @@
 //! TCP server: accepts line-delimited JSON requests, materializes synthetic
-//! workloads, and drives the coordinator.
+//! workloads, threads operand-handle lifecycle (`put_a`/`drop_a`/`list_a`
+//! and `spdm` by handle) through the coordinator's converted-operand
+//! store, and drives the coordinator.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use super::protocol::{parse_request, render_response, Payload, Request, Response};
-use crate::coordinator::{Coordinator, SpdmRequest};
+use super::protocol::{
+    parse_request, render_response, APayload, BPayload, HandleInfo, Payload, Request, Response,
+};
+use crate::coordinator::{Coordinator, OperandId, SpdmRequest};
 use crate::gen;
+use crate::json::{self, Value};
 use crate::ndarray::Mat;
 use crate::rng::Rng;
 
@@ -134,7 +139,14 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
     let req = match parse_request(line) {
         Ok(r) => r,
         Err(e) => {
-            return Response { id: 0, ok: false, error: Some(e), ..Default::default() }
+            // Best-effort id recovery so parse-level rejections (bad
+            // payload values, unknown patterns, …) still correlate to the
+            // client's request instead of id 0.
+            let id = json::parse(line)
+                .ok()
+                .and_then(|v| v.get("id").and_then(Value::as_u64))
+                .unwrap_or(0);
+            return Response { id, ok: false, error: Some(e), ..Default::default() };
         }
     };
     match req {
@@ -146,27 +158,80 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
         Request::Metrics { id } => Response {
             id,
             ok: true,
-            metrics: Some(coord.metrics().snapshot().render()),
+            metrics: Some(coord.snapshot().render()),
             ..Default::default()
         },
         // Structured stats: the `metrics` field carries the JSON-encoded
-        // snapshot (incl. batch_hist + conversions_amortized).
+        // snapshot (incl. batch_hist, conversions_total, store gauges).
         Request::Stats { id } => Response {
             id,
             ok: true,
-            metrics: Some(coord.metrics().snapshot().to_json()),
+            metrics: Some(coord.snapshot().to_json()),
             ..Default::default()
         },
-        Request::Spdm { id, n, payload, algo, verify } => {
-            let (a, b) = match materialize(n, &payload) {
-                Ok(ab) => ab,
+        // v2: register A once — the reply carries the handle plus the
+        // resolved routing (algo/artifact/n_exec/reason) and the
+        // registration EO, so clients can introspect what handle traffic
+        // will run.
+        Request::PutA { id, n, payload, algo } => {
+            let a = match materialize_a(n, &payload) {
+                Ok(a) => a,
                 Err(e) => {
                     return Response { id, ok: false, error: Some(e), ..Default::default() }
                 }
             };
-            let mut sreq = SpdmRequest::new(id, a, b);
+            match coord.put_a(a, algo) {
+                Ok(entry) => Response {
+                    id,
+                    ok: true,
+                    a_handle: Some(entry.handle.0),
+                    algo: Some(entry.plan.algo.as_str().to_string()),
+                    artifact: Some(entry.plan.artifact.clone()),
+                    n_exec: Some(entry.plan.n_exec),
+                    convert_ms: Some(entry.convert_s * 1e3),
+                    reason: Some(entry.plan.reason.to_string()),
+                    ..Default::default()
+                },
+                Err(e) => Response { id, ok: false, error: Some(e), ..Default::default() },
+            }
+        }
+        Request::DropA { id, a_handle } => {
+            if coord.drop_a(OperandId(a_handle)) {
+                Response { id, ok: true, a_handle: Some(a_handle), ..Default::default() }
+            } else {
+                Response {
+                    id,
+                    ok: false,
+                    error: Some(format!("unknown operand handle a#{a_handle}")),
+                    ..Default::default()
+                }
+            }
+        }
+        Request::ListA { id } => {
+            let handles = coord
+                .list_a()
+                .into_iter()
+                .map(|s| HandleInfo {
+                    a_handle: s.handle.0,
+                    n: s.n,
+                    nnz: s.nnz,
+                    algo: s.algo.as_str().to_string(),
+                    artifact: s.artifact,
+                    bytes: s.bytes,
+                })
+                .collect();
+            Response { id, ok: true, handles: Some(handles), ..Default::default() }
+        }
+        Request::Spdm { id, n, payload, algo, verify } => {
+            let mut sreq = match build_spdm(coord, id, n, &payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    return Response { id, ok: false, error: Some(e), ..Default::default() }
+                }
+            };
             sreq.algo_hint = algo;
             sreq.verify = verify;
+            let a_handle = sreq.a.handle().map(|h| h.0);
             let resp = coord.run_sync(sreq);
             if let Some(err) = resp.error {
                 return Response { id, ok: false, error: Some(err), ..Default::default() };
@@ -183,8 +248,67 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
                 total_ms: Some(resp.total_s * 1e3),
                 verified: resp.verified,
                 checksum,
+                a_handle,
                 ..Default::default()
             }
+        }
+    }
+}
+
+/// Turn a parsed spdm payload into the library request: inline/synthetic
+/// payloads materialize both operands (v1); handle payloads resolve the
+/// registered operand's size, materialize only B, and reference A.
+fn build_spdm(
+    coord: &Coordinator,
+    id: u64,
+    n: usize,
+    payload: &Payload,
+) -> Result<SpdmRequest, String> {
+    match payload {
+        Payload::Handle { a_handle, b } => {
+            let h = OperandId(*a_handle);
+            let dims = coord
+                .operand_dims(h)
+                .ok_or_else(|| format!("unknown operand handle a#{a_handle}"))?;
+            if n != 0 && n != dims {
+                return Err(format!("n {n} does not match registered operand size {dims}"));
+            }
+            let b = match b {
+                BPayload::Inline(data) => {
+                    if data.len() != dims * dims {
+                        return Err(format!(
+                            "inline b size {} != registered operand n²={}",
+                            data.len(),
+                            dims * dims
+                        ));
+                    }
+                    Mat::from_vec(dims, dims, data.clone())
+                }
+                BPayload::Synthetic { seed } => {
+                    let mut rng = Rng::new(*seed);
+                    Mat::randn(dims, dims, &mut rng)
+                }
+            };
+            Ok(SpdmRequest::for_handle(id, h, b))
+        }
+        _ => {
+            let (a, b) = materialize(n, payload)?;
+            Ok(SpdmRequest::new(id, a, b))
+        }
+    }
+}
+
+/// Materialize a `put_a` payload. The pattern name was already validated
+/// at parse time (`synthetic_params`); the check here is defense in depth
+/// at the trust boundary — a server answers with an error, never a panic.
+fn materialize_a(n: usize, payload: &APayload) -> Result<Mat, String> {
+    match payload {
+        APayload::Inline { a } => Ok(Mat::from_vec(n, n, a.clone())),
+        APayload::Synthetic { sparsity, pattern, seed } => {
+            let pat = gen::Pattern::from_name(pattern)
+                .ok_or_else(|| format!("unknown pattern {pattern}"))?;
+            let mut rng = Rng::new(*seed);
+            Ok(gen::generate(pat, n, *sparsity, &mut rng))
         }
     }
 }
@@ -202,6 +326,9 @@ fn materialize(n: usize, payload: &Payload) -> Result<(Mat, Mat), String> {
             let a = gen::generate(pat, n, *sparsity, &mut rng);
             let b = Mat::randn(n, n, &mut rng);
             Ok((a, b))
+        }
+        Payload::Handle { .. } => {
+            Err("handle payloads resolve through the operand store".into())
         }
     }
 }

@@ -1,10 +1,14 @@
 //! Workload traces: synthetic request schedules for open-loop load testing
-//! of the serving stack (Poisson arrivals, mixed shapes/sparsities), plus a
-//! replayer that measures per-request latency against the schedule.
+//! of the serving stack (Poisson arrivals, mixed shapes/sparsities, and a
+//! shared-A dimension: a zipfian choice over a small pool of registered As
+//! so load tests exercise operand-handle reuse under realistic skew), plus
+//! a replayer that measures per-request latency against the schedule and
+//! reports the operand-store hit rate the driver achieved.
 //!
 //! This is the serving-framework side of the evaluation: the paper measures
 //! kernels in isolation; a deployable system also needs load behavior under
-//! arrival pressure (queueing delay vs service time).
+//! arrival pressure (queueing delay vs service time) and under operand
+//! reuse (conversions amortized across handle traffic).
 
 use crate::rng::Rng;
 
@@ -21,6 +25,16 @@ pub struct TraceSpec {
     /// Candidate structural patterns (names from gen::Pattern).
     pub patterns: Vec<String>,
     pub seed: u64,
+    /// Size of the shared-A pool: 0 (default) keeps the v1 behavior where
+    /// every request ships its own synthetic A; k > 0 makes every request
+    /// draw one of k fixed A operands (each with its own size/sparsity/
+    /// pattern/seed, drawn once from the candidate lists), the fraction of
+    /// traffic per operand following the zipf skew below — the shape of
+    /// real serving traffic, where a few hot models dominate.
+    pub shared_a_pool: usize,
+    /// Zipf exponent over the pool: weight(slot k) ∝ 1/(k+1)^s. 0.0 is
+    /// uniform; ~1.0 is classic web-traffic skew.
+    pub shared_a_zipf: f64,
 }
 
 impl Default for TraceSpec {
@@ -32,8 +46,21 @@ impl Default for TraceSpec {
             sparsities: vec![0.95, 0.98, 0.99, 0.995],
             patterns: vec!["uniform".into(), "banded".into(), "power_law_rows".into()],
             seed: 0x712ACE,
+            shared_a_pool: 0,
+            shared_a_zipf: 1.0,
         }
     }
+}
+
+/// One A operand of the shared pool: the parameters a driver passes to
+/// `put_a` (synthetic payload) for that slot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SharedA {
+    pub slot: usize,
+    pub n: usize,
+    pub sparsity: f64,
+    pub pattern: String,
+    pub seed: u64,
 }
 
 /// One scheduled request.
@@ -45,14 +72,59 @@ pub struct TraceItem {
     pub n: usize,
     pub sparsity: f64,
     pub pattern: String,
+    /// Per-request seed: the full synthetic workload for one-off items, the
+    /// B operand for shared-A items (whose A is fixed by the slot).
     pub seed: u64,
+    /// Which shared-A slot this request multiplies against (`None` = the
+    /// v1 one-off synthetic request). Shape fields mirror the slot's.
+    pub a_slot: Option<usize>,
+}
+
+/// The shared-A pool a spec implies: slot parameters are drawn once from
+/// the candidate lists, deterministically per spec seed — `generate` uses
+/// exactly these, so a driver can `put_a` each slot up front (or lazily on
+/// first use) and know the trace items match.
+pub fn shared_pool(spec: &TraceSpec) -> Vec<SharedA> {
+    let mut rng = Rng::new(spec.seed ^ 0xA_900D_5EED);
+    (0..spec.shared_a_pool)
+        .map(|slot| SharedA {
+            slot,
+            n: spec.sizes[rng.index(spec.sizes.len())],
+            sparsity: spec.sparsities[rng.index(spec.sparsities.len())],
+            pattern: spec.patterns[rng.index(spec.patterns.len())].clone(),
+            seed: rng.next_u64(),
+        })
+        .collect()
+}
+
+/// Cumulative zipf weights over `n` slots (weight(k) ∝ 1/(k+1)^s),
+/// computed once per schedule so the per-item draw does no allocation.
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut acc = 0.0;
+    (0..n)
+        .map(|k| {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            acc
+        })
+        .collect()
+}
+
+/// Draw a zipf-distributed index from a precomputed [`zipf_cdf`] table.
+fn zipf_index(rng: &mut Rng, cdf: &[f64]) -> usize {
+    let total = *cdf.last().expect("non-empty pool");
+    let u = rng.next_f64() * total;
+    cdf.iter().position(|&c| u <= c).unwrap_or(cdf.len() - 1)
 }
 
 /// Generate the schedule: exponential inter-arrivals at `rate_rps`,
-/// independent uniform draws for the shape mix. Deterministic per seed.
+/// independent uniform draws for the shape mix (one-off items) or a
+/// zipfian slot choice from [`shared_pool`] (shared-A items).
+/// Deterministic per seed.
 pub fn generate(spec: &TraceSpec) -> Vec<TraceItem> {
     assert!(spec.rate_rps > 0.0, "rate must be positive");
     assert!(!spec.sizes.is_empty() && !spec.sparsities.is_empty() && !spec.patterns.is_empty());
+    let pool = shared_pool(spec);
+    let cdf = zipf_cdf(pool.len(), spec.shared_a_zipf);
     let mut rng = Rng::new(spec.seed);
     let mut t = 0.0;
     (0..spec.requests)
@@ -60,16 +132,40 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceItem> {
             // exponential inter-arrival: -ln(U)/λ
             let u = rng.next_f64().max(1e-12);
             t += -u.ln() / spec.rate_rps;
-            TraceItem {
-                id: id as u64,
-                arrival_s: t,
-                n: spec.sizes[rng.index(spec.sizes.len())],
-                sparsity: spec.sparsities[rng.index(spec.sparsities.len())],
-                pattern: spec.patterns[rng.index(spec.patterns.len())].clone(),
-                seed: rng.next_u64(),
+            if pool.is_empty() {
+                TraceItem {
+                    id: id as u64,
+                    arrival_s: t,
+                    n: spec.sizes[rng.index(spec.sizes.len())],
+                    sparsity: spec.sparsities[rng.index(spec.sparsities.len())],
+                    pattern: spec.patterns[rng.index(spec.patterns.len())].clone(),
+                    seed: rng.next_u64(),
+                    a_slot: None,
+                }
+            } else {
+                let a = &pool[zipf_index(&mut rng, &cdf)];
+                TraceItem {
+                    id: id as u64,
+                    arrival_s: t,
+                    n: a.n,
+                    sparsity: a.sparsity,
+                    pattern: a.pattern.clone(),
+                    seed: rng.next_u64(), // the B seed; A is the slot's
+                    a_slot: Some(a.slot),
+                }
             }
         })
         .collect()
+}
+
+/// What one replayed request did, as reported by the driver closure: a
+/// plain (inline/synthetic) request, or a handle request that hit or
+/// missed the operand store (miss = the driver had to `put_a` first).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplayOutcome {
+    Plain,
+    StoreHit,
+    StoreMiss,
 }
 
 /// Replay statistics.
@@ -82,6 +178,10 @@ pub struct ReplayReport {
     pub latency_s: Vec<f64>,
     /// Time each request waited past its scheduled arrival before issue.
     pub lateness_s: Vec<f64>,
+    /// Handle requests served from an already-registered operand.
+    pub store_hits: usize,
+    /// Handle requests that had to register their operand first.
+    pub store_misses: usize,
 }
 
 impl ReplayReport {
@@ -96,15 +196,28 @@ impl ReplayReport {
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.wall_s.max(1e-9)
     }
+
+    /// Fraction of handle traffic that reused an already-registered
+    /// operand (0.0 when the trace had no handle traffic).
+    pub fn store_hit_rate(&self) -> f64 {
+        let handle = self.store_hits + self.store_misses;
+        if handle == 0 {
+            0.0
+        } else {
+            self.store_hits as f64 / handle as f64
+        }
+    }
 }
 
 /// Open-loop replay: issue each item at its scheduled arrival (sleeping as
 /// needed; if the executor falls behind, lateness accumulates — that *is*
 /// the signal), calling `run` synchronously per item from this thread's
-/// pacing loop with results collected via worker threads.
+/// pacing loop with results collected via worker threads. The closure
+/// reports each request's [`ReplayOutcome`] so shared-A traces surface
+/// their operand-store hit rate in the report.
 pub fn replay<F>(items: &[TraceItem], concurrency: usize, run: F) -> ReplayReport
 where
-    F: Fn(&TraceItem) -> Result<(), String> + Send + Sync,
+    F: Fn(&TraceItem) -> Result<ReplayOutcome, String> + Send + Sync,
 {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
@@ -112,6 +225,8 @@ where
 
     let started = Instant::now();
     let failed = AtomicUsize::new(0);
+    let hits = AtomicUsize::new(0);
+    let misses = AtomicUsize::new(0);
     let latencies = Mutex::new(Vec::with_capacity(items.len()));
     let lateness = Mutex::new(Vec::with_capacity(items.len()));
     let next = AtomicUsize::new(0);
@@ -133,10 +248,19 @@ where
                 let late = (started.elapsed().as_secs_f64() - item.arrival_s).max(0.0);
                 let issue = Instant::now();
                 match run(item) {
-                    Ok(()) => {
+                    Ok(outcome) => {
                         let total = late + issue.elapsed().as_secs_f64();
                         latencies.lock().unwrap().push(total);
                         lateness.lock().unwrap().push(late);
+                        match outcome {
+                            ReplayOutcome::Plain => {}
+                            ReplayOutcome::StoreHit => {
+                                hits.fetch_add(1, Ordering::SeqCst);
+                            }
+                            ReplayOutcome::StoreMiss => {
+                                misses.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
                     }
                     Err(_) => {
                         failed.fetch_add(1, Ordering::SeqCst);
@@ -153,6 +277,8 @@ where
         wall_s: started.elapsed().as_secs_f64(),
         latency_s,
         lateness_s: lateness.into_inner().unwrap(),
+        store_hits: hits.into_inner(),
+        store_misses: misses.into_inner(),
     }
 }
 
@@ -186,7 +312,39 @@ mod tests {
             assert!(spec.sizes.contains(&item.n));
             assert!(spec.sparsities.contains(&item.sparsity));
             assert!(spec.patterns.contains(&item.pattern));
+            assert_eq!(item.a_slot, None, "pool 0 keeps the v1 one-off behavior");
         }
+    }
+
+    #[test]
+    fn shared_pool_items_match_their_slots() {
+        let spec = TraceSpec {
+            requests: 200,
+            shared_a_pool: 4,
+            shared_a_zipf: 1.0,
+            ..Default::default()
+        };
+        let pool = shared_pool(&spec);
+        assert_eq!(pool.len(), 4);
+        assert_eq!(pool, shared_pool(&spec), "pool is deterministic per seed");
+        let items = generate(&spec);
+        assert_eq!(items, generate(&spec), "schedule is deterministic per seed");
+        let mut counts = vec![0usize; 4];
+        for item in &items {
+            let slot = item.a_slot.expect("every pooled item carries a slot");
+            counts[slot] += 1;
+            // Shape fields mirror the slot's, so a driver that `put_a`s the
+            // slot's parameters serves exactly this item's A.
+            let a = &pool[slot];
+            assert_eq!((item.n, item.sparsity, &item.pattern), (a.n, a.sparsity, &a.pattern));
+            assert_ne!(item.seed, a.seed, "per-request B seed differs from the slot's A seed");
+        }
+        // Zipf skew at s=1: slot 0 must dominate the tail slot.
+        assert!(
+            counts[0] > counts[3],
+            "zipf(1.0) should skew toward slot 0: {counts:?}"
+        );
+        assert!(counts.iter().all(|&c| c > 0), "200 draws should touch all 4 slots: {counts:?}");
     }
 
     #[test]
@@ -196,13 +354,43 @@ mod tests {
         let count = std::sync::atomic::AtomicUsize::new(0);
         let report = replay(&items, 4, |_item| {
             count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            Ok(())
+            Ok(ReplayOutcome::Plain)
         });
         assert_eq!(report.completed, 20);
         assert_eq!(report.failed, 0);
         assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 20);
         assert!(report.p(50.0) >= 0.0);
         assert!(report.throughput_rps() > 0.0);
+        assert_eq!((report.store_hits, report.store_misses), (0, 0));
+        assert_eq!(report.store_hit_rate(), 0.0, "no handle traffic → rate 0");
+    }
+
+    #[test]
+    fn replay_reports_store_hit_rate() {
+        // Emulate a handle-reusing driver: first use of each slot is a
+        // miss (put_a + spdm), later uses are hits.
+        let spec = TraceSpec {
+            requests: 64,
+            rate_rps: 1e6,
+            shared_a_pool: 3,
+            shared_a_zipf: 1.0,
+            ..Default::default()
+        };
+        let items = generate(&spec);
+        let seen = std::sync::Mutex::new(std::collections::HashSet::new());
+        let report = replay(&items, 2, |item| {
+            let slot = item.a_slot.expect("pooled trace");
+            if seen.lock().unwrap().insert(slot) {
+                Ok(ReplayOutcome::StoreMiss)
+            } else {
+                Ok(ReplayOutcome::StoreHit)
+            }
+        });
+        assert_eq!(report.completed, 64);
+        assert_eq!(report.store_misses, 3, "one registration per pool slot");
+        assert_eq!(report.store_hits, 61);
+        let rate = report.store_hit_rate();
+        assert!((rate - 61.0 / 64.0).abs() < 1e-12, "{rate}");
     }
 
     #[test]
@@ -213,7 +401,7 @@ mod tests {
             if item.id % 2 == 0 {
                 Err("boom".into())
             } else {
-                Ok(())
+                Ok(ReplayOutcome::Plain)
             }
         });
         assert_eq!(report.completed, 5);
@@ -227,7 +415,7 @@ mod tests {
         let items = generate(&spec);
         let report = replay(&items, 1, |_| {
             std::thread::sleep(std::time::Duration::from_millis(5));
-            Ok(())
+            Ok(ReplayOutcome::Plain)
         });
         let max_late = report.lateness_s.iter().copied().fold(0.0, f64::max);
         assert!(max_late > 0.015, "expected queueing lateness, got {max_late}");

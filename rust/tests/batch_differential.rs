@@ -15,8 +15,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use gcoospdm::coordinator::{
-    process_batch_ws, process_one_ws, Algo, Coordinator, CoordinatorConfig, SpdmRequest,
-    SpdmResponse, Workspace,
+    process_batch_ws, process_one_ws, Algo, BatchJob, Coordinator, CoordinatorConfig,
+    SpdmRequest, SpdmResponse, Workspace,
 };
 use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
@@ -66,7 +66,7 @@ fn run_sequential(
 ) -> Vec<SpdmResponse> {
     let mut ws = Workspace::new();
     reqs.iter()
-        .map(|r| process_one_ws(engine, &mut ws, reg, cfg, r, Instant::now()))
+        .map(|r| process_one_ws(engine, &mut ws, reg, cfg, r, None, Instant::now()))
         .collect()
 }
 
@@ -83,8 +83,8 @@ fn run_batched(
     let mut ws = Workspace::new();
     let mut out = Vec::with_capacity(reqs.len());
     for chunk in reqs.chunks(width) {
-        let jobs: Vec<(&SpdmRequest, Instant)> =
-            chunk.iter().map(|r| (r, Instant::now())).collect();
+        let jobs: Vec<BatchJob<'_>> =
+            chunk.iter().map(|r| BatchJob::inline(r, Instant::now())).collect();
         let resps = process_batch_ws(engine, &mut ws, reg, cfg, &jobs);
         assert_eq!(resps.len(), chunk.len());
         // Dense requests convert nothing, so the conversion-count invariant

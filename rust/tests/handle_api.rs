@@ -1,0 +1,411 @@
+//! Operand-handle API v2 lockdown, runnable without `make artifacts` (stub
+//! registry under `target/`, the engine only needs artifact files to
+//! exist):
+//!
+//! * protocol v2 round trips against a live server — `put_a` (inline +
+//!   synthetic, routing introspection in the reply), `spdm` by handle
+//!   (inline and synthetic B), `drop_a`, `list_a`, unknown-handle and
+//!   use-after-drop errors;
+//! * the differential: handle-path results **bitwise equal** to the
+//!   inline path across every corpus pattern × both sparse algorithms
+//!   (and the dense fallback), matching and padded sizes;
+//! * EO amortization through `/stats`: conversions on repeated same-A
+//!   handle traffic stay constant (one per handle) as request count grows.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use gcoospdm::coordinator::{
+    process_batch_ws, process_one_ws, Algo, BatchJob, Coordinator, CoordinatorConfig,
+    OperandId, OperandStore, SpdmRequest, SubmitError, Workspace,
+};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::serve::{Client, Server, ServerConfig};
+
+/// Stub registry at n=64: two gcoo capacities, a csr variant, the dense
+/// fallback — same shape as the batch-differential stub.
+fn runnable_registry() -> Registry {
+    let dir = PathBuf::from("target/handle_api_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+fn boot() -> (Arc<Coordinator>, String, std::thread::JoinHandle<()>) {
+    let coord = Arc::new(Coordinator::new(
+        Arc::new(runnable_registry()),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    ));
+    let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    (coord, addr, handle)
+}
+
+/// The full v2 session: register → introspect → multiply by reference →
+/// list → dedup → drop → use-after-drop, with v1 traffic interleaved
+/// unchanged on the same connection.
+#[test]
+fn protocol_v2_round_trip_session() {
+    let (_coord, addr, server) = boot();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Register a 64×64 identity inline: the reply exposes the resolved
+    // routing (handle, algo, artifact, n_exec, reason, registration EO).
+    let mut eye = vec![0.0f32; 64 * 64];
+    for i in 0..64 {
+        eye[i * 64 + i] = 1.0;
+    }
+    let r = client.put_a_inline(1, 64, &eye, "gcoo").unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    let h = r.a_handle.expect("put_a reply carries a_handle");
+    assert_eq!(r.algo.as_deref(), Some("gcoo"));
+    assert_eq!(r.n_exec, Some(64));
+    assert_eq!(r.reason.as_deref(), Some("hint"));
+    assert!(r.artifact.as_deref().unwrap_or("").starts_with("gcoo_n64"));
+    assert!(r.convert_ms.unwrap() >= 0.0);
+
+    // Multiply by reference, inline B: identity A ⇒ C = B.
+    let b: Vec<f32> = (0..64 * 64).map(|i| (i % 7) as f32 * 0.5).collect();
+    let r = client.spdm_handle(2, h, &b, true).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    assert_eq!(r.verified, Some(true));
+    assert_eq!(r.a_handle, Some(h), "handle spdm replies echo the handle");
+    assert_eq!(r.convert_ms, Some(0.0), "handle path pays no conversion");
+    let want: f64 = b.iter().map(|x| *x as f64).sum();
+    assert!((r.checksum.unwrap() - want).abs() < 1e-3, "identity A ⇒ checksum = ΣB");
+
+    // Synthetic B by seed: deterministic per seed.
+    let c1 = client.spdm_handle_synthetic_b(3, h, 7, true).unwrap();
+    let c2 = client.spdm_handle_synthetic_b(4, h, 7, false).unwrap();
+    assert!(c1.ok && c2.ok);
+    assert_eq!(c1.verified, Some(true));
+    assert_eq!(c1.checksum, c2.checksum);
+
+    // list_a shows the entry with its routing summary.
+    let r = client.list_a(5).unwrap();
+    assert!(r.ok);
+    let rows = r.handles.expect("list_a reply carries rows");
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].a_handle, h);
+    assert_eq!((rows[0].n, rows[0].nnz), (64, 64));
+    assert_eq!(rows[0].algo, "gcoo");
+    assert!(rows[0].bytes > 0);
+
+    // Re-registering identical content+hint dedups to the same handle.
+    let r = client.put_a_inline(6, 64, &eye, "gcoo").unwrap();
+    assert!(r.ok);
+    assert_eq!(r.a_handle, Some(h), "same content + hint must dedup");
+
+    // Wrong-size inline B on the handle path errors cleanly.
+    let r = client.spdm_handle(7, h, &[1.0, 2.0], false).unwrap();
+    assert!(!r.ok);
+    assert!(r.error.unwrap().contains("inline b size"));
+
+    // v1 traffic still flows unchanged on the same connection.
+    let r = client.spdm_synthetic(8, 64, 0.99, "uniform", 3, "auto", true).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    assert_eq!(r.verified, Some(true));
+
+    // drop_a; use-after-drop and double-drop fail with a clear error.
+    let r = client.drop_a(9, h).unwrap();
+    assert!(r.ok);
+    let r = client.spdm_handle_synthetic_b(10, h, 1, false).unwrap();
+    assert!(!r.ok);
+    assert!(r.error.unwrap().contains("unknown operand handle"));
+    let r = client.drop_a(11, h).unwrap();
+    assert!(!r.ok);
+    // Unknown handle on a never-registered id.
+    let r = client.spdm_handle(12, 777, &b, false).unwrap();
+    assert!(!r.ok);
+    assert!(r.error.unwrap().contains("unknown operand handle"));
+    let r = client.list_a(13).unwrap();
+    assert_eq!(r.handles, Some(vec![]));
+
+    client.shutdown(99).unwrap();
+    server.join().unwrap();
+}
+
+/// The acceptance differential: for every corpus pattern × both sparse
+/// algorithms (plus the dense fallback), matching (n=64) and padded
+/// (n=60) sizes, multiply-by-handle must be **bitwise identical** to the
+/// inline path — same algo, artifact, n_exec, verification verdict, and
+/// result bytes — while performing zero per-request conversions.
+#[test]
+fn handle_path_bitwise_equals_inline_path() {
+    let coord = Coordinator::new(
+        Arc::new(runnable_registry()),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    );
+    let mut rng = Rng::new(0xAB1E);
+    for (pi, pattern) in gen::Pattern::ALL.iter().enumerate() {
+        let n = if pi % 2 == 0 { 64 } else { 60 };
+        let a = gen::generate(*pattern, n, 0.95, &mut rng);
+        for algo in [Some(Algo::Gcoo), Some(Algo::Csr), None] {
+            let entry = coord.put_a(a.clone(), algo).expect("put_a");
+            assert_eq!(entry.a.rows, n);
+            for i in 0..3u64 {
+                let b = Mat::randn(n, n, &mut rng);
+                let mut hreq = SpdmRequest::for_handle(1000 + i, entry.handle, b.clone());
+                hreq.algo_hint = algo;
+                hreq.verify = i == 0;
+                let hresp = coord.run_sync(hreq);
+                let mut ireq = SpdmRequest::new(2000 + i, a.clone(), b.clone());
+                ireq.algo_hint = algo;
+                ireq.verify = i == 0;
+                let iresp = coord.run_sync(ireq);
+                let ctx = format!("{}/{:?}/n{}/b{}", pattern.name(), algo, n, i);
+                assert!(hresp.ok(), "{ctx} handle: {:?}", hresp.error);
+                assert!(iresp.ok(), "{ctx} inline: {:?}", iresp.error);
+                assert_eq!(hresp.algo, iresp.algo, "{ctx} algo");
+                assert_eq!(hresp.artifact, iresp.artifact, "{ctx} artifact");
+                assert_eq!(hresp.n_exec, iresp.n_exec, "{ctx} n_exec");
+                assert_eq!(hresp.verified, iresp.verified, "{ctx} verdicts");
+                if i == 0 {
+                    assert_eq!(hresp.verified, Some(true), "{ctx} oracle");
+                }
+                assert!(
+                    hresp.c == iresp.c,
+                    "{ctx}: handle C is not bitwise identical to inline C"
+                );
+                assert_eq!(hresp.conversions, 0, "{ctx}: handle path must not convert");
+                assert_eq!(hresp.convert_s, 0.0, "{ctx}: handle path bills no EO");
+            }
+        }
+    }
+    coord.shutdown();
+}
+
+/// A hint the cached entry cannot serve falls back to the
+/// convert-per-request path over the entry's dense A — still correct,
+/// still bitwise-equal to inline under the same hint.
+#[test]
+fn incompatible_hint_falls_back_correctly() {
+    let coord = Coordinator::new(
+        Arc::new(runnable_registry()),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    );
+    let mut rng = Rng::new(0xFA11);
+    let a = gen::uniform(64, 0.97, &mut rng);
+    let entry = coord.put_a(a.clone(), Some(Algo::Gcoo)).expect("put_a");
+    let b = Mat::randn(64, 64, &mut rng);
+    // Request csr against a gcoo-registered operand.
+    let mut hreq = SpdmRequest::for_handle(1, entry.handle, b.clone());
+    hreq.algo_hint = Some(Algo::Csr);
+    hreq.verify = true;
+    let hresp = coord.run_sync(hreq);
+    assert!(hresp.ok(), "{:?}", hresp.error);
+    assert_eq!(hresp.algo, Algo::Csr, "the request hint wins");
+    assert_eq!(hresp.verified, Some(true));
+    assert_eq!(hresp.conversions, 1, "fallback converts for this request");
+    let mut ireq = SpdmRequest::new(2, a.clone(), b.clone());
+    ireq.algo_hint = Some(Algo::Csr);
+    let iresp = coord.run_sync(ireq);
+    assert!(hresp.c == iresp.c, "fallback still bitwise-matches inline");
+    coord.shutdown();
+}
+
+/// Mixed handle/inline fusion respects both routing contracts: an entry
+/// registered under a conflicting hint must not reroute unhinted inline
+/// riders (they keep selector routing whether or not they co-batch, and
+/// their bytes are identical to a solo run), while a hint-compatible
+/// entry still serves the whole mixed unit from cache with zero
+/// conversions.
+#[test]
+fn mixed_batch_keeps_inline_routing_deterministic() {
+    let reg = runnable_registry();
+    let cfg = CoordinatorConfig::default();
+    let engine = Engine::new().unwrap();
+    let mut ws = Workspace::new();
+    let store = OperandStore::new(64 << 20);
+    let mut rng = Rng::new(0x313D);
+    let a = gen::uniform(64, 0.99, &mut rng); // unhinted selector routing: gcoo
+    let b1 = Mat::randn(64, 64, &mut rng);
+    let b2 = Mat::randn(64, 64, &mut rng);
+    let ireq = SpdmRequest::new(2, a.clone(), b2.clone());
+    let solo = process_one_ws(&engine, &mut ws, &reg, &cfg, &ireq, None, Instant::now());
+    assert_eq!(solo.algo, Algo::Gcoo);
+
+    // Conflicting case: A registered under a csr hint, both requests
+    // unhinted. The handle job keeps the registered routing, the inline
+    // rider keeps selector routing — no cross-contamination.
+    let (entry, _) = store.register(a.clone(), Some(Algo::Csr), &reg, &cfg).unwrap();
+    let mut hreq = SpdmRequest::for_handle(1, entry.handle, b1.clone());
+    hreq.a_sig = entry.sig; // what Coordinator::submit does on resolve
+    let jobs = [
+        BatchJob { req: &hreq, entry: Some(&*entry), enqueued: Instant::now() },
+        BatchJob::inline(&ireq, Instant::now()),
+    ];
+    let resps = process_batch_ws(&engine, &mut ws, &reg, &cfg, &jobs);
+    assert_eq!(resps[0].algo, Algo::Csr, "handle request keeps the registered routing");
+    assert_eq!(resps[0].conversions, 0, "…served from cache");
+    assert_eq!(resps[1].algo, Algo::Gcoo, "inline rider keeps selector routing");
+    assert!(
+        resps[1].c == solo.c,
+        "inline result must not depend on co-batched handle traffic"
+    );
+
+    // Compatible case: unhinted registration — the cached entry serves
+    // the whole mixed unit, zero conversions, bitwise-stable bytes.
+    let (e2, _) = store.register(a.clone(), None, &reg, &cfg).unwrap();
+    let mut h2 = SpdmRequest::for_handle(3, e2.handle, b1.clone());
+    h2.a_sig = e2.sig;
+    let i2 = SpdmRequest::new(4, a.clone(), b2.clone());
+    let jobs = [
+        BatchJob { req: &h2, entry: Some(&*e2), enqueued: Instant::now() },
+        BatchJob::inline(&i2, Instant::now()),
+    ];
+    let resps = process_batch_ws(&engine, &mut ws, &reg, &cfg, &jobs);
+    assert!(resps.iter().all(|r| r.ok() && r.algo == Algo::Gcoo));
+    assert_eq!(
+        resps.iter().map(|r| r.conversions).sum::<u64>(),
+        0,
+        "a hint-compatible cached entry serves the mixed batch without converting"
+    );
+    assert!(resps[1].c == solo.c, "fused-from-cache inline result still bitwise stable");
+}
+
+/// Submit-level handle failures are typed, and `run_sync` maps them to
+/// failed responses (which serve turns into JSON errors).
+#[test]
+fn unknown_handle_fails_fast_at_submit() {
+    let coord = Coordinator::new(
+        Arc::new(runnable_registry()),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    );
+    let ghost = OperandId(4242);
+    let req = SpdmRequest::for_handle(1, ghost, Mat::zeros(64, 64));
+    match coord.submit(req) {
+        Err(SubmitError::UnknownHandle(h)) => assert_eq!(h, ghost),
+        other => panic!("expected UnknownHandle, got {other:?}"),
+    }
+    let resp = coord.run_sync(SpdmRequest::for_handle(2, ghost, Mat::zeros(64, 64)));
+    assert!(!resp.ok());
+    assert!(resp.error.unwrap().contains("unknown operand handle"));
+    // Dropped mid-session: in-flight submit already resolved its pin, so
+    // only *later* submits fail.
+    let mut rng = Rng::new(3);
+    let a = gen::uniform(64, 0.99, &mut rng);
+    let entry = coord.put_a(a, None).unwrap();
+    assert!(coord.drop_a(entry.handle));
+    assert!(matches!(
+        coord.submit(SpdmRequest::for_handle(3, entry.handle, Mat::zeros(64, 64))),
+        Err(SubmitError::UnknownHandle(_))
+    ));
+    coord.shutdown();
+}
+
+/// The acceptance EO criterion through the wire: `/stats` shows
+/// `conversions_total` staying constant (one per registered handle) while
+/// handle request counts grow — and the store gauges surface.
+#[test]
+fn stats_show_conversions_constant_per_handle() {
+    let (_coord, addr, server) = boot();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let r = client.put_a_synthetic(1, 64, 0.99, "uniform", 11, "gcoo").unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    let h = r.a_handle.unwrap();
+
+    let parse_stats = |resp: gcoospdm::serve::Response| {
+        gcoospdm::json::parse(&resp.metrics.expect("stats payload")).expect("valid JSON")
+    };
+    let conversions = |v: &gcoospdm::json::Value| {
+        v.get("conversions_total").unwrap().as_u64().unwrap()
+    };
+
+    for i in 0..4u64 {
+        let r = client.spdm_handle_synthetic_b(10 + i, h, i, true).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+        assert_eq!(r.verified, Some(true));
+    }
+    let v = parse_stats(client.stats(50).unwrap());
+    assert_eq!(conversions(&v), 1, "4 handle requests, still one conversion (the put_a)");
+    assert_eq!(v.get("store_entries").unwrap().as_u64(), Some(1));
+    assert!(v.get("store_hits").unwrap().as_u64().unwrap() >= 4);
+    assert!(v.get("store_bytes").unwrap().as_u64().unwrap() > 0);
+
+    // Grow the request count: conversions stay one per handle.
+    for i in 0..6u64 {
+        let r = client.spdm_handle_synthetic_b(20 + i, h, 100 + i, false).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+    }
+    let v = parse_stats(client.stats(51).unwrap());
+    assert_eq!(conversions(&v), 1, "10 handle requests, still one conversion");
+
+    // A second handle adds exactly one more conversion.
+    let r = client.put_a_synthetic(60, 64, 0.99, "banded", 12, "gcoo").unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    let h2 = r.a_handle.unwrap();
+    assert_ne!(h2, h);
+    for i in 0..3u64 {
+        let r = client.spdm_handle_synthetic_b(70 + i, h2, i, false).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+    }
+    let v = parse_stats(client.stats(52).unwrap());
+    assert_eq!(conversions(&v), 2, "one conversion per registered handle");
+
+    // Inline traffic, by contrast, converts per request.
+    for i in 0..2u64 {
+        let r = client.spdm_synthetic(80 + i, 64, 0.99, "uniform", 50 + i, "gcoo", false).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+    }
+    let v = parse_stats(client.stats(53).unwrap());
+    assert_eq!(conversions(&v), 4, "each inline request pays its own conversion");
+
+    client.shutdown(99).unwrap();
+    server.join().unwrap();
+}
+
+/// Handle requests batch and fuse: several in-flight requests against one
+/// handle dequeue as a fused batch (operand-keyed affinity), answer with
+/// the oracle-verified product, and still perform zero conversions.
+#[test]
+fn handle_traffic_fuses_without_converting() {
+    let coord = Coordinator::new(
+        Arc::new(runnable_registry()),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    );
+    let mut rng = Rng::new(0xF05E);
+    let a = gen::uniform(64, 0.97, &mut rng);
+    let entry = coord.put_a(a.clone(), Some(Algo::Gcoo)).unwrap();
+    let mut receivers = Vec::new();
+    for i in 0..10u64 {
+        let mut req = SpdmRequest::for_handle(i, entry.handle, Mat::randn(64, 64, &mut rng));
+        req.verify = true;
+        receivers.push(coord.submit(req).expect("queue open"));
+    }
+    let mut total_conversions = 0;
+    for rx in receivers {
+        let resp = rx.recv().expect("reply delivered");
+        assert!(resp.ok(), "{:?}", resp.error);
+        assert_eq!(resp.verified, Some(true));
+        total_conversions += resp.conversions;
+    }
+    assert_eq!(total_conversions, 0, "handle traffic never converts, fused or not");
+    let snap = coord.snapshot();
+    assert_eq!(snap.completed, 10);
+    assert_eq!(snap.conversions_total, 1, "only the put_a converted");
+    assert_eq!(
+        snap.batched_jobs(),
+        snap.completed + snap.errors,
+        "batch histogram still balances under handle traffic"
+    );
+    coord.shutdown();
+}

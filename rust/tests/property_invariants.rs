@@ -210,7 +210,11 @@ fn prop_a_signature_inequality_is_safe_non_batching() {
             if r1.a_sig != r2.a_sig && batch_affine(&r1, &r2) {
                 return Err("unequal signatures must never batch".into());
             }
-            if r1.a_sig == r2.a_sig && r1.a.data != r2.a.data {
+            let (d1, d2) = (
+                &r1.a.as_inline().expect("inline request").data,
+                &r2.a.as_inline().expect("inline request").data,
+            );
+            if r1.a_sig == r2.a_sig && d1 != d2 {
                 return Err("signature collision on different content".into());
             }
             Ok(())
