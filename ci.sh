@@ -2,10 +2,11 @@
 # CI for the gcoospdm crate: the tier-1 verify plus full target coverage.
 #
 #   ./ci.sh            # build + test + compile all benches/examples
-#   ./ci.sh --quick    # serving fast path: the batched-vs-sequential
-#                      # differential suite, the operand-handle (protocol
-#                      # v2 + store) suites, and the serve_hotpath quick
-#                      # bench (batched + handle-vs-inline A/Bs)
+#   ./ci.sh --quick    # serving fast path: the batched-vs-sequential and
+#                      # adaptive-routing differential suites, the
+#                      # operand-handle (protocol v2 + store) suites, the
+#                      # tuner property suites, and the serve_hotpath
+#                      # quick bench (batched + handle + adaptive A/Bs)
 #
 # The crate is std-only (offline build; see DESIGN.md §2), so no network or
 # vendored registry is required.
@@ -16,14 +17,20 @@ if [[ "${1:-}" == "--quick" ]]; then
   echo "== quick: batched-vs-sequential differential suite =="
   cargo test -q --test batch_differential
 
+  echo "== quick: adaptive-routing differential suite (bitwise, exact flip index, trace determinism) =="
+  cargo test -q --test routing_differential
+
   echo "== quick: operand-handle API (protocol v2 round trips + handle-vs-inline differential) =="
   cargo test -q --test handle_api
 
-  echo "== quick: operand store invariants (LRU, byte budget, pins) + protocol validation =="
+  echo "== quick: tuner invariants (EWMA bounds, sample gate, pure exploration draws) =="
+  cargo test -q --lib coordinator::tuner
+
+  echo "== quick: operand store invariants (LRU, byte budget, pins, flip/pin versioning) + protocol validation =="
   cargo test -q --lib coordinator::store
   cargo test -q --lib serve::protocol
 
-  echo "== quick: serve_hotpath (req/s, copies avoided, batched + handle A/Bs) =="
+  echo "== quick: serve_hotpath (req/s, copies avoided, batched + handle + adaptive-vs-static A/Bs) =="
   cargo bench --bench serve_hotpath -- --quick
 
   echo "CI quick OK"

@@ -70,7 +70,7 @@ fn main() {
         let (handle, outcome) = {
             let mut map = handles.lock().unwrap();
             match map.get(&slot).copied() {
-                Some(h) => (h, ReplayOutcome::StoreHit),
+                Some(h) => (h, ReplayOutcome::store_hit()),
                 None => {
                     let a = &pool[slot];
                     let r = c.put_a_synthetic(item.id, a.n, a.sparsity, &a.pattern, a.seed, "auto")?;
@@ -79,13 +79,16 @@ fn main() {
                     }
                     let h = r.a_handle.expect("put_a reply carries the handle");
                     map.insert(slot, h);
-                    (h, ReplayOutcome::StoreMiss)
+                    (h, ReplayOutcome::store_miss())
                 }
             }
         };
         let r = c.spdm_handle_synthetic_b(item.id, handle, item.seed, false)?;
         if r.ok {
-            Ok(outcome)
+            Ok(match r.algo {
+                Some(a) => outcome.with_algo(a),
+                None => outcome,
+            })
         } else {
             Err(r.error.unwrap_or_default())
         }

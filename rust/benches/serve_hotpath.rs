@@ -20,7 +20,7 @@ use std::time::Instant;
 use gcoospdm::convert;
 use gcoospdm::coordinator::{
     process_batch_ws, process_one_ws, BatchJob, Coordinator, CoordinatorConfig, Selector,
-    SpdmRequest, Workspace,
+    SpdmRequest, TunerConfig, Workspace,
 };
 use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
@@ -326,6 +326,67 @@ fn main() {
         assert_eq!(
             handle_conversions, 1,
             "handle traffic must convert exactly once (at registration)"
+        );
+    }
+
+    // --- Phase 5: adaptive vs static routing A/B (fixed seeds) ---
+    // The tuner's promise: measured routing changes *choices* (provenance,
+    // exploration, flips), never *results*. Both sides serve the identical
+    // handle workload through live coordinators; outputs are asserted
+    // bitwise identical before the adaptive side's req/s and its
+    // exploration/flip counters are reported.
+    {
+        let count = if quick { 24 } else { 120 };
+        let mut rng = Rng::new(4000);
+        let a = gen::uniform(256, 0.99, &mut rng);
+        let bs: Vec<Mat> = (0..count).map(|_| Mat::randn(256, 256, &mut rng)).collect();
+
+        let run_side = |tuning: TunerConfig| {
+            let coord = Coordinator::new(
+                Arc::new(registry()),
+                CoordinatorConfig { workers: 1, tuning, ..Default::default() },
+            );
+            let entry = coord.put_a(a.clone(), None).expect("put_a");
+            let warm = coord.run_sync(SpdmRequest::for_handle(9999, entry.handle, bs[0].clone()));
+            assert!(warm.ok(), "{:?}", warm.error);
+            let t0 = Instant::now();
+            let resps: Vec<_> = bs
+                .iter()
+                .enumerate()
+                .map(|(i, b)| {
+                    coord.run_sync(SpdmRequest::for_handle(i as u64, entry.handle, b.clone()))
+                })
+                .collect();
+            let wall = t0.elapsed().as_secs_f64();
+            let snap = coord.snapshot();
+            coord.shutdown();
+            (resps, wall, snap)
+        };
+
+        let (stat, stat_s, _) = run_side(TunerConfig::default());
+        let (adap, adap_s, snap) = run_side(TunerConfig {
+            enabled: true,
+            explore_every: 4,
+            min_samples: 3,
+            register_refine_budget: 2,
+            ..Default::default()
+        });
+        for (i, (s, ad)) in stat.iter().zip(&adap).enumerate() {
+            assert!(s.ok() && ad.ok(), "[{i}] {:?} / {:?}", s.error, ad.error);
+            assert!(
+                s.c == ad.c,
+                "[{i}] adaptive routing must be bitwise identical to static"
+            );
+        }
+        println!(
+            "adaptive vs static routing: adaptive {:.1} req/s | static {:.1} req/s | ratio {:.2}x",
+            count as f64 / adap_s,
+            count as f64 / stat_s,
+            stat_s / adap_s,
+        );
+        println!(
+            "adaptive side: {} explorations, {} route flips, {} conversions total",
+            snap.explorations, snap.route_flips, snap.conversions_total
         );
     }
 }

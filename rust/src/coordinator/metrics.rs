@@ -146,6 +146,8 @@ impl Metrics {
             store_hits: 0,
             store_misses: 0,
             store_evictions: 0,
+            route_flips: 0,
+            explorations: 0,
             batch_hist: self.batch_widths.lock().unwrap().clone(),
             throughput_rps: completed as f64 / elapsed.max(1e-9),
             p50_s: pct(&lat, 50.0),
@@ -196,6 +198,11 @@ pub struct MetricsSnapshot {
     pub store_hits: u64,
     pub store_misses: u64,
     pub store_evictions: u64,
+    /// Adaptive-routing counters, filled by `Coordinator::snapshot` from
+    /// the tuner (zero from a bare `Metrics::snapshot`): model-driven
+    /// route flips (entry republishes) and seeded exploration executions.
+    pub route_flips: u64,
+    pub explorations: u64,
     /// `batch_hist[w]` = dequeued batches of width w (index 0 unused).
     pub batch_hist: Vec<u64>,
     pub throughput_rps: f64,
@@ -226,6 +233,7 @@ impl MetricsSnapshot {
              copies:   {} B copied / {} avoided (zero-copy borrows)\n\
              batches:  width hist {:?} / {} conversions amortized\n\
              store:    {} operands / {} B of {} B budget / {} hits / {} misses / {} evictions / {} conversions total\n\
+             routing:  {} route flips / {} explorations\n\
              rate:     {:.1} req/s   per-algo: {:?}",
             self.submitted,
             self.completed,
@@ -247,6 +255,8 @@ impl MetricsSnapshot {
             self.store_misses,
             self.store_evictions,
             self.conversions_total,
+            self.route_flips,
+            self.explorations,
             self.throughput_rps,
             self.per_algo,
         )
@@ -279,6 +289,8 @@ impl MetricsSnapshot {
                 .field("store_hits", self.store_hits)
                 .field("store_misses", self.store_misses)
                 .field("store_evictions", self.store_evictions)
+                .field("route_flips", self.route_flips)
+                .field("explorations", self.explorations)
                 .field("batch_hist", hist)
                 .field("throughput_rps", self.throughput_rps)
                 .field("p50_ms", self.p50_s * 1e3)
@@ -380,10 +392,15 @@ mod tests {
         s.store_hits = 7;
         s.store_misses = 1;
         s.store_evictions = 1;
+        s.route_flips = 2;
+        s.explorations = 5;
         assert!(s.render().contains("2 operands / 4096 B of 8192 B budget"));
         assert!(s.render().contains("3 conversions total"));
+        assert!(s.render().contains("2 route flips / 5 explorations"));
         let v = crate::json::parse(&s.to_json()).unwrap();
         assert_eq!(v.get("conversions_total").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("route_flips").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("explorations").unwrap().as_u64(), Some(5));
         assert_eq!(v.get("store_hits").unwrap().as_u64(), Some(7));
         assert_eq!(v.get("store_bytes").unwrap().as_u64(), Some(4096));
         assert_eq!(v.get("store_evictions").unwrap().as_u64(), Some(1));

@@ -1,12 +1,16 @@
 //! Coordinator — the L3 serving layer: bounded job queue with backpressure,
 //! plan-first algorithm selection (the sparsity/size routing policy the
-//! paper's conclusions prescribe, resolved to a concrete artifact before
-//! any conversion), a converted-operand store (`put_a` once,
-//! multiply-by-handle forever — registration pays the one conversion,
-//! handle traffic executes from cached slabs), operand-keyed batching with
-//! fused multi-B execution (one conversion + one wide kernel per batch; no
-//! conversion at all for cached operands), a worker pool with per-worker
-//! engines + workspace arenas, and metrics.
+//! paper's conclusions prescribe as the **prior**, resolved to a concrete
+//! artifact before any conversion), an adaptive tuner (`tuner.rs`:
+//! clock-injected per-operand latency model, seeded exploration, and
+//! model-driven route flips that republish store entries — the measured
+//! routing the paper names as future work), a converted-operand store
+//! (`put_a` once, multiply-by-handle forever — registration pays the one
+//! conversion, handle traffic executes from cached slabs; entries are
+//! versioned so flips never touch an in-flight pin), operand-keyed
+//! batching with fused multi-B execution (one conversion + one wide kernel
+//! per batch; no conversion at all for cached operands), a worker pool
+//! with per-worker engines + workspace arenas, and metrics.
 //!
 //! The paper's contribution is the kernel, so this layer is deliberately a
 //! *thin but real* serving stack (DESIGN.md §1 L3): everything a downstream
@@ -18,6 +22,7 @@ mod selector;
 mod metrics;
 mod pool;
 mod store;
+mod tuner;
 mod workspace;
 
 pub use job::{AOperand, ASig, Algo, SpdmRequest, SpdmResponse};
@@ -25,11 +30,14 @@ pub use queue::BoundedQueue;
 pub use selector::{Selector, SelectorPolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use pool::{
-    batch_affine, process_batch_ws, process_one, process_one_ws, BatchJob, Coordinator,
-    CoordinatorConfig, SubmitError,
+    batch_affine, process_batch_tuned, process_batch_ws, process_one, process_one_tuned,
+    process_one_ws, BatchJob, Coordinator, CoordinatorConfig, SubmitError, TuneCtx,
 };
 pub use store::{
     OperandEntry, OperandId, OperandPin, OperandStore, OperandSummary, StoreStats,
+};
+pub use tuner::{
+    explore_draw, Clock, ModelKey, PerfModel, RealClock, ScriptedClock, Tuner, TunerConfig,
 };
 pub use workspace::Workspace;
 // The selector's output type lives next to the engine (`runtime::plan`);

@@ -28,10 +28,12 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::queue::BoundedQueue;
 use super::selector::{Selector, SelectorPolicy};
 use super::store::{OperandEntry, OperandId, OperandPin, OperandStore, OperandSummary};
+use super::tuner::{Clock, ModelKey, RealClock, Tuner, TunerConfig};
 use super::workspace::Workspace;
-use crate::convert;
+use crate::convert::{self, AStats};
+use crate::json::{self, Value};
 use crate::ndarray::Mat;
-use crate::runtime::{Engine, Registry, SpdmOutput};
+use crate::runtime::{Engine, ExecPlan, Registry, SpdmOutput};
 use crate::sparse::{EllSlabs, GcooSlabs};
 
 /// Coordinator tuning knobs.
@@ -49,6 +51,9 @@ pub struct CoordinatorConfig {
     /// Byte budget of the converted-operand store (registered As plus
     /// their device slabs; LRU-evicted under pressure).
     pub store_budget_bytes: u64,
+    /// Adaptive measured routing (tuner.rs): disabled by default, in which
+    /// case routing is exactly the static paper-threshold policy.
+    pub tuning: TunerConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -61,8 +66,20 @@ impl Default for CoordinatorConfig {
             gcoo_p: 8,
             convert_threads: 4,
             store_budget_bytes: 256 << 20,
+            tuning: TunerConfig::default(),
         }
     }
+}
+
+/// The adaptive-routing context a worker threads through the pipeline:
+/// the tuner (model + clock + counters), the operand store (route flips
+/// republish entries through it), and the metrics sink (a flip's fresh
+/// conversion is an EO event). Absent (or with the tuner disabled), every
+/// pipeline function behaves exactly as static routing.
+pub struct TuneCtx<'a> {
+    pub tuner: &'a Tuner,
+    pub store: &'a OperandStore,
+    pub metrics: &'a Metrics,
 }
 
 /// Typed submission failure — the coordinator refusing a request is an
@@ -128,6 +145,7 @@ pub struct Coordinator {
     queue: Arc<BoundedQueue<Job>>,
     metrics: Arc<Metrics>,
     store: Arc<OperandStore>,
+    tuner: Arc<Tuner>,
     registry: Arc<Registry>,
     cfg: CoordinatorConfig,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -135,14 +153,29 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(registry: Arc<Registry>, cfg: CoordinatorConfig) -> Self {
+        Coordinator::with_clock(registry, cfg, Arc::new(RealClock::new()))
+    }
+
+    /// Build a coordinator with an injected latency clock — production
+    /// uses [`Coordinator::new`] (monotonic wall clock); tests inject a
+    /// `ScriptedClock` so every measured latency, and therefore every
+    /// adaptive routing decision, is deterministic.
+    pub fn with_clock(
+        registry: Arc<Registry>,
+        cfg: CoordinatorConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
         let queue = Arc::new(BoundedQueue::<Job>::new(cfg.queue_cap));
         let metrics = Arc::new(Metrics::new());
         let store = Arc::new(OperandStore::new(cfg.store_budget_bytes));
+        let tuner = Arc::new(Tuner::new(cfg.tuning, clock));
         let handles = (0..cfg.workers.max(1))
             .map(|w| {
                 let queue = Arc::clone(&queue);
                 let metrics = Arc::clone(&metrics);
                 let registry = Arc::clone(&registry);
+                let store = Arc::clone(&store);
+                let tuner = Arc::clone(&tuner);
                 std::thread::Builder::new()
                     .name(format!("coordinator-{w}"))
                     .spawn(move || {
@@ -185,8 +218,11 @@ impl Coordinator {
                                     enqueued: j.enqueued,
                                 })
                                 .collect();
-                            let resps =
-                                process_batch_ws(&engine, &mut ws, &registry, &cfg, &jobs);
+                            let tune =
+                                TuneCtx { tuner: &tuner, store: &store, metrics: &metrics };
+                            let resps = process_batch_tuned(
+                                &engine, &mut ws, &registry, &cfg, &jobs, Some(&tune),
+                            );
                             drop(jobs);
                             // Credit only conversions actually skipped:
                             // jobs that would convert solo (inline sparse,
@@ -239,7 +275,7 @@ impl Coordinator {
                     .expect("spawn coordinator worker")
             })
             .collect();
-        Coordinator { queue, metrics, store, registry, cfg, handles }
+        Coordinator { queue, metrics, store, tuner, registry, cfg, handles }
     }
 
     /// Enqueue a request; the receiver yields the response when done.
@@ -291,7 +327,8 @@ impl Coordinator {
         Arc::clone(&self.metrics)
     }
 
-    /// Metrics snapshot with the operand-store gauges merged in (the serve
+    /// Metrics snapshot with the operand-store gauges and the tuner's
+    /// route-flip/exploration counters merged in (the serve
     /// `stats`/`metrics` endpoints report through this).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
@@ -302,7 +339,86 @@ impl Coordinator {
         snap.store_hits = st.hits;
         snap.store_misses = st.misses;
         snap.store_evictions = st.evictions;
+        snap.route_flips = self.tuner.route_flips();
+        snap.explorations = self.tuner.explorations_total();
         snap
+    }
+
+    /// The adaptive-routing subsystem (tests script and inspect it).
+    pub fn tuner(&self) -> Arc<Tuner> {
+        Arc::clone(&self.tuner)
+    }
+
+    /// The `explain` payload: the routing policy in force, the adaptive
+    /// counters, and one row per registered operand — published version,
+    /// incumbent routing, ranked candidates, and the tuner's per-algo
+    /// estimates (mean seconds per executed column, sample count, whether
+    /// the sample gate has opened).
+    pub fn explain_json(&self) -> String {
+        let tcfg = self.tuner.config();
+        let policy = Value::obj()
+            .field("gcoo_crossover", self.cfg.policy.gcoo_crossover)
+            .field("min_sparse_n", self.cfg.policy.min_sparse_n)
+            .field("tuning_enabled", tcfg.enabled)
+            .field("alpha", tcfg.alpha)
+            .field("min_samples", tcfg.min_samples)
+            .field("explore_every", tcfg.explore_every)
+            .field("seed", tcfg.seed)
+            .build();
+        let entries: Vec<Value> = self
+            .store
+            .entries_snapshot()
+            .iter()
+            .map(|e| {
+                let key = ModelKey::operand(e.handle);
+                let candidates = Value::Arr(
+                    e.candidates
+                        .iter()
+                        .map(|c| {
+                            Value::obj()
+                                .field("algo", c.algo.as_str())
+                                .field("artifact", c.artifact.as_str())
+                                .field("n_exec", c.n_exec)
+                                .field("cap", c.cap)
+                                .build()
+                        })
+                        .collect(),
+                );
+                let estimates = Value::Arr(
+                    self.tuner
+                        .estimates_view(key)
+                        .into_iter()
+                        .map(|(algo, mean, samples, gated)| {
+                            Value::obj()
+                                .field("algo", algo.as_str())
+                                .field("mean_s_per_col", mean)
+                                .field("samples", samples)
+                                .field("gated", gated)
+                                .build()
+                        })
+                        .collect(),
+                );
+                Value::obj()
+                    .field("a_handle", e.handle.0)
+                    .field("version", e.version)
+                    .field("n", e.a.rows)
+                    .field("algo", e.plan.algo.as_str())
+                    .field("artifact", e.plan.artifact.as_str())
+                    .field("reason", e.plan.reason)
+                    .field("requests", self.tuner.requests_for(key))
+                    .field("candidates", candidates)
+                    .field("estimates", estimates)
+                    .build()
+            })
+            .collect();
+        json::write(
+            &Value::obj()
+                .field("policy", policy)
+                .field("route_flips", self.tuner.route_flips())
+                .field("explorations", self.tuner.explorations_total())
+                .field("entries", Value::Arr(entries))
+                .build(),
+        )
     }
 
     /// Register an A operand: one signature, one stats scan, one resolved
@@ -428,6 +544,33 @@ pub fn process_one_ws(
     entry: Option<&OperandEntry>,
     enqueued: Instant,
 ) -> SpdmResponse {
+    process_one_tuned(engine, ws, registry, cfg, req, entry, enqueued, None)
+}
+
+/// [`process_one_ws`] with the adaptive-routing context threaded through.
+/// With `tune` absent (or the tuner disabled) the behavior is exactly the
+/// static pipeline. With it enabled, **unhinted** requests engage the
+/// tuner: inline traffic plans through `Selector::plan_with_model` (gated
+/// measured estimates outrank the paper prior) and may take a seeded
+/// exploration draw toward the top alternative; cached-operand traffic
+/// runs [`exec_cached_adaptive`] (exploration + observation + the
+/// model-driven route flip). Hinted requests never consult the tuner —
+/// the hint is the contract. Routing can change the response's
+/// algo/artifact provenance, never its numbers: every family accumulates
+/// each output element over ascending k in f32, so the result is bitwise
+/// identical whichever plan runs (`tests/routing_differential.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn process_one_tuned(
+    engine: &Engine,
+    ws: &mut Workspace,
+    registry: &Registry,
+    cfg: &CoordinatorConfig,
+    req: &SpdmRequest,
+    entry: Option<&OperandEntry>,
+    enqueued: Instant,
+    tune: Option<&TuneCtx<'_>>,
+) -> SpdmResponse {
+    let tune = tune.filter(|t| t.tuner.enabled());
     let Some(a) = req.a_mat(entry) else {
         let msg = match &req.a {
             AOperand::Handle(h) => format!("unresolved operand handle {h}"),
@@ -447,6 +590,11 @@ pub fn process_one_ws(
     // --- cached-operand fast path: registered plan + cached device slabs ---
     if let Some(e) = entry {
         if e.serves_hint(req.algo_hint) {
+            if let Some(t) = tune {
+                if req.algo_hint.is_none() {
+                    return exec_cached_adaptive(engine, ws, registry, cfg, req, e, t, enqueued);
+                }
+            }
             return exec_cached_one(engine, ws, registry, req, e, enqueued);
         }
     }
@@ -463,22 +611,88 @@ pub fn process_one_ws(
     let stats_s = t_stats.elapsed().as_secs_f64();
     let sparsity = stats.sparsity();
 
-    // --- plan once, before any conversion ---
+    // --- plan once, before any conversion: the static prior, or the
+    // measured model for unhinted inline traffic under an enabled tuner ---
     let selector = Selector::new(cfg.policy);
-    let plan = match selector.plan(
-        registry,
-        n,
-        sparsity,
-        stats.max_band_nnz(),
-        stats.max_row_nnz,
-        req.algo_hint,
-    ) {
+    let adaptive = tune.filter(|_| entry.is_none() && req.algo_hint.is_none());
+    let key = ModelKey::signature(req.a_sig.hash);
+    let planned = match adaptive {
+        Some(t) => selector.plan_with_model(
+            registry,
+            n,
+            sparsity,
+            stats.max_band_nnz(),
+            stats.max_row_nnz,
+            None,
+            &t.tuner.estimates_for(key),
+        ),
+        None => selector.plan(
+            registry,
+            n,
+            sparsity,
+            stats.max_band_nnz(),
+            stats.max_row_nnz,
+            req.algo_hint,
+        ),
+    };
+    let mut plan = match planned {
         Ok(p) => p,
         Err(e) => {
             return SpdmResponse::failed(req.id, req.algo_hint.unwrap_or(Algo::DenseXla), e)
         }
     };
+    // Seeded exploration: override toward the top resolvable alternative
+    // so the model gathers samples for the non-incumbent too.
+    if let Some(t) = adaptive {
+        let idx = t.tuner.next_index(key);
+        if t.tuner.draw(key, idx) {
+            if let Some(mut alt) = selector
+                .plan_candidates(registry, n, sparsity, stats.max_band_nnz(), stats.max_row_nnz)
+                .into_iter()
+                .find(|c| c.algo != plan.algo)
+            {
+                alt.reason = "explore";
+                t.tuner.record_exploration();
+                plan = alt;
+            }
+        }
+    }
+    match adaptive {
+        Some(t) => {
+            // Bracket the execution with the injected clock (exactly two
+            // reads) and feed the per-column cost into the model.
+            let t0 = t.tuner.now_s();
+            let resp =
+                exec_planned(engine, ws, registry, cfg, req, a, &plan, &stats, stats_s, enqueued);
+            let dt = t.tuner.now_s() - t0;
+            if resp.ok() {
+                t.tuner.observe(key, resp.algo, plan.n_exec, dt);
+            }
+            resp
+        }
+        None => exec_planned(engine, ws, registry, cfg, req, a, &plan, &stats, stats_s, enqueued),
+    }
+}
 
+/// The post-plan half of the zero-copy pipeline: execute one request under
+/// an already-resolved plan — at most one conversion of A (straight into
+/// the workspace's device slabs) and zero slab copies at the planned
+/// capacity. Shared by static routing, the measured model, and the
+/// exploration/fallback paths, so every route runs identical code.
+#[allow(clippy::too_many_arguments)]
+fn exec_planned(
+    engine: &Engine,
+    ws: &mut Workspace,
+    registry: &Registry,
+    cfg: &CoordinatorConfig,
+    req: &SpdmRequest,
+    a: &Mat,
+    plan: &ExecPlan,
+    stats: &AStats,
+    stats_s: f64,
+    enqueued: Instant,
+) -> SpdmResponse {
+    let n = a.rows;
     let mut bytes_copied = 0u64;
     let mut copies_avoided = 0u64;
     let mut convert_s = 0.0;
@@ -503,7 +717,7 @@ pub fn process_one_ws(
             let t0 = Instant::now();
             if let Err(e) = convert::dense_to_slabs_into(
                 a,
-                &stats,
+                stats,
                 plan.n_exec,
                 plan.cap,
                 cfg.convert_threads,
@@ -670,6 +884,82 @@ fn exec_cached_one(
     finish_single(req, &e.a, plan.algo, plan.n_exec, out, 0.0, 0, bytes_copied, copies_avoided, enqueued)
 }
 
+/// The cached-operand path under an enabled tuner (unhinted requests
+/// only): claim the entry's next request index, take the seeded
+/// exploration draw — executing the top-ranked non-incumbent candidate
+/// via a one-off conversion over the entry's dense A when it fires, the
+/// cached incumbent otherwise — feed the bracketed per-column cost into
+/// the model, and finally apply the route-flip rule: once the gated
+/// estimates name a strictly faster candidate, the entry is republished
+/// under it ([`OperandStore::reroute`]). Every branch produces bitwise
+/// the same C; only algo/artifact provenance differs.
+#[allow(clippy::too_many_arguments)]
+fn exec_cached_adaptive(
+    engine: &Engine,
+    ws: &mut Workspace,
+    registry: &Registry,
+    cfg: &CoordinatorConfig,
+    req: &SpdmRequest,
+    e: &OperandEntry,
+    t: &TuneCtx<'_>,
+    enqueued: Instant,
+) -> SpdmResponse {
+    let key = ModelKey::operand(e.handle);
+    let idx = t.tuner.next_index(key);
+    let explored: Option<ExecPlan> = if t.tuner.draw(key, idx) {
+        e.candidates.iter().find(|c| c.algo != e.plan.algo).cloned()
+    } else {
+        None
+    };
+    let resp = match explored {
+        Some(mut alt) => {
+            alt.reason = "explore";
+            alt.width = 1;
+            t.tuner.record_exploration();
+            // The exploration sample: convert-per-request over the
+            // entry's dense A under the alternative's resolved plan (no
+            // re-planning, and no re-scan — the candidate already pins
+            // its artifact and the immutable entry carries its
+            // registration-time stats; the scan was billed at put_a).
+            let t0 = t.tuner.now_s();
+            let resp = exec_planned(
+                engine, ws, registry, cfg, req, &e.a, &alt, &e.stats, 0.0, enqueued,
+            );
+            let dt = t.tuner.now_s() - t0;
+            if resp.ok() {
+                t.tuner.observe(key, resp.algo, alt.n_exec, dt);
+            }
+            resp
+        }
+        None => {
+            let t0 = t.tuner.now_s();
+            let resp = exec_cached_one(engine, ws, registry, req, e, enqueued);
+            let dt = t.tuner.now_s() - t0;
+            if resp.ok() {
+                t.tuner.observe(key, resp.algo, e.plan.n_exec, dt);
+            }
+            resp
+        }
+    };
+    flip_if_ready(t, e, cfg, key);
+    resp
+}
+
+/// Apply the measured route-flip rule after an observation: republish the
+/// entry under the gated measured favorite when one strictly beats the
+/// incumbent. The store refuses stale flips (this job may hold an older
+/// pinned version than the published one), so the check is safe to run
+/// after every request; a successful flip performs one fresh conversion —
+/// an EO event the metrics record.
+fn flip_if_ready(t: &TuneCtx<'_>, e: &OperandEntry, cfg: &CoordinatorConfig, key: ModelKey) {
+    if let Some(alt) = t.tuner.best_alternative(key, e) {
+        if t.store.reroute(e, &alt, cfg).is_ok() {
+            t.tuner.record_flip();
+            t.metrics.record_conversions(1);
+        }
+    }
+}
+
 /// Execute one shape-affine batch as a fused unit: convert the shared A
 /// **once** (or reuse a registered operand's cached slabs and convert not
 /// at all), stack the batch's B operands column-wise into one wide dense
@@ -695,12 +985,29 @@ pub fn process_batch_ws(
     cfg: &CoordinatorConfig,
     batch: &[BatchJob<'_>],
 ) -> Vec<SpdmResponse> {
+    process_batch_tuned(engine, ws, registry, cfg, batch, None)
+}
+
+/// [`process_batch_ws`] with the adaptive-routing context threaded
+/// through: width-1 slots and re-screen singles take
+/// [`process_one_tuned`] (full adaptivity), fused units plan through the
+/// measured model and feed it one observation per batch. Absent (or
+/// disabled), behavior is exactly the static pipeline.
+pub fn process_batch_tuned(
+    engine: &Engine,
+    ws: &mut Workspace,
+    registry: &Registry,
+    cfg: &CoordinatorConfig,
+    batch: &[BatchJob<'_>],
+    tune: Option<&TuneCtx<'_>>,
+) -> Vec<SpdmResponse> {
+    let tune = tune.filter(|t| t.tuner.enabled());
     if batch.is_empty() {
         return Vec::new();
     }
     if batch.len() == 1 {
         let j = &batch[0];
-        return vec![process_one_ws(engine, ws, registry, cfg, j.req, j.entry, j.enqueued)];
+        return vec![process_one_tuned(engine, ws, registry, cfg, j.req, j.entry, j.enqueued, tune)];
     }
     let head = &batch[0];
     let head_a = head.req.a_mat(head.entry);
@@ -714,7 +1021,7 @@ pub fn process_batch_ws(
     if n == 0 {
         return batch
             .iter()
-            .map(|j| process_one_ws(engine, ws, registry, cfg, j.req, j.entry, j.enqueued))
+            .map(|j| process_one_tuned(engine, ws, registry, cfg, j.req, j.entry, j.enqueued, tune))
             .collect();
     }
     let mut out: Vec<Option<SpdmResponse>> = batch.iter().map(|_| None).collect();
@@ -768,7 +1075,8 @@ pub fn process_batch_ws(
             // The head failed its own screen (e.g. mis-shaped B): answer it
             // individually so the recursion below — which is anchored on
             // the head never re-entering `rest` — always terminates.
-            out[i] = Some(process_one_ws(engine, ws, registry, cfg, j.req, j.entry, j.enqueued));
+            out[i] =
+                Some(process_one_tuned(engine, ws, registry, cfg, j.req, j.entry, j.enqueued, tune));
         } else {
             rest.push(i);
         }
@@ -776,10 +1084,10 @@ pub fn process_batch_ws(
     if fused.len() == 1 {
         let i = fused[0];
         let j = &batch[i];
-        out[i] = Some(process_one_ws(engine, ws, registry, cfg, j.req, j.entry, j.enqueued));
+        out[i] = Some(process_one_tuned(engine, ws, registry, cfg, j.req, j.entry, j.enqueued, tune));
     } else if !fused.is_empty() {
         let jobs: Vec<BatchJob<'_>> = fused.iter().map(|&i| batch[i]).collect();
-        let resps = process_fused(engine, ws, registry, cfg, &jobs);
+        let resps = process_fused(engine, ws, registry, cfg, &jobs, tune);
         for (&i, resp) in fused.iter().zip(resps) {
             out[i] = Some(resp);
         }
@@ -792,7 +1100,7 @@ pub fn process_batch_ws(
     // set, so `rest` strictly shrinks.
     if !rest.is_empty() {
         let jobs: Vec<BatchJob<'_>> = rest.iter().map(|&i| batch[i]).collect();
-        let resps = process_batch_ws(engine, ws, registry, cfg, &jobs);
+        let resps = process_batch_tuned(engine, ws, registry, cfg, &jobs, tune);
         for (&i, resp) in rest.iter().zip(resps) {
             out[i] = Some(resp);
         }
@@ -809,8 +1117,13 @@ fn process_fused(
     registry: &Registry,
     cfg: &CoordinatorConfig,
     jobs: &[BatchJob<'_>],
+    tune: Option<&TuneCtx<'_>>,
 ) -> Vec<SpdmResponse> {
     let head = &jobs[0];
+    // Adaptivity engages for unhinted batches only (the hint is the
+    // contract). Fused units never explore or flip — they feed the model
+    // one observation per batch; flips happen on width-1 traffic.
+    let tune = tune.filter(|t| t.tuner.enabled() && head.req.algo_hint.is_none());
     let a = head
         .req
         .a_mat(head.entry)
@@ -858,14 +1171,28 @@ fn process_fused(
             let stats = convert::scan_stats(a, cfg.gcoo_p, cfg.convert_threads);
             let stats_s = t_stats.elapsed().as_secs_f64();
             let selector = Selector::new(cfg.policy);
-            let plan = match selector.plan(
-                registry,
-                n,
-                stats.sparsity(),
-                stats.max_band_nnz(),
-                stats.max_row_nnz,
-                head.req.algo_hint,
-            ) {
+            // Unhinted adaptive batches plan through the measured model
+            // (same fallback chain; an empty model is exactly the prior).
+            let planned = match tune {
+                Some(t) => selector.plan_with_model(
+                    registry,
+                    n,
+                    stats.sparsity(),
+                    stats.max_band_nnz(),
+                    stats.max_row_nnz,
+                    None,
+                    &t.tuner.estimates_for(ModelKey::signature(head.req.a_sig.hash)),
+                ),
+                None => selector.plan(
+                    registry,
+                    n,
+                    stats.sparsity(),
+                    stats.max_band_nnz(),
+                    stats.max_row_nnz,
+                    head.req.algo_hint,
+                ),
+            };
+            let plan = match planned {
                 Ok(p) => p,
                 Err(e) => return fail_all(head.req.algo_hint.unwrap_or(Algo::DenseXla), e, 0),
             };
@@ -874,6 +1201,9 @@ fn process_fused(
     };
     plan.width = k;
     let ne = plan.n_exec;
+    let model_key = cached
+        .map(|e| ModelKey::operand(e.handle))
+        .unwrap_or_else(|| ModelKey::signature(head.req.a_sig.hash));
 
     // Stack the B operands column-wise: wide B = [B_0 | B_1 | … | B_{k−1}],
     // each block zero-padded from n to ne. Rows n..ne stay zero — A has no
@@ -892,6 +1222,10 @@ fn process_fused(
     let mut convert_s = 0.0;
     let mut conversions = 0u64;
     let mut head_bytes = 0u64; // once-per-batch copies (slab repad, dense A pad)
+    // Bracket the fused execution with the injected clock (one
+    // observation per batch; a failing batch leaves its start read
+    // unpaired, which only matters to scripts that also script failures).
+    let t_exec = tune.map(|t| t.tuner.now_s());
     let (kernel_s, artifact, copy) = if let Some(e) = cached {
         // One wide kernel straight over the registered device slabs.
         match engine.run_operand_into(registry, &plan, &e.operand, &ws.b_stack, &mut ws.c_stack) {
@@ -987,6 +1321,10 @@ fn process_fused(
         }
     };
     head_bytes += copy.bytes_copied;
+    if let (Some(t), Some(t0)) = (tune, t_exec) {
+        let dt = t.tuner.now_s() - t0;
+        t.tuner.observe(model_key, plan.algo, plan.width * ne, dt);
+    }
 
     // Scatter: request j's C is the n×n top-left block of wide-C's j-th
     // ne-column slice. Each output column accumulated the same ordered f32

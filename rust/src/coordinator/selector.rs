@@ -14,6 +14,14 @@
 //! execution size, **and** the concrete artifact with its capacity — from
 //! the fused stats scan alone, before any conversion happens. The pipeline
 //! then converts A exactly once, straight into slabs of `plan.cap`.
+//!
+//! The paper thresholds are the **prior**, not the last word:
+//! [`Selector::plan_with_model`] defers to the tuner's sample-gated
+//! measured estimates once they exist (trying them in measured-cost order,
+//! with the capacity-fallback chain intact — a measured favorite with no
+//! fitting artifact falls through to the next estimate, then back to the
+//! prior), and [`Selector::plan_candidates`] publishes the full resolvable
+//! plan list the tuner explores and flips between.
 
 use super::job::Algo;
 use crate::convert;
@@ -39,6 +47,17 @@ pub struct Selector {
     pub policy: SelectorPolicy,
 }
 
+/// Device-capacity requirement of `algo` for a matrix with these scan
+/// stats (band cap for GCOO, row cap for CSR/ELL, none for dense) — the
+/// one definition every planning path resolves artifacts against.
+fn capacity_need(algo: Algo, max_band_nnz: usize, max_row_nnz: usize) -> usize {
+    match algo {
+        Algo::Gcoo | Algo::GcooNoreuse => max_band_nnz,
+        Algo::Csr => max_row_nnz,
+        Algo::DenseXla | Algo::DensePallas => 0,
+    }
+}
+
 impl Selector {
     pub fn new(policy: SelectorPolicy) -> Self {
         Selector { policy }
@@ -62,11 +81,7 @@ impl Selector {
         if let Some(algo) = hint {
             let n_exec = fit(algo.as_str())
                 .ok_or_else(|| format!("no {} artifact fits n={}", algo.as_str(), n))?;
-            let need = match algo {
-                Algo::Gcoo | Algo::GcooNoreuse => max_band_nnz,
-                Algo::Csr => max_row_nnz,
-                Algo::DenseXla | Algo::DensePallas => 0,
-            };
+            let need = capacity_need(algo, max_band_nnz, max_row_nnz);
             return ExecPlan::resolve(reg, algo, n_exec, need, "hint")
                 .map_err(|e| e.to_string());
         }
@@ -100,6 +115,75 @@ impl Selector {
             "below-crossover"
         };
         ExecPlan::resolve(reg, Algo::DenseXla, n_exec, 0, reason).map_err(|e| e.to_string())
+    }
+
+    /// Every resolvable plan for this operand, ranked by the paper prior —
+    /// the same order [`Selector::plan`] walks (sparse families first at or
+    /// above the crossover, dense first below it), so the head is exactly
+    /// the plan `plan` resolves when it succeeds. The tail is the tuner's
+    /// exploration list: alternatives whose artifacts genuinely fit, ready
+    /// to execute without re-planning.
+    pub fn plan_candidates(
+        &self,
+        reg: &Registry,
+        n: usize,
+        sparsity: f64,
+        max_band_nnz: usize,
+        max_row_nnz: usize,
+    ) -> Vec<ExecPlan> {
+        let sparse_ok = n
+            >= self
+                .policy
+                .min_sparse_n
+                .min(reg.sizes("gcoo").first().copied().unwrap_or(usize::MAX));
+        let order: [Algo; 3] = if sparsity >= self.policy.gcoo_crossover && sparse_ok {
+            [Algo::Gcoo, Algo::Csr, Algo::DenseXla]
+        } else {
+            [Algo::DenseXla, Algo::Gcoo, Algo::Csr]
+        };
+        order
+            .iter()
+            .filter_map(|&algo| {
+                let need = capacity_need(algo, max_band_nnz, max_row_nnz);
+                let n_exec = reg.fit_size(algo.as_str(), n)?;
+                ExecPlan::resolve(reg, algo, n_exec, need, "candidate").ok()
+            })
+            .collect()
+    }
+
+    /// Adaptive planning: the paper-threshold prior seeds routing, but
+    /// sample-gated measured estimates win once they exist. `measured` is
+    /// the tuner's gated (algo, cost) list; candidates are tried in
+    /// measured-cost order (stable on ties, so the caller's fixed algo
+    /// order breaks them deterministically) with the capacity fallback
+    /// intact — a measured favorite with no fitting artifact falls through
+    /// to the next estimate, and an empty/unresolvable list falls back to
+    /// [`Selector::plan`]. An explicit hint always wins outright.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_with_model(
+        &self,
+        reg: &Registry,
+        n: usize,
+        sparsity: f64,
+        max_band_nnz: usize,
+        max_row_nnz: usize,
+        hint: Option<Algo>,
+        measured: &[(Algo, f64)],
+    ) -> Result<ExecPlan, String> {
+        if hint.is_some() || measured.is_empty() {
+            return self.plan(reg, n, sparsity, max_band_nnz, max_row_nnz, hint);
+        }
+        let mut ranked = measured.to_vec();
+        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        for &(algo, _) in &ranked {
+            let need = capacity_need(algo, max_band_nnz, max_row_nnz);
+            if let Some(n_exec) = reg.fit_size(algo.as_str(), n) {
+                if let Ok(plan) = ExecPlan::resolve(reg, algo, n_exec, need, "measured") {
+                    return Ok(plan);
+                }
+            }
+        }
+        self.plan(reg, n, sparsity, max_band_nnz, max_row_nnz, None)
     }
 
     /// Convenience: plan directly from a dense A via one fused stats scan
@@ -217,6 +301,101 @@ mod tests {
     #[test]
     fn impossible_request_errors() {
         assert!(sel().plan(&reg(), 4096, 0.99, 10, 10, None).is_err());
+    }
+
+    /// Registry with no csr family at all: the capacity-fallback chain
+    /// must degrade gcoo → dense directly (the middle link is optional).
+    fn reg_no_csr() -> Registry {
+        let manifest = r#"{
+          "artifacts": [
+            {"name": "gcoo_n256_cap64", "algo": "gcoo", "n": 256,
+             "params": {"p": 8, "cap": 64}, "inputs": [], "file": "a.hlo.txt"},
+            {"name": "dense_xla_n256", "algo": "dense_xla", "n": 256,
+             "params": {}, "inputs": [], "file": "d.hlo.txt"}
+          ]
+        }"#;
+        Registry::from_manifest_json(manifest, PathBuf::from("/nope")).unwrap()
+    }
+
+    /// Satellite: the full capacity-fallback chain, link by link. A band
+    /// skew no gcoo capacity fits degrades to csr when the rows fit, to
+    /// dense when they don't, and skips the csr link entirely when no csr
+    /// artifact exists — never failing while a dense artifact remains.
+    #[test]
+    fn capacity_fallback_chain_degrades_gcoo_csr_dense() {
+        let r = reg();
+        // All links available: gcoo wins outright when its cap fits.
+        let plan = sel().plan(&r, 256, 0.99, 500, 100, None).unwrap();
+        assert_eq!((plan.algo, plan.cap), (Algo::Gcoo, 512));
+        // gcoo caps exhausted (600 > 512) → csr (100 ≤ rowcap 128).
+        let plan = sel().plan(&r, 256, 0.99, 600, 100, None).unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::Csr, "gcoo-capacity-fallback"));
+        // csr rows exhausted too (200 > 128) → dense.
+        let plan = sel().plan(&r, 256, 0.99, 600, 200, None).unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::DenseXla, "sparse-capacity-exhausted"));
+        // No csr family: the chain skips the middle link.
+        let plan = sel().plan(&reg_no_csr(), 256, 0.99, 600, 10, None).unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::DenseXla, "sparse-capacity-exhausted"));
+        // …and still prefers gcoo when its one capacity fits.
+        let plan = sel().plan(&reg_no_csr(), 256, 0.99, 40, 10, None).unwrap();
+        assert_eq!((plan.algo, plan.cap), (Algo::Gcoo, 64));
+    }
+
+    #[test]
+    fn candidates_head_matches_plan_and_tail_ranks_alternatives() {
+        let r = reg();
+        // Above the crossover: sparse-first order, all three resolvable.
+        let cands = sel().plan_candidates(&r, 256, 0.99, 100, 50);
+        let algos: Vec<Algo> = cands.iter().map(|c| c.algo).collect();
+        assert_eq!(algos, vec![Algo::Gcoo, Algo::Csr, Algo::DenseXla]);
+        let plan = sel().plan(&r, 256, 0.99, 100, 50, None).unwrap();
+        assert_eq!(cands[0].algo, plan.algo);
+        assert_eq!(cands[0].artifact, plan.artifact, "head is exactly the prior's choice");
+        // Below the crossover: dense-first.
+        let cands = sel().plan_candidates(&r, 256, 0.5, 100, 50);
+        assert_eq!(cands[0].algo, Algo::DenseXla);
+        assert_eq!(cands[0].algo, sel().plan(&r, 256, 0.5, 100, 50, None).unwrap().algo);
+        // Capacity infeasibility filters a family out of the list.
+        let cands = sel().plan_candidates(&r, 256, 0.99, 600, 100);
+        let algos: Vec<Algo> = cands.iter().map(|c| c.algo).collect();
+        assert_eq!(algos, vec![Algo::Csr, Algo::DenseXla], "gcoo cap 600 > 512 drops it");
+    }
+
+    /// Satellite: `plan_with_model` defers to gated measured estimates —
+    /// and keeps the capacity-fallback chain when the measured favorite
+    /// has no fitting artifact.
+    #[test]
+    fn plan_with_model_prefers_measured_and_falls_back_on_capacity() {
+        let r = reg();
+        // Measured says dense beats gcoo for this 0.99-sparse matrix: the
+        // model overrides the prior.
+        let measured = [(Algo::Gcoo, 5e-6), (Algo::DenseXla, 1e-6)];
+        let plan = sel()
+            .plan_with_model(&r, 256, 0.99, 100, 50, None, &measured)
+            .unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::DenseXla, "measured"));
+        // Measured favorite gcoo, but its band skew fits no compiled cap:
+        // fall through to the next measured estimate (csr), not to error.
+        let measured = [(Algo::Gcoo, 1e-6), (Algo::Csr, 2e-6), (Algo::DenseXla, 3e-6)];
+        let plan = sel()
+            .plan_with_model(&r, 256, 0.99, 600, 100, None, &measured)
+            .unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::Csr, "measured"));
+        // Every measured favorite unresolvable → the paper prior decides.
+        let measured = [(Algo::Gcoo, 1e-6), (Algo::Csr, 2e-6)];
+        let plan = sel()
+            .plan_with_model(&r, 256, 0.99, 600, 200, None, &measured)
+            .unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::DenseXla, "sparse-capacity-exhausted"));
+        // No estimates → exactly the prior.
+        let plan = sel().plan_with_model(&r, 256, 0.99, 100, 50, None, &[]).unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::Gcoo, "sparse-crossover"));
+        // An explicit hint wins over any estimate.
+        let measured = [(Algo::DenseXla, 1e-9)];
+        let plan = sel()
+            .plan_with_model(&r, 256, 0.99, 100, 50, Some(Algo::Csr), &measured)
+            .unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::Csr, "hint"));
     }
 
     #[test]

@@ -24,6 +24,19 @@
 //! and fails rather than exceed the budget when everything resident is
 //! pinned. `drop_a` removes an entry immediately; jobs already holding the
 //! `Arc` finish against their snapshot.
+//!
+//! **Entry versioning (adaptive routing):** entries stay immutable, but a
+//! handle's *published* entry can change — a model-driven route flip
+//! ([`OperandStore::reroute`]) republishes the handle under the measured
+//! favorite with a freshly converted device form, bumping `version` and
+//! swapping the slot's `Arc`. Pins keep old versions alive untouched, so a
+//! flip can never corrupt an in-flight job; stale flips (the slot already
+//! moved on) are refused. A superseded version that is still pinned stays
+//! **retired in its slot**: it keeps charging the byte budget (the memory
+//! is genuinely resident) and keeps blocking eviction of the handle (a
+//! flip must not lift the pin barrier an in-flight job relies on) until
+//! its pins drop, at which point it is purged opportunistically under the
+//! lock.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -33,10 +46,11 @@ use std::time::Instant;
 use super::job::{ASig, Algo};
 use super::pool::CoordinatorConfig;
 use super::selector::Selector;
-use crate::convert;
+use crate::convert::{self, AStats};
 use crate::ndarray::Mat;
 use crate::runtime::{DeviceOperand, ExecPlan, Registry};
-use crate::sparse::{Ell, GcooPadded};
+use crate::simgpu::{self, GcooStructure, WalkConfig};
+use crate::sparse::{Ell, Gcoo, GcooPadded};
 
 /// Opaque handle naming a registered A operand (the wire `a_handle`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -62,14 +76,25 @@ pub struct OperandEntry {
     /// policy). Cached-slab execution requires a compatible hint — see
     /// [`OperandEntry::serves_hint`].
     pub hint: Option<Algo>,
+    /// Registration-time scan stats (sparsity + band/row counts). The
+    /// entry is immutable, so explorations and route flips reuse these
+    /// instead of re-scanning the O(n²) dense A.
+    pub stats: AStats,
     /// Resolved at registration, width 1 (the batch path widens a clone).
     pub plan: ExecPlan,
+    /// Ranked plan list (the published plan first, then every other
+    /// resolvable family): what the tuner explores and flips between.
+    /// Hinted registrations never explore, so their list is `plan` alone.
+    pub candidates: Vec<ExecPlan>,
     /// The converted device form at `plan`'s capacity.
     pub operand: DeviceOperand,
     /// Registration-time conversion cost (the paper's EO, paid once here).
     pub convert_s: f64,
     /// Budget charge: dense A bytes + device-form bytes.
     pub bytes: u64,
+    /// Publication version of this handle: 1 at registration, bumped by
+    /// each route-flip republish ([`OperandStore::reroute`]).
+    pub version: u64,
     /// In-flight jobs currently holding this entry (eviction barrier).
     pins: AtomicUsize,
 }
@@ -145,6 +170,10 @@ pub struct StoreStats {
 struct Slot {
     entry: Arc<OperandEntry>,
     last_used: u64,
+    /// Superseded versions still pinned by in-flight jobs: they keep
+    /// charging the budget (their memory is resident) and keep the slot
+    /// out of the evictor until the pins drop (see `Inner::purge_retired`).
+    retired: Vec<Arc<OperandEntry>>,
 }
 
 struct Inner {
@@ -155,6 +184,26 @@ struct Inner {
 }
 
 impl Inner {
+    /// Drop superseded entry versions whose pins have all been released,
+    /// reclaiming their budget charge. Called under the lock by every
+    /// path that reads or reshapes the byte accounting (registration,
+    /// flips, gauges) — retired versions that remain afterwards are
+    /// genuinely pinned.
+    fn purge_retired(&mut self) {
+        let mut freed = 0u64;
+        for slot in self.entries.values_mut() {
+            slot.retired.retain(|e| {
+                if e.pinned() {
+                    true
+                } else {
+                    freed += e.bytes;
+                    false
+                }
+            });
+        }
+        self.bytes -= freed;
+    }
+
     /// Locked dedup lookup: the resident entry with identical content
     /// (full element compare on signature match — a hash collision must
     /// not alias two operands) and hint, LRU-refreshed. Deliberately does
@@ -249,52 +298,30 @@ impl OperandStore {
             stats.max_row_nnz,
             hint,
         )?;
-        let operand = match plan.algo {
-            Algo::Gcoo | Algo::GcooNoreuse => {
-                let (mut vals, mut rows, mut cols) = (Vec::new(), Vec::new(), Vec::new());
-                convert::dense_to_slabs_into(
-                    &a,
-                    &stats,
-                    plan.n_exec,
-                    plan.cap,
-                    cfg.convert_threads,
-                    &mut vals,
-                    &mut rows,
-                    &mut cols,
-                )
-                .map_err(|e| e.to_string())?;
-                DeviceOperand::Gcoo(GcooPadded {
-                    g: plan.n_exec.div_ceil(cfg.gcoo_p),
-                    cap: plan.cap,
-                    p: cfg.gcoo_p,
-                    n: plan.n_exec,
-                    vals,
-                    rows,
-                    cols,
-                })
-            }
-            Algo::Csr => {
-                let (mut vals, mut cols) = (Vec::new(), Vec::new());
-                convert::dense_to_ell_into(&a, plan.n_exec, plan.cap, &mut vals, &mut cols)
-                    .map_err(|e| e.to_string())?;
-                DeviceOperand::Ell(Ell { n: plan.n_exec, rowcap: plan.cap, vals, cols })
-            }
-            Algo::DenseXla | Algo::DensePallas => {
-                // "Conversion" here is the pad to execution size, done once
-                // at registration like the sparse forms. A dense-routed
-                // entry knowingly stores two copies of A (the original for
-                // dedup/oracle/re-screen, the exec-sized pad for the
-                // engine) and charges the budget for both — dense routing
-                // has no EO to amortize, so registering it is a transfer
-                // optimization only, and sharing one allocation would need
-                // self-referential storage the std-only rule makes ugly.
-                let mut a_exec = Mat::zeros(0, 0);
-                a_exec.pad_from(&a, plan.n_exec);
-                DeviceOperand::Dense(a_exec)
-            }
-        };
+        let operand = device_operand_for(&a, &stats, &plan, cfg)?;
         let converted = plan.algo.is_sparse();
         let convert_s = t0.elapsed().as_secs_f64();
+        // Ranked plan list for the tuner. Hinted registrations never
+        // explore (the hint is the contract), so their list is the plan
+        // alone; unhinted entries publish every resolvable family, prior
+        // order, optionally re-ranked by the autotune measured-refinement
+        // stage (bounded budget, deterministic simulation).
+        let candidates = match hint {
+            Some(_) => vec![plan.clone()],
+            None => {
+                let mut c = selector.plan_candidates(
+                    reg,
+                    n,
+                    stats.sparsity(),
+                    stats.max_band_nnz(),
+                    stats.max_row_nnz,
+                );
+                c.retain(|p| p.algo != plan.algo);
+                c.insert(0, plan.clone());
+                refine_candidates(&a, cfg.gcoo_p, &mut c, cfg.tuning.register_refine_budget);
+                c
+            }
+        };
         let bytes = (a.data.len() * 4 + operand.bytes()) as u64;
         if bytes > self.budget {
             return Err(format!(
@@ -304,6 +331,7 @@ impl OperandStore {
         }
 
         let mut g = self.inner.lock().unwrap();
+        g.purge_retired();
         // Re-check dedup under the insert lock: a concurrent registration
         // of the same content may have landed while this thread was
         // converting (the scan/convert runs unlocked). The duplicate
@@ -325,7 +353,10 @@ impl OperandStore {
             let mut victims: Vec<(u64, u64, u64)> = g
                 .entries
                 .iter()
-                .filter(|(_, s)| !s.entry.pinned())
+                // A slot is evictable only when neither its published
+                // entry nor any retired (superseded, still-pinned)
+                // version is held by an in-flight job.
+                .filter(|(_, s)| !s.entry.pinned() && s.retired.is_empty())
                 .map(|(&id, s)| (s.last_used, id, s.entry.bytes))
                 .collect();
             victims.sort_unstable();
@@ -359,15 +390,21 @@ impl OperandStore {
             a,
             sig,
             hint,
+            stats,
             plan,
+            candidates,
             operand,
             convert_s,
             bytes,
+            version: 1,
             pins: AtomicUsize::new(0),
         });
         g.bytes += bytes;
         let tick = g.tick;
-        g.entries.insert(handle.0, Slot { entry: Arc::clone(&entry), last_used: tick });
+        g.entries.insert(
+            handle.0,
+            Slot { entry: Arc::clone(&entry), last_used: tick, retired: Vec::new() },
+        );
         Ok((entry, converted))
     }
 
@@ -410,6 +447,105 @@ impl OperandStore {
         dims
     }
 
+    /// Model-driven route flip: republish `old`'s handle under the
+    /// measured-favorite plan `alt`, with a freshly converted device form.
+    /// Entries stay immutable — the flip creates a **new version** (same
+    /// handle, `version + 1`, candidates reordered alt-first) and swaps
+    /// the slot's `Arc`; pins keep old versions alive untouched, so an
+    /// in-flight job can never observe a half-flipped operand. Refused
+    /// when: the flip targets the incumbent algorithm, the handle was
+    /// dropped, the slot already moved past `old.version` (a stale flip
+    /// from a job still holding an older pin), or the swap would exceed
+    /// the byte budget.
+    pub fn reroute(
+        &self,
+        old: &OperandEntry,
+        alt: &ExecPlan,
+        cfg: &CoordinatorConfig,
+    ) -> Result<Arc<OperandEntry>, String> {
+        if alt.algo == old.plan.algo {
+            return Err("flip to the incumbent algorithm is a no-op".into());
+        }
+        if !old.candidates.iter().any(|c| c.algo == alt.algo) {
+            return Err(format!("{} is not a published candidate", alt.algo.as_str()));
+        }
+        // Convert outside the lock, exactly like registration — from the
+        // registration-time stats (the entry is immutable; no re-scan).
+        let t0 = Instant::now();
+        let operand = device_operand_for(&old.a, &old.stats, alt, cfg)?;
+        let convert_s = t0.elapsed().as_secs_f64();
+        let bytes = (old.a.data.len() * 4 + operand.bytes()) as u64;
+        let mut plan = alt.clone();
+        plan.width = 1;
+        let mut candidates = old.candidates.clone();
+        let pos = candidates
+            .iter()
+            .position(|c| c.algo == alt.algo)
+            .expect("membership checked above");
+        let mut head = candidates.remove(pos);
+        head.reason = plan.reason;
+        candidates.insert(0, head);
+
+        let mut g = self.inner.lock().unwrap();
+        g.purge_retired();
+        let (cur_version, cur_bytes, cur_pinned) = match g.entries.get(&old.handle.0) {
+            Some(s) => (s.entry.version, s.entry.bytes, s.entry.pinned()),
+            None => return Err(format!("operand {} dropped during flip", old.handle)),
+        };
+        if cur_version != old.version {
+            return Err("stale flip: the entry was already republished".into());
+        }
+        // A pinned superseded version stays resident (retired) until its
+        // in-flight jobs finish, so the flip transiently charges BOTH
+        // versions — the budget check must cover that, not just the swap.
+        let after = if cur_pinned { g.bytes + bytes } else { g.bytes - cur_bytes + bytes };
+        if after > self.budget {
+            return Err(format!(
+                "flip would exceed the store budget ({} B)",
+                self.budget
+            ));
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        let entry = Arc::new(OperandEntry {
+            handle: old.handle,
+            a: old.a.clone(),
+            sig: old.sig,
+            hint: old.hint,
+            stats: old.stats.clone(),
+            plan,
+            candidates,
+            operand,
+            convert_s,
+            bytes,
+            version: old.version + 1,
+            pins: AtomicUsize::new(0),
+        });
+        let slot = g.entries.get_mut(&old.handle.0).expect("checked resident");
+        let prev = std::mem::replace(&mut slot.entry, Arc::clone(&entry));
+        slot.last_used = tick;
+        if prev.pinned() {
+            // The superseded version is held by in-flight jobs: it stays
+            // charged and keeps blocking eviction of this handle until
+            // the pins drop (the flip must not lift the pin barrier).
+            slot.retired.push(prev);
+            g.bytes += bytes;
+        } else {
+            g.bytes = g.bytes - prev.bytes + bytes;
+        }
+        Ok(entry)
+    }
+
+    /// Every resident entry, ordered by handle (the `explain` routing
+    /// table reads candidates/versions straight off these).
+    pub fn entries_snapshot(&self) -> Vec<Arc<OperandEntry>> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<Arc<OperandEntry>> =
+            g.entries.values().map(|s| Arc::clone(&s.entry)).collect();
+        out.sort_by_key(|e| e.handle);
+        out
+    }
+
     /// Remove an entry (wire `drop_a`). In-flight jobs holding the `Arc`
     /// finish against their snapshot; later lookups miss. Returns whether
     /// the handle was resident.
@@ -417,7 +553,8 @@ impl OperandStore {
         let mut g = self.inner.lock().unwrap();
         match g.entries.remove(&h.0) {
             Some(slot) => {
-                g.bytes -= slot.entry.bytes;
+                g.bytes -=
+                    slot.entry.bytes + slot.retired.iter().map(|e| e.bytes).sum::<u64>();
                 true
             }
             None => false,
@@ -452,7 +589,9 @@ impl OperandStore {
     }
 
     pub fn bytes_used(&self) -> u64 {
-        self.inner.lock().unwrap().bytes
+        let mut g = self.inner.lock().unwrap();
+        g.purge_retired();
+        g.bytes
     }
 
     pub fn budget_bytes(&self) -> u64 {
@@ -460,7 +599,8 @@ impl OperandStore {
     }
 
     pub fn stats(&self) -> StoreStats {
-        let g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
+        g.purge_retired();
         StoreStats {
             entries: g.entries.len() as u64,
             bytes: g.bytes,
@@ -469,6 +609,98 @@ impl OperandStore {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
         }
+    }
+}
+
+/// Build the converted device form for `plan` — shared by registration and
+/// the route-flip republish, so the two conversion paths can never drift.
+fn device_operand_for(
+    a: &Mat,
+    stats: &AStats,
+    plan: &ExecPlan,
+    cfg: &CoordinatorConfig,
+) -> Result<DeviceOperand, String> {
+    match plan.algo {
+        Algo::Gcoo | Algo::GcooNoreuse => {
+            let (mut vals, mut rows, mut cols) = (Vec::new(), Vec::new(), Vec::new());
+            convert::dense_to_slabs_into(
+                a,
+                stats,
+                plan.n_exec,
+                plan.cap,
+                cfg.convert_threads,
+                &mut vals,
+                &mut rows,
+                &mut cols,
+            )
+            .map_err(|e| e.to_string())?;
+            Ok(DeviceOperand::Gcoo(GcooPadded {
+                g: plan.n_exec.div_ceil(cfg.gcoo_p),
+                cap: plan.cap,
+                p: cfg.gcoo_p,
+                n: plan.n_exec,
+                vals,
+                rows,
+                cols,
+            }))
+        }
+        Algo::Csr => {
+            let (mut vals, mut cols) = (Vec::new(), Vec::new());
+            convert::dense_to_ell_into(a, plan.n_exec, plan.cap, &mut vals, &mut cols)
+                .map_err(|e| e.to_string())?;
+            Ok(DeviceOperand::Ell(Ell { n: plan.n_exec, rowcap: plan.cap, vals, cols }))
+        }
+        Algo::DenseXla | Algo::DensePallas => {
+            // "Conversion" here is the pad to execution size, done once at
+            // registration like the sparse forms. A dense-routed entry
+            // knowingly stores two copies of A (the original for
+            // dedup/oracle/re-screen, the exec-sized pad for the engine)
+            // and charges the budget for both — dense routing has no EO to
+            // amortize, so registering it is a transfer optimization only,
+            // and sharing one allocation would need self-referential
+            // storage the std-only rule makes ugly.
+            let mut a_exec = Mat::zeros(0, 0);
+            a_exec.pad_from(a, plan.n_exec);
+            Ok(DeviceOperand::Dense(a_exec))
+        }
+    }
+}
+
+/// `autotune`'s measured-refinement stage at registration, bounded: rank
+/// the exploration tail (`candidates[1..]`) by a deterministic simulated
+/// measurement (the simgpu trace-replay walkers at a fixed seed) of up to
+/// `budget` tail candidates. The incumbent head — the routing `put_a`
+/// replied with — is never reordered; refinement only decides which
+/// alternative the tuner explores first.
+fn refine_candidates(a: &Mat, p: usize, candidates: &mut [ExecPlan], budget: usize) {
+    if budget == 0 || candidates.len() <= 2 {
+        return; // nothing to rank: at most one alternative
+    }
+    let gcoo = Gcoo::from_dense(a, p);
+    let structure = GcooStructure::new(&gcoo);
+    let wcfg = WalkConfig { b: 128, sample_blocks: 16, seed: 7 };
+    let dev = &simgpu::TITANX;
+    let tail = &mut candidates[1..];
+    let measured = tail.len().min(budget);
+    let mut scored: Vec<(f64, ExecPlan)> = tail[..measured]
+        .iter()
+        .map(|c| {
+            let t = match c.algo {
+                Algo::Gcoo => simgpu::simulate_gcoo(&structure, dev, &wcfg, true).time_s(),
+                Algo::GcooNoreuse => {
+                    simgpu::simulate_gcoo(&structure, dev, &wcfg, false).time_s()
+                }
+                Algo::Csr => simgpu::simulate_csr(&structure, dev, &wcfg).time_s(),
+                Algo::DenseXla | Algo::DensePallas => {
+                    simgpu::simulate_dense(c.n_exec, dev, &wcfg).time_s()
+                }
+            };
+            (t, c.clone())
+        })
+        .collect();
+    scored.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap_or(std::cmp::Ordering::Equal));
+    for (slot, (_, plan)) in tail[..measured].iter_mut().zip(scored) {
+        *slot = plan;
     }
 }
 
@@ -678,6 +910,251 @@ mod tests {
             store.bytes_used(),
             listed.iter().map(|s| s.bytes).sum::<u64>(),
             "byte accounting matches the resident set"
+        );
+    }
+
+    /// Registration publishes the ranked candidate list: the published
+    /// plan first, every other resolvable family behind it — and a hinted
+    /// registration publishes no alternatives at all (the hint is the
+    /// contract; the tuner must have nothing to explore).
+    #[test]
+    fn register_publishes_ranked_candidates() {
+        let store = OperandStore::new(64 << 20);
+        let (e, _) = store.register(sparse_a(70), None, &reg(), &cfg()).unwrap();
+        assert_eq!(e.version, 1);
+        let algos: Vec<Algo> = e.candidates.iter().map(|c| c.algo).collect();
+        assert_eq!(algos, vec![Algo::Gcoo, Algo::Csr, Algo::DenseXla]);
+        assert_eq!(e.candidates[0].artifact, e.plan.artifact, "head is the published plan");
+        let (hinted, _) = store.register(sparse_a(71), Some(Algo::Csr), &reg(), &cfg()).unwrap();
+        assert_eq!(hinted.candidates.len(), 1, "hinted entries never explore");
+        assert_eq!(hinted.candidates[0].algo, Algo::Csr);
+    }
+
+    /// The bounded measured-refinement stage at `put_a`: deterministic
+    /// (same matrix, same order), head never reordered, and the tail
+    /// ranked by the same simulated measurements the test recomputes.
+    #[test]
+    fn register_refinement_ranks_tail_deterministically() {
+        let mut tcfg = cfg();
+        tcfg.tuning.register_refine_budget = 2;
+        let s1 = OperandStore::new(64 << 20);
+        let s2 = OperandStore::new(64 << 20);
+        let (e1, _) = s1.register(sparse_a(72), None, &reg(), &tcfg).unwrap();
+        let (e2, _) = s2.register(sparse_a(72), None, &reg(), &tcfg).unwrap();
+        assert_eq!(e1.candidates, e2.candidates, "refinement is deterministic");
+        assert_eq!(e1.candidates[0].algo, e1.plan.algo, "head survives refinement");
+        assert_eq!(e1.candidates.len(), 3);
+        // The tail order matches the simulators' verdict at the same seed.
+        let gcoo = Gcoo::from_dense(&e1.a, tcfg.gcoo_p);
+        let structure = GcooStructure::new(&gcoo);
+        let wcfg = WalkConfig { b: 128, sample_blocks: 16, seed: 7 };
+        let time_for = |algo: Algo, n_exec: usize| match algo {
+            Algo::Csr => simgpu::simulate_csr(&structure, &simgpu::TITANX, &wcfg).time_s(),
+            Algo::DenseXla => simgpu::simulate_dense(n_exec, &simgpu::TITANX, &wcfg).time_s(),
+            other => panic!("unexpected tail algo {other:?}"),
+        };
+        let t1 = time_for(e1.candidates[1].algo, e1.candidates[1].n_exec);
+        let t2 = time_for(e1.candidates[2].algo, e1.candidates[2].n_exec);
+        assert!(t1 <= t2, "tail must be ranked by simulated time: {t1} vs {t2}");
+    }
+
+    /// A route flip republishes the handle as a new immutable version: the
+    /// plan and device form change, the version bumps, candidates reorder
+    /// — and a pin taken before the flip keeps the **old** version intact.
+    #[test]
+    fn reroute_republishes_and_pins_keep_old_version() {
+        let store = OperandStore::new(64 << 20);
+        let (e1, _) = store.register(sparse_a(80), None, &reg(), &cfg()).unwrap();
+        assert_eq!((e1.plan.algo, e1.version), (Algo::Gcoo, 1));
+        let pin = store.checkout(e1.handle).expect("resident");
+        let alt = e1
+            .candidates
+            .iter()
+            .find(|c| c.algo == Algo::DenseXla)
+            .expect("dense candidate")
+            .clone();
+        let e2 = store.reroute(&e1, &alt, &cfg()).expect("flip succeeds");
+        assert_eq!(e2.handle, e1.handle, "same handle, new version");
+        assert_eq!(e2.version, 2);
+        assert_eq!(e2.plan.algo, Algo::DenseXla);
+        assert!(matches!(e2.operand, DeviceOperand::Dense(_)), "freshly converted form");
+        assert_eq!(e2.candidates[0].algo, Algo::DenseXla, "candidates reorder alt-first");
+        // The pre-flip pin still reads the old version, bit for bit.
+        assert_eq!(pin.entry().version, 1);
+        assert_eq!(pin.entry().plan.algo, Algo::Gcoo);
+        assert!(matches!(pin.entry().operand, DeviceOperand::Gcoo(_)));
+        // New checkouts see the new version. The superseded version is
+        // still pinned, so it stays charged (its memory is resident);
+        // releasing the pin reclaims it.
+        let p2 = store.checkout(e1.handle).expect("resident");
+        assert_eq!(p2.entry().version, 2);
+        assert_eq!(
+            store.bytes_used(),
+            e1.bytes + e2.bytes,
+            "pinned superseded version stays charged"
+        );
+        assert!(store.bytes_used() <= store.budget_bytes());
+        // Refusals: same-algo, stale version, dropped handle.
+        assert!(store.reroute(&e2, &alt, &cfg()).is_err(), "flip to incumbent refused");
+        let back = e2.candidates.iter().find(|c| c.algo == Algo::Gcoo).unwrap().clone();
+        let err = store.reroute(&e1, &back, &cfg()).unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+        drop(pin);
+        assert_eq!(store.bytes_used(), e2.bytes, "released pin purges the retired charge");
+        drop(p2);
+        assert!(store.remove(e1.handle));
+        assert_eq!(store.bytes_used(), 0);
+        assert!(store.reroute(&e2, &back, &cfg()).is_err(), "dropped handle refused");
+    }
+
+    /// Regression (review): a route flip must not lift the pin eviction
+    /// barrier. The flipping job still pins the superseded version, so
+    /// budget-pressured registration must refuse to evict the handle
+    /// (and must not blow the budget by ignoring the retired charge);
+    /// once the pin drops, normal eviction resumes.
+    #[test]
+    fn flip_keeps_pinned_version_charged_and_eviction_blocked() {
+        // Probe sizes with an unbounded store: v1 (gcoo) and v2 (dense).
+        let probe = OperandStore::new(u64::MAX);
+        let (v1, _) = probe.register(sparse_a(95), None, &reg(), &cfg()).unwrap();
+        let alt = v1.candidates.iter().find(|c| c.algo == Algo::DenseXla).unwrap().clone();
+        let v2 = probe.reroute(&v1, &alt, &cfg()).unwrap();
+
+        // Budget fits both versions of H transiently, nothing more.
+        let store = OperandStore::new(v1.bytes + v2.bytes);
+        let (e1, _) = store.register(sparse_a(95), None, &reg(), &cfg()).unwrap();
+        let pin = store.checkout(e1.handle).expect("resident"); // in-flight job
+        let alt = e1.candidates.iter().find(|c| c.algo == Algo::DenseXla).unwrap().clone();
+        let e2 = store.reroute(&e1, &alt, &cfg()).expect("flip fits the budget");
+        assert_eq!(store.bytes_used(), e1.bytes + e2.bytes);
+
+        // Fresh content now needs room that only evicting H would free —
+        // but H's slot holds a pinned retired version: refuse, evict
+        // nothing, and keep serving the handle.
+        let err = store.register(sparse_a(96), None, &reg(), &cfg()).unwrap_err();
+        assert!(err.contains("pinned"), "{err}");
+        assert!(store.checkout(e1.handle).is_some(), "flipped handle survives pressure");
+        assert_eq!(store.stats().evictions, 0);
+        assert_eq!(pin.entry().version, 1, "in-flight snapshot untouched");
+
+        // Pin released: the retired charge purges and eviction resumes.
+        drop(pin);
+        assert_eq!(store.bytes_used(), e2.bytes);
+        let (e3, _) = store.register(sparse_a(96), None, &reg(), &cfg()).unwrap();
+        assert!(store.checkout(e3.handle).is_some());
+        assert!(store.bytes_used() <= store.budget_bytes());
+    }
+
+    /// A flip whose transient double-charge (pinned superseded version +
+    /// new form) cannot fit the budget is refused outright — the store
+    /// never lets accounted bytes exceed the budget, even mid-flip.
+    #[test]
+    fn flip_refused_when_pinned_double_charge_exceeds_budget() {
+        let probe = OperandStore::new(u64::MAX);
+        let (v1, _) = probe.register(sparse_a(97), None, &reg(), &cfg()).unwrap();
+        let store = OperandStore::new(v1.bytes + v1.bytes / 4);
+        let (e1, _) = store.register(sparse_a(97), None, &reg(), &cfg()).unwrap();
+        let _pin = store.checkout(e1.handle).expect("resident");
+        let alt = e1.candidates.iter().find(|c| c.algo == Algo::DenseXla).unwrap().clone();
+        let err = store.reroute(&e1, &alt, &cfg()).unwrap_err();
+        assert!(err.contains("budget"), "{err}");
+        assert_eq!(store.bytes_used(), e1.bytes, "refused flip changes nothing");
+        let cur = store.entries_snapshot().pop().unwrap();
+        assert_eq!((cur.version, cur.plan.algo), (1, Algo::Gcoo));
+    }
+
+    /// Property (satellite): interleaved flip / pin / unpin sequences
+    /// never drop a pinned entry version — every held pin keeps reading
+    /// its own immutable snapshot (plan/operand family consistent, bytes
+    /// accounted), the slot always serves the latest version, and the
+    /// byte accounting matches the resident set throughout.
+    #[test]
+    fn prop_flip_pin_interleavings_preserve_pinned_versions() {
+        let store = OperandStore::new(u64::MAX);
+        let (e0, _) = store.register(sparse_a(90), None, &reg(), &cfg()).unwrap();
+        check(
+            Config { cases: 24, base_seed: 0xF11B, ..Default::default() },
+            |g| (0..g.usize_in(4, 20)).map(|_| g.rng.next_u64() % 3).collect::<Vec<u64>>(),
+            |ops| {
+                let mut pins: Vec<OperandPin> = Vec::new();
+                for op in ops {
+                    match *op {
+                        0 => {
+                            // Flip the *current* version to its top-ranked
+                            // alternative (alternating algo families).
+                            let cur = store
+                                .entries_snapshot()
+                                .into_iter()
+                                .find(|e| e.handle == e0.handle)
+                                .expect("resident");
+                            let alt = cur
+                                .candidates
+                                .iter()
+                                .find(|c| c.algo != cur.plan.algo)
+                                .expect("multi-candidate entry")
+                                .clone();
+                            let flipped =
+                                store.reroute(&cur, &alt, &cfg()).map_err(|e| e.to_string())?;
+                            if flipped.version != cur.version + 1 {
+                                return Err("flip must bump the version".into());
+                            }
+                        }
+                        1 => {
+                            if let Some(p) = store.checkout(e0.handle) {
+                                pins.push(p);
+                            } else {
+                                return Err("published handle must stay resident".into());
+                            }
+                        }
+                        _ => {
+                            pins.pop();
+                        }
+                    }
+                    // Every held pin still reads a self-consistent
+                    // immutable snapshot of its own version.
+                    for p in &pins {
+                        let e = p.entry();
+                        let family_ok = match (&e.operand, e.plan.algo) {
+                            (DeviceOperand::Gcoo(_), Algo::Gcoo | Algo::GcooNoreuse) => true,
+                            (DeviceOperand::Ell(_), Algo::Csr) => true,
+                            (DeviceOperand::Dense(_), Algo::DenseXla | Algo::DensePallas) => true,
+                            _ => false,
+                        };
+                        if !family_ok {
+                            return Err(format!(
+                                "pinned v{} operand/plan family mismatch",
+                                e.version
+                            ));
+                        }
+                        if e.a.rows != 64 {
+                            return Err("pinned snapshot lost its dense A".into());
+                        }
+                    }
+                    let latest = store
+                        .entries_snapshot()
+                        .into_iter()
+                        .find(|e| e.handle == e0.handle)
+                        .expect("resident");
+                    // Retired (superseded, still-pinned) versions keep
+                    // their charge, so accounting is at least the
+                    // published entry's bytes while pins are held…
+                    if store.bytes_used() < latest.bytes {
+                        return Err("byte accounting drifted across flips".into());
+                    }
+                }
+                // …and collapses back to exactly the published entry once
+                // every pin is released.
+                pins.clear();
+                let latest = store
+                    .entries_snapshot()
+                    .into_iter()
+                    .find(|e| e.handle == e0.handle)
+                    .expect("resident");
+                if store.bytes_used() != latest.bytes {
+                    return Err("released pins must purge every retired charge".into());
+                }
+                Ok(())
+            },
         );
     }
 

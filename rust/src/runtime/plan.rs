@@ -51,7 +51,7 @@ impl Algo {
 /// One request's resolved execution plan: algorithm, padded execution size,
 /// the concrete artifact that will run it, and that artifact's device slab
 /// capacity (band cap for GCOO, row cap for CSR/ELL, 0 for dense).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExecPlan {
     pub algo: Algo,
     /// Exported size the request will be padded to.
@@ -60,7 +60,12 @@ pub struct ExecPlan {
     pub cap: usize,
     /// Name of the artifact the engine will select for this plan.
     pub artifact: String,
-    /// Why this algorithm won (observability / tests).
+    /// Why this algorithm won (observability / tests). The static
+    /// selector's reasons name the paper prior ("sparse-crossover", …);
+    /// adaptive routing adds "candidate" (a ranked alternative),
+    /// "measured" (a gated estimate outranked the prior), "explore" (a
+    /// seeded exploration draw), and "measured-flip" (a republished
+    /// entry's new incumbent).
     pub reason: &'static str,
     /// Number of requests this plan executes fused (shape-affine batch):
     /// B operands are stacked column-wise into one `n_exec × width·n_exec`

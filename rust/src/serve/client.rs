@@ -49,6 +49,15 @@ impl Client {
         ))
     }
 
+    /// Adaptive routing table: the reply's `routing` field is the
+    /// JSON-encoded explain document (policy, flip/exploration counters,
+    /// per-entry candidates + estimates).
+    pub fn explain(&mut self, id: u64) -> Result<Response, String> {
+        self.round_trip(&crate::json::write(
+            &Value::obj().field("id", id).field("type", "explain").build(),
+        ))
+    }
+
     pub fn shutdown(&mut self, id: u64) -> Result<Response, String> {
         self.round_trip(&crate::json::write(
             &Value::obj().field("id", id).field("type", "shutdown").build(),

@@ -19,6 +19,6 @@ pub use protocol::{
 pub use server::{Server, ServerConfig};
 pub use client::Client;
 pub use trace::{
-    generate as generate_trace, replay as replay_trace, shared_pool, ReplayOutcome, ReplayReport,
-    SharedA, TraceItem, TraceSpec,
+    generate as generate_trace, replay as replay_trace, shared_pool, ReplayKind, ReplayOutcome,
+    ReplayReport, SharedA, TraceItem, TraceSpec,
 };

@@ -10,7 +10,12 @@
 //!   {"id":3,"type":"metrics"}    {"id":4,"type":"ping"}
 //!   {"id":5,"type":"stats"}   — structured metrics: the reply's `metrics`
 //!   field carries the JSON-encoded snapshot (counters, latency, the
-//!   batch-width histogram, `conversions_total`, and the store gauges)
+//!   batch-width histogram, `conversions_total`, the store gauges, and
+//!   the adaptive-routing `route_flips`/`explorations` counters)
+//!   {"id":12,"type":"explain"} — the adaptive routing table: the reply's
+//!   `routing` field carries JSON with the policy in force and, per
+//!   registered operand, the published version, incumbent routing, ranked
+//!   candidate plans, and the tuner's per-algo latency estimates
 //!
 //! v2 requests (operand handles — register A once, multiply by reference):
 //!   {"id":6,"type":"put_a","n":256,"payload":"synthetic","sparsity":0.99,
@@ -91,6 +96,9 @@ pub enum Request {
     /// Structured (JSON) metrics snapshot — the machine-readable sibling of
     /// the human-oriented `Metrics` text render.
     Stats { id: u64 },
+    /// Adaptive routing table + per-entry measured estimates (the reply's
+    /// `routing` field carries the JSON document).
+    Explain { id: u64 },
     Ping { id: u64 },
     Shutdown { id: u64 },
 }
@@ -127,6 +135,8 @@ pub struct Response {
     pub reason: Option<String>,
     /// v2: `list_a` rows.
     pub handles: Option<Vec<HandleInfo>>,
+    /// The `explain` reply's JSON routing table.
+    pub routing: Option<String>,
 }
 
 /// Pull a float array field, rejecting non-finite entries: a NaN in A
@@ -183,6 +193,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "ping" => Ok(Request::Ping { id }),
         "metrics" => Ok(Request::Metrics { id }),
         "stats" => Ok(Request::Stats { id }),
+        "explain" => Ok(Request::Explain { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
         "spdm" => {
             // v2: an `a_handle` field selects multiply-by-reference; `n`
@@ -308,6 +319,9 @@ pub fn render_response(r: &Response) -> String {
     if let Some(reason) = &r.reason {
         b = b.field("reason", reason.as_str());
     }
+    if let Some(routing) = &r.routing {
+        b = b.field("routing", routing.as_str());
+    }
     if let Some(hs) = &r.handles {
         let rows = Value::Arr(
             hs.iter()
@@ -345,6 +359,7 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
         metrics: v.get("metrics").and_then(Value::as_str).map(str::to_string),
         a_handle: v.get("a_handle").and_then(Value::as_u64),
         reason: v.get("reason").and_then(Value::as_str).map(str::to_string),
+        routing: v.get("routing").and_then(Value::as_str).map(str::to_string),
         handles: v.get("handles").and_then(Value::as_arr).map(|xs| {
             xs.iter()
                 .filter_map(|x| {
@@ -408,6 +423,25 @@ mod tests {
             parse_request(r#"{"id":5,"type":"shutdown"}"#),
             Ok(Request::Shutdown { id: 5 })
         ));
+        assert!(matches!(
+            parse_request(r#"{"id":7,"type":"explain"}"#),
+            Ok(Request::Explain { id: 7 })
+        ));
+    }
+
+    #[test]
+    fn explain_response_round_trips() {
+        let r = Response {
+            id: 12,
+            ok: true,
+            routing: Some(r#"{"route_flips":1,"entries":[]}"#.into()),
+            ..Default::default()
+        };
+        let parsed = parse_response(&render_response(&r)).unwrap();
+        assert_eq!(parsed, r);
+        // The payload is itself parseable JSON (the explain contract).
+        let doc = crate::json::parse(parsed.routing.as_deref().unwrap()).unwrap();
+        assert_eq!(doc.get("route_flips").unwrap().as_u64(), Some(1));
     }
 
     #[test]

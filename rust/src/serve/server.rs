@@ -162,11 +162,20 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
             ..Default::default()
         },
         // Structured stats: the `metrics` field carries the JSON-encoded
-        // snapshot (incl. batch_hist, conversions_total, store gauges).
+        // snapshot (incl. batch_hist, conversions_total, store gauges, and
+        // the adaptive route_flips/explorations counters).
         Request::Stats { id } => Response {
             id,
             ok: true,
             metrics: Some(coord.snapshot().to_json()),
+            ..Default::default()
+        },
+        // Adaptive routing introspection: the routing table + per-entry
+        // measured estimates, as one JSON document in `routing`.
+        Request::Explain { id } => Response {
+            id,
+            ok: true,
+            routing: Some(coord.explain_json()),
             ..Default::default()
         },
         // v2: register A once — the reply carries the handle plus the

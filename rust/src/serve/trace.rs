@@ -3,7 +3,9 @@
 //! shared-A dimension: a zipfian choice over a small pool of registered As
 //! so load tests exercise operand-handle reuse under realistic skew), plus
 //! a replayer that measures per-request latency against the schedule and
-//! reports the operand-store hit rate the driver achieved.
+//! reports the operand-store hit rate the driver achieved, plus the
+//! per-item resolved algorithm and route-flip schedule (so two same-seed
+//! replays through a live coordinator can be compared flip for flip).
 //!
 //! This is the serving-framework side of the evaluation: the paper measures
 //! kernels in isolation; a deployable system also needs load behavior under
@@ -158,14 +160,53 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceItem> {
         .collect()
 }
 
-/// What one replayed request did, as reported by the driver closure: a
-/// plain (inline/synthetic) request, or a handle request that hit or
-/// missed the operand store (miss = the driver had to `put_a` first).
+/// How one replayed request reached its operand: a plain
+/// (inline/synthetic) request, or a handle request that hit or missed the
+/// operand store (miss = the driver had to `put_a` first).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ReplayOutcome {
+pub enum ReplayKind {
     Plain,
     StoreHit,
     StoreMiss,
+}
+
+/// What one replayed request did, as reported by the driver closure: the
+/// operand path ([`ReplayKind`]), the algorithm the server resolved for
+/// it, and whether it triggered an adaptive route flip — so a replayed
+/// trace carries the full routing schedule, and two replays at one seed
+/// can be compared flip for flip.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplayOutcome {
+    pub kind: ReplayKind,
+    /// Resolved algorithm name from the server's reply (None when the
+    /// driver does not track it).
+    pub algo: Option<String>,
+    /// Whether this request triggered a route flip (entry republish).
+    pub flip: bool,
+}
+
+impl ReplayOutcome {
+    pub fn plain() -> Self {
+        ReplayOutcome { kind: ReplayKind::Plain, algo: None, flip: false }
+    }
+
+    pub fn store_hit() -> Self {
+        ReplayOutcome { kind: ReplayKind::StoreHit, algo: None, flip: false }
+    }
+
+    pub fn store_miss() -> Self {
+        ReplayOutcome { kind: ReplayKind::StoreMiss, algo: None, flip: false }
+    }
+
+    pub fn with_algo(mut self, algo: impl Into<String>) -> Self {
+        self.algo = Some(algo.into());
+        self
+    }
+
+    pub fn with_flip(mut self, flip: bool) -> Self {
+        self.flip = flip;
+        self
+    }
 }
 
 /// Replay statistics.
@@ -182,6 +223,9 @@ pub struct ReplayReport {
     pub store_hits: usize,
     /// Handle requests that had to register their operand first.
     pub store_misses: usize,
+    /// Per-item outcomes (item id, what the driver reported), ordered by
+    /// item id — the replayed routing schedule.
+    pub outcomes: Vec<(u64, ReplayOutcome)>,
 }
 
 impl ReplayReport {
@@ -195,6 +239,12 @@ impl ReplayReport {
 
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Item ids that triggered a route flip, in schedule order — the
+    /// flip schedule two same-seed replays must agree on exactly.
+    pub fn flip_schedule(&self) -> Vec<u64> {
+        self.outcomes.iter().filter(|(_, o)| o.flip).map(|(id, _)| *id).collect()
     }
 
     /// Fraction of handle traffic that reused an already-registered
@@ -229,6 +279,7 @@ where
     let misses = AtomicUsize::new(0);
     let latencies = Mutex::new(Vec::with_capacity(items.len()));
     let lateness = Mutex::new(Vec::with_capacity(items.len()));
+    let outcomes = Mutex::new(Vec::with_capacity(items.len()));
     let next = AtomicUsize::new(0);
 
     std::thread::scope(|s| {
@@ -252,15 +303,16 @@ where
                         let total = late + issue.elapsed().as_secs_f64();
                         latencies.lock().unwrap().push(total);
                         lateness.lock().unwrap().push(late);
-                        match outcome {
-                            ReplayOutcome::Plain => {}
-                            ReplayOutcome::StoreHit => {
+                        match outcome.kind {
+                            ReplayKind::Plain => {}
+                            ReplayKind::StoreHit => {
                                 hits.fetch_add(1, Ordering::SeqCst);
                             }
-                            ReplayOutcome::StoreMiss => {
+                            ReplayKind::StoreMiss => {
                                 misses.fetch_add(1, Ordering::SeqCst);
                             }
                         }
+                        outcomes.lock().unwrap().push((item.id, outcome));
                     }
                     Err(_) => {
                         failed.fetch_add(1, Ordering::SeqCst);
@@ -271,6 +323,8 @@ where
     });
 
     let latency_s = latencies.into_inner().unwrap();
+    let mut outcomes = outcomes.into_inner().unwrap();
+    outcomes.sort_by_key(|(id, _)| *id);
     ReplayReport {
         completed: latency_s.len(),
         failed: failed.into_inner(),
@@ -279,6 +333,7 @@ where
         lateness_s: lateness.into_inner().unwrap(),
         store_hits: hits.into_inner(),
         store_misses: misses.into_inner(),
+        outcomes,
     }
 }
 
@@ -352,9 +407,9 @@ mod tests {
         let spec = TraceSpec { requests: 20, rate_rps: 2000.0, ..Default::default() };
         let items = generate(&spec);
         let count = std::sync::atomic::AtomicUsize::new(0);
-        let report = replay(&items, 4, |_item| {
+        let report = replay(&items, 4, |item| {
             count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            Ok(ReplayOutcome::Plain)
+            Ok(ReplayOutcome::plain().with_algo(if item.id % 2 == 0 { "gcoo" } else { "dense_xla" }))
         });
         assert_eq!(report.completed, 20);
         assert_eq!(report.failed, 0);
@@ -363,6 +418,12 @@ mod tests {
         assert!(report.throughput_rps() > 0.0);
         assert_eq!((report.store_hits, report.store_misses), (0, 0));
         assert_eq!(report.store_hit_rate(), 0.0, "no handle traffic → rate 0");
+        // Per-item outcomes come back ordered by id with the resolved algo.
+        assert_eq!(report.outcomes.len(), 20);
+        assert!(report.outcomes.windows(2).all(|w| w[0].0 < w[1].0));
+        assert_eq!(report.outcomes[0].1.algo.as_deref(), Some("gcoo"));
+        assert_eq!(report.outcomes[1].1.algo.as_deref(), Some("dense_xla"));
+        assert!(report.flip_schedule().is_empty(), "no flips reported → empty schedule");
     }
 
     #[test]
@@ -381,9 +442,9 @@ mod tests {
         let report = replay(&items, 2, |item| {
             let slot = item.a_slot.expect("pooled trace");
             if seen.lock().unwrap().insert(slot) {
-                Ok(ReplayOutcome::StoreMiss)
+                Ok(ReplayOutcome::store_miss())
             } else {
-                Ok(ReplayOutcome::StoreHit)
+                Ok(ReplayOutcome::store_hit())
             }
         });
         assert_eq!(report.completed, 64);
@@ -394,6 +455,17 @@ mod tests {
     }
 
     #[test]
+    fn flip_schedule_orders_flips_by_item_id() {
+        let spec = TraceSpec { requests: 12, rate_rps: 1e6, ..Default::default() };
+        let items = generate(&spec);
+        let report = replay(&items, 3, |item| {
+            Ok(ReplayOutcome::store_hit().with_algo("gcoo").with_flip(item.id == 7 || item.id == 3))
+        });
+        assert_eq!(report.flip_schedule(), vec![3, 7], "schedule is id-ordered");
+        assert_eq!(report.store_hits, 12);
+    }
+
+    #[test]
     fn replay_counts_failures() {
         let spec = TraceSpec { requests: 10, rate_rps: 5000.0, ..Default::default() };
         let items = generate(&spec);
@@ -401,7 +473,7 @@ mod tests {
             if item.id % 2 == 0 {
                 Err("boom".into())
             } else {
-                Ok(ReplayOutcome::Plain)
+                Ok(ReplayOutcome::plain())
             }
         });
         assert_eq!(report.completed, 5);
@@ -415,7 +487,7 @@ mod tests {
         let items = generate(&spec);
         let report = replay(&items, 1, |_| {
             std::thread::sleep(std::time::Duration::from_millis(5));
-            Ok(ReplayOutcome::Plain)
+            Ok(ReplayOutcome::plain())
         });
         let max_late = report.lateness_s.iter().copied().fold(0.0, f64::max);
         assert!(max_late > 0.015, "expected queueing lateness, got {max_late}");

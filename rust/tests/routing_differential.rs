@@ -1,0 +1,509 @@
+//! Adaptive-routing differential lockdown (ISSUE 5): routing may change
+//! **choices** — algo/artifact provenance, exploration, mid-stream route
+//! flips — but never **results**.
+//!
+//! * The broad differential: adaptive routing (measured model +
+//!   exploration + flips, live tuner) is **bitwise identical** to static
+//!   routing across all 6 corpus patterns × {gcoo, csr, auto-dense} ×
+//!   widths {1, 2, batch_max} × {n=64, n=60}, on both the inline and the
+//!   registered-operand (handle) paths.
+//! * The misroute convergence test: a sparse-by-the-numbers matrix whose
+//!   scripted latencies favor dense is re-routed to the empirically
+//!   faster plan, with the flip request index asserted **exactly**
+//!   against a lock-step mirror of the tuner's pure functions — no
+//!   sleeps, no wall-clock reads; every measured latency comes from the
+//!   scripted fake clock.
+//! * Trace-replay determinism: the same seed through a live coordinator
+//!   twice produces identical flip schedules end to end.
+//! * `explain` surfaces the routing table (candidates, versions,
+//!   estimates) locally and over the wire.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use gcoospdm::coordinator::{
+    explore_draw, process_batch_tuned, process_batch_ws, Algo, BatchJob, Coordinator,
+    CoordinatorConfig, Metrics, ModelKey, OperandStore, ScriptedClock, SpdmRequest, TuneCtx,
+    Tuner, TunerConfig,
+};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::serve::{self, Client, ReplayOutcome, Server, ServerConfig, TraceSpec};
+
+/// Stub registry at n=64 (two gcoo capacities, csr, dense) — the engine
+/// only needs artifact files to exist.
+fn registry_full() -> Registry {
+    let dir = PathBuf::from("target/routing_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+/// Registry without a csr family: a gcoo-routed entry's one alternative is
+/// dense — the two-candidate setup the flip tests script against.
+fn registry_no_csr() -> Registry {
+    let dir = PathBuf::from("target/routing_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+fn adaptive_tuning() -> TunerConfig {
+    TunerConfig {
+        enabled: true,
+        alpha: 0.5,
+        min_samples: 2,
+        explore_every: 3,
+        seed: 0xD1FF_5EED,
+        register_refine_budget: 2,
+    }
+}
+
+/// The broad acceptance differential: for every corpus pattern ×
+/// {gcoo, csr, auto-dense} × widths {1, 2, batch_max} × {n=64, n=60},
+/// three pipelines answer the same requests —
+///   (1) static inline (`process_batch_ws`, no tuner),
+///   (2) adaptive inline (live tuner: measured model + exploration),
+///   (3) adaptive handle (registered entry: cached execution, exploration,
+///       flips) —
+/// and every response's C must be **bitwise identical** across all three.
+/// The scripted fixed-step clock keeps adaptive choices deterministic; the
+/// choices themselves (provenance) are free to differ — that is the point.
+#[test]
+fn adaptive_routing_bitwise_equals_static_across_corpus() {
+    let reg = registry_full();
+    let cfg_static = CoordinatorConfig::default();
+    let cfg_adapt = CoordinatorConfig { tuning: adaptive_tuning(), ..Default::default() };
+    let engine = Engine::new().unwrap();
+    let mut ws = gcoospdm::coordinator::Workspace::new();
+    let tuner = Tuner::new(cfg_adapt.tuning, Arc::new(ScriptedClock::new(vec![])));
+    let store = OperandStore::new(cfg_adapt.store_budget_bytes);
+    let metrics = Metrics::new();
+    let tune = TuneCtx { tuner: &tuner, store: &store, metrics: &metrics };
+
+    let widths = [1usize, 2, cfg_static.batch_max];
+    let mut rng = Rng::new(0x0D1F);
+    let mut cells = 0usize;
+    for (pi, pattern) in gen::Pattern::ALL.iter().enumerate() {
+        let n = if pi % 2 == 0 { 64 } else { 60 };
+        // 0.95 sits below the paper crossover: auto routes dense, leaving
+        // the sparse families to hints and to the adaptive model.
+        let a = gen::generate(*pattern, n, 0.95, &mut rng);
+        for hint in [Some(Algo::Gcoo), Some(Algo::Csr), None] {
+            let entry = store.register(a.clone(), hint, &reg, &cfg_adapt).expect("put_a");
+            assert_eq!(entry.version, 1);
+            for &width in &widths {
+                let bs: Vec<Mat> = (0..width).map(|_| Mat::randn(n, n, &mut rng)).collect();
+                let mk_inline = |base: u64| -> Vec<SpdmRequest> {
+                    bs.iter()
+                        .enumerate()
+                        .map(|(i, b)| {
+                            let mut r = SpdmRequest::new(base + i as u64, a.clone(), b.clone());
+                            r.algo_hint = hint;
+                            r.verify = i == 0;
+                            r
+                        })
+                        .collect()
+                };
+                let static_reqs = mk_inline(1000);
+                let adapt_reqs = mk_inline(2000);
+                let handle_reqs: Vec<SpdmRequest> = bs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| {
+                        let mut r =
+                            SpdmRequest::for_handle(3000 + i as u64, entry.handle, b.clone());
+                        r.a_sig = entry.sig; // what Coordinator::submit does
+                        r.algo_hint = hint;
+                        r.verify = i == 0;
+                        r
+                    })
+                    .collect();
+
+                let static_jobs: Vec<BatchJob<'_>> =
+                    static_reqs.iter().map(|r| BatchJob::inline(r, Instant::now())).collect();
+                let adapt_jobs: Vec<BatchJob<'_>> =
+                    adapt_reqs.iter().map(|r| BatchJob::inline(r, Instant::now())).collect();
+                let handle_jobs: Vec<BatchJob<'_>> = handle_reqs
+                    .iter()
+                    .map(|r| BatchJob { req: r, entry: Some(&*entry), enqueued: Instant::now() })
+                    .collect();
+
+                let s = process_batch_ws(&engine, &mut ws, &reg, &cfg_static, &static_jobs);
+                let ad =
+                    process_batch_tuned(&engine, &mut ws, &reg, &cfg_adapt, &adapt_jobs, Some(&tune));
+                let h = process_batch_tuned(
+                    &engine, &mut ws, &reg, &cfg_adapt, &handle_jobs, Some(&tune),
+                );
+
+                let ctx = format!("{}/{:?}/w{}/n{}", pattern.name(), hint, width, n);
+                for i in 0..width {
+                    assert!(s[i].ok(), "{ctx} static[{i}]: {:?}", s[i].error);
+                    assert!(ad[i].ok(), "{ctx} adaptive[{i}]: {:?}", ad[i].error);
+                    assert!(h[i].ok(), "{ctx} handle[{i}]: {:?}", h[i].error);
+                    if i == 0 {
+                        assert_eq!(s[i].verified, Some(true), "{ctx} oracle");
+                    }
+                    // The invariant: whatever route the tuner took, the
+                    // numbers are the static pipeline's numbers, bit for
+                    // bit — on both the inline and the handle path.
+                    assert!(
+                        ad[i].c == s[i].c,
+                        "{ctx}[{i}]: adaptive inline C differs from static (adaptive ran {:?})",
+                        ad[i].algo
+                    );
+                    assert!(
+                        h[i].c == s[i].c,
+                        "{ctx}[{i}]: adaptive handle C differs from static (handle ran {:?})",
+                        h[i].algo
+                    );
+                    // Hinted traffic never engages the tuner: provenance
+                    // must match static exactly.
+                    if hint.is_some() {
+                        assert_eq!(ad[i].algo, s[i].algo, "{ctx}[{i}] hinted provenance");
+                        assert_eq!(h[i].algo, s[i].algo, "{ctx}[{i}] hinted handle provenance");
+                    }
+                }
+                cells += 1;
+            }
+        }
+    }
+    assert_eq!(cells, 6 * 3 * 3, "full corpus × hint × width matrix covered");
+}
+
+/// Lock-step mirror of the tuner's arithmetic: the same EWMA, the same
+/// gate, the same strictly-less flip rule — over exactly-representable
+/// latencies so f64 math matches the live model bit for bit.
+struct Mirror {
+    alpha: f64,
+    min_samples: u64,
+    est: HashMap<Algo, (f64, u64)>,
+}
+
+impl Mirror {
+    fn observe(&mut self, algo: Algo, per_col: f64) {
+        let e = self.est.entry(algo).or_insert((per_col, 0));
+        e.0 += self.alpha * (per_col - e.0);
+        e.1 += 1;
+    }
+
+    fn gated(&self, algo: Algo) -> Option<f64> {
+        self.est.get(&algo).filter(|(_, n)| *n >= self.min_samples).map(|(m, _)| *m)
+    }
+}
+
+/// Satellite 1 (convergence): a matrix that is sparse by the numbers
+/// (0.985 ≥ the 0.98 crossover, so the prior registers it gcoo) but whose
+/// scripted latencies are dense-favoring is re-routed to the empirically
+/// faster plan — with the flip request index asserted **exactly** against
+/// the mirror, the provenance flip observed in the responses, and every C
+/// bitwise identical to a static coordinator throughout (the mid-stream
+/// flip changes algo/artifact provenance, never the numbers).
+#[test]
+fn misroute_converges_with_exact_flip_index() {
+    let tuning = TunerConfig {
+        enabled: true,
+        alpha: 0.5,       // exactly representable: mirror math is exact
+        min_samples: 2,
+        explore_every: 3,
+        seed: 0x5EED_CAFE,
+        register_refine_budget: 0,
+    };
+    let cfg = CoordinatorConfig { workers: 1, tuning, ..Default::default() };
+    let clock = Arc::new(ScriptedClock::new(vec![]));
+    let coord =
+        Coordinator::with_clock(Arc::new(registry_no_csr()), cfg, Arc::<ScriptedClock>::clone(&clock));
+    let static_coord = Coordinator::new(
+        Arc::new(registry_no_csr()),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    );
+
+    let mut rng = Rng::new(0x985);
+    let a = gen::uniform(64, 0.985, &mut rng);
+    let entry = coord.put_a(a.clone(), None).expect("put_a");
+    assert_eq!(entry.plan.algo, Algo::Gcoo, "the prior misroutes this matrix to gcoo");
+    let algos: Vec<Algo> = entry.candidates.iter().map(|c| c.algo).collect();
+    assert_eq!(algos, vec![Algo::Gcoo, Algo::DenseXla], "no csr: one alternative");
+    let key = ModelKey::operand(entry.handle);
+
+    // Scripted latencies (exact powers of two): gcoo 0.5 s, dense 0.0625 s
+    // per request — dense is 8× faster per the fake clock.
+    const LAT_GCOO: f64 = 0.5;
+    const LAT_DENSE: f64 = 0.0625;
+    let mut mirror = Mirror { alpha: 0.5, min_samples: 2, est: HashMap::new() };
+    let mut incumbent = Algo::Gcoo;
+    let mut flip_at: Option<usize> = None;
+    let mut explorations = 0u64;
+
+    for i in 0..24usize {
+        // Mirror the live routing decision for request i, then script its
+        // latency pair before issuing it.
+        let alt = if incumbent == Algo::Gcoo { Algo::DenseXla } else { Algo::Gcoo };
+        let draw = explore_draw(tuning.seed, key, i as u64, tuning.explore_every);
+        let predicted = if draw { alt } else { incumbent };
+        if draw {
+            explorations += 1;
+        }
+        let lat = if predicted == Algo::Gcoo { LAT_GCOO } else { LAT_DENSE };
+        clock.push_latency(lat);
+
+        let b = Mat::randn(64, 64, &mut rng);
+        let mut req = SpdmRequest::for_handle(100 + i as u64, entry.handle, b.clone());
+        req.verify = true;
+        let resp = coord.run_sync(req);
+        assert!(resp.ok(), "[{i}] {:?}", resp.error);
+        assert_eq!(resp.verified, Some(true));
+        assert_eq!(
+            resp.algo, predicted,
+            "[{i}] live routing diverged from the pure-function mirror"
+        );
+
+        // The static reference: same A, same B, static routing (gcoo).
+        let sresp = static_coord.run_sync(SpdmRequest::new(500 + i as u64, a.clone(), b));
+        assert_eq!(sresp.algo, Algo::Gcoo);
+        assert!(
+            resp.c == sresp.c,
+            "[{i}] adaptive C (ran {:?}) must be bitwise identical to static gcoo",
+            resp.algo
+        );
+
+        // Mirror the observation and the flip rule.
+        mirror.observe(predicted, lat / 64.0);
+        if let (Some(inc_m), Some(alt_m)) = (mirror.gated(incumbent), mirror.gated(alt)) {
+            if alt_m < inc_m && flip_at.is_none() {
+                flip_at = Some(i);
+                incumbent = alt;
+            }
+        }
+        let expected_flips = match flip_at {
+            Some(f) if i >= f => 1,
+            _ => 0,
+        };
+        assert_eq!(
+            coord.snapshot().route_flips,
+            expected_flips,
+            "[{i}] flip counter must transition exactly at the mirrored index"
+        );
+    }
+
+    // The convergence claim, pinned exactly.
+    let flipped_at = flip_at.expect("dense-favoring latencies must force a flip within K=24");
+    assert_eq!(incumbent, Algo::DenseXla);
+    let snap = coord.snapshot();
+    assert_eq!(snap.route_flips, 1, "exactly one flip, at request {flipped_at}");
+    assert_eq!(snap.explorations, explorations, "every exploration was a scripted draw");
+    // The store republished the entry: same handle, version 2, dense
+    // incumbent, candidates reordered — and the old pinned version's Arc
+    // (our `entry`) still reads the original gcoo routing.
+    let republished = coord
+        .store()
+        .entries_snapshot()
+        .into_iter()
+        .find(|e| e.handle == entry.handle)
+        .expect("still resident");
+    assert_eq!(republished.version, 2);
+    assert_eq!(republished.plan.algo, Algo::DenseXla);
+    assert_eq!(republished.plan.reason, "measured-flip");
+    assert_eq!(republished.candidates[0].algo, Algo::DenseXla);
+    assert_eq!(entry.version, 1, "pre-flip snapshot untouched");
+    assert_eq!(entry.plan.algo, Algo::Gcoo);
+    // explain reflects the measured state.
+    let doc = gcoospdm::json::parse(&coord.explain_json()).expect("explain is valid JSON");
+    assert_eq!(doc.get("route_flips").unwrap().as_u64(), Some(1));
+    let entries = doc.get("entries").unwrap().as_arr().unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].get("version").unwrap().as_u64(), Some(2));
+    assert_eq!(entries[0].get("algo").unwrap().as_str(), Some("dense_xla"));
+    let ests = entries[0].get("estimates").unwrap().as_arr().unwrap();
+    assert!(
+        ests.iter().any(|e| e.get("algo").unwrap().as_str() == Some("gcoo")
+            && e.get("gated").unwrap().as_bool() == Some(true)),
+        "gcoo estimate is gated open"
+    );
+
+    coord.shutdown();
+    static_coord.shutdown();
+}
+
+/// Satellite 4 (trace-replay determinism): replay one fixed-seed trace
+/// through a live coordinator twice — fresh coordinator, fresh scripted
+/// clock each time — and the two runs must produce identical per-item
+/// resolved algorithms and identical (non-empty) flip schedules:
+/// determinism end to end, from the trace generator through the tuner.
+#[test]
+fn trace_replay_same_seed_has_identical_flip_schedule() {
+    fn run_once(trace_seed: u64) -> (Vec<u64>, Vec<(u64, Option<String>)>) {
+        let tuning = TunerConfig {
+            enabled: true,
+            alpha: 0.5,
+            min_samples: 2,
+            explore_every: 3,
+            seed: 0xAB5_0123,
+            register_refine_budget: 0,
+        };
+        let cfg = CoordinatorConfig { workers: 1, tuning, ..Default::default() };
+        let clock = Arc::new(ScriptedClock::new(vec![]));
+        let coord = Arc::new(Coordinator::with_clock(
+            Arc::new(registry_no_csr()),
+            cfg,
+            Arc::<ScriptedClock>::clone(&clock),
+        ));
+        let spec = TraceSpec {
+            requests: 24,
+            rate_rps: 1e9, // arrivals effectively immediate: no pacing sleeps
+            sizes: vec![64],
+            sparsities: vec![0.985],
+            patterns: vec!["uniform".into()],
+            seed: trace_seed,
+            shared_a_pool: 1,
+            shared_a_zipf: 1.0,
+        };
+        let pool = serve::shared_pool(&spec);
+        let items = serve::generate_trace(&spec);
+        let slot = &pool[0];
+        let a = gen::generate(
+            gen::Pattern::from_name(&slot.pattern).unwrap(),
+            slot.n,
+            slot.sparsity,
+            &mut Rng::new(slot.seed),
+        );
+
+        // Lock-step driver state: the mirror predicts which algo each
+        // request runs so the scripted clock can hand it the matching
+        // latency (gcoo slow, dense fast — same scenario as the
+        // convergence test), and flips are detected via the live counter.
+        struct Driver {
+            handle: Option<gcoospdm::coordinator::OperandId>,
+            mirror: Mirror,
+            incumbent: Algo,
+            idx: u64,
+            flips_seen: u64,
+        }
+        let state = Mutex::new(Driver {
+            handle: None,
+            mirror: Mirror { alpha: 0.5, min_samples: 2, est: HashMap::new() },
+            incumbent: Algo::Gcoo,
+            idx: 0,
+            flips_seen: 0,
+        });
+        let tuning_seed = tuning.seed;
+        let report = serve::replay_trace(&items, 1, |item| {
+            let mut st = state.lock().unwrap();
+            let (handle, kind) = match st.handle {
+                Some(h) => (h, serve::ReplayKind::StoreHit),
+                None => {
+                    let entry = coord.put_a(a.clone(), None).map_err(|e| e.to_string())?;
+                    st.handle = Some(entry.handle);
+                    (entry.handle, serve::ReplayKind::StoreMiss)
+                }
+            };
+            let key = ModelKey::operand(handle);
+            let alt = if st.incumbent == Algo::Gcoo { Algo::DenseXla } else { Algo::Gcoo };
+            let draw = explore_draw(tuning_seed, key, st.idx, 3);
+            let predicted = if draw { alt } else { st.incumbent };
+            let lat = if predicted == Algo::Gcoo { 0.5 } else { 0.0625 };
+            clock.push_latency(lat);
+            st.idx += 1;
+
+            let b = Mat::randn(64, 64, &mut Rng::new(item.seed));
+            let resp = coord.run_sync(SpdmRequest::for_handle(item.id, handle, b));
+            if !resp.ok() {
+                return Err(resp.error.unwrap_or_default());
+            }
+            st.mirror.observe(predicted, lat / 64.0);
+            if let (Some(i), Some(a_m)) =
+                (st.mirror.gated(st.incumbent), st.mirror.gated(alt))
+            {
+                if a_m < i {
+                    st.incumbent = alt;
+                }
+            }
+            let flips = coord.snapshot().route_flips;
+            let flipped = flips > st.flips_seen;
+            st.flips_seen = flips;
+            let mut outcome = match kind {
+                serve::ReplayKind::StoreHit => ReplayOutcome::store_hit(),
+                _ => ReplayOutcome::store_miss(),
+            };
+            outcome = outcome.with_algo(resp.algo.as_str()).with_flip(flipped);
+            Ok(outcome)
+        });
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.completed, 24);
+        assert_eq!(report.store_misses, 1, "one registration for the single slot");
+        let algos = report
+            .outcomes
+            .iter()
+            .map(|(id, o)| (*id, o.algo.clone()))
+            .collect();
+        (report.flip_schedule(), algos)
+    }
+
+    let (flips1, algos1) = run_once(0x7ACE);
+    let (flips2, algos2) = run_once(0x7ACE);
+    assert!(!flips1.is_empty(), "the dense-favoring scenario must flip at least once");
+    assert_eq!(flips1, flips2, "same seed ⇒ identical flip schedule");
+    assert_eq!(algos1, algos2, "same seed ⇒ identical per-item resolved algos");
+}
+
+/// `explain` over the wire: the reply's `routing` field is a JSON routing
+/// table (policy + per-entry candidates), served next to the v1/v2
+/// traffic on the same connection.
+#[test]
+fn explain_round_trips_over_the_wire() {
+    let coord = Arc::new(Coordinator::new(
+        Arc::new(registry_full()),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    ));
+    let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    let mut client = Client::connect(&addr).unwrap();
+
+    let r = client.put_a_synthetic(1, 64, 0.99, "uniform", 5, "auto").unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    let r = client.explain(2).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    let doc = gcoospdm::json::parse(r.routing.as_deref().expect("routing payload")).unwrap();
+    let policy = doc.get("policy").unwrap();
+    assert_eq!(policy.get("gcoo_crossover").unwrap().as_f64(), Some(0.98));
+    assert_eq!(policy.get("tuning_enabled").unwrap().as_bool(), Some(false));
+    assert_eq!(doc.get("route_flips").unwrap().as_u64(), Some(0));
+    let entries = doc.get("entries").unwrap().as_arr().unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].get("version").unwrap().as_u64(), Some(1));
+    assert_eq!(entries[0].get("algo").unwrap().as_str(), Some("gcoo"));
+    let cands = entries[0].get("candidates").unwrap().as_arr().unwrap();
+    assert!(
+        cands.len() >= 2,
+        "unhinted registration publishes alternatives: {cands:?}"
+    );
+    assert_eq!(cands[0].get("algo").unwrap().as_str(), Some("gcoo"));
+
+    client.shutdown(99).unwrap();
+    handle.join().unwrap();
+}
