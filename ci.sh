@@ -2,11 +2,12 @@
 # CI for the gcoospdm crate: the tier-1 verify plus full target coverage.
 #
 #   ./ci.sh            # build + test + compile all benches/examples
-#   ./ci.sh --quick    # serving fast path: the batched-vs-sequential and
-#                      # adaptive-routing differential suites, the
-#                      # operand-handle (protocol v2 + store) suites, the
-#                      # tuner property suites, and the serve_hotpath
-#                      # quick bench (batched + handle + adaptive A/Bs)
+#   ./ci.sh --quick    # serving fast path: the trace-vs-walker and
+#                      # batched-vs-sequential and adaptive-routing
+#                      # differential suites, the simgpu trace lib tests,
+#                      # the operand-handle (protocol v2 + store) suites,
+#                      # the tuner property suites, and the serve_hotpath
+#                      # quick bench (emits BENCH_6.json)
 #
 # The crate is std-only (offline build; see DESIGN.md §2), so no network or
 # vendored registry is required.
@@ -14,6 +15,12 @@ set -euo pipefail
 cd "$(dirname "$0")/rust"
 
 if [[ "${1:-}" == "--quick" ]]; then
+  echo "== quick: trace-vs-walker differential suite (corpus sweep + engine traces + determinism) =="
+  cargo test -q --test trace_differential
+
+  echo "== quick: simgpu trace lib tests (sinks, recorder, replay, oracle) =="
+  cargo test -q --lib simgpu::trace
+
   echo "== quick: batched-vs-sequential differential suite =="
   cargo test -q --test batch_differential
 

@@ -1,4 +1,8 @@
 //! Bench: regenerate paper Fig 13 (EO vs KC time breakdown).
+//!
+//! KC times are produced by traced kernel execution — the kernels' memory
+//! event streams replayed through the device model (DESIGN.md §Tracing) —
+//! not by a separate hand-maintained walker.
 fn main() {
     gcoospdm::figures::fig13_breakdown().print();
 }

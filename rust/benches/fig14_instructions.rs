@@ -1,4 +1,8 @@
 //! Bench: regenerate paper Fig 14 (transaction distributions vs n and s).
+//!
+//! Counters come from traced kernel execution replayed through the device
+//! model (DESIGN.md §Tracing); each table also carries per-class transaction
+//! shares and a dense-vs-gcoo DRAM supplement across the Table II devices.
 fn main() {
     gcoospdm::figures::fig14_instructions().print();
 }

@@ -10,6 +10,10 @@
 //! The engine only needs artifact files to *exist*, so the bench fabricates
 //! a runnable registry under `target/` — no `make artifacts` required.
 //!
+//! Besides the printed lines, every run emits a machine-readable summary
+//! (`BENCH_6.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
+//! latency percentiles, and the copy/conversion/flip counters.
+//!
 //!   cargo bench --bench serve_hotpath            # full run
 //!   cargo bench --bench serve_hotpath -- --quick # CI quick mode (ci.sh)
 
@@ -18,6 +22,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use gcoospdm::convert;
+use gcoospdm::json::{self, Value};
 use gcoospdm::coordinator::{
     process_batch_ws, process_one_ws, BatchJob, Coordinator, CoordinatorConfig, Selector,
     SpdmRequest, TunerConfig, Workspace,
@@ -122,6 +127,10 @@ fn main() {
     let cfg = CoordinatorConfig { workers: 2, ..Default::default() };
     println!("serve_hotpath: {} requests, fixed seeds, quick={quick}", iters);
 
+    // Per-phase results, emitted as BENCH_6.json at the end of the run
+    // (machine-readable mirror of the printed lines; ci.sh --quick runs this).
+    let mut phases: Vec<Value> = Vec::new();
+
     // --- Phase 1: process_one through the coordinator (queue + workers) ---
     {
         let coord = Coordinator::new(Arc::new(registry()), cfg);
@@ -146,6 +155,18 @@ fn main() {
         println!(
             "copy counters: {} B copied, {} allocations/copies avoided",
             snap.bytes_copied, snap.copies_avoided
+        );
+        phases.push(
+            Value::obj()
+                .field("phase", "coordinator")
+                .field("req_s", iters as f64 / wall)
+                .field("p50_ms", snap.p50_s * 1e3)
+                .field("p95_ms", snap.p95_s * 1e3)
+                .field("p99_ms", snap.p99_s * 1e3)
+                .field("bytes_copied", snap.bytes_copied)
+                .field("copies_avoided", snap.copies_avoided)
+                .field("conversions_total", snap.conversions_total)
+                .build(),
         );
         coord.shutdown();
     }
@@ -187,6 +208,14 @@ fn main() {
             arena_rps,
             base_rps,
             arena_rps / base_rps
+        );
+        phases.push(
+            Value::obj()
+                .field("phase", "sparse_hotpath_ab")
+                .field("arena_req_s", arena_rps)
+                .field("baseline_req_s", base_rps)
+                .field("speedup", arena_rps / base_rps)
+                .build(),
         );
     }
 
@@ -250,6 +279,16 @@ fn main() {
         println!(
             "batched: {count} jobs in {batches} batches, {amortized} conversions amortized ({} per batch at full width)",
             width - 1
+        );
+        phases.push(
+            Value::obj()
+                .field("phase", "batched_vs_sequential")
+                .field("fused_req_s", bat_rps)
+                .field("sequential_req_s", seq_rps)
+                .field("speedup", bat_rps / seq_rps)
+                .field("batches", batches)
+                .field("conversions_amortized", amortized)
+                .build(),
         );
     }
 
@@ -327,6 +366,16 @@ fn main() {
             handle_conversions, 1,
             "handle traffic must convert exactly once (at registration)"
         );
+        phases.push(
+            Value::obj()
+                .field("phase", "handle_vs_inline")
+                .field("handle_req_s", handle_rps)
+                .field("inline_req_s", inline_rps)
+                .field("speedup", handle_rps / inline_rps)
+                .field("handle_conversions", handle_conversions)
+                .field("inline_conversions", inline_conversions)
+                .build(),
+        );
     }
 
     // --- Phase 5: adaptive vs static routing A/B (fixed seeds) ---
@@ -388,5 +437,33 @@ fn main() {
             "adaptive side: {} explorations, {} route flips, {} conversions total",
             snap.explorations, snap.route_flips, snap.conversions_total
         );
+        phases.push(
+            Value::obj()
+                .field("phase", "adaptive_vs_static")
+                .field("adaptive_req_s", count as f64 / adap_s)
+                .field("static_req_s", count as f64 / stat_s)
+                .field("ratio", stat_s / adap_s)
+                .field("explorations", snap.explorations)
+                .field("route_flips", snap.route_flips)
+                .field("conversions_total", snap.conversions_total)
+                .build(),
+        );
+    }
+
+    // --- Emit BENCH_6.json ---------------------------------------------
+    // cwd under `cargo bench` (and ci.sh) is the crate root `rust/`, so the
+    // default lands next to the repo-level BENCH files. Override with
+    // BENCH_JSON=/path to redirect.
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_6.json".to_string());
+    let doc = Value::obj()
+        .field("bench", "serve_hotpath")
+        .field("generated", true)
+        .field("quick", quick)
+        .field("requests", iters)
+        .field("phases", Value::Arr(phases))
+        .build();
+    match std::fs::write(&path, json::write(&doc)) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("warning: could not write {path}: {e}"),
     }
 }

@@ -6,14 +6,15 @@
 //! 1. **Analytic pruning** — a closed-form cost model (same bottleneck lens
 //!    as simgpu) ranks candidate (p, b) pairs from cheap structural
 //!    statistics of the matrix (nnz, reuse-run histogram, band skew).
-//! 2. **Measured refinement** — the top candidates are run through the
-//!    simulator (or, for the live system, the PJRT executables via the
-//!    coordinator) and the empirical best wins. Results are cached per
-//!    (n, sparsity-bucket, pattern-fingerprint).
+//! 2. **Measured refinement** — the top candidates are timed by the
+//!    trace-derived cost oracle ([`simgpu::TraceOracle`]: traced kernel
+//!    execution through the memory model; for the live system, the PJRT
+//!    executables via the coordinator) and the empirical best wins.
+//!    Results are cached per (n, sparsity-bucket, pattern-fingerprint).
 
 use std::collections::HashMap;
 
-use crate::simgpu::{self, DeviceConfig, GcooStructure, WalkConfig};
+use crate::simgpu::{DeviceConfig, GcooStructure, TraceOracle, WalkConfig};
 use crate::sparse::Gcoo;
 
 /// Candidate grids. p bounded by accumulator pressure (p·b·4B of registers/
@@ -142,10 +143,11 @@ impl Autotuner {
                 GcooStructure::new(&rebanded)
             };
             let cfg = WalkConfig { b: cand.b, sample_blocks: 32, seed: 7 };
-            let rep = simgpu::simulate_gcoo(&structure, self.device, &cfg, true);
+            let oracle = TraceOracle::new(self.device, cfg);
+            let t = oracle.gcoo_time(&structure, true);
             let mut c = *cand;
-            c.measured_s = Some(rep.time_s());
-            if best.map_or(true, |b| rep.time_s() < b.measured_s.unwrap()) {
+            c.measured_s = Some(t);
+            if best.map_or(true, |b| t < b.measured_s.unwrap()) {
                 best = Some(c);
             }
         }

@@ -667,11 +667,12 @@ fn device_operand_for(
 }
 
 /// `autotune`'s measured-refinement stage at registration, bounded: rank
-/// the exploration tail (`candidates[1..]`) by a deterministic simulated
-/// measurement (the simgpu trace-replay walkers at a fixed seed) of up to
-/// `budget` tail candidates. The incumbent head — the routing `put_a`
-/// replied with — is never reordered; refinement only decides which
-/// alternative the tuner explores first.
+/// the exploration tail (`candidates[1..]`) by the trace-derived cost
+/// oracle ([`simgpu::TraceOracle`] — traced kernel execution through the
+/// memory model, deterministic at a fixed seed) for up to `budget` tail
+/// candidates. The incumbent head — the routing `put_a` replied with — is
+/// never reordered; refinement only decides which alternative the tuner
+/// explores first.
 fn refine_candidates(a: &Mat, p: usize, candidates: &mut [ExecPlan], budget: usize) {
     if budget == 0 || candidates.len() <= 2 {
         return; // nothing to rank: at most one alternative
@@ -679,21 +680,17 @@ fn refine_candidates(a: &Mat, p: usize, candidates: &mut [ExecPlan], budget: usi
     let gcoo = Gcoo::from_dense(a, p);
     let structure = GcooStructure::new(&gcoo);
     let wcfg = WalkConfig { b: 128, sample_blocks: 16, seed: 7 };
-    let dev = &simgpu::TITANX;
+    let oracle = simgpu::TraceOracle::new(&simgpu::TITANX, wcfg);
     let tail = &mut candidates[1..];
     let measured = tail.len().min(budget);
     let mut scored: Vec<(f64, ExecPlan)> = tail[..measured]
         .iter()
         .map(|c| {
             let t = match c.algo {
-                Algo::Gcoo => simgpu::simulate_gcoo(&structure, dev, &wcfg, true).time_s(),
-                Algo::GcooNoreuse => {
-                    simgpu::simulate_gcoo(&structure, dev, &wcfg, false).time_s()
-                }
-                Algo::Csr => simgpu::simulate_csr(&structure, dev, &wcfg).time_s(),
-                Algo::DenseXla | Algo::DensePallas => {
-                    simgpu::simulate_dense(c.n_exec, dev, &wcfg).time_s()
-                }
+                Algo::Gcoo => oracle.gcoo_time(&structure, true),
+                Algo::GcooNoreuse => oracle.gcoo_time(&structure, false),
+                Algo::Csr => oracle.csr_time(&structure),
+                Algo::DenseXla | Algo::DensePallas => oracle.dense_time(c.n_exec),
             };
             (t, c.clone())
         })
@@ -932,7 +929,8 @@ mod tests {
 
     /// The bounded measured-refinement stage at `put_a`: deterministic
     /// (same matrix, same order), head never reordered, and the tail
-    /// ranked by the same simulated measurements the test recomputes.
+    /// ranked by the same trace-derived oracle verdicts the test
+    /// recomputes.
     #[test]
     fn register_refinement_ranks_tail_deterministically() {
         let mut tcfg = cfg();
@@ -944,18 +942,19 @@ mod tests {
         assert_eq!(e1.candidates, e2.candidates, "refinement is deterministic");
         assert_eq!(e1.candidates[0].algo, e1.plan.algo, "head survives refinement");
         assert_eq!(e1.candidates.len(), 3);
-        // The tail order matches the simulators' verdict at the same seed.
+        // The tail order matches the trace oracle's verdict at the same seed.
         let gcoo = Gcoo::from_dense(&e1.a, tcfg.gcoo_p);
         let structure = GcooStructure::new(&gcoo);
         let wcfg = WalkConfig { b: 128, sample_blocks: 16, seed: 7 };
+        let oracle = simgpu::TraceOracle::new(&simgpu::TITANX, wcfg);
         let time_for = |algo: Algo, n_exec: usize| match algo {
-            Algo::Csr => simgpu::simulate_csr(&structure, &simgpu::TITANX, &wcfg).time_s(),
-            Algo::DenseXla => simgpu::simulate_dense(n_exec, &simgpu::TITANX, &wcfg).time_s(),
+            Algo::Csr => oracle.csr_time(&structure),
+            Algo::DenseXla => oracle.dense_time(n_exec),
             other => panic!("unexpected tail algo {other:?}"),
         };
         let t1 = time_for(e1.candidates[1].algo, e1.candidates[1].n_exec);
         let t2 = time_for(e1.candidates[2].algo, e1.candidates[2].n_exec);
-        assert!(t1 <= t2, "tail must be ranked by simulated time: {t1} vs {t2}");
+        assert!(t1 <= t2, "tail must be ranked by oracle time: {t1} vs {t2}");
     }
 
     /// A route flip republishes the handle as a new immutable version: the

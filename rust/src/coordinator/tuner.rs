@@ -156,7 +156,8 @@ pub struct TunerConfig {
     /// Seed of the pure exploration draw.
     pub seed: u64,
     /// `put_a` measured refinement: how many exploration-tail candidates
-    /// get a deterministic simulated measurement to rank them (0 = off).
+    /// the trace-derived cost oracle (`simgpu::TraceOracle`, deterministic
+    /// at a fixed seed) measures to rank them (0 = off).
     pub register_refine_budget: usize,
 }
 

@@ -350,6 +350,11 @@ pub fn fig10_12_perf_vs_size() -> FigureOutput {
 /// Conversion is modeled as bandwidth-bound (read n²·4B, write nnz·12B) —
 /// the same cost lens as the kernels — and cross-checked against measured
 /// CPU conversion on small n (second table).
+///
+/// KC times come from traced kernel execution: `simulate_gcoo`/`simulate_csr`
+/// replay the kernels' memory-event streams (DESIGN.md §Tracing) through the
+/// device model, so this figure shares its provenance with the instrumented
+/// serving path rather than a separate hand-maintained walker.
 pub fn fig13_breakdown() -> FigureOutput {
     let cfg = WalkConfig::default();
     let dev = &TITANX;
@@ -408,17 +413,50 @@ pub fn fig13_breakdown() -> FigureOutput {
 // -------------------------------------------------------------- Fig 14 ---
 
 /// Fig 14: instruction (transaction) distributions vs n and vs s, TitanX.
+///
+/// Counter provenance is traced execution: the per-class transaction counts
+/// are the replayed memory-event streams of the kernels (DESIGN.md §Tracing),
+/// i.e. the same events the instrumented serving path emits, classified by
+/// the device model's cache hierarchy. The trailing `*_share` columns are the
+/// per-class fractions of all memory transactions (they sum to 1.0 whenever
+/// any transaction was issued — the nvprof-style normalized view).
 pub fn fig14_instructions() -> FigureOutput {
     let cfg = WalkConfig::default();
     let dev = &TITANX;
     let mut tables = Vec::new();
 
+    let counter_headers = [
+        "n_dram",
+        "n_l2",
+        "n_shm",
+        "tex_l1_trans",
+        "dram_share",
+        "l2_share",
+        "shm_share",
+        "tex_share",
+    ];
+    let counter_cells = |c: &simgpu::Counters| -> Vec<String> {
+        let sh = c.shares();
+        vec![
+            c.dram.to_string(),
+            c.l2.to_string(),
+            c.shm.to_string(),
+            c.l1_tex.to_string(),
+            format!("{:.6}", sh[0]),
+            format!("{:.6}", sh[1]),
+            format!("{:.6}", sh[2]),
+            format!("{:.6}", sh[3]),
+        ]
+    };
+
     // vs n at s = 0.995
     let sizes = [500usize, 1000, 2000, 4000, 6000, 8000, 10000];
     for (algo_name, is_gcoo) in [("cusparse", false), ("gcoo", true)] {
+        let mut headers = vec!["n"];
+        headers.extend(counter_headers);
         let mut t = Table::new(
             &format!("Fig 14 transactions vs n (s=0.995, {algo_name}, TitanX)"),
-            &["n", "n_dram", "n_l2", "n_shm", "tex_l1_trans"],
+            &headers,
         );
         for &n in &sizes {
             let st = SyntheticUniform::new(n, 0.995, 8, 0xF14);
@@ -427,13 +465,9 @@ pub fn fig14_instructions() -> FigureOutput {
             } else {
                 simgpu::simulate_csr(&st, dev, &cfg).counters
             };
-            t.row(&[
-                n.to_string(),
-                c.dram.to_string(),
-                c.l2.to_string(),
-                c.shm.to_string(),
-                c.l1_tex.to_string(),
-            ]);
+            let mut row = vec![n.to_string()];
+            row.extend(counter_cells(&c));
+            t.row(&row);
         }
         t.write_csv(&format!("results/fig14_vs_n_{algo_name}.csv"));
         tables.push(t);
@@ -442,9 +476,11 @@ pub fn fig14_instructions() -> FigureOutput {
     // vs s at n = 4000
     let sweep = [0.8f64, 0.9, 0.95, 0.98, 0.99, 0.995, 0.999, 0.9995];
     for (algo_name, is_gcoo) in [("cusparse", false), ("gcoo", true)] {
+        let mut headers = vec!["sparsity"];
+        headers.extend(counter_headers);
         let mut t = Table::new(
             &format!("Fig 14 transactions vs sparsity (n=4000, {algo_name}, TitanX)"),
-            &["sparsity", "n_dram", "n_l2", "n_shm", "tex_l1_trans"],
+            &headers,
         );
         for &s in &sweep {
             let st = SyntheticUniform::new(4000, s, 8, 0xF14);
@@ -453,22 +489,38 @@ pub fn fig14_instructions() -> FigureOutput {
             } else {
                 simgpu::simulate_csr(&st, dev, &cfg).counters
             };
-            t.row(&[
-                format!("{s}"),
-                c.dram.to_string(),
-                c.l2.to_string(),
-                c.shm.to_string(),
-                c.l1_tex.to_string(),
-            ]);
+            let mut row = vec![format!("{s}")];
+            row.extend(counter_cells(&c));
+            t.row(&row);
         }
         t.write_csv(&format!("results/fig14_vs_s_{algo_name}.csv"));
         tables.push(t);
     }
+
+    // Supplement: dense-vs-gcoo DRAM traffic per Table II device. The paper's
+    // §IV.C observation is that the dense kernel moves the whole n² operand
+    // through DRAM while GCOO touches only the nnz structure plus gathered B
+    // columns — so at high sparsity gcoo's DRAM transactions sit strictly
+    // below dense's on every device.
+    let mut t_dram = Table::new(
+        "Fig 14 supplement: DRAM transactions, gcoo vs dense (n=1024, s=0.999)",
+        &["device", "gcoo_dram", "dense_dram"],
+    );
+    for sup_dev in ALL_DEVICES {
+        let st = SyntheticUniform::new(1024, 0.999, 8, 0xF14);
+        let g = simgpu::simulate_gcoo(&st, sup_dev, &cfg, true).counters;
+        let d = simgpu::simulate_dense(1024, sup_dev, &cfg).counters;
+        t_dram.row(&[sup_dev.name.to_string(), g.dram.to_string(), d.dram.to_string()]);
+    }
+    t_dram.write_csv("results/fig14_dram_gcoo_vs_dense.csv");
+    tables.push(t_dram);
+
     FigureOutput {
         tables,
         notes: vec![
             "paper check: cuSPARSE dominated by n_l2; GCOO splits l2/shm/tex ≈ evenly".into(),
             "paper check: dram transactions are a small share for both".into(),
+            "paper check: gcoo DRAM < dense DRAM at high sparsity on every device".into(),
         ],
     }
 }
@@ -539,7 +591,7 @@ mod tests {
     #[test]
     fn fig14_gcoo_uses_shm_cusparse_does_not() {
         let out = fig14_instructions();
-        // tables: [vs_n cusparse, vs_n gcoo, vs_s cusparse, vs_s gcoo]
+        // tables: [vs_n cusparse, vs_n gcoo, vs_s cusparse, vs_s gcoo, dram supplement]
         let cus = &out.tables[0];
         let gco = &out.tables[1];
         for row in &cus.rows {
@@ -547,6 +599,76 @@ mod tests {
         }
         for row in &gco.rows {
             assert!(row[3].parse::<u64>().unwrap() > 0, "gcoo shm must be > 0");
+        }
+    }
+
+    /// Golden check: the transaction-class shares appended to every Fig 14
+    /// row are a proper distribution — they sum to 1.0 whenever any memory
+    /// transaction was issued (traced replay never produces an all-zero
+    /// counter set for a non-empty kernel).
+    #[test]
+    fn fig14_shares_sum_to_one() {
+        let cfg = WalkConfig::default();
+        for dev in ALL_DEVICES {
+            let st = SyntheticUniform::new(1024, 0.995, 8, 0xF14);
+            for c in [
+                simgpu::simulate_gcoo(&st, dev, &cfg, true).counters,
+                simgpu::simulate_csr(&st, dev, &cfg).counters,
+                simgpu::simulate_dense(1024, dev, &cfg).counters,
+            ] {
+                assert!(c.total_mem_transactions() > 0, "{}: empty counters", dev.name);
+                let sum: f64 = c.shares().iter().sum();
+                assert!(
+                    (sum - 1.0).abs() < 1e-9,
+                    "{}: shares sum to {sum}, not 1.0",
+                    dev.name
+                );
+            }
+        }
+        // And the rendered tables carry the same invariant in their last
+        // four columns.
+        let out = fig14_instructions();
+        for t in &out.tables[..4] {
+            let w = t.headers.len();
+            for row in &t.rows {
+                let sum: f64 = row[w - 4..].iter().map(|s| s.parse::<f64>().unwrap()).sum();
+                assert!((sum - 1.0).abs() < 1e-3, "{}: row shares sum {sum}", t.title);
+            }
+        }
+    }
+
+    /// Golden check: the paper's dense-vs-gcoo DRAM asymmetry (§IV.C) has
+    /// the right sign on every Table II device — at high sparsity the GCOO
+    /// kernel issues strictly fewer DRAM transactions than the dense GEMM,
+    /// which must stream the full n² operand.
+    #[test]
+    fn fig14_dram_asymmetry_sign_on_all_devices() {
+        let cfg = WalkConfig::default();
+        for dev in ALL_DEVICES {
+            let st = SyntheticUniform::new(1024, 0.999, 8, 0xF14);
+            let g = simgpu::simulate_gcoo(&st, dev, &cfg, true).counters;
+            let d = simgpu::simulate_dense(1024, dev, &cfg).counters;
+            assert!(
+                g.dram < d.dram,
+                "{}: gcoo dram {} must be < dense dram {}",
+                dev.name,
+                g.dram,
+                d.dram
+            );
+        }
+    }
+
+    /// Golden check: Fig 13's EO fraction is a proper fraction — conversion
+    /// overhead is real (eo > 0) but the kernel dominates at these scales.
+    #[test]
+    fn fig13_eo_fraction_bounded() {
+        let out = fig13_breakdown();
+        let t = &out.tables[0];
+        let w = t.headers.len();
+        assert!(!t.rows.is_empty());
+        for row in &t.rows {
+            let f: f64 = row[w - 1].parse().unwrap();
+            assert!(f > 0.0 && f < 1.0, "eo_fraction {f} outside (0,1)");
         }
     }
 }

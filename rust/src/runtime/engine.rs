@@ -22,6 +22,16 @@
 //! `n = b.rows`. The `_into` variants write C into a caller-owned buffer
 //! (`Mat::zero_into`, allocation reused across calls) so per-worker
 //! workspaces can stage the wide result without a per-batch allocation.
+//!
+//! **Instrumented execution** (DESIGN.md §Tracing): every SpDM entry point
+//! has a `_sink` variant generic over [`TraceSink`] that, while computing
+//! the real product, emits the kernel's warp-level memory-event stream
+//! (via the shared `simgpu::trace` emitters) in GPU launch order — so
+//! simgpu's model consumes what the kernels *produce* instead of a
+//! hand-maintained second description. The plain entry points delegate
+//! with [`NullSink`]; since the sink type is monomorphized and emission is
+//! gated on `sink.active()`, the disabled path is the exact
+//! pre-instrumentation code: same kernels, same outputs, no allocation.
 
 use std::collections::HashSet;
 use std::sync::Mutex;
@@ -30,6 +40,7 @@ use std::time::Instant;
 use super::plan::{Algo, ExecPlan};
 use super::{ArtifactMeta, Registry, RuntimeError};
 use crate::ndarray::Mat;
+use crate::simgpu::trace::{self, NullSink, TraceSink, TRACE_BLOCK_THREADS};
 use crate::sparse::{Ell, EllSlabs, GcooPadded, GcooSlabs};
 
 /// An operand's converted device form — what the coordinator's operand
@@ -181,6 +192,22 @@ impl Engine {
         reuse: bool,
         c: &mut Mat,
     ) -> Result<ExecStats, RuntimeError> {
+        self.run_gcoo_slabs_into_sink(reg, slabs, b, reuse, c, &mut NullSink)
+    }
+
+    /// [`Engine::run_gcoo_slabs_into`] under a [`TraceSink`]: computes the
+    /// identical product while emitting the GCOOSpDM kernel's warp-level
+    /// memory events (from the post-repad device slabs, in launch order)
+    /// when the sink is active.
+    pub fn run_gcoo_slabs_into_sink<S: TraceSink>(
+        &self,
+        reg: &Registry,
+        slabs: GcooSlabs<'_>,
+        b: &Mat,
+        reuse: bool,
+        c: &mut Mat,
+        sink: &mut S,
+    ) -> Result<ExecStats, RuntimeError> {
         let algo = if reuse { "gcoo" } else { "gcoo_noreuse" };
         let n = b.rows;
         let meta = reg.select(algo, n, slabs.cap)?;
@@ -207,6 +234,9 @@ impl Engine {
             copy.bytes_copied = (slabs.g * slabs.cap.min(cap) * 12) as u64;
             (owned.vals.as_slice(), owned.rows.as_slice(), owned.cols.as_slice())
         };
+        if sink.active() {
+            emit_gcoo_trace(sink, vals, cols, slabs.g, cap, slabs.p, meta.n, b.cols, reuse);
+        }
         let t0 = Instant::now();
         gcoo_spdm_cpu(vals, rows, cols, slabs.g, cap, slabs.p, b, c);
         let kernel_s = t0.elapsed().as_secs_f64();
@@ -241,6 +271,20 @@ impl Engine {
         b: &Mat,
         c: &mut Mat,
     ) -> Result<ExecStats, RuntimeError> {
+        self.run_ell_slabs_into_sink(reg, slabs, b, c, &mut NullSink)
+    }
+
+    /// [`Engine::run_ell_slabs_into`] under a [`TraceSink`]: emits the
+    /// cuSPARSE-analog kernel's scattered-load event stream (from the
+    /// post-repad ELL slabs) when the sink is active.
+    pub fn run_ell_slabs_into_sink<S: TraceSink>(
+        &self,
+        reg: &Registry,
+        slabs: EllSlabs<'_>,
+        b: &Mat,
+        c: &mut Mat,
+        sink: &mut S,
+    ) -> Result<ExecStats, RuntimeError> {
         let n = b.rows;
         let meta = reg.select("csr", n, slabs.rowcap)?;
         let rowcap = meta.param("rowcap").expect("csr artifact has rowcap");
@@ -271,6 +315,9 @@ impl Engine {
             copy.bytes_copied = (slabs.n * slabs.rowcap.min(rowcap) * 8) as u64;
             (owned.vals.as_slice(), owned.cols.as_slice())
         };
+        if sink.active() {
+            emit_ell_trace(sink, vals, cols, meta.n, rowcap, b.cols);
+        }
         let t0 = Instant::now();
         ell_spdm_cpu(vals, cols, meta.n, rowcap, b, c);
         let kernel_s = t0.elapsed().as_secs_f64();
@@ -320,13 +367,29 @@ impl Engine {
         b: &Mat,
         c: &mut Mat,
     ) -> Result<ExecStats, RuntimeError> {
+        self.run_operand_into_sink(reg, plan, op, b, c, &mut NullSink)
+    }
+
+    /// [`Engine::run_operand_into`] under a [`TraceSink`]: dispatches to
+    /// the matching instrumented entry point, so handle-path execution can
+    /// be traced like the inline paths.
+    pub fn run_operand_into_sink<S: TraceSink>(
+        &self,
+        reg: &Registry,
+        plan: &ExecPlan,
+        op: &DeviceOperand,
+        b: &Mat,
+        c: &mut Mat,
+        sink: &mut S,
+    ) -> Result<ExecStats, RuntimeError> {
         match (plan.algo, op) {
-            (Algo::Gcoo | Algo::GcooNoreuse, DeviceOperand::Gcoo(p)) => {
-                self.run_gcoo_slabs_into(reg, p.as_slabs(), b, plan.algo == Algo::Gcoo, c)
+            (Algo::Gcoo | Algo::GcooNoreuse, DeviceOperand::Gcoo(p)) => self
+                .run_gcoo_slabs_into_sink(reg, p.as_slabs(), b, plan.algo == Algo::Gcoo, c, sink),
+            (Algo::Csr, DeviceOperand::Ell(e)) => {
+                self.run_ell_slabs_into_sink(reg, e.as_slabs(), b, c, sink)
             }
-            (Algo::Csr, DeviceOperand::Ell(e)) => self.run_ell_slabs_into(reg, e.as_slabs(), b, c),
             (Algo::DenseXla | Algo::DensePallas, DeviceOperand::Dense(a)) => {
-                let out = self.run_dense(reg, plan.algo.as_str(), a, b)?;
+                let out = self.run_dense_sink(reg, plan.algo.as_str(), a, b, sink)?;
                 *c = out.c;
                 Ok(ExecStats { kernel_s: out.kernel_s, artifact: out.artifact, copy: out.copy })
             }
@@ -360,12 +423,29 @@ impl Engine {
         a: &Mat,
         b: &Mat,
     ) -> Result<SpdmOutput, RuntimeError> {
+        self.run_dense_sink(reg, algo, a, b, &mut NullSink)
+    }
+
+    /// [`Engine::run_dense`] under a [`TraceSink`]: emits the tiled-GEMM
+    /// event stream for the `a.rows × a.cols × b.cols` problem when the
+    /// sink is active.
+    pub fn run_dense_sink<S: TraceSink>(
+        &self,
+        reg: &Registry,
+        algo: &str,
+        a: &Mat,
+        b: &Mat,
+        sink: &mut S,
+    ) -> Result<SpdmOutput, RuntimeError> {
         let n = b.rows;
         let meta = reg.select(algo, n, 0)?;
         check(a.rows == n && a.cols == n && b.cols > 0 && b.cols % n == 0, || {
             format!("dense shapes {}x{} / {}x{}", a.rows, a.cols, b.rows, b.cols)
         })?;
         self.load(meta)?;
+        if sink.active() {
+            emit_gemm_trace(sink, a.rows, a.cols, b.cols);
+        }
         let t0 = Instant::now();
         let c = a.matmul(b);
         let kernel_s = t0.elapsed().as_secs_f64();
@@ -398,6 +478,108 @@ fn check_gcoo_slabs(p: &GcooSlabs<'_>) -> Result<(), RuntimeError> {
             )
         },
     )
+}
+
+/// Emit the GCOOSpDM kernel's full-grid event stream from the post-repad
+/// device slabs: g bands × ⌈m/b⌉ column tiles in launch order (band index
+/// fastest), each block's stream produced by the shared
+/// [`trace::emit_gcoo_block`] emitter over the band's stored (col,row)-
+/// sorted entry columns (padding slots hold 0.0 and are skipped, exactly
+/// as the kernel skips them). `m = b.cols` covers wide-B batches; FLOPs
+/// are exact: 2 · nnz · m.
+#[allow(clippy::too_many_arguments)]
+fn emit_gcoo_trace<S: TraceSink>(
+    sink: &mut S,
+    vals: &[f32],
+    cols: &[i32],
+    g: usize,
+    cap: usize,
+    p: usize,
+    n_rows: usize,
+    m: usize,
+    reuse: bool,
+) {
+    let band_cols: Vec<Vec<u32>> = (0..g)
+        .map(|gi| {
+            (0..cap)
+                .filter(|&k| vals[gi * cap + k] != 0.0)
+                .map(|k| cols[gi * cap + k] as u32)
+                .collect()
+        })
+        .collect();
+    let bt = TRACE_BLOCK_THREADS;
+    let total = g * m.div_ceil(bt);
+    sink.grid(total, total);
+    for blk in 0..total {
+        trace::emit_gcoo_block(
+            sink,
+            blk,
+            &band_cols[blk % g],
+            blk % g,
+            blk / g,
+            p,
+            bt,
+            reuse,
+            n_rows,
+            m,
+        );
+    }
+    let nnz: u64 = band_cols.iter().map(|c| c.len() as u64).sum();
+    sink.flops(2 * nnz * m as u64);
+}
+
+/// Emit the cuSPARSE-analog kernel's full-grid event stream from the
+/// post-repad ELL slabs: ⌈n/b⌉ row blocks, each thread owning one row's
+/// stored column list (padding slots skipped), streamed through the shared
+/// [`trace::emit_csr_block`] emitter. The kernel's C-column loop is
+/// sampled at the model's stride; the m/j_samples factor is declared via
+/// `inner_sample` so recorded traces replay at the walker's exact scale.
+fn emit_ell_trace<S: TraceSink>(
+    sink: &mut S,
+    vals: &[f32],
+    cols: &[i32],
+    n: usize,
+    rowcap: usize,
+    m: usize,
+) {
+    let bt = TRACE_BLOCK_THREADS;
+    let total = n.div_ceil(bt);
+    let j_samples = 16usize.min(m);
+    let j_stride = (m / j_samples).max(1);
+    sink.grid(total, total);
+    sink.inner_sample(m, j_samples);
+    for blk in 0..total {
+        let rows: Vec<Vec<u32>> = (0..bt)
+            .map(|t| {
+                let r = blk * bt + t;
+                if r < n {
+                    (0..rowcap)
+                        .filter(|&k| vals[r * rowcap + k] != 0.0)
+                        .map(|k| cols[r * rowcap + k] as u32)
+                        .collect()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        trace::emit_csr_block(sink, blk, &rows, bt, m, j_samples, j_stride);
+    }
+    let nnz = vals.iter().filter(|v| **v != 0.0).count() as u64;
+    sink.flops(2 * nnz * m as u64);
+}
+
+/// Emit the tiled dense GEMM's full-grid event stream for an
+/// `n_i × n_k · n_k × n_j` product (wide-B capable via `n_j`), one
+/// [`trace::emit_gemm_block`] per 64×64 C tile in launch order.
+fn emit_gemm_trace<S: TraceSink>(sink: &mut S, n_i: usize, n_k: usize, n_j: usize) {
+    let tiles_i = n_i.div_ceil(trace::GEMM_TILE);
+    let tiles_j = n_j.div_ceil(trace::GEMM_TILE);
+    let total = tiles_i * tiles_j;
+    sink.grid(total, total);
+    for blk in 0..total {
+        trace::emit_gemm_block(sink, blk, blk % tiles_i, blk / tiles_i, n_i, n_k, n_j);
+    }
+    sink.flops(2 * n_i as u64 * n_k as u64 * n_j as u64);
 }
 
 /// Reference GCOOSpDM over the padded device slabs: every stored nonzero
@@ -684,6 +866,45 @@ mod tests {
         let dop = DeviceOperand::Dense(a.clone());
         let out = engine.run_operand(&reg, &dense_plan, &dop, &b).unwrap();
         assert!(out.c.allclose(&a.matmul(&b), 1e-4, 1e-4));
+    }
+
+    /// Instrumented execution emits the same trace the simgpu walker
+    /// records for the same problem — the kernel↔model unification in
+    /// miniature (the corpus-wide sweep lives in
+    /// rust/tests/trace_differential.rs).
+    #[test]
+    fn traced_execution_matches_recorded_walker_traces() {
+        use crate::simgpu::{record_gcoo, record_gemm, GcooStructure, TraceRecorder, WalkConfig};
+        let dir = std::path::PathBuf::from("target/engine_trace_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("stub.hlo.txt"), b"stub").unwrap();
+        let manifest = r#"{"artifacts": [
+            {"name": "gcoo_n16_cap16", "algo": "gcoo", "n": 16,
+             "params": {"p": 8, "cap": 16}, "inputs": [], "file": "stub.hlo.txt"},
+            {"name": "dense_xla_n16", "algo": "dense_xla", "n": 16,
+             "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+        ]}"#;
+        let reg = Registry::from_manifest_json(manifest, dir).unwrap();
+        let engine = Engine::new().unwrap();
+        let mut rng = Rng::new(51);
+        let a = Mat::eye(16);
+        let b = Mat::randn(16, 16, &mut rng);
+        let cfg = WalkConfig::default(); // window covers the whole 16-size grid
+
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let padded = gcoo.pad(16).unwrap();
+        let mut rec = TraceRecorder::new();
+        let mut c = Mat::zeros(0, 0);
+        engine
+            .run_gcoo_slabs_into_sink(&reg, padded.as_slabs(), &b, true, &mut c, &mut rec)
+            .unwrap();
+        assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4), "tracing must not perturb the product");
+        let walker = record_gcoo(&GcooStructure::new(&gcoo), &cfg, true);
+        assert_eq!(rec.finish(), walker, "engine gcoo trace != walker trace");
+
+        let mut rec = TraceRecorder::new();
+        engine.run_dense_sink(&reg, "dense_xla", &a, &b, &mut rec).unwrap();
+        assert_eq!(rec.finish(), record_gemm(16, &cfg), "engine dense trace != walker trace");
     }
 
     // Engine runs against a real artifacts directory live in

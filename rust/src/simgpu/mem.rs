@@ -45,6 +45,23 @@ impl Counters {
             l1_tex: (self.l1_tex as f64 * factor).round() as u64,
         }
     }
+
+    /// Fractions [dram, l2, shm, l1_tex] of all memory transactions — the
+    /// Fig-14 transaction-class mix. Sums to 1.0 whenever any transaction
+    /// was counted ([0;4] for an empty run).
+    pub fn shares(&self) -> [f64; 4] {
+        let total = self.total_mem_transactions();
+        if total == 0 {
+            return [0.0; 4];
+        }
+        let t = total as f64;
+        [
+            self.dram as f64 / t,
+            self.l2 as f64 / t,
+            self.shm as f64 / t,
+            self.l1_tex as f64 / t,
+        ]
+    }
 }
 
 /// Memory system of one simulated device.
@@ -163,6 +180,13 @@ impl MemorySystem {
         self.counters.shm += 1;
     }
 
+    /// `count` broadcasts at once — how replayed traces apply a coalesced
+    /// `Broadcasts` event (semantically `count` × [`Self::shared_broadcast`]).
+    #[inline]
+    pub fn shared_broadcasts(&mut self, count: u64) {
+        self.counters.shm += count;
+    }
+
     /// Reset only the counters (keep cache state warm).
     pub fn reset_counters(&mut self) {
         self.counters = Counters::default();
@@ -252,6 +276,25 @@ mod tests {
         let worst: Vec<u64> = (0..32u64).map(|t| t * 128).collect();
         ms.warp_access(Space::Shared, &worst, 0);
         assert_eq!(ms.counters.shm, 2 + 32);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let c = Counters { dram: 1, l2: 2, shm: 3, l1_tex: 4 };
+        let s = c.shares();
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(Counters::default().shares(), [0.0; 4]);
+    }
+
+    #[test]
+    fn bulk_broadcasts_match_repeated_single() {
+        let mut a = MemorySystem::new(&TITANX, 1);
+        let mut b = MemorySystem::new(&TITANX, 1);
+        for _ in 0..7 {
+            a.shared_broadcast();
+        }
+        b.shared_broadcasts(7);
+        assert_eq!(a.counters, b.counters);
     }
 
     #[test]

@@ -1,17 +1,27 @@
-//! simgpu — an abstract GPU execution model that replays the *memory access
-//! traces* of the three SpDM algorithms (GCOOSpDM, cuSPARSE-like CSR
-//! row-split, tiled dense GEMM) through an explicit memory hierarchy, on
-//! device configurations taken from the paper's Table II.
+//! simgpu — an abstract, **trace-driven** GPU execution model for the three
+//! SpDM algorithms (GCOOSpDM, cuSPARSE-like CSR row-split, tiled dense
+//! GEMM), on device configurations taken from the paper's Table II.
 //!
-//! Role in the reproduction (DESIGN.md §2): the paper's evaluation hardware
-//! (GTX 980 / Titan X / P100, CUDA 8, nvprof) does not exist here. Every
-//! figure that compares kernels *on those GPUs* is regenerated from this
-//! model: the walkers issue the same warp-level transactions the CUDA
-//! kernels would (coalesced global loads, shared-memory broadcasts, single
-//! C writes, per-nonzero B gathers …), a sectored LRU L2 and per-SM L1/tex
-//! caches classify them into the four transaction classes nvprof reports
-//! (Fig 14), and a bottleneck cost model turns counts into estimated kernel
-//! time (Figs 4–13, 15).
+//! Role in the reproduction (DESIGN.md §2, §Tracing): the paper's
+//! evaluation hardware (GTX 980 / Titan X / P100, CUDA 8, nvprof) does not
+//! exist here. Every figure that compares kernels *on those GPUs* is
+//! regenerated from **traced execution**: the per-block warp transaction
+//! streams live in [`trace`]'s `emit_*_block` emitters — shared with the
+//! instrumented reference kernels in `runtime::engine`, which can run
+//! under a [`TraceSink`] and emit the same events while computing real
+//! products. A sectored LRU L2 and per-SM L1/tex caches classify the
+//! replayed events into the four transaction classes nvprof reports
+//! (Fig 14), and a bottleneck cost model turns counts into estimated
+//! kernel time (Figs 4–13, 15). [`TraceOracle`] packages the pipeline as
+//! the deterministic "measured" oracle that autotuning and `put_a`
+//! registration refinement consult.
+//!
+//! The walkers ([`gcoo_walk`], [`csr_walk`], [`gemm_walk`]) are thin
+//! adapters: pick a sampled launch-order block window, stream the emitters
+//! through a [`ReplaySink`], scale counters to the full grid. The
+//! pre-inversion hand-derived streams survive as `hand_*` walkers — the
+//! differential baseline (`tests/trace_differential.rs`) until an
+//! engine-emitted trace corpus replaces them.
 //!
 //! What this model is *not*: a cycle-accurate GPU. It does not model warp
 //! scheduling, instruction latency hiding or DRAM row effects. The paper's
@@ -24,13 +34,20 @@ mod mem;
 mod structure;
 mod walkers;
 mod cost;
+pub mod trace;
 
 pub use device::{DeviceConfig, GTX980, TITANX, P100, ALL_DEVICES};
 pub use cache::Cache;
 pub use mem::{MemorySystem, Counters, Space};
 pub use structure::{SparseStructure, GcooStructure, SyntheticUniform, BandEntries};
-pub use walkers::{gcoo_walk, csr_walk, gemm_walk, WalkConfig};
+pub use walkers::{
+    gcoo_walk, csr_walk, gemm_walk, hand_gcoo_walk, hand_csr_walk, hand_gemm_walk,
+    record_gcoo, record_csr, record_gemm, WalkConfig,
+};
 pub use cost::{KernelEstimate, estimate_time, operational_intensity};
+pub use trace::{
+    NullSink, ReplaySink, Trace, TraceEvent, TraceOracle, TraceRecorder, TraceSink,
+};
 
 /// Operational intensity of a simulated kernel run (FLOPs / DRAM byte).
 pub fn estimate_r(rep: &KernelReport) -> f64 {

@@ -1,29 +1,29 @@
-//! Algorithm walkers: replay each kernel's warp-level memory trace.
+//! Algorithm walkers: thin adapters over **traced execution**.
 //!
-//! Each walker executes a *sampled contiguous window* of thread blocks (in
-//! launch order, so cache locality between neighboring blocks is modeled)
-//! through a [`MemorySystem`] and scales the counters to the full grid.
-//! FLOP counts are exact (they are determined by nnz / n, not by the cache).
+//! Since the trace-driven inversion, the per-block warp transaction
+//! streams live in [`super::trace`]'s `emit_*_block` emitters — the same
+//! code the instrumented reference kernels in `runtime/engine.rs` run
+//! under a [`TraceSink`]. A walker now just picks a *sampled contiguous
+//! window* of thread blocks (in launch order, so cache locality between
+//! neighboring blocks is modeled), streams each block's events through a
+//! [`ReplaySink`] into a [`MemorySystem`], and scales the counters to the
+//! full grid. FLOP counts are exact (determined by nnz / n, never
+//! sampled).
 //!
-//! Address map (byte addresses, disjoint regions):
-//!   A arrays  @ 0x0000_0000_0000  (vals), +1<<40 (rows), +2<<40 (cols)
-//!   B matrix  @ 3<<40,  C matrix @ 4<<40, row_ptr @ 5<<40
+//! The pre-inversion hand-derived walkers are retained as
+//! [`hand_gcoo_walk`]/[`hand_csr_walk`]/[`hand_gemm_walk`]: they are the
+//! differential baseline (`rust/tests/trace_differential.rs` pins the
+//! traced adapters to them exactly) and will be deleted once an
+//! engine-emitted trace corpus replaces them as the fixture of record —
+//! see DESIGN.md §Tracing for the deprecation plan.
 
 use super::device::{DeviceConfig, WARP};
 use super::mem::{Counters, MemorySystem, Space};
 use super::structure::SparseStructure;
-
-/// Effective column-ILP of the cuSPARSE-era csrmm: lanes covering adjacent
-/// C columns share memory sectors, partially re-coalescing its scattered
-/// loads (see csr_walk docs).
-const ILP_COLS: usize = 4;
-
-const A_VALS: u64 = 0;
-const A_ROWS: u64 = 1 << 40;
-const A_COLS: u64 = 2 << 40;
-const B_BASE: u64 = 3 << 40;
-const C_BASE: u64 = 4 << 40;
-const ROWPTR: u64 = 5 << 40;
+use super::trace::{
+    emit_csr_block, emit_gcoo_block, emit_gemm_block, ReplaySink, Trace, TraceRecorder,
+    TraceSink, A_COLS, A_ROWS, A_VALS, B_BASE, C_BASE, GEMM_TILE, GEMM_TK, ILP_COLS, ROWPTR,
+};
 
 /// Walker parameters.
 #[derive(Clone, Copy, Debug)]
@@ -52,13 +52,155 @@ fn window(total_blocks: usize, cfg: &WalkConfig) -> (usize, usize) {
     (start, len)
 }
 
+// ------------------------------------------------------- traced adapters
+
 /// GCOOSpDM (paper Algorithm 2). Grid: g bands × ⌈n/b⌉ column tiles,
-/// launch order band-major (blockIdx.x = band). Per block:
-///   stage the band's COO into shared memory in b-sized chunks (coalesced
-///   global reads + shared stores), then scan entries: shared broadcast
-///   reads, one texture-path B row load per *new* column (reuse skips
-///   repeats when `reuse`), accumulate in registers, single C write.
+/// launch order band-major (blockIdx.x = band). Per-block stream emitted
+/// by [`emit_gcoo_block`], replayed through the memory model.
 pub fn gcoo_walk(
+    s: &dyn SparseStructure,
+    dev: &DeviceConfig,
+    cfg: &WalkConfig,
+    reuse: bool,
+) -> (Counters, u64) {
+    let n = s.n();
+    let g = s.num_bands();
+    let col_tiles = n.div_ceil(cfg.b);
+    let total_blocks = g * col_tiles;
+    let (start, len) = window(total_blocks, cfg);
+    let mut ms = MemorySystem::new(dev, dev.sms.min(len.max(1)));
+    {
+        let mut sink = ReplaySink::new(&mut ms, dev.sms);
+        for blk in start..start + len {
+            // launch order: band index fastest (blockIdx.x), as in Algorithm 2.
+            let band = s.band(blk % g);
+            emit_gcoo_block(&mut sink, blk, &band.cols, blk % g, blk / g, s.p(), cfg.b, reuse, n, n);
+        }
+    }
+    let scale = total_blocks as f64 / len as f64;
+    let flops = 2 * s.nnz() * n as u64; // exact: every nonzero × every C column
+    (ms.counters.scale(scale), flops)
+}
+
+/// cuSPARSE-like scalar-row csrmm (CUDA-8 era): one thread per row, every
+/// load scattered through the generic L2 path. Per-block stream emitted by
+/// [`emit_csr_block`]. Sampling: a contiguous window of row blocks × a
+/// strided sample of C columns; counters scale to the full (blocks × n)
+/// space.
+pub fn csr_walk(s: &dyn SparseStructure, dev: &DeviceConfig, cfg: &WalkConfig) -> (Counters, u64) {
+    let n = s.n();
+    let total_blocks = n.div_ceil(cfg.b);
+    let (start, len) = window(total_blocks, cfg);
+    let mut ms = MemorySystem::new(dev, dev.sms.min(len.max(1)));
+    // Sample the kernel's outer loop over C columns with a stride.
+    let j_samples = 16usize.min(n);
+    let j_stride = (n / j_samples).max(1);
+    {
+        let mut sink = ReplaySink::new(&mut ms, dev.sms);
+        for blk in start..start + len {
+            // The block's row structures (host-side bookkeeping, not traffic).
+            let rows: Vec<Vec<u32>> = (0..cfg.b)
+                .map(|t| {
+                    let r = blk * cfg.b + t;
+                    if r < n { s.row_cols(r) } else { Vec::new() }
+                })
+                .collect();
+            emit_csr_block(&mut sink, blk, &rows, cfg.b, n, j_samples, j_stride);
+        }
+    }
+    // Scale: sampled blocks → all blocks, sampled columns → all n columns.
+    let scale = (total_blocks as f64 / len as f64) * (n as f64 / j_samples as f64);
+    let flops = 2 * s.nnz() * n as u64;
+    (ms.counters.scale(scale), flops)
+}
+
+/// Tiled dense GEMM (cuBLAS stand-in): 64×64 C tiles, k-loop staging 64×16
+/// A/B tiles through shared memory. Per-block stream emitted by
+/// [`emit_gemm_block`]. Compute-bound at large n, which yields the
+/// constant-in-sparsity line of Figs 7–9.
+pub fn gemm_walk(n: usize, dev: &DeviceConfig, cfg: &WalkConfig) -> (Counters, u64) {
+    let tiles = n.div_ceil(GEMM_TILE);
+    let total_blocks = tiles * tiles;
+    let (start, len) = window(total_blocks, cfg);
+    let mut ms = MemorySystem::new(dev, dev.sms.min(len.max(1)));
+    {
+        let mut sink = ReplaySink::new(&mut ms, dev.sms);
+        for blk in start..start + len {
+            emit_gemm_block(&mut sink, blk, blk % tiles, blk / tiles, n, n, n);
+        }
+    }
+    let scale = total_blocks as f64 / len as f64;
+    let flops = 2 * (n as u64).pow(3);
+    (ms.counters.scale(scale), flops)
+}
+
+// ----------------------------------------------------------- recording
+
+/// Record the sampled GCOOSpDM window as a materialized [`Trace`]
+/// (replayable on any device; `Trace::replay` reproduces [`gcoo_walk`]'s
+/// counters exactly).
+pub fn record_gcoo(s: &dyn SparseStructure, cfg: &WalkConfig, reuse: bool) -> Trace {
+    let n = s.n();
+    let g = s.num_bands();
+    let total_blocks = g * n.div_ceil(cfg.b);
+    let (start, len) = window(total_blocks, cfg);
+    let mut rec = TraceRecorder::new();
+    rec.grid(total_blocks, len);
+    for blk in start..start + len {
+        let band = s.band(blk % g);
+        emit_gcoo_block(&mut rec, blk, &band.cols, blk % g, blk / g, s.p(), cfg.b, reuse, n, n);
+    }
+    rec.flops(2 * s.nnz() * n as u64);
+    rec.finish()
+}
+
+/// Record the sampled csrmm window. The C-column sampling is carried in
+/// the trace's `col_sample` ratio, so `Trace::replay` applies exactly the
+/// combined scale factor [`csr_walk`] computes.
+pub fn record_csr(s: &dyn SparseStructure, cfg: &WalkConfig) -> Trace {
+    let n = s.n();
+    let total_blocks = n.div_ceil(cfg.b);
+    let (start, len) = window(total_blocks, cfg);
+    let j_samples = 16usize.min(n);
+    let j_stride = (n / j_samples).max(1);
+    let mut rec = TraceRecorder::new();
+    rec.grid(total_blocks, len);
+    rec.inner_sample(n, j_samples);
+    for blk in start..start + len {
+        let rows: Vec<Vec<u32>> = (0..cfg.b)
+            .map(|t| {
+                let r = blk * cfg.b + t;
+                if r < n { s.row_cols(r) } else { Vec::new() }
+            })
+            .collect();
+        emit_csr_block(&mut rec, blk, &rows, cfg.b, n, j_samples, j_stride);
+    }
+    rec.flops(2 * s.nnz() * n as u64);
+    rec.finish()
+}
+
+/// Record the sampled dense-GEMM window as a [`Trace`].
+pub fn record_gemm(n: usize, cfg: &WalkConfig) -> Trace {
+    let tiles = n.div_ceil(GEMM_TILE);
+    let total_blocks = tiles * tiles;
+    let (start, len) = window(total_blocks, cfg);
+    let mut rec = TraceRecorder::new();
+    rec.grid(total_blocks, len);
+    for blk in start..start + len {
+        emit_gemm_block(&mut rec, blk, blk % tiles, blk / tiles, n, n, n);
+    }
+    rec.flops(2 * (n as u64).pow(3));
+    rec.finish()
+}
+
+// ------------------------------------------------ legacy hand walkers
+//
+// Pre-inversion hand-derived transaction streams, kept verbatim as the
+// differential baseline for the traced adapters above. Do not extend:
+// new algorithm families get emitters in `trace.rs`, not hand walkers.
+
+/// Legacy hand-derived GCOOSpDM walker (differential baseline only).
+pub fn hand_gcoo_walk(
     s: &dyn SparseStructure,
     dev: &DeviceConfig,
     cfg: &WalkConfig,
@@ -142,18 +284,8 @@ pub fn gcoo_walk(
     (ms.counters.scale(scale), flops)
 }
 
-/// cuSPARSE-like scalar-row csrmm (CUDA-8 era). One *thread* per row:
-/// thread t of a warp owns row `base + t` and, for each C column j, walks
-/// its nonzeros serially. The warp-level consequence — the behavior the
-/// paper profiles as cuSPARSE's weakness — is that every load is
-/// **scattered**: at step (j, k) the 32 lanes touch 32 different A entries
-/// and 32 different B addresses `B(col_t, j)` (stride-n apart), so one
-/// memory operation costs up to 32 sectors through the generic L2 path
-/// (no shared staging, no texture path, no bv reuse).
-///
-/// Sampling: a contiguous window of row blocks × a strided sample of C
-/// columns; counters scale to the full (blocks × n) space.
-pub fn csr_walk(
+/// Legacy hand-derived csrmm walker (differential baseline only).
+pub fn hand_csr_walk(
     s: &dyn SparseStructure,
     dev: &DeviceConfig,
     cfg: &WalkConfig,
@@ -253,12 +385,10 @@ pub fn csr_walk(
     (ms.counters.scale(scale), flops)
 }
 
-/// Tiled dense GEMM (cuBLAS stand-in): 64×64 C tiles, k-loop staging 64×16
-/// A/B tiles through shared memory. Compute-bound at large n, which yields
-/// the constant-in-sparsity line of Figs 7–9.
-pub fn gemm_walk(n: usize, dev: &DeviceConfig, cfg: &WalkConfig) -> (Counters, u64) {
-    let tile = 64usize;
-    let tk = 16usize;
+/// Legacy hand-derived dense-GEMM walker (differential baseline only).
+pub fn hand_gemm_walk(n: usize, dev: &DeviceConfig, cfg: &WalkConfig) -> (Counters, u64) {
+    let tile = GEMM_TILE;
+    let tk = GEMM_TK;
     let tiles = n.div_ceil(tile);
     let total_blocks = tiles * tiles;
     let (start, len) = window(total_blocks, cfg);
@@ -327,6 +457,27 @@ mod tests {
         let s = synth(512, 0.99);
         let (_c, flops) = gcoo_walk(&s, &TITANX, &WalkConfig::default(), true);
         assert_eq!(flops, 2 * s.nnz() * 512);
+    }
+
+    #[test]
+    fn traced_adapters_match_hand_walkers() {
+        // The inversion's core invariant, in-module smoke form (the full
+        // corpus sweep lives in rust/tests/trace_differential.rs).
+        let s = synth(256, 0.98);
+        let cfg = WalkConfig::default();
+        assert_eq!(gcoo_walk(&s, &TITANX, &cfg, true), hand_gcoo_walk(&s, &TITANX, &cfg, true));
+        assert_eq!(gcoo_walk(&s, &TITANX, &cfg, false), hand_gcoo_walk(&s, &TITANX, &cfg, false));
+        assert_eq!(csr_walk(&s, &TITANX, &cfg), hand_csr_walk(&s, &TITANX, &cfg));
+        assert_eq!(gemm_walk(256, &TITANX, &cfg), hand_gemm_walk(256, &TITANX, &cfg));
+    }
+
+    #[test]
+    fn recorded_traces_replay_to_walker_counters() {
+        let s = synth(256, 0.98);
+        let cfg = WalkConfig::default();
+        assert_eq!(record_gcoo(&s, &cfg, true).replay(&TITANX), gcoo_walk(&s, &TITANX, &cfg, true));
+        assert_eq!(record_csr(&s, &cfg).replay(&TITANX), csr_walk(&s, &TITANX, &cfg));
+        assert_eq!(record_gemm(256, &cfg).replay(&TITANX), gemm_walk(256, &TITANX, &cfg));
     }
 
     #[test]

@@ -22,6 +22,8 @@ use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
 use gcoospdm::rng::Rng;
 use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::simgpu::TraceRecorder;
+use gcoospdm::sparse::Gcoo;
 
 /// Stub registry at n=64: two gcoo capacities (so some workloads borrow at
 /// cap 64 and others re-pad via cap 512), a csr variant wide enough for any
@@ -198,6 +200,47 @@ fn fused_batch_borrows_slabs_once() {
         "fused batch: one kernel invocation, one matching-cap slab borrow"
     );
     assert_identical(&seq, &bat, "copystats");
+}
+
+/// TraceSink contract on the fused wide-B kernel: tracing a width-3 batch
+/// must not perturb the wide product (bitwise), and the recorded trace
+/// counts the wide FLOPs — 2·nnz·(3·64), i.e. every stored nonzero times
+/// every column of the stacked B.
+#[test]
+fn traced_wide_b_run_is_bitwise_identical_and_counts_wide_flops() {
+    let reg = runnable_registry();
+    let engine = Engine::new().unwrap();
+    let mut rng = Rng::new(0x771D);
+    let a = gen::uniform(64, 0.97, &mut rng);
+    let gcoo = Gcoo::from_dense(&a, 8);
+    assert!(gcoo.max_group_nnz() <= 64, "workload must fit the cap=64 artifact");
+    let padded = gcoo.pad(64).unwrap();
+
+    // Width-3 wide B: three 64-column request blocks side by side.
+    let bs: Vec<Mat> = (0..3).map(|_| Mat::randn(64, 64, &mut rng)).collect();
+    let mut wide = Mat::zeros(64, 3 * 64);
+    for (k, b) in bs.iter().enumerate() {
+        for i in 0..64 {
+            wide.row_mut(i)[k * 64..(k + 1) * 64].copy_from_slice(b.row(i));
+        }
+    }
+
+    let mut c_off = Mat::zeros(0, 0);
+    engine.run_gcoo_slabs_into(&reg, padded.as_slabs(), &wide, true, &mut c_off).unwrap();
+    let mut rec = TraceRecorder::new();
+    let mut c_rec = Mat::zeros(0, 0);
+    engine
+        .run_gcoo_slabs_into_sink(&reg, padded.as_slabs(), &wide, true, &mut c_rec, &mut rec)
+        .unwrap();
+    assert_eq!(c_off, c_rec, "tracing must not perturb the fused wide-B product");
+
+    let trace = rec.finish();
+    assert_eq!(
+        trace.flops,
+        2 * gcoo.nnz() as u64 * (3 * 64) as u64,
+        "wide-B trace must count 2·nnz·(k·n) FLOPs"
+    );
+    assert!(!trace.events.is_empty(), "wide-B trace must carry the kernel's events");
 }
 
 /// Mixed-signature traffic through the live coordinator: different As with

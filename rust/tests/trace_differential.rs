@@ -1,0 +1,184 @@
+//! Trace-vs-walker differential suite — the lockdown for the trace-driven
+//! inversion (DESIGN.md §Tracing).
+//!
+//! The traced adapters (`gcoo_walk`/`csr_walk`/`gemm_walk`, now event
+//! streams replayed through the memory model) are pinned **exactly** to the
+//! legacy hand-derived walkers (`hand_*`, kept verbatim as the differential
+//! baseline) across the six corpus pattern families, at a power-of-two size
+//! (n=64) and a ragged size (n=60) that exercises every partial-warp /
+//! partial-tile edge. Recorded traces must replay to the same counters as
+//! streaming replay, deterministically run-to-run, on every Table II
+//! device; and the traces the *instrumented engine kernels* emit must equal
+//! the traces the walkers record for the same problem.
+
+use std::path::PathBuf;
+
+use gcoospdm::gen::{self, Pattern};
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::simgpu::{
+    csr_walk, gcoo_walk, gemm_walk, hand_csr_walk, hand_gcoo_walk, hand_gemm_walk, record_csr,
+    record_gcoo, record_gemm, GcooStructure, TraceRecorder, WalkConfig, ALL_DEVICES, TITANX,
+};
+use gcoospdm::sparse::{Csr, Ell, Gcoo};
+
+/// n=64: exact block/warp multiples. n=60: ragged rows, partial warps,
+/// n % j_samples != 0 (the column-sampling scale is a non-trivial float).
+const SIZES: [usize; 2] = [64, 60];
+const SPARSITY: f64 = 0.9;
+
+/// One matrix per (pattern family, size), deterministic seeds.
+fn corpus() -> Vec<(Pattern, usize, Mat)> {
+    let mut out = Vec::new();
+    for (pi, &pat) in Pattern::ALL.iter().enumerate() {
+        for &n in &SIZES {
+            let mut rng = Rng::new(0x7D1F ^ ((pi as u64) << 8) ^ n as u64);
+            out.push((pat, n, gen::generate(pat, n, SPARSITY, &mut rng)));
+        }
+    }
+    out
+}
+
+/// Satellite 1 core: traced counters agree with the legacy hand walkers
+/// *exactly* (the walker is itself exact over the sampled window, so the
+/// traced stream must reproduce every transaction, not just totals).
+#[test]
+fn traced_adapters_match_hand_walkers_across_corpus() {
+    let cfg = WalkConfig::default();
+    for (pat, n, a) in corpus() {
+        let st = GcooStructure::new(&Gcoo::from_dense(&a, 8));
+        for reuse in [true, false] {
+            assert_eq!(
+                gcoo_walk(&st, &TITANX, &cfg, reuse),
+                hand_gcoo_walk(&st, &TITANX, &cfg, reuse),
+                "gcoo {} n={n} reuse={reuse}",
+                pat.name()
+            );
+        }
+        assert_eq!(
+            csr_walk(&st, &TITANX, &cfg),
+            hand_csr_walk(&st, &TITANX, &cfg),
+            "csr {} n={n}",
+            pat.name()
+        );
+        assert_eq!(
+            gemm_walk(n, &TITANX, &cfg),
+            hand_gemm_walk(n, &TITANX, &cfg),
+            "gemm n={n}"
+        );
+    }
+}
+
+/// Recording a trace and replaying it must equal streaming replay — on
+/// every Table II device (the trace is device-independent; classification
+/// happens at replay).
+#[test]
+fn recorded_replay_matches_streaming_on_all_devices() {
+    let cfg = WalkConfig::default();
+    for &n in &SIZES {
+        let mut rng = Rng::new(0xA11D ^ n as u64);
+        let a = gen::generate(Pattern::Uniform, n, SPARSITY, &mut rng);
+        let st = GcooStructure::new(&Gcoo::from_dense(&a, 8));
+        let tg = record_gcoo(&st, &cfg, true);
+        let tc = record_csr(&st, &cfg);
+        let tm = record_gemm(n, &cfg);
+        for dev in ALL_DEVICES {
+            assert_eq!(tg.replay(dev), gcoo_walk(&st, dev, &cfg, true), "gcoo {} n={n}", dev.name);
+            assert_eq!(tc.replay(dev), csr_walk(&st, dev, &cfg), "csr {} n={n}", dev.name);
+            assert_eq!(tm.replay(dev), gemm_walk(n, dev, &cfg), "gemm {} n={n}", dev.name);
+        }
+    }
+}
+
+/// Traced replay is deterministic run-to-run: identical trace objects,
+/// identical replayed counters, no hidden state.
+#[test]
+fn traced_replay_is_deterministic_run_to_run() {
+    let cfg = WalkConfig::default();
+    for (pat, n, a) in corpus() {
+        let st = GcooStructure::new(&Gcoo::from_dense(&a, 8));
+        let t1 = record_gcoo(&st, &cfg, true);
+        let t2 = record_gcoo(&st, &cfg, true);
+        assert_eq!(t1, t2, "gcoo trace {} n={n} not reproducible", pat.name());
+        assert_eq!(t1.replay(&TITANX), t1.replay(&TITANX), "gcoo replay {} n={n}", pat.name());
+        let c1 = record_csr(&st, &cfg);
+        let c2 = record_csr(&st, &cfg);
+        assert_eq!(c1, c2, "csr trace {} n={n} not reproducible", pat.name());
+        assert_eq!(c1.replay(&TITANX), c1.replay(&TITANX), "csr replay {} n={n}", pat.name());
+    }
+    let m1 = record_gemm(60, &cfg);
+    assert_eq!(m1, record_gemm(60, &cfg));
+    assert_eq!(m1.replay(&TITANX), m1.replay(&TITANX));
+}
+
+/// Registry of runnable stub artifacts at n=64 (the engine only needs the
+/// files to exist — same pattern as tests/zero_copy.rs).
+fn runnable_registry() -> Registry {
+    let dir = PathBuf::from("target/trace_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_noreuse_n64_cap64", "algo": "gcoo_noreuse", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+/// The tentpole's closing identity: the trace the *instrumented reference
+/// kernels* emit during real execution equals the trace the walker records
+/// for the same problem — at the exact size and with a ragged matrix
+/// zero-padded to the artifact size (the serving path's shape).
+#[test]
+fn engine_recorded_traces_match_walker_traces() {
+    let reg = runnable_registry();
+    let engine = Engine::new().unwrap();
+    let cfg = WalkConfig::default();
+    for &n in &SIZES {
+        let mut rng = Rng::new(0xE7 ^ n as u64);
+        let a_raw = gen::generate(Pattern::Uniform, n, 0.95, &mut rng);
+        let b_raw = Mat::randn(n, n, &mut rng);
+        let mut a = Mat::zeros(0, 0);
+        a.pad_from(&a_raw, 64);
+        let mut b = Mat::zeros(0, 0);
+        b.pad_from(&b_raw, 64);
+
+        // GCOO, both reuse variants.
+        let gcoo = Gcoo::from_dense(&a, 8);
+        assert!(gcoo.max_group_nnz() <= 64, "workload must fit the cap=64 artifact");
+        let padded = gcoo.pad(64).unwrap();
+        let st = GcooStructure::new(&gcoo);
+        for reuse in [true, false] {
+            let mut rec = TraceRecorder::new();
+            let mut c = Mat::zeros(0, 0);
+            engine
+                .run_gcoo_slabs_into_sink(&reg, padded.as_slabs(), &b, reuse, &mut c, &mut rec)
+                .unwrap();
+            assert!(c.allclose(&a.matmul(&b), 1e-3, 1e-3), "tracing must not perturb C");
+            assert_eq!(
+                rec.finish(),
+                record_gcoo(&st, &cfg, reuse),
+                "engine gcoo trace != walker trace (n={n} reuse={reuse})"
+            );
+        }
+
+        // CSR (ELL-backed kernel).
+        let ell = Ell::from_csr(&Csr::from_dense(&a), 64).unwrap();
+        let mut rec = TraceRecorder::new();
+        let mut c = Mat::zeros(0, 0);
+        engine.run_ell_slabs_into_sink(&reg, ell.as_slabs(), &b, &mut c, &mut rec).unwrap();
+        assert!(c.allclose(&a.matmul(&b), 1e-3, 1e-3), "tracing must not perturb C");
+        assert_eq!(rec.finish(), record_csr(&st, &cfg), "engine csr trace != walker trace (n={n})");
+
+        // Dense tiled GEMM.
+        let mut rec = TraceRecorder::new();
+        engine.run_dense_sink(&reg, "dense_xla", &a, &b, &mut rec).unwrap();
+        assert_eq!(rec.finish(), record_gemm(64, &cfg), "engine dense trace != walker trace (n={n})");
+    }
+}

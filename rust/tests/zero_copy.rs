@@ -21,7 +21,8 @@ use gcoospdm::ndarray::Mat;
 use gcoospdm::prop::{check, Config};
 use gcoospdm::rng::Rng;
 use gcoospdm::runtime::{Engine, Registry};
-use gcoospdm::sparse::Gcoo;
+use gcoospdm::simgpu::TraceRecorder;
+use gcoospdm::sparse::{Csr, Ell, Gcoo};
 
 /// Registry with gcoo caps {64, 512} + dense at n=64, backed by a real
 /// (stub) file so `Engine::load` succeeds.
@@ -96,6 +97,64 @@ fn borrowed_and_repadded_execution_agree() {
             Ok(())
         },
     );
+}
+
+/// TraceSink overhead contract: running the instrumented kernels with the
+/// sink disabled (the `NullSink` delegation every serving call takes) must
+/// produce C bitwise identical to a traced run, and the disabled path must
+/// stay allocation-free — re-running into the same C reuses its buffer.
+#[test]
+fn tracing_does_not_perturb_gcoo_output_and_sink_off_is_allocation_free() {
+    let reg = runnable_registry();
+    let engine = Engine::new().unwrap();
+    let mut rng = Rng::new(0x51AB);
+    let a = gen::uniform(64, 0.95, &mut rng);
+    let b = Mat::randn(64, 64, &mut rng);
+    let gcoo = Gcoo::from_dense(&a, 8);
+    assert!(gcoo.max_group_nnz() <= 64, "workload must fit the cap=64 artifact");
+    let padded = gcoo.pad(64).unwrap();
+
+    let mut c_off = Mat::zeros(0, 0);
+    engine.run_gcoo_slabs_into(&reg, padded.as_slabs(), &b, true, &mut c_off).unwrap();
+    let mut rec = TraceRecorder::new();
+    let mut c_rec = Mat::zeros(0, 0);
+    engine
+        .run_gcoo_slabs_into_sink(&reg, padded.as_slabs(), &b, true, &mut c_rec, &mut rec)
+        .unwrap();
+    assert_eq!(c_off, c_rec, "traced and sink-off gcoo runs must be bitwise identical");
+    let trace = rec.finish();
+    assert!(!trace.events.is_empty(), "recorder must capture the kernel's events");
+    assert!(trace.flops > 0, "recorder must capture the kernel's FLOPs");
+
+    // Allocation-free serving: the sink-off rerun must reuse C's buffer.
+    let ptr = c_off.row(0).as_ptr();
+    engine.run_gcoo_slabs_into(&reg, padded.as_slabs(), &b, true, &mut c_off).unwrap();
+    assert_eq!(ptr, c_off.row(0).as_ptr(), "sink-off rerun must not reallocate C");
+    assert_eq!(c_off, c_rec, "rerun must reproduce the identical product");
+}
+
+/// Same overhead contract on the ELL (csr-kernel) path.
+#[test]
+fn tracing_does_not_perturb_ell_output_and_sink_off_is_allocation_free() {
+    let reg = runnable_registry();
+    let engine = Engine::new().unwrap();
+    let mut rng = Rng::new(0x51AC);
+    let a = gen::uniform(64, 0.95, &mut rng);
+    let b = Mat::randn(64, 64, &mut rng);
+    let ell = Ell::from_csr(&Csr::from_dense(&a), 64).unwrap();
+
+    let mut c_off = Mat::zeros(0, 0);
+    engine.run_ell_slabs_into(&reg, ell.as_slabs(), &b, &mut c_off).unwrap();
+    let mut rec = TraceRecorder::new();
+    let mut c_rec = Mat::zeros(0, 0);
+    engine.run_ell_slabs_into_sink(&reg, ell.as_slabs(), &b, &mut c_rec, &mut rec).unwrap();
+    assert_eq!(c_off, c_rec, "traced and sink-off ell runs must be bitwise identical");
+    assert!(!rec.finish().events.is_empty(), "recorder must capture the kernel's events");
+
+    let ptr = c_off.row(0).as_ptr();
+    engine.run_ell_slabs_into(&reg, ell.as_slabs(), &b, &mut c_off).unwrap();
+    assert_eq!(ptr, c_off.row(0).as_ptr(), "sink-off rerun must not reallocate C");
+    assert_eq!(c_off, c_rec, "rerun must reproduce the identical product");
 }
 
 #[test]
