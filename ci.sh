@@ -6,8 +6,10 @@
 #                      # batched-vs-sequential and adaptive-routing
 #                      # differential suites, the simgpu trace lib tests,
 #                      # the operand-handle (protocol v2 + store) suites,
-#                      # the tuner property suites, and the serve_hotpath
-#                      # quick bench (emits BENCH_6.json)
+#                      # the cross-protocol wire differential (binary v3
+#                      # vs JSON v2, frame codec + admission window), the
+#                      # tuner property suites, and the serve_hotpath
+#                      # quick bench (emits and validates BENCH_7.json)
 #
 # The crate is std-only (offline build; see DESIGN.md §2), so no network or
 # vendored registry is required.
@@ -30,15 +32,38 @@ if [[ "${1:-}" == "--quick" ]]; then
   echo "== quick: operand-handle API (protocol v2 round trips + handle-vs-inline differential) =="
   cargo test -q --test handle_api
 
+  echo "== quick: cross-protocol wire differential (binary v3 vs JSON v2 bitwise, NaN parity, admission window) =="
+  cargo test -q --test wire_differential
+
+  echo "== quick: frame codec + windowed admission lib tests =="
+  cargo test -q --lib serve::protocol
+  cargo test -q --lib coordinator::queue
+  cargo test -q --lib coordinator::metrics
+
   echo "== quick: tuner invariants (EWMA bounds, sample gate, pure exploration draws) =="
   cargo test -q --lib coordinator::tuner
 
-  echo "== quick: operand store invariants (LRU, byte budget, pins, flip/pin versioning) + protocol validation =="
+  echo "== quick: operand store invariants (LRU, byte budget, pins, flip/pin versioning) =="
   cargo test -q --lib coordinator::store
-  cargo test -q --lib serve::protocol
 
-  echo "== quick: serve_hotpath (req/s, copies avoided, batched + handle + adaptive-vs-static A/Bs) =="
+  echo "== quick: serve_hotpath (req/s, copies avoided, batched + handle + adaptive + wire A/Bs, open-loop admission) =="
   cargo bench --bench serve_hotpath -- --quick
+
+  echo "== quick: BENCH_7.json must exist and be well-formed =="
+  python3 - <<'PYEOF'
+import json, sys
+try:
+    doc = json.load(open("../BENCH_7.json"))
+except Exception as e:
+    sys.exit(f"BENCH_7.json missing or malformed: {e}")
+if doc.get("generated") is not True:
+    sys.exit("BENCH_7.json still a placeholder (generated != true)")
+names = {p.get("phase") for p in doc.get("phases", [])}
+for need in ("binary_vs_json", "open_loop_admission"):
+    if need not in names:
+        sys.exit(f"BENCH_7.json lacks required phase {need}")
+print("BENCH_7.json OK:", ", ".join(sorted(names)))
+PYEOF
 
   echo "CI quick OK"
   exit 0

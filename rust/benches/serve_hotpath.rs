@@ -3,16 +3,21 @@
 //! zero-copy arena pipeline against a faithful replica of the pre-arena
 //! copy-heavy path (pad A → convert → pad again → clone slabs), a
 //! batched-vs-sequential A/B of fused multi-B execution (one A conversion
-//! + one wide kernel per batch vs one conversion per request), and a
+//! + one wide kernel per batch vs one conversion per request), a
 //! handle-vs-inline A/B of the operand store (register A once, multiply
-//! by reference vs re-ship + re-convert per request — EO amortization).
+//! by reference vs re-ship + re-convert per request — EO amortization),
+//! a binary-v3-vs-JSON-v2 wire A/B through a live server (bitwise-checked
+//! checksums, req/s + bytes-on-wire per request), and an open-loop
+//! arrival-schedule phase measuring achieved fused-batch width and
+//! latency percentiles with the admission window on vs off.
 //!
 //! The engine only needs artifact files to *exist*, so the bench fabricates
 //! a runnable registry under `target/` — no `make artifacts` required.
 //!
 //! Besides the printed lines, every run emits a machine-readable summary
-//! (`BENCH_6.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
-//! latency percentiles, and the copy/conversion/flip counters.
+//! (`BENCH_7.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
+//! latency percentiles, wire bytes per request, and the
+//! copy/conversion/flip/window counters.
 //!
 //!   cargo bench --bench serve_hotpath            # full run
 //!   cargo bench --bench serve_hotpath -- --quick # CI quick mode (ci.sh)
@@ -31,6 +36,7 @@ use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
 use gcoospdm::rng::Rng;
 use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::serve::{Client, Server, ServerConfig};
 use gcoospdm::sparse::GcooPadded;
 
 fn registry() -> Registry {
@@ -127,7 +133,7 @@ fn main() {
     let cfg = CoordinatorConfig { workers: 2, ..Default::default() };
     println!("serve_hotpath: {} requests, fixed seeds, quick={quick}", iters);
 
-    // Per-phase results, emitted as BENCH_6.json at the end of the run
+    // Per-phase results, emitted as BENCH_7.json at the end of the run
     // (machine-readable mirror of the printed lines; ci.sh --quick runs this).
     let mut phases: Vec<Value> = Vec::new();
 
@@ -450,11 +456,231 @@ fn main() {
         );
     }
 
-    // --- Emit BENCH_6.json ---------------------------------------------
+    // --- Phase 6: binary v3 vs JSON v2 wire A/B (live TCP, fixed seeds) ---
+    // The tentpole proposition measured end to end: identical inline
+    // requests through a live server on both planes, checksums asserted
+    // bitwise equal, then req/s and bytes-on-wire per request. The server
+    // work (decode → convert → kernel) is identical on both sides, so the
+    // differential is exactly the wire + parse cost v3 removes.
+    {
+        let count = if quick { 6 } else { 20 };
+        let n = 256usize;
+        let coord = Arc::new(Coordinator::new(
+            Arc::new(registry()),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        ));
+        let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let _ = server.run();
+        });
+        let mut client = Client::connect(&addr).unwrap();
+
+        let reqs: Vec<(Mat, Mat)> = (0..count)
+            .map(|i| {
+                let mut rng = Rng::new(5000 + i as u64);
+                (gen::uniform(n, 0.99, &mut rng), Mat::randn(n, n, &mut rng))
+            })
+            .collect();
+
+        // Warm both planes (compile cache + arena) outside the timers.
+        let w = client.spdm_inline(9000, n, &reqs[0].0.data, &reqs[0].1.data, false).unwrap();
+        assert!(w.ok, "{:?}", w.error);
+        let (w, _) = client
+            .spdm_inline_bin(9001, n, &reqs[0].0.data, &reqs[0].1.data, None, false, false)
+            .unwrap();
+        assert!(w.ok, "{:?}", w.error);
+
+        client.reset_wire_counters();
+        let t0 = Instant::now();
+        let json_sums: Vec<u64> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, (a, b))| {
+                let r = client.spdm_inline(i as u64, n, &a.data, &b.data, false).unwrap();
+                assert!(r.ok, "{:?}", r.error);
+                r.checksum.unwrap().to_bits()
+            })
+            .collect();
+        let json_s = t0.elapsed().as_secs_f64();
+        let (sent, recv) = client.bytes_on_wire();
+        let json_bytes_per_req = (sent + recv) as f64 / count as f64;
+
+        client.reset_wire_counters();
+        let t1 = Instant::now();
+        let bin_sums: Vec<u64> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, (a, b))| {
+                let (r, _) = client
+                    .spdm_inline_bin(1000 + i as u64, n, &a.data, &b.data, None, false, false)
+                    .unwrap();
+                assert!(r.ok, "{:?}", r.error);
+                r.checksum.unwrap().to_bits()
+            })
+            .collect();
+        let bin_s = t1.elapsed().as_secs_f64();
+        let (sent, recv) = client.bytes_on_wire();
+        let bin_bytes_per_req = (sent + recv) as f64 / count as f64;
+
+        assert_eq!(
+            json_sums, bin_sums,
+            "binary and JSON planes must produce bitwise-identical checksums"
+        );
+        let json_rps = count as f64 / json_s;
+        let bin_rps = count as f64 / bin_s;
+        println!(
+            "binary vs JSON wire: binary {:.1} req/s | JSON {:.1} req/s | speedup {:.2}x",
+            bin_rps,
+            json_rps,
+            bin_rps / json_rps
+        );
+        println!(
+            "bytes on wire per request: binary {:.0} | JSON {:.0} | {:.1}x smaller",
+            bin_bytes_per_req,
+            json_bytes_per_req,
+            json_bytes_per_req / bin_bytes_per_req
+        );
+        assert!(
+            bin_rps >= 2.0 * json_rps,
+            "binary plane must be ≥2x JSON on inline traffic (got {:.2}x)",
+            bin_rps / json_rps
+        );
+        phases.push(
+            Value::obj()
+                .field("phase", "binary_vs_json")
+                .field("binary_req_s", bin_rps)
+                .field("json_req_s", json_rps)
+                .field("speedup", bin_rps / json_rps)
+                .field("wire_bytes_per_req_binary", bin_bytes_per_req)
+                .field("wire_bytes_per_req_json", json_bytes_per_req)
+                .field("wire_shrink", json_bytes_per_req / bin_bytes_per_req)
+                .build(),
+        );
+        client.shutdown(9999).unwrap();
+        server.join().unwrap();
+    }
+
+    // --- Phase 7: open-loop admission window on vs off (fixed seeds) ---
+    // Paced arrivals (gap calibrated to ~2x the measured service time, so
+    // the window-off side genuinely drains to width-1 batches), identical
+    // handle workload both sides, results asserted bitwise equal; the
+    // window side must achieve a strictly wider mean fused-batch width.
+    {
+        let count = if quick { 16 } else { 48 };
+        let n = 256usize;
+        let mut rng = Rng::new(6000);
+        let a = gen::uniform(n, 0.99, &mut rng);
+        let bs: Vec<Mat> = (0..count).map(|_| Mat::randn(n, n, &mut rng)).collect();
+
+        // Calibrate the arrival gap on a throwaway coordinator: median-ish
+        // service time of a warm handle request.
+        let gap_us = {
+            let coord = Coordinator::new(
+                Arc::new(registry()),
+                CoordinatorConfig { workers: 1, ..Default::default() },
+            );
+            let entry = coord.put_a(a.clone(), None).expect("put_a");
+            let warm = coord.run_sync(SpdmRequest::for_handle(0, entry.handle, bs[0].clone()));
+            assert!(warm.ok(), "{:?}", warm.error);
+            let t0 = Instant::now();
+            for i in 0..3u64 {
+                let r = coord.run_sync(SpdmRequest::for_handle(i, entry.handle, bs[0].clone()));
+                assert!(r.ok(), "{:?}", r.error);
+            }
+            let svc_us = t0.elapsed().as_micros() as u64 / 3;
+            coord.shutdown();
+            (2 * svc_us).clamp(200, 20_000)
+        };
+        let window_us = 8 * gap_us;
+
+        let run_open_loop = |admission_window_us: u64| {
+            let coord = Coordinator::new(
+                Arc::new(registry()),
+                CoordinatorConfig {
+                    workers: 1,
+                    batch_max: 8,
+                    admission_window_us,
+                    ..Default::default()
+                },
+            );
+            let entry = coord.put_a(a.clone(), None).expect("put_a");
+            let warm = coord.run_sync(SpdmRequest::for_handle(9999, entry.handle, bs[0].clone()));
+            assert!(warm.ok(), "{:?}", warm.error);
+            let mut rxs = Vec::with_capacity(count);
+            for (i, b) in bs.iter().enumerate() {
+                rxs.push(
+                    coord
+                        .submit(SpdmRequest::for_handle(i as u64, entry.handle, b.clone()))
+                        .expect("queue open"),
+                );
+                std::thread::sleep(std::time::Duration::from_micros(gap_us));
+            }
+            let sums: Vec<u64> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let resp = rx.recv().expect("reply");
+                    assert!(resp.ok(), "{:?}", resp.error);
+                    let c = resp.c.expect("response carries C");
+                    let sum: f64 = c.data.iter().map(|x| *x as f64).sum();
+                    sum.to_bits()
+                })
+                .collect();
+            let snap = coord.snapshot();
+            coord.shutdown();
+            (sums, snap)
+        };
+
+        let (sums_off, snap_off) = run_open_loop(0);
+        let (sums_on, snap_on) = run_open_loop(window_us);
+        assert_eq!(sums_off, sums_on, "the admission window must never change results");
+        let width_off = snap_off.mean_batch_width();
+        let width_on = snap_on.mean_batch_width();
+        println!(
+            "open-loop admission (gap {gap_us} µs, window {window_us} µs): \
+             mean width {:.2} (on) vs {:.2} (off) | window {} filled / {} timed out",
+            width_on, width_off, snap_on.window_hits, snap_on.window_timeouts
+        );
+        println!(
+            "open-loop latency: on p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | \
+             off p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
+            snap_on.p50_s * 1e3,
+            snap_on.p95_s * 1e3,
+            snap_on.p99_s * 1e3,
+            snap_off.p50_s * 1e3,
+            snap_off.p95_s * 1e3,
+            snap_off.p99_s * 1e3,
+        );
+        assert!(
+            width_on > width_off,
+            "the admission window must widen mean fused-batch width under open-loop load \
+             ({width_on:.2} vs {width_off:.2})"
+        );
+        assert_eq!(snap_off.window_hits + snap_off.window_timeouts, 0);
+        phases.push(
+            Value::obj()
+                .field("phase", "open_loop_admission")
+                .field("arrival_gap_us", gap_us)
+                .field("window_us", window_us)
+                .field("mean_width_on", width_on)
+                .field("mean_width_off", width_off)
+                .field("window_hits", snap_on.window_hits)
+                .field("window_timeouts", snap_on.window_timeouts)
+                .field("p50_ms_on", snap_on.p50_s * 1e3)
+                .field("p95_ms_on", snap_on.p95_s * 1e3)
+                .field("p99_ms_on", snap_on.p99_s * 1e3)
+                .field("p50_ms_off", snap_off.p50_s * 1e3)
+                .field("p95_ms_off", snap_off.p95_s * 1e3)
+                .field("p99_ms_off", snap_off.p99_s * 1e3)
+                .build(),
+        );
+    }
+
+    // --- Emit BENCH_7.json ---------------------------------------------
     // cwd under `cargo bench` (and ci.sh) is the crate root `rust/`, so the
     // default lands next to the repo-level BENCH files. Override with
     // BENCH_JSON=/path to redirect.
-    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_6.json".to_string());
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_7.json".to_string());
     let doc = Value::obj()
         .field("bench", "serve_hotpath")
         .field("generated", true)

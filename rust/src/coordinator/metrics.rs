@@ -1,11 +1,14 @@
-//! Serving metrics: throughput counters, latency distributions, and the
+//! Serving metrics: throughput counters, latency distributions, the
 //! fused-batch accounting (batch-width histogram + conversions amortized
-//! by executing a shape-affine batch with one A conversion).
+//! by executing a shape-affine batch with one A conversion), and the
+//! admission-window outcome counters (batches released full vs released
+//! by the window timer — see `queue.rs::pop_batch_windowed`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::queue::WindowOutcome;
 use crate::json::{self, Value};
 use crate::ndarray::percentile;
 
@@ -38,6 +41,11 @@ pub struct Metrics {
     /// Batch-width histogram: `batch_widths[w]` counts dequeued batches of
     /// width w (index 0 unused), so Σ w·batch_widths[w] = jobs processed.
     batch_widths: Mutex<Vec<u64>>,
+    /// Admission-window batches released at full width (`Filled`).
+    pub window_hits: AtomicU64,
+    /// Admission-window batches released partial by the window elapsing
+    /// (`TimedOut`). `Disabled` outcomes count in neither.
+    pub window_timeouts: AtomicU64,
     latencies_s: Mutex<Vec<f64>>,
     kernel_s: Mutex<Vec<f64>>,
     convert_s: Mutex<Vec<f64>>,
@@ -63,6 +71,8 @@ impl Metrics {
             conversions_amortized: AtomicU64::new(0),
             conversions_total: AtomicU64::new(0),
             batch_widths: Mutex::new(Vec::new()),
+            window_hits: AtomicU64::new(0),
+            window_timeouts: AtomicU64::new(0),
             latencies_s: Mutex::new(Vec::new()),
             kernel_s: Mutex::new(Vec::new()),
             convert_s: Mutex::new(Vec::new()),
@@ -117,6 +127,21 @@ impl Metrics {
         hist[width] += 1;
     }
 
+    /// Record how a windowed batch left the queue. `Disabled` (window off)
+    /// is deliberately not counted: the counters then read all-zero and
+    /// `/stats` shows the admission window is inert.
+    pub fn record_window(&self, outcome: WindowOutcome) {
+        match outcome {
+            WindowOutcome::Disabled => {}
+            WindowOutcome::Filled => {
+                self.window_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            WindowOutcome::TimedOut => {
+                self.window_timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// Credit A conversions a batch skipped relative to one-at-a-time
     /// execution (computed by the worker from the batch's responses).
     pub fn record_amortized(&self, skipped: u64) {
@@ -148,6 +173,8 @@ impl Metrics {
             store_evictions: 0,
             route_flips: 0,
             explorations: 0,
+            window_hits: self.window_hits.load(Ordering::Relaxed),
+            window_timeouts: self.window_timeouts.load(Ordering::Relaxed),
             batch_hist: self.batch_widths.lock().unwrap().clone(),
             throughput_rps: completed as f64 / elapsed.max(1e-9),
             p50_s: pct(&lat, 50.0),
@@ -203,6 +230,10 @@ pub struct MetricsSnapshot {
     /// route flips (entry republishes) and seeded exploration executions.
     pub route_flips: u64,
     pub explorations: u64,
+    /// Admission-window outcome counters (zero when the window is off):
+    /// batches released full vs released partial by the window timer.
+    pub window_hits: u64,
+    pub window_timeouts: u64,
     /// `batch_hist[w]` = dequeued batches of width w (index 0 unused).
     pub batch_hist: Vec<u64>,
     pub throughput_rps: f64,
@@ -225,13 +256,25 @@ impl MetricsSnapshot {
             .sum()
     }
 
+    /// Mean width of dequeued batches (Σ w·hist[w] / Σ hist[w]); 0.0 before
+    /// any batch. The number the admission window exists to raise.
+    pub fn mean_batch_width(&self) -> f64 {
+        let batches: u64 = self.batch_hist.iter().sum();
+        if batches == 0 {
+            0.0
+        } else {
+            self.batched_jobs() as f64 / batches as f64
+        }
+    }
+
     pub fn render(&self) -> String {
         format!(
             "requests: {} submitted / {} completed / {} errors / {} verify failures\n\
              latency:  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms\n\
              phases:   kernel {:.3} ms  convert {:.3} ms (means)\n\
              copies:   {} B copied / {} avoided (zero-copy borrows)\n\
-             batches:  width hist {:?} / {} conversions amortized\n\
+             batches:  width hist {:?} (mean width {:.2}) / {} conversions amortized\n\
+             window:   {} filled / {} timed out\n\
              store:    {} operands / {} B of {} B budget / {} hits / {} misses / {} evictions / {} conversions total\n\
              routing:  {} route flips / {} explorations\n\
              rate:     {:.1} req/s   per-algo: {:?}",
@@ -247,7 +290,10 @@ impl MetricsSnapshot {
             self.bytes_copied,
             self.copies_avoided,
             self.batch_hist,
+            self.mean_batch_width(),
             self.conversions_amortized,
+            self.window_hits,
+            self.window_timeouts,
             self.store_entries,
             self.store_bytes,
             self.store_budget_bytes,
@@ -291,7 +337,10 @@ impl MetricsSnapshot {
                 .field("store_evictions", self.store_evictions)
                 .field("route_flips", self.route_flips)
                 .field("explorations", self.explorations)
+                .field("window_hits", self.window_hits)
+                .field("window_timeouts", self.window_timeouts)
                 .field("batch_hist", hist)
+                .field("mean_batch_width", self.mean_batch_width())
                 .field("throughput_rps", self.throughput_rps)
                 .field("p50_ms", self.p50_s * 1e3)
                 .field("p95_ms", self.p95_s * 1e3)
@@ -375,6 +424,27 @@ mod tests {
         let hist = v.get("batch_hist").unwrap().as_arr().unwrap();
         assert_eq!(hist[4].as_u64(), Some(1));
         assert_eq!(v.get("per_algo").unwrap().get("gcoo").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn window_outcomes_count_and_surface() {
+        let m = Metrics::new();
+        m.record_window(WindowOutcome::Filled);
+        m.record_window(WindowOutcome::Filled);
+        m.record_window(WindowOutcome::TimedOut);
+        m.record_window(WindowOutcome::Disabled); // counted nowhere
+        m.record_batch(4);
+        m.record_batch(2);
+        let s = m.snapshot();
+        assert_eq!(s.window_hits, 2);
+        assert_eq!(s.window_timeouts, 1);
+        assert!((s.mean_batch_width() - 3.0).abs() < 1e-12);
+        assert!(s.render().contains("2 filled / 1 timed out"));
+        assert!(s.render().contains("(mean width 3.00)"));
+        let v = crate::json::parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("window_hits").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("window_timeouts").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("mean_batch_width").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -9,8 +9,11 @@
 //! conversion, handle traffic executes from cached slabs; entries are
 //! versioned so flips never touch an in-flight pin), operand-keyed
 //! batching with fused multi-B execution (one conversion + one wide kernel
-//! per batch; no conversion at all for cached operands), a worker pool
-//! with per-worker engines + workspace arenas, and metrics.
+//! per batch; no conversion at all for cached operands), a configurable
+//! time-window admission policy (`queue.rs::pop_batch_windowed`: hold a
+//! partial affine batch open for a bounded clock-injected window so
+//! open-loop traffic fuses wide), a worker pool with per-worker engines +
+//! workspace arenas, and metrics.
 //!
 //! The paper's contribution is the kernel, so this layer is deliberately a
 //! *thin but real* serving stack (DESIGN.md §1 L3): everything a downstream
@@ -26,7 +29,7 @@ mod tuner;
 mod workspace;
 
 pub use job::{AOperand, ASig, Algo, SpdmRequest, SpdmResponse};
-pub use queue::BoundedQueue;
+pub use queue::{BoundedQueue, WindowOutcome};
 pub use selector::{Selector, SelectorPolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use pool::{

@@ -54,6 +54,12 @@ pub struct CoordinatorConfig {
     /// Adaptive measured routing (tuner.rs): disabled by default, in which
     /// case routing is exactly the static paper-threshold policy.
     pub tuning: TunerConfig,
+    /// Batch admission window in microseconds: a worker holding a partial
+    /// affine batch keeps it open this long (on the injected clock) so
+    /// open-loop traffic fuses wide. 0 (the default) disables the window —
+    /// instant `pop_batch` semantics, bit-for-bit, with zero clock reads
+    /// (see `queue.rs::pop_batch_windowed`).
+    pub admission_window_us: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -67,6 +73,7 @@ impl Default for CoordinatorConfig {
             convert_threads: 4,
             store_budget_bytes: 256 << 20,
             tuning: TunerConfig::default(),
+            admission_window_us: 0,
         }
     }
 }
@@ -168,7 +175,7 @@ impl Coordinator {
         let queue = Arc::new(BoundedQueue::<Job>::new(cfg.queue_cap));
         let metrics = Arc::new(Metrics::new());
         let store = Arc::new(OperandStore::new(cfg.store_budget_bytes));
-        let tuner = Arc::new(Tuner::new(cfg.tuning, clock));
+        let tuner = Arc::new(Tuner::new(cfg.tuning, Arc::clone(&clock)));
         let handles = (0..cfg.workers.max(1))
             .map(|w| {
                 let queue = Arc::clone(&queue);
@@ -176,6 +183,7 @@ impl Coordinator {
                 let registry = Arc::clone(&registry);
                 let store = Arc::clone(&store);
                 let tuner = Arc::clone(&tuner);
+                let clock = Arc::clone(&clock);
                 std::thread::Builder::new()
                     .name(format!("coordinator-{w}"))
                     .spawn(move || {
@@ -205,10 +213,17 @@ impl Coordinator {
                         // alone would fuse different As — the regression
                         // the signature key exists to prevent). A batch
                         // shares one A, so the worker converts once and
-                        // runs one wide kernel over the stacked Bs.
-                        while let Some(batch) = queue
-                            .pop_batch(cfg.batch_max, |h, c| batch_affine(&h.req, &c.req))
-                        {
+                        // runs one wide kernel over the stacked Bs. With an
+                        // admission window configured, a partial batch is
+                        // held open so late-arriving affine singles fuse in.
+                        let window_s = cfg.admission_window_us as f64 * 1e-6;
+                        while let Some((batch, outcome)) = queue.pop_batch_windowed(
+                            cfg.batch_max,
+                            |h, c| batch_affine(&h.req, &c.req),
+                            window_s,
+                            clock.as_ref(),
+                        ) {
+                            metrics.record_window(outcome);
                             metrics.record_batch(batch.len());
                             let jobs: Vec<BatchJob<'_>> = batch
                                 .iter()

@@ -11,9 +11,51 @@
 //! registered — the store's cached slabs serve the whole batch), one wide
 //! kernel over the stacked Bs, one warm compiled executable (see
 //! `pool.rs` and DESIGN.md §Batching).
+//!
+//! `pop_batch_windowed` extends the instant grouping with a **time-window
+//! admission policy**: a partial batch is held open for a bounded window
+//! (measured on an injected [`Clock`], so tests script the exact
+//! fuse-vs-timeout decision) and late-arriving affine singles fuse into it.
+//! Window ≤ 0 delegates to `pop_batch` with **zero clock reads** — today's
+//! behavior bit-for-bit. Admission timing changes batching choices, never
+//! results (DESIGN.md §Wire).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+
+use super::tuner::Clock;
+
+/// How a windowed batch left the queue (surfaced in `Metrics`/`/stats`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowOutcome {
+    /// Window disabled (≤ 0): instant `pop_batch` semantics.
+    Disabled,
+    /// The batch reached `max` width — inside the window or instantly.
+    Filled,
+    /// The window elapsed (or the queue closed) with a partial batch.
+    TimedOut,
+}
+
+/// Move every job affine to `batch[0]` from the deque into `batch` (up to
+/// `max` total), scanning the whole deque and preserving the relative
+/// order of the rest. Shared by `pop_batch` and `pop_batch_windowed` so
+/// the two admission policies provably group by the same predicate.
+fn collect_affine<T>(
+    deque: &mut VecDeque<T>,
+    batch: &mut Vec<T>,
+    max: usize,
+    affine: &impl Fn(&T, &T) -> bool,
+) {
+    let mut i = 0;
+    while i < deque.len() && batch.len() < max {
+        if affine(&batch[0], &deque[i]) {
+            let item = deque.remove(i).unwrap();
+            batch.push(item);
+        } else {
+            i += 1;
+        }
+    }
+}
 
 struct Inner<T> {
     deque: VecDeque<T>,
@@ -87,15 +129,7 @@ impl<T> BoundedQueue<T> {
             if !g.deque.is_empty() {
                 let head = g.deque.pop_front().unwrap();
                 let mut batch = vec![head];
-                let mut i = 0;
-                while i < g.deque.len() && batch.len() < max {
-                    if affine(&batch[0], &g.deque[i]) {
-                        let item = g.deque.remove(i).unwrap();
-                        batch.push(item);
-                    } else {
-                        i += 1;
-                    }
-                }
+                collect_affine(&mut g.deque, &mut batch, max, &affine);
                 self.not_full.notify_all();
                 return Some(batch);
             }
@@ -103,6 +137,70 @@ impl<T> BoundedQueue<T> {
                 return None;
             }
             g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// `pop_batch` with a bounded admission window: when the instant
+    /// grouping leaves the batch below `max`, hold it open up to
+    /// `window_s` seconds (on `clock`) and fuse late-arriving affine jobs
+    /// as they land. Returns the batch plus how it left the queue.
+    ///
+    /// Contract (locked by tests here and in `tests/wire_differential.rs`):
+    /// * `window_s <= 0` delegates to [`BoundedQueue::pop_batch`] with
+    ///   **zero clock reads** — bit-for-bit today's behavior, preserving
+    ///   the pipeline's exactly-two-reads-per-execution `ScriptedClock`
+    ///   accounting.
+    /// * A batch that reaches `max` instantly also reads the clock zero
+    ///   times ([`WindowOutcome::Filled`]).
+    /// * Otherwise one read sets the deadline and each wake re-reads it;
+    ///   the window elapsing or the queue closing releases the partial
+    ///   batch ([`WindowOutcome::TimedOut`]).
+    pub fn pop_batch_windowed(
+        &self,
+        max: usize,
+        affine: impl Fn(&T, &T) -> bool,
+        window_s: f64,
+        clock: &dyn Clock,
+    ) -> Option<(Vec<T>, WindowOutcome)> {
+        if window_s <= 0.0 {
+            return self.pop_batch(max, affine).map(|b| (b, WindowOutcome::Disabled));
+        }
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.deque.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let head = g.deque.pop_front().unwrap();
+        let mut batch = vec![head];
+        collect_affine(&mut g.deque, &mut batch, max, &affine);
+        if batch.len() >= max {
+            self.not_full.notify_all();
+            return Some((batch, WindowOutcome::Filled));
+        }
+        // Partial batch: hold it open until the window elapses, the queue
+        // closes, or a late arrival fills it. The deadline lives on the
+        // injected clock; the condvar waits are short real-time slices
+        // (clamped to [1µs, 1ms]) purely to re-check, so a scripted clock
+        // fully controls the fuse-vs-timeout decision.
+        let deadline = clock.now_s() + window_s;
+        loop {
+            if g.closed || clock.now_s() >= deadline {
+                self.not_full.notify_all();
+                return Some((batch, WindowOutcome::TimedOut));
+            }
+            let slice = std::time::Duration::from_secs_f64(window_s.clamp(1e-6, 1e-3));
+            let (g2, _) = self.not_empty.wait_timeout(g, slice).unwrap();
+            g = g2;
+            collect_affine(&mut g.deque, &mut batch, max, &affine);
+            if batch.len() >= max {
+                self.not_full.notify_all();
+                return Some((batch, WindowOutcome::Filled));
+            }
         }
     }
 
@@ -225,5 +323,99 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(consumed.load(std::sync::atomic::Ordering::Relaxed), total);
+    }
+
+    use crate::coordinator::tuner::ScriptedClock;
+
+    #[test]
+    fn windowed_disabled_is_pop_batch_bit_for_bit_with_zero_clock_reads() {
+        let q = BoundedQueue::new(16);
+        let r = BoundedQueue::new(16);
+        for item in [(256, 0), (512, 1), (256, 2), (256, 3), (512, 4)] {
+            q.push(item);
+            r.push(item);
+        }
+        let clock = ScriptedClock::new(vec![]);
+        let (batch, outcome) =
+            q.pop_batch_windowed(8, |h, c| h.0 == c.0, 0.0, &clock).unwrap();
+        assert_eq!(outcome, WindowOutcome::Disabled);
+        assert_eq!(batch, r.pop_batch(8, |h, c| h.0 == c.0).unwrap());
+        assert_eq!(clock.reads(), 0, "disabled window must never read the clock");
+        // Negative windows are disabled too.
+        let (rest, outcome) =
+            q.pop_batch_windowed(8, |h, c| h.0 == c.0, -1.0, &clock).unwrap();
+        assert_eq!(outcome, WindowOutcome::Disabled);
+        assert_eq!(rest, r.pop_batch(8, |h, c| h.0 == c.0).unwrap());
+        assert_eq!(clock.reads(), 0);
+    }
+
+    #[test]
+    fn windowed_filled_instantly_reads_no_clock() {
+        let q = BoundedQueue::new(16);
+        for i in 0..4 {
+            q.push((7, i));
+        }
+        let clock = ScriptedClock::new(vec![]);
+        let (batch, outcome) =
+            q.pop_batch_windowed(3, |h, c| h.0 == c.0, 1.0, &clock).unwrap();
+        assert_eq!(outcome, WindowOutcome::Filled);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(clock.reads(), 0, "an instantly-full batch must not read the clock");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn windowed_times_out_on_scripted_deadline_with_exactly_two_reads() {
+        let q = BoundedQueue::new(16);
+        q.push((7, 0));
+        // Read 1 sets deadline = 10.0 + 0.5; read 2 observes 11.0 > deadline,
+        // so the partial batch is released without any condvar wait.
+        let clock = ScriptedClock::new(vec![10.0, 11.0]);
+        let (batch, outcome) =
+            q.pop_batch_windowed(4, |h, c| h.0 == c.0, 0.5, &clock).unwrap();
+        assert_eq!(outcome, WindowOutcome::TimedOut);
+        assert_eq!(batch, vec![(7, 0)]);
+        assert_eq!(clock.reads(), 2);
+    }
+
+    #[test]
+    fn windowed_fuses_late_arrival_within_window() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.push((7, 0));
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            q2.push((9, 1)); // non-affine: must NOT fuse
+            q2.push((7, 2)); // affine: fills the batch
+        });
+        // Tiny step keeps the scripted clock far below the deadline forever;
+        // only the late arrival can end the wait.
+        let clock = ScriptedClock::with_step(vec![0.0], 1e-9);
+        let (batch, outcome) =
+            q.pop_batch_windowed(2, |h, c| h.0 == c.0, 3600.0, &clock).unwrap();
+        producer.join().unwrap();
+        assert_eq!(outcome, WindowOutcome::Filled);
+        assert_eq!(batch, vec![(7, 0), (7, 2)]);
+        assert_eq!(q.len(), 1, "non-affine job stays queued");
+        assert_eq!(q.pop(), Some((9, 1)));
+    }
+
+    #[test]
+    fn windowed_close_releases_partial_batch() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.push((7, 0));
+        let q2 = Arc::clone(&q);
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            q2.close();
+        });
+        let clock = ScriptedClock::with_step(vec![0.0], 1e-9);
+        let (batch, outcome) =
+            q.pop_batch_windowed(4, |h, c| h.0 == c.0, 3600.0, &clock).unwrap();
+        closer.join().unwrap();
+        assert_eq!(outcome, WindowOutcome::TimedOut);
+        assert_eq!(batch, vec![(7, 0)]);
+        // Closed and drained: the windowed pop reports end-of-queue.
+        assert!(q.pop_batch_windowed(4, |h, c| h.0 == c.0, 1.0, &clock).is_none());
     }
 }

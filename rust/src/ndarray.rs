@@ -65,6 +65,46 @@ impl Mat {
         }
     }
 
+    /// Decode a raw little-endian f32 payload (wire protocol v3) straight
+    /// into this matrix's backing buffer, reusing the allocation like
+    /// [`Mat::zero_into`]: a connection-scoped scratch `Mat` reaches
+    /// steady state with zero allocation and no intermediate value tree.
+    /// Rejects length mismatches; finiteness is the caller's contract
+    /// (the protocol boundary screens each float as it decodes).
+    pub fn fill_from_le_bytes(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        bytes: &[u8],
+    ) -> Result<(), String> {
+        if bytes.len() != rows * cols * 4 {
+            return Err(format!(
+                "payload of {} bytes is not {rows}x{cols} little-endian f32s",
+                bytes.len()
+            ));
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.reserve(rows * cols);
+        self.data.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        Ok(())
+    }
+
+    /// Encode the element buffer as raw little-endian f32 bytes (the wire
+    /// protocol v3 operand payload; row-major, bit-faithful per element).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
@@ -262,5 +302,36 @@ mod tests {
     #[should_panic]
     fn matmul_dim_mismatch_panics() {
         Mat::zeros(2, 3).matmul(&Mat::zeros(2, 2));
+    }
+
+    #[test]
+    fn le_bytes_round_trip_is_bit_faithful() {
+        let mut rng = Rng::new(11);
+        let m = Mat::randn(6, 5, &mut rng);
+        let bytes = m.to_le_bytes();
+        assert_eq!(bytes.len(), 6 * 5 * 4);
+        let mut back = Mat::zeros(0, 0);
+        back.fill_from_le_bytes(6, 5, &bytes).unwrap();
+        assert_eq!(back, m);
+        // Bit-faithful even for values a text round trip could disturb:
+        // negative zero, subnormals, and the f32 extremes.
+        let edge = Mat::from_vec(1, 4, vec![-0.0, f32::MIN_POSITIVE / 2.0, f32::MAX, -f32::MAX]);
+        let mut back = Mat::zeros(0, 0);
+        back.fill_from_le_bytes(1, 4, &edge.to_le_bytes()).unwrap();
+        for (a, b) in back.data.iter().zip(&edge.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fill_from_le_bytes_reuses_allocation_and_checks_len() {
+        let mut m = Mat::zeros(8, 8);
+        let ptr = m.data.as_ptr();
+        let src = Mat::eye(8);
+        m.fill_from_le_bytes(8, 8, &src.to_le_bytes()).unwrap();
+        assert_eq!(m, src);
+        assert_eq!(m.data.as_ptr(), ptr, "steady-state decode must not allocate");
+        assert!(m.fill_from_le_bytes(8, 8, &[0u8; 12]).is_err());
+        assert!(m.fill_from_le_bytes(2, 2, &[0u8; 17]).is_err());
     }
 }

@@ -1,21 +1,42 @@
-//! Blocking TCP client for the serving protocol.
+//! Blocking TCP client for the serving protocol. Speaks both planes:
+//! JSON v1/v2 lines (the `*_` methods below, unchanged since PR 4) and
+//! binary v3 frames (the `*_bin` methods), freely interleaved on one
+//! connection. Every method counts bytes written/read so benches can
+//! report wire cost per request (`bytes_on_wire`).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
-use super::protocol::{parse_response, Response};
+use super::protocol::{frame, parse_response, Response};
 use crate::json::Value;
+use crate::ndarray::Mat;
+use crate::runtime::Algo;
 
 pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+    bytes_sent: u64,
+    bytes_received: u64,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { writer: stream, reader })
+        Ok(Client { writer: stream, reader, bytes_sent: 0, bytes_received: 0 })
+    }
+
+    /// Total bytes this client has put on / taken off the wire, across
+    /// both planes: `(sent, received)`.
+    pub fn bytes_on_wire(&self) -> (u64, u64) {
+        (self.bytes_sent, self.bytes_received)
+    }
+
+    /// Reset the wire counters (e.g. between bench phases on one
+    /// connection).
+    pub fn reset_wire_counters(&mut self) {
+        self.bytes_sent = 0;
+        self.bytes_received = 0;
     }
 
     fn round_trip(&mut self, line: &str) -> Result<Response, String> {
@@ -24,9 +45,29 @@ impl Client {
             .and_then(|_| self.writer.write_all(b"\n"))
             .and_then(|_| self.writer.flush())
             .map_err(|e| e.to_string())?;
+        self.bytes_sent += line.len() as u64 + 1;
         let mut buf = String::new();
         self.reader.read_line(&mut buf).map_err(|e| e.to_string())?;
+        self.bytes_received += buf.len() as u64;
         parse_response(buf.trim())
+    }
+
+    /// Write one v3 frame, read one v3 reply frame. Returns the decoded
+    /// response plus the full C matrix when the reply carried one
+    /// (`want_c` requests).
+    fn frame_round_trip(&mut self, bytes: &[u8]) -> Result<(Response, Option<Mat>), String> {
+        self.writer
+            .write_all(bytes)
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| e.to_string())?;
+        self.bytes_sent += bytes.len() as u64;
+        let mut hdr = [0u8; frame::HEADER_LEN];
+        self.reader.read_exact(&mut hdr).map_err(|e| e.to_string())?;
+        let h = frame::parse_header(&hdr)?;
+        let mut payload = vec![0u8; h.len];
+        self.reader.read_exact(&mut payload).map_err(|e| e.to_string())?;
+        self.bytes_received += (frame::HEADER_LEN + h.len) as u64;
+        frame::decode_response(h.ftype, &payload)
     }
 
     pub fn ping(&mut self, id: u64) -> Result<Response, String> {
@@ -221,6 +262,75 @@ impl Client {
         self.round_trip(&crate::json::write(
             &Value::obj().field("id", id).field("type", "list_a").build(),
         ))
+    }
+
+    // ---- binary v3 plane -------------------------------------------------
+
+    /// v3: inline SpDM as a binary frame — raw little-endian f32 operands,
+    /// no text parse server-side. With `want_c` the reply carries the full
+    /// C matrix as raw f32s.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spdm_inline_bin(
+        &mut self,
+        id: u64,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+    ) -> Result<(Response, Option<Mat>), String> {
+        let f = frame::encode_spdm_inline(id, n, a, b, algo, verify, want_c);
+        self.frame_round_trip(&f)
+    }
+
+    /// v3: multiply a registered A by an inline B, as a binary frame.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spdm_handle_bin(
+        &mut self,
+        id: u64,
+        a_handle: u64,
+        n: usize,
+        b: &[f32],
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+    ) -> Result<(Response, Option<Mat>), String> {
+        let f = frame::encode_spdm_handle_b(id, a_handle, n, b, algo, verify, want_c);
+        self.frame_round_trip(&f)
+    }
+
+    /// v3: multiply a registered A by a synthetic (seeded) B, as a binary
+    /// frame.
+    pub fn spdm_handle_synthetic_b_bin(
+        &mut self,
+        id: u64,
+        a_handle: u64,
+        seed: u64,
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+    ) -> Result<(Response, Option<Mat>), String> {
+        let f = frame::encode_spdm_handle_seed(id, a_handle, seed, algo, verify, want_c);
+        self.frame_round_trip(&f)
+    }
+
+    /// v3: register an inline A operand, as a binary frame.
+    pub fn put_a_inline_bin(
+        &mut self,
+        id: u64,
+        n: usize,
+        a: &[f32],
+        algo: Option<Algo>,
+    ) -> Result<Response, String> {
+        let f = frame::encode_put_a(id, n, a, algo);
+        self.frame_round_trip(&f).map(|(r, _)| r)
+    }
+
+    /// v3: liveness check over the binary plane.
+    pub fn ping_bin(&mut self, id: u64) -> Result<Response, String> {
+        let f = frame::encode_ping(id);
+        self.frame_round_trip(&f).map(|(r, _)| r)
     }
 }
 

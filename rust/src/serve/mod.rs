@@ -1,11 +1,19 @@
-//! Serving layer: line-delimited-JSON protocol over TCP, server and client.
+//! Serving layer: two wire planes over one TCP listener, server and client.
 //!
-//! The request path is rust-only: a request carries inline matrix data, a
-//! synthetic-workload spec the server materializes with [`crate::gen`], or
-//! (protocol v2) an `a_handle` referencing an operand registered once via
-//! `put_a` and served from the coordinator's converted-operand store —
-//! the register-once / multiply-by-reference contract that amortizes the
-//! paper's conversion overhead across all traffic sharing an A.
+//! The JSON debug/compat plane (v1/v2, line-delimited) is byte-for-byte
+//! unchanged; the binary data plane (v3, [`frame`]) ships operands as raw
+//! little-endian f32 payloads in length-prefixed frames so the hot path
+//! pays no per-float text parse and no utf-8 validation. The server sniffs
+//! the first byte of each message (`{` → JSON line, magic `0xB3` → frame)
+//! and both planes decode into the same [`Request`] and run one dispatch
+//! core — encoding can change wire cost, never results (DESIGN.md §Wire).
+//!
+//! A request carries inline matrix data, a synthetic-workload spec the
+//! server materializes with [`crate::gen`], or (v2/v3) an `a_handle`
+//! referencing an operand registered once via `put_a` and served from the
+//! coordinator's converted-operand store — the register-once /
+//! multiply-by-reference contract that amortizes the paper's conversion
+//! overhead across all traffic sharing an A.
 
 mod protocol;
 mod server;
@@ -13,8 +21,8 @@ mod client;
 mod trace;
 
 pub use protocol::{
-    parse_request, parse_response, render_response, APayload, BPayload, HandleInfo, Payload,
-    Request, Response,
+    frame, parse_request, parse_response, render_response, APayload, BPayload, HandleInfo,
+    Payload, Request, Response,
 };
 pub use server::{Server, ServerConfig};
 pub use client::Client;

@@ -1,6 +1,19 @@
-//! Wire protocol: one JSON object per line. **v2** — additive over v1:
-//! every v1 line parses and behaves unchanged; v2 adds the operand-handle
-//! lifecycle (`put_a` / `drop_a` / `list_a`) and `spdm` by `a_handle`.
+//! Wire protocol. Two planes share one listener, told apart by the first
+//! byte of each message (`server.rs` sniffs without consuming):
+//!
+//! * **JSON v1/v2** — one JSON object per line, first byte `{`. v2 is
+//!   additive over v1: every v1 line parses and behaves unchanged; v2 adds
+//!   the operand-handle lifecycle (`put_a` / `drop_a` / `list_a`) and
+//!   `spdm` by `a_handle`. This is the debug/compat plane: every v1/v2
+//!   line is byte-for-byte unchanged under v3.
+//! * **Binary v3** — length-prefixed frames ([`frame`]), first byte the
+//!   magic `0xB3`. Operands travel as raw little-endian f32 payloads that
+//!   decode in one pass into the pipeline's buffers: no per-float text
+//!   parse, no intermediate `Vec<Value>`, no utf-8 validation on operand
+//!   bytes. Both planes decode into the *same* [`Request`] type and flow
+//!   through the same dispatch, so encoding can never change results —
+//!   the cross-protocol differential (`tests/wire_differential.rs`) pins
+//!   bitwise-identical C. See DESIGN.md §Wire for the byte-level grammar.
 //!
 //! v1 requests:
 //!   {"id":1,"type":"spdm","n":256,"payload":"synthetic","sparsity":0.99,
@@ -377,6 +390,620 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
     })
 }
 
+/// Wire protocol **v3**: length-prefixed binary frames. One frame =
+/// 7-byte header + payload:
+///
+/// ```text
+/// magic 0xB3 (1) | version 0x03 (1) | frame type (1) | payload len u32 LE (4)
+/// ```
+///
+/// Operand elements travel as raw little-endian f32 bytes and decode in a
+/// single pass — each float is finiteness-screened as it is read (the same
+/// reject-NaN/Inf contract the JSON boundary enforces; a raw payload could
+/// otherwise smuggle a NaN that splits `ASig` bit-equality from the
+/// element re-screen). Any decode failure comes back as a typed error
+/// frame ([`frame::FT_RESP_ERR`]) carrying the request id when the payload
+/// prefix still yields one. Control-plane requests (metrics/stats/explain/
+/// list/drop/shutdown) intentionally stay JSON-only: the binary plane
+/// carries exactly the operand hot path. See DESIGN.md §Wire.
+pub mod frame {
+    use super::{Algo, BPayload, Payload, Request, Response};
+    use crate::ndarray::Mat;
+
+    /// First byte of every v3 frame. Deliberately distinct from `{`
+    /// (0x7B), whitespace, and ASCII so the first-byte sniff is exact.
+    pub const MAGIC: u8 = 0xB3;
+    pub const VERSION: u8 = 0x03;
+    /// Header: magic, version, frame type, payload length (u32 LE).
+    pub const HEADER_LEN: usize = 7;
+    /// Payload-size ceiling (256 MiB ≈ a 4096² inline A+B pair with
+    /// headroom). An oversize length is rejected before any allocation —
+    /// a garbled length must not OOM the server.
+    pub const MAX_PAYLOAD: usize = 256 << 20;
+
+    // Request frame types.
+    pub const FT_SPDM_INLINE: u8 = 0x01;
+    pub const FT_SPDM_HANDLE_B: u8 = 0x02;
+    pub const FT_SPDM_HANDLE_SEED: u8 = 0x03;
+    pub const FT_PUT_A: u8 = 0x04;
+    pub const FT_PING: u8 = 0x05;
+    // Response frame types.
+    pub const FT_RESP_SPDM: u8 = 0x81;
+    pub const FT_RESP_ERR: u8 = 0x82;
+    pub const FT_RESP_PUT_A: u8 = 0x83;
+    pub const FT_RESP_PONG: u8 = 0x84;
+
+    // Request flag bits.
+    const FLAG_VERIFY: u8 = 1 << 0;
+    /// Ask for the full result matrix C in the reply frame (raw LE f32).
+    /// JSON replies only carry the checksum; the binary plane can afford
+    /// to return C because it is a memcpy, not an n² text render.
+    const FLAG_WANT_C: u8 = 1 << 1;
+
+    /// Parsed frame header.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct Header {
+        pub ftype: u8,
+        pub len: usize,
+    }
+
+    /// Validate a 7-byte header. Garbage magic, a foreign version, and an
+    /// oversize length are all errors — the stream cannot be resynced
+    /// after a bad header, so the connection handler closes on `Err`.
+    pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<Header, String> {
+        if h[0] != MAGIC {
+            return Err(format!("bad frame magic 0x{:02x}", h[0]));
+        }
+        if h[1] != VERSION {
+            return Err(format!("unsupported frame version 0x{:02x}", h[1]));
+        }
+        let len = u32::from_le_bytes([h[3], h[4], h[5], h[6]]) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(format!("frame payload length {len} exceeds {MAX_PAYLOAD}"));
+        }
+        Ok(Header { ftype: h[2], len })
+    }
+
+    /// Best-effort request-id recovery from a payload whose full decode
+    /// failed: every request frame leads with the id, so ≥ 8 bytes still
+    /// correlate the error frame to the client's request (else id 0) —
+    /// the binary twin of the JSON dispatcher's id recovery.
+    pub fn request_id_hint(payload: &[u8]) -> u64 {
+        if payload.len() >= 8 {
+            u64::from_le_bytes(payload[..8].try_into().unwrap())
+        } else {
+            0
+        }
+    }
+
+    fn algo_to_byte(algo: Option<Algo>) -> u8 {
+        match algo {
+            None => 0,
+            Some(Algo::Gcoo) => 1,
+            Some(Algo::GcooNoreuse) => 2,
+            Some(Algo::Csr) => 3,
+            Some(Algo::DenseXla) => 4,
+            Some(Algo::DensePallas) => 5,
+        }
+    }
+
+    fn algo_from_byte(b: u8) -> Result<Option<Algo>, String> {
+        match b {
+            0 => Ok(None),
+            1 => Ok(Some(Algo::Gcoo)),
+            2 => Ok(Some(Algo::GcooNoreuse)),
+            3 => Ok(Some(Algo::Csr)),
+            4 => Ok(Some(Algo::DenseXla)),
+            5 => Ok(Some(Algo::DensePallas)),
+            other => Err(format!("unknown algo byte 0x{other:02x}")),
+        }
+    }
+
+    /// Bounds-checked payload cursor. Every read that would run past the
+    /// end is a "truncated frame payload" error, never a panic — the
+    /// truncation property tests drive arbitrary prefixes through here.
+    struct Cur<'a> {
+        b: &'a [u8],
+        off: usize,
+    }
+
+    impl<'a> Cur<'a> {
+        fn new(b: &'a [u8]) -> Self {
+            Cur { b, off: 0 }
+        }
+
+        fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+            if self.off + n > self.b.len() {
+                return Err(format!(
+                    "truncated frame payload: need {} bytes at offset {}, have {}",
+                    n,
+                    self.off,
+                    self.b.len()
+                ));
+            }
+            let s = &self.b[self.off..self.off + n];
+            self.off += n;
+            Ok(s)
+        }
+
+        fn u8(&mut self) -> Result<u8, String> {
+            Ok(self.take(1)?[0])
+        }
+
+        fn u16(&mut self) -> Result<u16, String> {
+            Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        }
+
+        fn u32(&mut self) -> Result<u32, String> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+
+        fn u64(&mut self) -> Result<u64, String> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        fn f64(&mut self) -> Result<f64, String> {
+            Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        fn remaining(&self) -> usize {
+            self.b.len() - self.off
+        }
+
+        /// Decode `count` raw LE f32s, screening each for finiteness as it
+        /// is read — the v3 twin of the JSON boundary's `finite_floats`.
+        fn f32s(&mut self, count: usize, k: &str) -> Result<Vec<f32>, String> {
+            let bytes = self.take(count * 4)?;
+            let mut out = Vec::with_capacity(count);
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                let f = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                if !f.is_finite() {
+                    return Err(format!("non-finite value {f} at index {i} in {k}"));
+                }
+                out.push(f);
+            }
+            Ok(out)
+        }
+
+        /// Exact-consumption check: trailing garbage is a malformed frame.
+        fn done(&self, what: &str) -> Result<(), String> {
+            if self.remaining() != 0 {
+                return Err(format!(
+                    "{} trailing bytes after {what} frame payload",
+                    self.remaining()
+                ));
+            }
+            Ok(())
+        }
+    }
+
+    /// Frame under construction: header written first, payload appended,
+    /// length patched at the end — one contiguous buffer, one socket write.
+    struct Builder {
+        out: Vec<u8>,
+    }
+
+    impl Builder {
+        fn new(ftype: u8, payload_hint: usize) -> Self {
+            let mut out = Vec::with_capacity(HEADER_LEN + payload_hint);
+            out.extend_from_slice(&[MAGIC, VERSION, ftype, 0, 0, 0, 0]);
+            Builder { out }
+        }
+
+        fn u8(&mut self, x: u8) {
+            self.out.push(x);
+        }
+
+        fn u16(&mut self, x: u16) {
+            self.out.extend_from_slice(&x.to_le_bytes());
+        }
+
+        fn u32(&mut self, x: u32) {
+            self.out.extend_from_slice(&x.to_le_bytes());
+        }
+
+        fn u64(&mut self, x: u64) {
+            self.out.extend_from_slice(&x.to_le_bytes());
+        }
+
+        fn f64(&mut self, x: f64) {
+            self.out.extend_from_slice(&x.to_le_bytes());
+        }
+
+        fn f32s(&mut self, xs: &[f32]) {
+            self.out.reserve(xs.len() * 4);
+            for x in xs {
+                self.out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+
+        fn bytes(&mut self, b: &[u8]) {
+            self.out.extend_from_slice(b);
+        }
+
+        fn finish(mut self) -> Vec<u8> {
+            let len = (self.out.len() - HEADER_LEN) as u32;
+            self.out[3..7].copy_from_slice(&len.to_le_bytes());
+            self.out
+        }
+    }
+
+    fn flags(verify: bool, want_c: bool) -> u8 {
+        (verify as u8) * FLAG_VERIFY | (want_c as u8) * FLAG_WANT_C
+    }
+
+    /// `spdm` with both operands inline:
+    /// `id u64 | n u32 | flags u8 | algo u8 | a n² f32 | b n² f32`.
+    pub fn encode_spdm_inline(
+        id: u64,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+    ) -> Vec<u8> {
+        let mut w = Builder::new(FT_SPDM_INLINE, 14 + (a.len() + b.len()) * 4);
+        w.u64(id);
+        w.u32(n as u32);
+        w.u8(flags(verify, want_c));
+        w.u8(algo_to_byte(algo));
+        w.f32s(a);
+        w.f32s(b);
+        w.finish()
+    }
+
+    /// `spdm` by registered handle with inline B:
+    /// `id u64 | a_handle u64 | n u32 | flags u8 | algo u8 | b n² f32`.
+    pub fn encode_spdm_handle_b(
+        id: u64,
+        a_handle: u64,
+        n: usize,
+        b: &[f32],
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+    ) -> Vec<u8> {
+        let mut w = Builder::new(FT_SPDM_HANDLE_B, 22 + b.len() * 4);
+        w.u64(id);
+        w.u64(a_handle);
+        w.u32(n as u32);
+        w.u8(flags(verify, want_c));
+        w.u8(algo_to_byte(algo));
+        w.f32s(b);
+        w.finish()
+    }
+
+    /// `spdm` by registered handle with server-side seeded B:
+    /// `id u64 | a_handle u64 | seed u64 | flags u8 | algo u8`.
+    pub fn encode_spdm_handle_seed(
+        id: u64,
+        a_handle: u64,
+        seed: u64,
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+    ) -> Vec<u8> {
+        let mut w = Builder::new(FT_SPDM_HANDLE_SEED, 26);
+        w.u64(id);
+        w.u64(a_handle);
+        w.u64(seed);
+        w.u8(flags(verify, want_c));
+        w.u8(algo_to_byte(algo));
+        w.finish()
+    }
+
+    /// `put_a` with an inline operand:
+    /// `id u64 | n u32 | algo u8 | a n² f32`.
+    pub fn encode_put_a(id: u64, n: usize, a: &[f32], algo: Option<Algo>) -> Vec<u8> {
+        let mut w = Builder::new(FT_PUT_A, 13 + a.len() * 4);
+        w.u64(id);
+        w.u32(n as u32);
+        w.u8(algo_to_byte(algo));
+        w.f32s(a);
+        w.finish()
+    }
+
+    /// `ping`: `id u64`.
+    pub fn encode_ping(id: u64) -> Vec<u8> {
+        let mut w = Builder::new(FT_PING, 8);
+        w.u64(id);
+        w.finish()
+    }
+
+    /// Decode a request frame payload into the **same [`Request`] the JSON
+    /// plane produces** — from here on the two planes share one dispatch
+    /// path, which is what makes "encoding never changes results" a
+    /// structural guarantee rather than a test-enforced hope. Returns the
+    /// request plus the `want_c` flag (binary-only reply option).
+    pub fn decode_request(ftype: u8, payload: &[u8]) -> Result<(Request, bool), String> {
+        let mut c = Cur::new(payload);
+        match ftype {
+            FT_SPDM_INLINE => {
+                let id = c.u64()?;
+                let n = c.u32()? as usize;
+                let fl = c.u8()?;
+                let algo = algo_from_byte(c.u8()?)?;
+                if n == 0 {
+                    return Err("n must be positive".into());
+                }
+                if c.remaining() != 2 * n * n * 4 {
+                    return Err(format!(
+                        "inline payload carries {} operand bytes, expected 2·n²·4 = {}",
+                        c.remaining(),
+                        2 * n * n * 4
+                    ));
+                }
+                let a = c.f32s(n * n, "a")?;
+                let b = c.f32s(n * n, "b")?;
+                c.done("spdm_inline")?;
+                Ok((
+                    Request::Spdm {
+                        id,
+                        n,
+                        payload: Payload::Inline { a, b },
+                        algo,
+                        verify: fl & FLAG_VERIFY != 0,
+                    },
+                    fl & FLAG_WANT_C != 0,
+                ))
+            }
+            FT_SPDM_HANDLE_B => {
+                let id = c.u64()?;
+                let a_handle = c.u64()?;
+                let n = c.u32()? as usize;
+                let fl = c.u8()?;
+                let algo = algo_from_byte(c.u8()?)?;
+                if n == 0 {
+                    return Err("n must be positive".into());
+                }
+                if c.remaining() != n * n * 4 {
+                    return Err(format!(
+                        "handle payload carries {} b bytes, expected n²·4 = {}",
+                        c.remaining(),
+                        n * n * 4
+                    ));
+                }
+                let b = c.f32s(n * n, "b")?;
+                c.done("spdm_handle_b")?;
+                Ok((
+                    Request::Spdm {
+                        id,
+                        n,
+                        payload: Payload::Handle { a_handle, b: BPayload::Inline(b) },
+                        algo,
+                        verify: fl & FLAG_VERIFY != 0,
+                    },
+                    fl & FLAG_WANT_C != 0,
+                ))
+            }
+            FT_SPDM_HANDLE_SEED => {
+                let id = c.u64()?;
+                let a_handle = c.u64()?;
+                let seed = c.u64()?;
+                let fl = c.u8()?;
+                let algo = algo_from_byte(c.u8()?)?;
+                c.done("spdm_handle_seed")?;
+                Ok((
+                    Request::Spdm {
+                        id,
+                        n: 0,
+                        payload: Payload::Handle { a_handle, b: BPayload::Synthetic { seed } },
+                        algo,
+                        verify: fl & FLAG_VERIFY != 0,
+                    },
+                    fl & FLAG_WANT_C != 0,
+                ))
+            }
+            FT_PUT_A => {
+                let id = c.u64()?;
+                let n = c.u32()? as usize;
+                let algo = algo_from_byte(c.u8()?)?;
+                if n == 0 {
+                    return Err("n must be positive".into());
+                }
+                if c.remaining() != n * n * 4 {
+                    return Err(format!(
+                        "put_a payload carries {} a bytes, expected n²·4 = {}",
+                        c.remaining(),
+                        n * n * 4
+                    ));
+                }
+                let a = c.f32s(n * n, "a")?;
+                c.done("put_a")?;
+                Ok((
+                    Request::PutA {
+                        id,
+                        n,
+                        payload: super::APayload::Inline { a },
+                        algo,
+                    },
+                    false,
+                ))
+            }
+            FT_PING => {
+                let id = c.u64()?;
+                c.done("ping")?;
+                Ok((Request::Ping { id }, false))
+            }
+            other => Err(format!("unknown request frame type 0x{other:02x}")),
+        }
+    }
+
+    /// Successful `spdm` reply:
+    /// `id u64 | algo u8 | verified i8 (−1 absent/0/1) | n_exec u32 |
+    ///  convert_ms f64 | kernel_ms f64 | total_ms f64 |
+    ///  has_checksum u8 | checksum f64 (bit-faithful) |
+    ///  a_handle+1 u64 (0 = none) | artifact len u16 + utf8 |
+    ///  c_n u32 (0 = absent) | c c_n² f32`.
+    pub fn encode_resp_spdm(r: &Response, c: Option<&Mat>) -> Vec<u8> {
+        let c_floats = c.map(|m| m.data.len()).unwrap_or(0);
+        let mut w = Builder::new(FT_RESP_SPDM, 64 + c_floats * 4);
+        w.u64(r.id);
+        w.u8(algo_to_byte(r.algo.as_deref().and_then(Algo::from_str)));
+        w.u8(match r.verified {
+            None => -1i8 as u8,
+            Some(false) => 0,
+            Some(true) => 1,
+        });
+        w.u32(r.n_exec.unwrap_or(0) as u32);
+        w.f64(r.convert_ms.unwrap_or(0.0));
+        w.f64(r.kernel_ms.unwrap_or(0.0));
+        w.f64(r.total_ms.unwrap_or(0.0));
+        w.u8(r.checksum.is_some() as u8);
+        w.f64(r.checksum.unwrap_or(0.0));
+        w.u64(r.a_handle.map(|h| h + 1).unwrap_or(0));
+        let artifact = r.artifact.as_deref().unwrap_or("");
+        w.u16(artifact.len() as u16);
+        w.bytes(artifact.as_bytes());
+        match c {
+            Some(m) => {
+                w.u32(m.rows as u32);
+                // Raw LE f32: the response-side twin of the operand
+                // payloads — C returns as a memcpy, never as text.
+                w.f32s(&m.data);
+            }
+            None => w.u32(0),
+        }
+        w.finish()
+    }
+
+    /// Typed error reply: `id u64 | utf8 message (rest of payload)`.
+    pub fn encode_resp_err(id: u64, msg: &str) -> Vec<u8> {
+        let mut w = Builder::new(FT_RESP_ERR, 8 + msg.len());
+        w.u64(id);
+        w.bytes(msg.as_bytes());
+        w.finish()
+    }
+
+    /// Successful `put_a` reply:
+    /// `id u64 | a_handle u64 | algo u8 | n_exec u32 | convert_ms f64 |
+    ///  artifact len u16 + utf8 | reason utf8 (rest)`.
+    pub fn encode_resp_put_a(r: &Response) -> Vec<u8> {
+        let mut w = Builder::new(FT_RESP_PUT_A, 48);
+        w.u64(r.id);
+        w.u64(r.a_handle.unwrap_or(0));
+        w.u8(algo_to_byte(r.algo.as_deref().and_then(Algo::from_str)));
+        w.u32(r.n_exec.unwrap_or(0) as u32);
+        w.f64(r.convert_ms.unwrap_or(0.0));
+        let artifact = r.artifact.as_deref().unwrap_or("");
+        w.u16(artifact.len() as u16);
+        w.bytes(artifact.as_bytes());
+        w.bytes(r.reason.as_deref().unwrap_or("").as_bytes());
+        w.finish()
+    }
+
+    /// `pong`: `id u64`.
+    pub fn encode_resp_pong(id: u64) -> Vec<u8> {
+        let mut w = Builder::new(FT_RESP_PONG, 8);
+        w.u64(id);
+        w.finish()
+    }
+
+    fn utf8(bytes: &[u8], what: &str) -> Result<String, String> {
+        std::str::from_utf8(bytes)
+            .map(str::to_string)
+            .map_err(|_| format!("invalid utf-8 in {what}"))
+    }
+
+    /// Decode a response frame payload into the shared [`Response`] struct
+    /// (plus the returned C matrix when the reply carries one). The same
+    /// struct the JSON plane parses into, so clients and tests compare the
+    /// two planes field-for-field.
+    pub fn decode_response(ftype: u8, payload: &[u8]) -> Result<(Response, Option<Mat>), String> {
+        let mut c = Cur::new(payload);
+        match ftype {
+            FT_RESP_SPDM => {
+                let id = c.u64()?;
+                let algo = algo_from_byte(c.u8()?)?;
+                let verified = match c.u8()? as i8 {
+                    -1 => None,
+                    0 => Some(false),
+                    1 => Some(true),
+                    other => return Err(format!("bad verified byte {other}")),
+                };
+                let n_exec = c.u32()? as usize;
+                let convert_ms = c.f64()?;
+                let kernel_ms = c.f64()?;
+                let total_ms = c.f64()?;
+                let has_checksum = c.u8()? != 0;
+                let checksum = c.f64()?;
+                let a_handle = match c.u64()? {
+                    0 => None,
+                    h => Some(h - 1),
+                };
+                let alen = c.u16()? as usize;
+                let artifact = utf8(c.take(alen)?, "artifact")?;
+                let c_n = c.u32()? as usize;
+                let mat = if c_n > 0 {
+                    let bytes = c.take(c_n * c_n * 4)?;
+                    let mut m = Mat::zeros(0, 0);
+                    m.fill_from_le_bytes(c_n, c_n, bytes)?;
+                    Some(m)
+                } else {
+                    None
+                };
+                c.done("resp_spdm")?;
+                Ok((
+                    Response {
+                        id,
+                        ok: true,
+                        algo: algo.map(|a| a.as_str().to_string()),
+                        artifact: Some(artifact),
+                        n_exec: Some(n_exec),
+                        convert_ms: Some(convert_ms),
+                        kernel_ms: Some(kernel_ms),
+                        total_ms: Some(total_ms),
+                        verified,
+                        checksum: has_checksum.then_some(checksum),
+                        a_handle,
+                        ..Default::default()
+                    },
+                    mat,
+                ))
+            }
+            FT_RESP_ERR => {
+                let id = c.u64()?;
+                let msg = utf8(c.take(c.remaining())?, "error message")?;
+                Ok((
+                    Response { id, ok: false, error: Some(msg), ..Default::default() },
+                    None,
+                ))
+            }
+            FT_RESP_PUT_A => {
+                let id = c.u64()?;
+                let a_handle = c.u64()?;
+                let algo = algo_from_byte(c.u8()?)?;
+                let n_exec = c.u32()? as usize;
+                let convert_ms = c.f64()?;
+                let alen = c.u16()? as usize;
+                let artifact = utf8(c.take(alen)?, "artifact")?;
+                let reason = utf8(c.take(c.remaining())?, "reason")?;
+                Ok((
+                    Response {
+                        id,
+                        ok: true,
+                        a_handle: Some(a_handle),
+                        algo: algo.map(|a| a.as_str().to_string()),
+                        artifact: Some(artifact),
+                        n_exec: Some(n_exec),
+                        convert_ms: Some(convert_ms),
+                        reason: Some(reason),
+                        ..Default::default()
+                    },
+                    None,
+                ))
+            }
+            FT_RESP_PONG => {
+                let id = c.u64()?;
+                c.done("pong")?;
+                Ok((Response { id, ok: true, ..Default::default() }, None))
+            }
+            other => Err(format!("unknown response frame type 0x{other:02x}")),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -663,5 +1290,254 @@ mod tests {
         let parsed = parse_response(&render_response(&r)).unwrap();
         assert_eq!(parsed.error.as_deref(), Some("no artifact"));
         assert!(!parsed.ok);
+    }
+
+    // ---- wire protocol v3: frame codec --------------------------------
+
+    /// Split one encoded frame into (header, payload), validating the
+    /// header the way the connection handler does.
+    fn split(bytes: &[u8]) -> (frame::Header, &[u8]) {
+        let hdr: [u8; frame::HEADER_LEN] = bytes[..frame::HEADER_LEN].try_into().unwrap();
+        let h = frame::parse_header(&hdr).unwrap();
+        let payload = &bytes[frame::HEADER_LEN..];
+        assert_eq!(payload.len(), h.len, "length prefix must match payload");
+        (h, payload)
+    }
+
+    #[test]
+    fn frame_request_round_trips() {
+        let a = vec![1.0f32, -0.0, 3.5e-41, 2.0]; // incl. -0.0 and a subnormal
+        let b = vec![4.0f32, 5.0, 6.0, f32::MAX];
+        let (h, p) = split(&frame::encode_spdm_inline(7, 2, &a, &b, Some(Algo::Gcoo), true, true));
+        let (req, want_c) = frame::decode_request(h.ftype, p).unwrap();
+        assert!(want_c);
+        assert_eq!(
+            req,
+            Request::Spdm {
+                id: 7,
+                n: 2,
+                payload: Payload::Inline { a: a.clone(), b: b.clone() },
+                algo: Some(Algo::Gcoo),
+                verify: true,
+            }
+        );
+
+        let (h, p) = split(&frame::encode_spdm_handle_b(8, 3, 2, &b, None, false, false));
+        let (req, want_c) = frame::decode_request(h.ftype, p).unwrap();
+        assert!(!want_c);
+        assert_eq!(
+            req,
+            Request::Spdm {
+                id: 8,
+                n: 2,
+                payload: Payload::Handle { a_handle: 3, b: BPayload::Inline(b.clone()) },
+                algo: None,
+                verify: false,
+            }
+        );
+
+        let (h, p) = split(&frame::encode_spdm_handle_seed(9, 3, 42, Some(Algo::Csr), true, false));
+        let (req, _) = frame::decode_request(h.ftype, p).unwrap();
+        assert_eq!(
+            req,
+            Request::Spdm {
+                id: 9,
+                n: 0,
+                payload: Payload::Handle { a_handle: 3, b: BPayload::Synthetic { seed: 42 } },
+                algo: Some(Algo::Csr),
+                verify: true,
+            }
+        );
+
+        let (h, p) = split(&frame::encode_put_a(10, 2, &a, None));
+        let (req, _) = frame::decode_request(h.ftype, p).unwrap();
+        assert_eq!(
+            req,
+            Request::PutA { id: 10, n: 2, payload: APayload::Inline { a: a.clone() }, algo: None }
+        );
+
+        let (h, p) = split(&frame::encode_ping(11));
+        assert_eq!(frame::decode_request(h.ftype, p).unwrap().0, Request::Ping { id: 11 });
+    }
+
+    /// The structural core of the differential obligation: a binary frame
+    /// and a JSON line describing the same request decode into the *same*
+    /// `Request` value, so everything downstream of the protocol boundary
+    /// is shared — encoding cannot change results.
+    #[test]
+    fn frame_decodes_to_same_request_as_json() {
+        let a = vec![1.5f32, 0.0, -2.25, 4.0];
+        let b = vec![0.5f32, 1.0, -1.0, 8.0];
+        let json = r#"{"id":3,"type":"spdm","n":2,"payload":"inline","a":[1.5,0,-2.25,4],"b":[0.5,1,-1,8],"algo":"gcoo","verify":true}"#;
+        let via_json = parse_request(json).unwrap();
+        let (h, p) = split(&frame::encode_spdm_inline(3, 2, &a, &b, Some(Algo::Gcoo), true, false));
+        let (via_frame, _) = frame::decode_request(h.ftype, p).unwrap();
+        assert_eq!(via_frame, via_json);
+    }
+
+    #[test]
+    fn frame_response_round_trips() {
+        let c = crate::ndarray::Mat::from_vec(2, 2, vec![1.0, -0.0, f32::MAX, 0.25]);
+        let r = Response {
+            id: 5,
+            ok: true,
+            algo: Some("gcoo".into()),
+            artifact: Some("gcoo_n64_cap64".into()),
+            n_exec: Some(64),
+            convert_ms: Some(0.5),
+            kernel_ms: Some(1.25),
+            total_ms: Some(2.0),
+            verified: Some(true),
+            checksum: Some(42.062_5),
+            a_handle: Some(0), // handle 0 is valid — the +1 bias must keep it
+            ..Default::default()
+        };
+        let bytes = frame::encode_resp_spdm(&r, Some(&c));
+        let (h, p) = split(&bytes);
+        let (back, mat) = frame::decode_response(h.ftype, p).unwrap();
+        assert_eq!(back, r);
+        let mat = mat.expect("want_c reply carries C");
+        assert_eq!(mat.data.len(), c.data.len());
+        for (x, y) in mat.data.iter().zip(&c.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "C transport must be bit-faithful");
+        }
+
+        // Without C, and with absent optionals.
+        let r2 = Response {
+            id: 6,
+            ok: true,
+            algo: Some("dense_xla".into()),
+            artifact: Some("dense_xla_n64".into()),
+            n_exec: Some(64),
+            convert_ms: Some(0.0),
+            kernel_ms: Some(1.0),
+            total_ms: Some(1.0),
+            verified: None,
+            checksum: Some(-1.5),
+            a_handle: None,
+            ..Default::default()
+        };
+        let (h, p) = split(&frame::encode_resp_spdm(&r2, None));
+        let (back, mat) = frame::decode_response(h.ftype, p).unwrap();
+        assert_eq!(back, r2);
+        assert!(mat.is_none());
+
+        let (h, p) = split(&frame::encode_resp_err(9, "unknown operand handle a#7"));
+        let (back, _) = frame::decode_response(h.ftype, p).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.id, 9);
+        assert_eq!(back.error.as_deref(), Some("unknown operand handle a#7"));
+
+        let put = Response {
+            id: 12,
+            ok: true,
+            a_handle: Some(3),
+            algo: Some("gcoo".into()),
+            artifact: Some("gcoo_n64_cap512".into()),
+            n_exec: Some(64),
+            convert_ms: Some(0.75),
+            reason: Some("sparse-crossover".into()),
+            ..Default::default()
+        };
+        let (h, p) = split(&frame::encode_resp_put_a(&put));
+        assert_eq!(frame::decode_response(h.ftype, p).unwrap().0, put);
+
+        let (h, p) = split(&frame::encode_resp_pong(13));
+        let (back, _) = frame::decode_response(h.ftype, p).unwrap();
+        assert!(back.ok && back.id == 13);
+    }
+
+    #[test]
+    fn frame_header_rejects_garbage_magic_version_and_oversize_length() {
+        let ok = frame::encode_ping(1);
+        let mut h: [u8; frame::HEADER_LEN] = ok[..frame::HEADER_LEN].try_into().unwrap();
+        assert!(frame::parse_header(&h).is_ok());
+        // Garbage magic — including `{`, which must route to the JSON
+        // plane, never reach the frame parser as a valid magic.
+        for bad in [0x00u8, b'{', b'P', 0xFF] {
+            let mut g = h;
+            g[0] = bad;
+            let err = frame::parse_header(&g).unwrap_err();
+            assert!(err.contains("magic"), "{err}");
+        }
+        // Foreign version byte.
+        let mut g = h;
+        g[1] = 0x02;
+        assert!(frame::parse_header(&g).unwrap_err().contains("version"));
+        // Oversize length prefix is rejected before any allocation.
+        h[3..7].copy_from_slice(&(frame::MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert!(frame::parse_header(&h).unwrap_err().contains("exceeds"));
+    }
+
+    /// Every strict prefix of a valid payload must decode to an error —
+    /// never a panic, never a silently short operand.
+    #[test]
+    fn frame_truncation_always_errors() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let b = vec![5.0f32, 6.0, 7.0, 8.0];
+        for full in [
+            frame::encode_spdm_inline(1, 2, &a, &b, None, false, false),
+            frame::encode_spdm_handle_b(2, 1, 2, &b, None, true, true),
+            frame::encode_spdm_handle_seed(3, 1, 9, None, false, false),
+            frame::encode_put_a(4, 2, &a, Some(Algo::Gcoo)),
+            frame::encode_ping(5),
+        ] {
+            let (h, payload) = split(&full);
+            for cut in 0..payload.len() {
+                assert!(
+                    frame::decode_request(h.ftype, &payload[..cut]).is_err(),
+                    "prefix of {cut}/{} bytes must fail (ftype 0x{:02x})",
+                    payload.len(),
+                    h.ftype
+                );
+            }
+            // And trailing garbage is malformed too.
+            let mut long = payload.to_vec();
+            long.push(0xEE);
+            assert!(frame::decode_request(h.ftype, &long).is_err());
+        }
+        assert!(frame::decode_request(0x7E, &[0u8; 8]).is_err(), "unknown frame type");
+    }
+
+    /// Satellite: non-finite floats cannot smuggle through the raw f32
+    /// plane — the binary decode screens every element exactly like the
+    /// JSON boundary's `finite_floats` (NaN would split `ASig`
+    /// bit-equality from the element re-screen; Inf poisons products).
+    #[test]
+    fn frame_rejects_non_finite_floats() {
+        let good = vec![1.0f32, 2.0, 3.0, 4.0];
+        for evil in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut a = good.clone();
+            a[2] = evil;
+            let bytes = frame::encode_spdm_inline(1, 2, &a, &good, None, false, false);
+            let (h, p) = split(&bytes);
+            let err = frame::decode_request(h.ftype, p).unwrap_err();
+            assert!(err.contains("non-finite"), "{evil} → {err}");
+            assert!(err.contains("index 2"), "error names the offending element: {err}");
+            // Same screen on B, on handle-B, and on put_a payloads.
+            let mut b = good.clone();
+            b[0] = evil;
+            let (h, p) = split(&frame::encode_spdm_inline(1, 2, &good, &b, None, false, false));
+            assert!(frame::decode_request(h.ftype, p).unwrap_err().contains("non-finite"));
+            let (h, p) = split(&frame::encode_spdm_handle_b(1, 1, 2, &b, None, false, false));
+            assert!(frame::decode_request(h.ftype, p).unwrap_err().contains("non-finite"));
+            let (h, p) = split(&frame::encode_put_a(1, 2, &a, None));
+            assert!(frame::decode_request(h.ftype, p).unwrap_err().contains("non-finite"));
+        }
+        // A crafted quiet-NaN bit pattern (not produced by any encoder) is
+        // caught the same way: patch the raw payload bytes directly.
+        let mut bytes = frame::encode_spdm_inline(1, 2, &good, &good, None, false, false);
+        let off = frame::HEADER_LEN + 14; // first element of a
+        bytes[off..off + 4].copy_from_slice(&0x7FC0_0001u32.to_le_bytes());
+        let (h, p) = split(&bytes);
+        assert!(frame::decode_request(h.ftype, p).unwrap_err().contains("non-finite"));
+    }
+
+    #[test]
+    fn frame_request_id_recovery() {
+        let bytes = frame::encode_spdm_inline(0xDEAD_BEEF, 2, &[1.0; 4], &[2.0; 4], None, false, false);
+        let payload = &bytes[frame::HEADER_LEN..];
+        assert_eq!(frame::request_id_hint(payload), 0xDEAD_BEEF);
+        assert_eq!(frame::request_id_hint(&payload[..7]), 0, "short payload → id 0");
     }
 }

@@ -1,15 +1,22 @@
-//! TCP server: accepts line-delimited JSON requests, materializes synthetic
-//! workloads, threads operand-handle lifecycle (`put_a`/`drop_a`/`list_a`
-//! and `spdm` by handle) through the coordinator's converted-operand
-//! store, and drives the coordinator.
+//! TCP server: dual-plane dispatch over one listener. Each message is
+//! sniffed by its first byte without consuming it — `{` (or anything
+//! line-like) is a JSON v1/v2 line, the magic `0xB3` is a binary v3 frame
+//! (`protocol::frame`); both planes can interleave freely on one
+//! connection. Requests materialize synthetic workloads, thread the
+//! operand-handle lifecycle (`put_a`/`drop_a`/`list_a` and `spdm` by
+//! handle) through the coordinator's converted-operand store, and drive
+//! the coordinator. Both planes decode into the same `Request` and run
+//! through the same dispatch core, so the encoding can change wire cost
+//! but never results.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use super::protocol::{
-    parse_request, render_response, APayload, BPayload, HandleInfo, Payload, Request, Response,
+    frame, parse_request, render_response, APayload, BPayload, HandleInfo, Payload, Request,
+    Response,
 };
 use crate::coordinator::{Coordinator, OperandId, SpdmRequest};
 use crate::gen;
@@ -88,6 +95,55 @@ impl Server {
     }
 }
 
+/// True for the io::ErrorKinds the read timeout produces — a tick to
+/// re-check `stop`, not a connection failure.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+/// Wait for the next byte and return it **without consuming it** (the
+/// first-byte sniff). `Ok(None)` on EOF or stop.
+fn peek_byte(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> std::io::Result<Option<u8>> {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match reader.fill_buf() {
+            Ok(buf) if buf.is_empty() => return Ok(None), // EOF
+            Ok(buf) => return Ok(Some(buf[0])),
+            Err(e) if is_timeout(&e) => continue, // timeout tick
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// `read_exact` that honors the read timeout so an idle mid-frame
+/// connection still re-checks `stop`. `Ok(false)` on EOF or stop.
+fn read_exact_interruptible(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> std::io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(false);
+        }
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(false), // EOF mid-frame
+            Ok(k) => filled += k,
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
 fn handle_connection(
     stream: TcpStream,
     coord: &Coordinator,
@@ -100,32 +156,71 @@ fn handle_connection(
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    // Reused frame-payload buffer: one allocation reaches steady state for
+    // a connection sending same-shaped frames.
+    let mut payload: Vec<u8> = Vec::new();
     loop {
         if stop.load(Ordering::SeqCst) {
             return Ok(());
         }
-        // NB: on timeout, read_line may have appended a *partial* line;
-        // keep the buffer and let the next call complete it.
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // EOF: client closed
-            Ok(_) => {
-                let request = line.trim().to_string();
-                line.clear();
-                if request.is_empty() {
-                    continue;
+        // Sniff the first byte of the next message — unless a partial JSON
+        // line is pending from a read timeout, which must keep draining as
+        // a line (its next byte is mid-line, not a message start).
+        let first = if line.is_empty() {
+            match peek_byte(&mut reader, stop)? {
+                Some(b) => b,
+                None => return Ok(()),
+            }
+        } else {
+            b'{'
+        };
+        if first == frame::MAGIC {
+            // Binary v3 frame: fixed header, then the length-prefixed
+            // payload, then one dispatch producing one reply frame.
+            let mut hdr = [0u8; frame::HEADER_LEN];
+            if !read_exact_interruptible(&mut reader, &mut hdr, stop)? {
+                return Ok(());
+            }
+            let h = match frame::parse_header(&hdr) {
+                Ok(h) => h,
+                Err(e) => {
+                    // A bad header means the stream cannot be resynced:
+                    // reply with a typed error frame and close.
+                    writer.write_all(&frame::encode_resp_err(0, &e))?;
+                    writer.flush()?;
+                    return Ok(());
                 }
-                let resp = dispatch(&request, coord, stop);
-                writer.write_all(render_response(&resp).as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
+            };
+            payload.resize(h.len, 0);
+            if !read_exact_interruptible(&mut reader, &mut payload, stop)? {
+                return Ok(());
             }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue; // timeout tick: loop to re-check stop
+            let reply = dispatch_frame(h.ftype, &payload, coord, stop);
+            writer.write_all(&reply)?;
+            writer.flush()?;
+        } else {
+            // JSON plane: `{` starts a v1/v2 line; any other junk also
+            // flows here and earns a JSON parse-error reply.
+            // NB: on timeout, read_line may have appended a *partial*
+            // line; keep the buffer and let the next call complete it.
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()), // EOF: client closed
+                Ok(_) => {
+                    let request = line.trim().to_string();
+                    line.clear();
+                    if request.is_empty() {
+                        continue;
+                    }
+                    let resp = dispatch(&request, coord, stop);
+                    writer.write_all(render_response(&resp).as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                }
+                Err(e) if is_timeout(&e) => {
+                    continue; // timeout tick: loop to re-check stop
+                }
+                Err(e) => return Err(e),
             }
-            Err(e) => return Err(e),
         }
     }
 }
@@ -149,47 +244,101 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
             return Response { id, ok: false, error: Some(e), ..Default::default() };
         }
     };
+    dispatch_request(req, coord, stop).0
+}
+
+/// Turn one binary v3 request frame into one reply frame. The same
+/// dispatch core as the JSON plane — only the encoding differs, plus the
+/// binary-only `want_c` option (the reply frame carries the full C matrix
+/// as raw LE f32, which JSON never does because an n² text render would
+/// put the parse cost right back on the wire).
+pub fn dispatch_frame(ftype: u8, payload: &[u8], coord: &Coordinator, stop: &AtomicBool) -> Vec<u8> {
+    let (req, want_c) = match frame::decode_request(ftype, payload) {
+        Ok(x) => x,
+        Err(e) => {
+            // Typed error frame, correlated to the request when the
+            // payload prefix still yields an id (the binary twin of the
+            // JSON dispatcher's id recovery).
+            return frame::encode_resp_err(frame::request_id_hint(payload), &e);
+        }
+    };
+    let is_ping = matches!(req, Request::Ping { .. });
+    let is_put = matches!(req, Request::PutA { .. });
+    let (resp, c) = dispatch_request(req, coord, stop);
+    if !resp.ok {
+        frame::encode_resp_err(resp.id, resp.error.as_deref().unwrap_or("request failed"))
+    } else if is_ping {
+        frame::encode_resp_pong(resp.id)
+    } else if is_put {
+        frame::encode_resp_put_a(&resp)
+    } else {
+        frame::encode_resp_spdm(&resp, if want_c { c.as_ref() } else { None })
+    }
+}
+
+/// The shared dispatch core both planes run through. Returns the response
+/// plus the computed C matrix for spdm requests (the JSON plane drops it —
+/// its replies carry only the checksum; the binary plane returns it when
+/// the client set `want_c`).
+fn dispatch_request(
+    req: Request,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+) -> (Response, Option<Mat>) {
     match req {
-        Request::Ping { id } => Response { id, ok: true, ..Default::default() },
+        Request::Ping { id } => (Response { id, ok: true, ..Default::default() }, None),
         Request::Shutdown { id } => {
             stop.store(true, Ordering::SeqCst);
-            Response { id, ok: true, ..Default::default() }
+            (Response { id, ok: true, ..Default::default() }, None)
         }
-        Request::Metrics { id } => Response {
-            id,
-            ok: true,
-            metrics: Some(coord.snapshot().render()),
-            ..Default::default()
-        },
+        Request::Metrics { id } => (
+            Response {
+                id,
+                ok: true,
+                metrics: Some(coord.snapshot().render()),
+                ..Default::default()
+            },
+            None,
+        ),
         // Structured stats: the `metrics` field carries the JSON-encoded
-        // snapshot (incl. batch_hist, conversions_total, store gauges, and
-        // the adaptive route_flips/explorations counters).
-        Request::Stats { id } => Response {
-            id,
-            ok: true,
-            metrics: Some(coord.snapshot().to_json()),
-            ..Default::default()
-        },
+        // snapshot (incl. batch_hist, conversions_total, store gauges, the
+        // admission-window counters, and the adaptive
+        // route_flips/explorations counters).
+        Request::Stats { id } => (
+            Response {
+                id,
+                ok: true,
+                metrics: Some(coord.snapshot().to_json()),
+                ..Default::default()
+            },
+            None,
+        ),
         // Adaptive routing introspection: the routing table + per-entry
         // measured estimates, as one JSON document in `routing`.
-        Request::Explain { id } => Response {
-            id,
-            ok: true,
-            routing: Some(coord.explain_json()),
-            ..Default::default()
-        },
+        Request::Explain { id } => (
+            Response {
+                id,
+                ok: true,
+                routing: Some(coord.explain_json()),
+                ..Default::default()
+            },
+            None,
+        ),
         // v2: register A once — the reply carries the handle plus the
         // resolved routing (algo/artifact/n_exec/reason) and the
         // registration EO, so clients can introspect what handle traffic
         // will run.
         Request::PutA { id, n, payload, algo } => {
-            let a = match materialize_a(n, &payload) {
+            let a = match materialize_a(n, payload) {
                 Ok(a) => a,
                 Err(e) => {
-                    return Response { id, ok: false, error: Some(e), ..Default::default() }
+                    return (
+                        Response { id, ok: false, error: Some(e), ..Default::default() },
+                        None,
+                    )
                 }
             };
-            match coord.put_a(a, algo) {
+            let resp = match coord.put_a(a, algo) {
                 Ok(entry) => Response {
                     id,
                     ok: true,
@@ -202,10 +351,11 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
                     ..Default::default()
                 },
                 Err(e) => Response { id, ok: false, error: Some(e), ..Default::default() },
-            }
+            };
+            (resp, None)
         }
         Request::DropA { id, a_handle } => {
-            if coord.drop_a(OperandId(a_handle)) {
+            let resp = if coord.drop_a(OperandId(a_handle)) {
                 Response { id, ok: true, a_handle: Some(a_handle), ..Default::default() }
             } else {
                 Response {
@@ -214,7 +364,8 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
                     error: Some(format!("unknown operand handle a#{a_handle}")),
                     ..Default::default()
                 }
-            }
+            };
+            (resp, None)
         }
         Request::ListA { id } => {
             let handles = coord
@@ -229,37 +380,47 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
                     bytes: s.bytes,
                 })
                 .collect();
-            Response { id, ok: true, handles: Some(handles), ..Default::default() }
+            (Response { id, ok: true, handles: Some(handles), ..Default::default() }, None)
         }
         Request::Spdm { id, n, payload, algo, verify } => {
-            let mut sreq = match build_spdm(coord, id, n, &payload) {
+            let mut sreq = match build_spdm(coord, id, n, payload) {
                 Ok(r) => r,
                 Err(e) => {
-                    return Response { id, ok: false, error: Some(e), ..Default::default() }
+                    return (
+                        Response { id, ok: false, error: Some(e), ..Default::default() },
+                        None,
+                    )
                 }
             };
             sreq.algo_hint = algo;
             sreq.verify = verify;
             let a_handle = sreq.a.handle().map(|h| h.0);
-            let resp = coord.run_sync(sreq);
+            let mut resp = coord.run_sync(sreq);
             if let Some(err) = resp.error {
-                return Response { id, ok: false, error: Some(err), ..Default::default() };
+                return (
+                    Response { id, ok: false, error: Some(err), ..Default::default() },
+                    None,
+                );
             }
-            let checksum = resp.c.as_ref().map(|c| c.data.iter().map(|x| *x as f64).sum());
-            Response {
-                id,
-                ok: true,
-                algo: Some(resp.algo.as_str().to_string()),
-                artifact: Some(resp.artifact),
-                n_exec: Some(resp.n_exec),
-                convert_ms: Some(resp.convert_s * 1e3),
-                kernel_ms: Some(resp.kernel_s * 1e3),
-                total_ms: Some(resp.total_s * 1e3),
-                verified: resp.verified,
-                checksum,
-                a_handle,
-                ..Default::default()
-            }
+            let c = resp.c.take();
+            let checksum = c.as_ref().map(|c| c.data.iter().map(|x| *x as f64).sum());
+            (
+                Response {
+                    id,
+                    ok: true,
+                    algo: Some(resp.algo.as_str().to_string()),
+                    artifact: Some(resp.artifact),
+                    n_exec: Some(resp.n_exec),
+                    convert_ms: Some(resp.convert_s * 1e3),
+                    kernel_ms: Some(resp.kernel_s * 1e3),
+                    total_ms: Some(resp.total_s * 1e3),
+                    verified: resp.verified,
+                    checksum,
+                    a_handle,
+                    ..Default::default()
+                },
+                c,
+            )
         }
     }
 }
@@ -267,15 +428,18 @@ pub fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Response 
 /// Turn a parsed spdm payload into the library request: inline/synthetic
 /// payloads materialize both operands (v1); handle payloads resolve the
 /// registered operand's size, materialize only B, and reference A.
+/// Takes the payload **by value**: inline operand vectors move straight
+/// into the `Mat`s the pipeline owns — the protocol decode (text or
+/// binary) is the last copy either plane makes.
 fn build_spdm(
     coord: &Coordinator,
     id: u64,
     n: usize,
-    payload: &Payload,
+    payload: Payload,
 ) -> Result<SpdmRequest, String> {
     match payload {
         Payload::Handle { a_handle, b } => {
-            let h = OperandId(*a_handle);
+            let h = OperandId(a_handle);
             let dims = coord
                 .operand_dims(h)
                 .ok_or_else(|| format!("unknown operand handle a#{a_handle}"))?;
@@ -291,10 +455,10 @@ fn build_spdm(
                             dims * dims
                         ));
                     }
-                    Mat::from_vec(dims, dims, data.clone())
+                    Mat::from_vec(dims, dims, data)
                 }
                 BPayload::Synthetic { seed } => {
-                    let mut rng = Rng::new(*seed);
+                    let mut rng = Rng::new(seed);
                     Mat::randn(dims, dims, &mut rng)
                 }
             };
@@ -310,29 +474,27 @@ fn build_spdm(
 /// Materialize a `put_a` payload. The pattern name was already validated
 /// at parse time (`synthetic_params`); the check here is defense in depth
 /// at the trust boundary — a server answers with an error, never a panic.
-fn materialize_a(n: usize, payload: &APayload) -> Result<Mat, String> {
+/// By value: an inline operand moves into the store without another copy.
+fn materialize_a(n: usize, payload: APayload) -> Result<Mat, String> {
     match payload {
-        APayload::Inline { a } => Ok(Mat::from_vec(n, n, a.clone())),
+        APayload::Inline { a } => Ok(Mat::from_vec(n, n, a)),
         APayload::Synthetic { sparsity, pattern, seed } => {
-            let pat = gen::Pattern::from_name(pattern)
+            let pat = gen::Pattern::from_name(&pattern)
                 .ok_or_else(|| format!("unknown pattern {pattern}"))?;
-            let mut rng = Rng::new(*seed);
-            Ok(gen::generate(pat, n, *sparsity, &mut rng))
+            let mut rng = Rng::new(seed);
+            Ok(gen::generate(pat, n, sparsity, &mut rng))
         }
     }
 }
 
-fn materialize(n: usize, payload: &Payload) -> Result<(Mat, Mat), String> {
+fn materialize(n: usize, payload: Payload) -> Result<(Mat, Mat), String> {
     match payload {
-        Payload::Inline { a, b } => Ok((
-            Mat::from_vec(n, n, a.clone()),
-            Mat::from_vec(n, n, b.clone()),
-        )),
+        Payload::Inline { a, b } => Ok((Mat::from_vec(n, n, a), Mat::from_vec(n, n, b))),
         Payload::Synthetic { sparsity, pattern, seed } => {
-            let pat = gen::Pattern::from_name(pattern)
+            let pat = gen::Pattern::from_name(&pattern)
                 .ok_or_else(|| format!("unknown pattern {pattern}"))?;
-            let mut rng = Rng::new(*seed);
-            let a = gen::generate(pat, n, *sparsity, &mut rng);
+            let mut rng = Rng::new(seed);
+            let a = gen::generate(pat, n, sparsity, &mut rng);
             let b = Mat::randn(n, n, &mut rng);
             Ok((a, b))
         }
@@ -350,7 +512,7 @@ mod tests {
     fn materialize_synthetic() {
         let (a, b) = materialize(
             32,
-            &Payload::Synthetic { sparsity: 0.9, pattern: "uniform".into(), seed: 1 },
+            Payload::Synthetic { sparsity: 0.9, pattern: "uniform".into(), seed: 1 },
         )
         .unwrap();
         assert_eq!((a.rows, b.rows), (32, 32));
@@ -359,7 +521,7 @@ mod tests {
 
     #[test]
     fn materialize_unknown_pattern_errors() {
-        let r = materialize(8, &Payload::Synthetic { sparsity: 0.5, pattern: "x".into(), seed: 0 });
+        let r = materialize(8, Payload::Synthetic { sparsity: 0.5, pattern: "x".into(), seed: 0 });
         assert!(r.is_err());
     }
 
@@ -367,7 +529,7 @@ mod tests {
     fn materialize_inline() {
         let (a, _b) = materialize(
             2,
-            &Payload::Inline { a: vec![1.0, 0.0, 0.0, 1.0], b: vec![5.0; 4] },
+            Payload::Inline { a: vec![1.0, 0.0, 0.0, 1.0], b: vec![5.0; 4] },
         )
         .unwrap();
         assert_eq!(a[(1, 1)], 1.0);

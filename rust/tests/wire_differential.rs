@@ -1,0 +1,362 @@
+//! Cross-protocol differential: the binary v3 plane and the JSON v2 plane
+//! must produce **bitwise-identical results** for identical requests —
+//! encoding may change wire cost, never C. Runnable without `make
+//! artifacts` (stub registry under `target/`; the engine only needs the
+//! artifact files to exist). Covers:
+//!
+//! * all 6 corpus patterns × {inline, handle} × {JSON v2, binary v3}:
+//!   checksum bits equal across planes, and the binary plane's full-C
+//!   reply (`want_c`) bitwise equal to the same request run through the
+//!   local pipeline (`process_one_ws`);
+//! * non-finite-float validation parity on the binary plane: a crafted
+//!   raw-f32 NaN payload earns a typed error frame with the request's id;
+//! * garbage magic / bad version on a live connection: typed error frame,
+//!   then close;
+//! * admission-window differential at the coordinator level: the same
+//!   workload through window=0 and window-on coordinators yields bitwise
+//!   identical checksums (timing changes batching choices, never
+//!   results), the window-on coordinator's batches all carry a window
+//!   outcome (hits + timeouts = total batches), and the window=0
+//!   coordinator's window counters stay zero.
+//!
+//! Frame-codec round-trip/truncation/oversize/garbage property tests live
+//! next to the codec in `src/serve/protocol.rs` (run via
+//! `cargo test --lib serve::protocol`); the scripted-clock fuse-vs-timeout
+//! unit tests live in `src/coordinator/queue.rs`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use gcoospdm::coordinator::{
+    process_one_ws, Coordinator, CoordinatorConfig, SpdmRequest, Workspace,
+};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::serve::{frame, Client, Server, ServerConfig};
+
+/// Stub registry at n=64, same shape as the handle_api stub (distinct
+/// target dir so parallel test binaries never race on the files).
+fn runnable_registry() -> Registry {
+    let dir = PathBuf::from("target/wire_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+fn boot(cfg: CoordinatorConfig) -> (Arc<Coordinator>, String, std::thread::JoinHandle<()>) {
+    let coord = Arc::new(Coordinator::new(Arc::new(runnable_registry()), cfg));
+    let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    (coord, addr, handle)
+}
+
+fn one_worker() -> CoordinatorConfig {
+    CoordinatorConfig { workers: 1, ..Default::default() }
+}
+
+/// Bit-faithful f64 comparison — the JSON plane renders checksums with
+/// Rust's shortest-round-trip float formatting, so even across a text
+/// encoding the bits must survive exactly.
+fn bits(x: Option<f64>) -> u64 {
+    x.expect("reply carries a checksum").to_bits()
+}
+
+/// The acceptance differential: every corpus pattern × {inline, handle} ×
+/// {JSON v2, binary v3}. The binary plane's full-C reply is the ground
+/// truth the checksums are checked against: C from the wire must be
+/// bitwise equal to the same request run through the local pipeline.
+#[test]
+fn corpus_inline_and_handle_bitwise_identical_across_planes() {
+    let (_coord, addr, server) = boot(one_worker());
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Local pipeline for the expected C (same registry shape + config).
+    let registry = runnable_registry();
+    let engine = Engine::new().expect("local engine");
+    let mut ws = Workspace::new();
+    let cfg = one_worker();
+
+    let n = 64usize;
+    let mut id = 100u64;
+    for (pi, pat) in gen::Pattern::ALL.iter().enumerate() {
+        let seed = 1000 + pi as u64;
+        let mut rng = Rng::new(seed);
+        let a = gen::generate(*pat, n, 0.9, &mut rng);
+        let b = Mat::randn(n, n, &mut rng);
+
+        let expected = process_one_ws(
+            &engine,
+            &mut ws,
+            &registry,
+            &cfg,
+            &SpdmRequest::new(0, a.clone(), b.clone()),
+            None,
+            Instant::now(),
+        );
+        assert!(expected.error.is_none(), "{:?}", expected.error);
+        let expected_c = expected.c.as_ref().expect("local pipeline returns C");
+
+        // Inline: JSON v2 vs binary v3 (with the full C back).
+        let rj = client.spdm_inline(id, n, &a.data, &b.data, false).unwrap();
+        assert!(rj.ok, "{}: {:?}", pat.name(), rj.error);
+        let (rb, c_bin) =
+            client.spdm_inline_bin(id + 1, n, &a.data, &b.data, None, false, true).unwrap();
+        assert!(rb.ok, "{}: {:?}", pat.name(), rb.error);
+        assert_eq!(
+            bits(rj.checksum),
+            bits(rb.checksum),
+            "{}: inline checksum must be bitwise equal across planes",
+            pat.name()
+        );
+        assert_eq!(rj.algo, rb.algo, "{}: same routing on both planes", pat.name());
+        let c_bin = c_bin.expect("want_c reply carries C");
+        assert_eq!(
+            (c_bin.rows, c_bin.cols),
+            (expected_c.rows, expected_c.cols),
+            "{}: C dims",
+            pat.name()
+        );
+        for (i, (got, want)) in c_bin.data.iter().zip(expected_c.data.iter()).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{}: C[{}] from the wire must be bitwise equal to the local pipeline",
+                pat.name(),
+                i
+            );
+        }
+
+        // Handle: register A on the JSON plane, multiply by reference on
+        // both planes (inline B and seeded B), checksums bitwise equal.
+        let rp = client.put_a_inline(id + 2, n, &a.data, "auto").unwrap();
+        assert!(rp.ok, "{}: {:?}", pat.name(), rp.error);
+        let h = rp.a_handle.unwrap();
+        let hj = client.spdm_handle(id + 3, h, &b.data, false).unwrap();
+        assert!(hj.ok, "{}: {:?}", pat.name(), hj.error);
+        let (hb, c_hb) =
+            client.spdm_handle_bin(id + 4, h, n, &b.data, None, false, true).unwrap();
+        assert!(hb.ok, "{}: {:?}", pat.name(), hb.error);
+        assert_eq!(
+            bits(hj.checksum),
+            bits(hb.checksum),
+            "{}: handle checksum must be bitwise equal across planes",
+            pat.name()
+        );
+        assert_eq!(hb.a_handle, Some(h), "{}: binary reply echoes the handle", pat.name());
+        let c_hb = c_hb.expect("want_c reply carries C");
+        for (got, want) in c_hb.data.iter().zip(c_bin.data.iter()) {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{}: handle-path C must be bitwise equal to inline C",
+                pat.name()
+            );
+        }
+
+        // Seeded B: both planes generate B server-side from the same seed.
+        let sj = client.spdm_handle_synthetic_b(id + 5, h, seed + 7, false).unwrap();
+        let (sb, _) = client
+            .spdm_handle_synthetic_b_bin(id + 6, h, seed + 7, None, false, false)
+            .unwrap();
+        assert!(sj.ok && sb.ok);
+        assert_eq!(
+            bits(sj.checksum),
+            bits(sb.checksum),
+            "{}: seeded-B checksum must be bitwise equal across planes",
+            pat.name()
+        );
+
+        // Clean up the handle so each pattern registers fresh.
+        assert!(client.drop_a(id + 7, h).unwrap().ok);
+        id += 10;
+    }
+
+    client.shutdown(9_999).unwrap();
+    server.join().unwrap();
+}
+
+/// Binary `put_a` + binary ping round-trip against a live server, and the
+/// two planes agree on the registered handle.
+#[test]
+fn binary_put_a_and_ping_round_trip() {
+    let (_coord, addr, server) = boot(one_worker());
+    let mut client = Client::connect(&addr).unwrap();
+
+    let r = client.ping_bin(1).unwrap();
+    assert!(r.ok);
+    assert_eq!(r.id, 1);
+
+    let mut eye = vec![0.0f32; 64 * 64];
+    for i in 0..64 {
+        eye[i * 64 + i] = 1.0;
+    }
+    let r = client.put_a_inline_bin(2, 64, &eye, None).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    let h = r.a_handle.expect("binary put_a reply carries the handle");
+    assert_eq!(r.n_exec, Some(64));
+    assert!(r.convert_ms.unwrap() >= 0.0);
+
+    // The JSON plane dedups identical content to the same handle — both
+    // planes share one store.
+    let rj = client.put_a_inline(3, 64, &eye, "auto").unwrap();
+    assert!(rj.ok);
+    assert_eq!(rj.a_handle, Some(h), "planes share the operand store");
+
+    client.shutdown(99).unwrap();
+    server.join().unwrap();
+}
+
+/// Non-finite-float validation parity (satellite 1): a crafted raw-f32
+/// NaN in a binary payload must earn a typed error frame naming the bad
+/// element, correlated to the request id — never reach the pipeline.
+#[test]
+fn crafted_nan_payload_gets_typed_error_frame_with_request_id() {
+    let (_coord, addr, server) = boot(one_worker());
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Client-side encoder does not screen (the server is the trust
+    // boundary): smuggle a quiet NaN into element 3 of A.
+    let n = 8usize;
+    let mut a = vec![1.0f32; n * n];
+    a[3] = f32::from_bits(0x7FC0_0001);
+    let b = vec![1.0f32; n * n];
+    let (r, c) = client.spdm_inline_bin(42, n, &a, &b, None, false, true).unwrap();
+    assert!(!r.ok, "NaN payload must be rejected");
+    assert_eq!(r.id, 42, "error frame must carry the request id");
+    assert!(c.is_none());
+    let err = r.error.unwrap();
+    assert!(err.contains("non-finite"), "{err}");
+    assert!(err.contains("index 3") && err.contains("in a"), "error names the bad element: {err}");
+
+    // Infinity in B is rejected the same way.
+    let a = vec![1.0f32; n * n];
+    let mut b = vec![1.0f32; n * n];
+    b[7] = f32::INFINITY;
+    let (r, _) = client.spdm_inline_bin(43, n, &a, &b, None, false, false).unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.id, 43);
+    let err = r.error.unwrap();
+    assert!(err.contains("index 7") && err.contains("in b"), "{err}");
+
+    // The connection survives a payload-level rejection: the next valid
+    // request on the same socket still works.
+    let r = client.ping_bin(44).unwrap();
+    assert!(r.ok);
+
+    client.shutdown(99).unwrap();
+    server.join().unwrap();
+}
+
+/// A bad frame header (wrong version under the real magic) is
+/// unresyncable: the server replies with a typed error frame and closes
+/// the connection.
+#[test]
+fn bad_frame_version_gets_error_frame_then_close() {
+    let (_coord, addr, server) = boot(one_worker());
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    // Magic right, version wrong, plausible length: the sniffer routes to
+    // the binary plane, the header parse rejects.
+    let junk = [frame::MAGIC, 0x7F, 0x01, 4, 0, 0, 0];
+    stream.write_all(&junk).unwrap();
+    stream.flush().unwrap();
+    let mut hdr = [0u8; frame::HEADER_LEN];
+    stream.read_exact(&mut hdr).unwrap();
+    let h = frame::parse_header(&hdr).unwrap();
+    let mut payload = vec![0u8; h.len];
+    stream.read_exact(&mut payload).unwrap();
+    let (resp, _) = frame::decode_response(h.ftype, &payload).unwrap();
+    assert!(!resp.ok);
+    assert!(resp.error.unwrap().contains("version"));
+    // …then EOF: the stream was closed server-side.
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server must close after an unresyncable header");
+
+    // Non-magic junk falls through to the JSON plane and earns a JSON
+    // parse-error line instead (the debug plane stays line-oriented).
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.write_all(b"hello wire\n").unwrap();
+    stream.flush().unwrap();
+    let mut reply = String::new();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    std::io::BufRead::read_line(&mut reader, &mut reply).unwrap();
+    assert!(reply.contains("\"ok\":false"), "junk line gets a JSON error reply: {reply}");
+
+    // Shut the server down over a fresh, well-formed connection.
+    let mut client = Client::connect(&addr).unwrap();
+    client.shutdown(99).unwrap();
+    server.join().unwrap();
+}
+
+/// Admission-window differential (tentpole): the same workload through a
+/// window=0 coordinator and a window-on coordinator must produce bitwise
+/// identical checksums — the window changes batching choices (every
+/// window-on batch carries an outcome: hits + timeouts = total batches),
+/// never results. window=0 keeps the counters at zero.
+#[test]
+fn admission_window_changes_batching_never_results() {
+    let base = one_worker();
+    let windowed = CoordinatorConfig { admission_window_us: 20_000, ..base };
+
+    // A shared-A workload (identity A, varying B) plus a lone non-affine
+    // request, run through both coordinators.
+    let n = 64usize;
+    let mut eye = vec![0.0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let run = |cfg: CoordinatorConfig| -> (Vec<u64>, gcoospdm::coordinator::MetricsSnapshot) {
+        let coord = Coordinator::new(Arc::new(runnable_registry()), cfg);
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let mut rng = Rng::new(500 + i);
+            let b = Mat::randn(n, n, &mut rng);
+            let a = Mat::from_vec(n, n, eye.clone());
+            rxs.push(coord.submit(SpdmRequest::new(i, a, b)).unwrap());
+        }
+        let mut sums = Vec::new();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            let c = resp.c.expect("response carries C");
+            let sum: f64 = c.data.iter().map(|x| *x as f64).sum();
+            sums.push(sum.to_bits());
+        }
+        let snap = coord.snapshot();
+        coord.shutdown();
+        (sums, snap)
+    };
+
+    let (sums0, snap0) = run(base);
+    let (sums_w, snap_w) = run(windowed);
+    assert_eq!(sums0, sums_w, "window must never change results");
+
+    assert_eq!(snap0.window_hits, 0, "window off ⇒ no outcome counters");
+    assert_eq!(snap0.window_timeouts, 0);
+
+    let batches_w: u64 = snap_w.batch_hist.iter().sum();
+    assert_eq!(
+        snap_w.window_hits + snap_w.window_timeouts,
+        batches_w,
+        "every window-on batch carries exactly one outcome"
+    );
+    assert_eq!(snap_w.batched_jobs(), 6, "all jobs accounted in the width histogram");
+}
