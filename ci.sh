@@ -8,8 +8,10 @@
 #                      # the operand-handle (protocol v2 + store) suites,
 #                      # the cross-protocol wire differential (binary v3
 #                      # vs JSON v2, frame codec + admission window), the
+#                      # cluster differential (3-node sharded cluster vs
+#                      # single node, bitwise + failover + stats), the
 #                      # tuner property suites, and the serve_hotpath
-#                      # quick bench (emits and validates BENCH_7.json)
+#                      # quick bench (emits and validates BENCH_8.json)
 #
 # The crate is std-only (offline build; see DESIGN.md §2), so no network or
 # vendored registry is required.
@@ -35,10 +37,15 @@ if [[ "${1:-}" == "--quick" ]]; then
   echo "== quick: cross-protocol wire differential (binary v3 vs JSON v2 bitwise, NaN parity, admission window) =="
   cargo test -q --test wire_differential
 
-  echo "== quick: frame codec + windowed admission lib tests =="
+  echo "== quick: cluster differential (3-node sharded cluster vs single node: bitwise matrix, owner-down failover, stats aggregation) =="
+  cargo test -q --test cluster_differential
+
+  echo "== quick: frame codec + windowed admission + shard ring + cluster membership lib tests =="
   cargo test -q --lib serve::protocol
+  cargo test -q --lib serve::cluster
   cargo test -q --lib coordinator::queue
   cargo test -q --lib coordinator::metrics
+  cargo test -q --lib coordinator::shard
 
   echo "== quick: tuner invariants (EWMA bounds, sample gate, pure exploration draws) =="
   cargo test -q --lib coordinator::tuner
@@ -46,23 +53,23 @@ if [[ "${1:-}" == "--quick" ]]; then
   echo "== quick: operand store invariants (LRU, byte budget, pins, flip/pin versioning) =="
   cargo test -q --lib coordinator::store
 
-  echo "== quick: serve_hotpath (req/s, copies avoided, batched + handle + adaptive + wire A/Bs, open-loop admission) =="
+  echo "== quick: serve_hotpath (req/s, copies avoided, batched + handle + adaptive + wire + cluster A/Bs, open-loop admission) =="
   cargo bench --bench serve_hotpath -- --quick
 
-  echo "== quick: BENCH_7.json must exist and be well-formed =="
+  echo "== quick: BENCH_8.json must exist and be well-formed =="
   python3 - <<'PYEOF'
 import json, sys
 try:
-    doc = json.load(open("../BENCH_7.json"))
+    doc = json.load(open("../BENCH_8.json"))
 except Exception as e:
-    sys.exit(f"BENCH_7.json missing or malformed: {e}")
+    sys.exit(f"BENCH_8.json missing or malformed: {e}")
 if doc.get("generated") is not True:
-    sys.exit("BENCH_7.json still a placeholder (generated != true)")
+    sys.exit("BENCH_8.json still a placeholder (generated != true)")
 names = {p.get("phase") for p in doc.get("phases", [])}
-for need in ("binary_vs_json", "open_loop_admission"):
+for need in ("cluster_vs_single", "binary_vs_json", "open_loop_admission"):
     if need not in names:
-        sys.exit(f"BENCH_7.json lacks required phase {need}")
-print("BENCH_7.json OK:", ", ".join(sorted(names)))
+        sys.exit(f"BENCH_8.json lacks required phase {need}")
+print("BENCH_8.json OK:", ", ".join(sorted(names)))
 PYEOF
 
   echo "CI quick OK"

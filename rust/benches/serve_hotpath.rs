@@ -7,15 +7,18 @@
 //! handle-vs-inline A/B of the operand store (register A once, multiply
 //! by reference vs re-ship + re-convert per request — EO amortization),
 //! a binary-v3-vs-JSON-v2 wire A/B through a live server (bitwise-checked
-//! checksums, req/s + bytes-on-wire per request), and an open-loop
+//! checksums, req/s + bytes-on-wire per request), an open-loop
 //! arrival-schedule phase measuring achieved fused-batch width and
-//! latency percentiles with the admission window on vs off.
+//! latency percentiles with the admission window on vs off, and a
+//! cluster-vs-single A/B: the same handle workload through one plain
+//! server vs a 3-node sharded cluster behind the consistent-hash router
+//! (bitwise-checked checksums, req/s both sides = router overhead).
 //!
 //! The engine only needs artifact files to *exist*, so the bench fabricates
 //! a runnable registry under `target/` — no `make artifacts` required.
 //!
 //! Besides the printed lines, every run emits a machine-readable summary
-//! (`BENCH_7.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
+//! (`BENCH_8.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
 //! latency percentiles, wire bytes per request, and the
 //! copy/conversion/flip/window counters.
 //!
@@ -36,7 +39,7 @@ use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
 use gcoospdm::rng::Rng;
 use gcoospdm::runtime::{Engine, Registry};
-use gcoospdm::serve::{Client, Server, ServerConfig};
+use gcoospdm::serve::{Client, Cluster, ClusterConfig, Server, ServerConfig};
 use gcoospdm::sparse::GcooPadded;
 
 fn registry() -> Registry {
@@ -133,7 +136,7 @@ fn main() {
     let cfg = CoordinatorConfig { workers: 2, ..Default::default() };
     println!("serve_hotpath: {} requests, fixed seeds, quick={quick}", iters);
 
-    // Per-phase results, emitted as BENCH_7.json at the end of the run
+    // Per-phase results, emitted as BENCH_8.json at the end of the run
     // (machine-readable mirror of the printed lines; ci.sh --quick runs this).
     let mut phases: Vec<Value> = Vec::new();
 
@@ -676,11 +679,91 @@ fn main() {
         );
     }
 
-    // --- Emit BENCH_7.json ---------------------------------------------
+    // --- Phase 8: cluster-vs-single wire A/B (router overhead) ----------
+    // The same warm handle workload through one plain server and through
+    // the 3-node sharded cluster's router: checksums bitwise equal (the
+    // cluster's differential obligation, measured here under load), and
+    // the req/s ratio is the router's forwarding overhead.
+    {
+        let count = if quick { 24 } else { 120 };
+        let n = 256usize;
+        let mut rng = Rng::new(8000);
+        let a = gen::uniform(n, 0.99, &mut rng);
+        let bs: Vec<Mat> = (0..4).map(|_| Mat::randn(n, n, &mut rng)).collect();
+
+        let run = |addr: &str, label: &str| -> (f64, Vec<u64>) {
+            let mut client = Client::connect(addr).unwrap();
+            let p = client.put_a_inline(1, n, &a.data, "auto").unwrap();
+            assert!(p.ok, "{label}: {:?}", p.error);
+            let h = p.a_handle.expect("put_a returns a handle");
+            let warm = client.spdm_handle(2, h, &bs[0].data, false).unwrap();
+            assert!(warm.ok, "{label}: {:?}", warm.error);
+            let t0 = Instant::now();
+            let mut sums = Vec::with_capacity(count);
+            for i in 0..count {
+                let r = client
+                    .spdm_handle(10 + i as u64, h, &bs[i % bs.len()].data, false)
+                    .unwrap();
+                assert!(r.ok, "{label}: {:?}", r.error);
+                sums.push(r.checksum.expect("checksum").to_bits());
+            }
+            (count as f64 / t0.elapsed().as_secs_f64(), sums)
+        };
+
+        let coord = Arc::new(Coordinator::new(
+            Arc::new(registry()),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        ));
+        let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+        let saddr = server.local_addr().unwrap().to_string();
+        let sthread = std::thread::spawn(move || {
+            let _ = server.run();
+        });
+        let (rps_single, sums_single) = run(&saddr, "single");
+        Client::connect(&saddr).unwrap().shutdown(9_999).unwrap();
+        sthread.join().unwrap();
+
+        let mut cluster = Cluster::start(
+            &ClusterConfig {
+                nodes: 3,
+                node_cfg: CoordinatorConfig { workers: 1, ..Default::default() },
+                ..Default::default()
+            },
+            Arc::new(registry()),
+        )
+        .expect("cluster starts");
+        let (rps_cluster, sums_cluster) = run(cluster.router_addr(), "cluster");
+        assert_eq!(
+            sums_single, sums_cluster,
+            "the cluster must answer bitwise identically to a single node"
+        );
+        let agg = cluster.snapshot();
+        assert!(agg.store_hits > 0, "handle traffic must serve from the store");
+        cluster.shutdown();
+
+        println!(
+            "cluster A/B: single {rps_single:.1} req/s vs 3-node routed {rps_cluster:.1} req/s \
+             (router overhead x{:.2})",
+            rps_single / rps_cluster
+        );
+        phases.push(
+            Value::obj()
+                .field("phase", "cluster_vs_single")
+                .field("nodes", 3usize)
+                .field("requests", count)
+                .field("req_per_s_single", rps_single)
+                .field("req_per_s_cluster", rps_cluster)
+                .field("router_overhead", rps_single / rps_cluster)
+                .field("bitwise_identical", true)
+                .build(),
+        );
+    }
+
+    // --- Emit BENCH_8.json ---------------------------------------------
     // cwd under `cargo bench` (and ci.sh) is the crate root `rust/`, so the
     // default lands next to the repo-level BENCH files. Override with
     // BENCH_JSON=/path to redirect.
-    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_7.json".to_string());
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_8.json".to_string());
     let doc = Value::obj()
         .field("bench", "serve_hotpath")
         .field("generated", true)

@@ -24,6 +24,7 @@ mod queue;
 mod selector;
 mod metrics;
 mod pool;
+mod shard;
 mod store;
 mod tuner;
 mod workspace;
@@ -36,6 +37,7 @@ pub use pool::{
     batch_affine, process_batch_tuned, process_batch_ws, process_one, process_one_tuned,
     process_one_ws, BatchJob, Coordinator, CoordinatorConfig, SubmitError, TuneCtx,
 };
+pub use shard::{Ring, ShardSpec, DEFAULT_RING_SEED, DEFAULT_VNODES};
 pub use store::{
     OperandEntry, OperandId, OperandPin, OperandStore, OperandSummary, StoreStats,
 };

@@ -27,6 +27,7 @@ use super::job::{AOperand, Algo, SpdmRequest, SpdmResponse};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::queue::BoundedQueue;
 use super::selector::{Selector, SelectorPolicy};
+use super::shard::ShardSpec;
 use super::store::{OperandEntry, OperandId, OperandPin, OperandStore, OperandSummary};
 use super::tuner::{Clock, ModelKey, RealClock, Tuner, TunerConfig};
 use super::workspace::Workspace;
@@ -60,6 +61,12 @@ pub struct CoordinatorConfig {
     /// instant `pop_batch` semantics, bit-for-bit, with zero clock reads
     /// (see `queue.rs::pop_batch_windowed`).
     pub admission_window_us: u64,
+    /// Cluster shard membership (`None` = not clustered). When set, the
+    /// operand store assigns only handle ids this node owns on the
+    /// consistent-hash ring (`shard.rs`), so a stateless router can
+    /// resolve any handle's owner by hashing the id — no translation
+    /// maps. `None` keeps the dense 1, 2, 3… sequence bit-for-bit.
+    pub shard: Option<ShardSpec>,
 }
 
 impl Default for CoordinatorConfig {
@@ -74,6 +81,7 @@ impl Default for CoordinatorConfig {
             store_budget_bytes: 256 << 20,
             tuning: TunerConfig::default(),
             admission_window_us: 0,
+            shard: None,
         }
     }
 }
@@ -448,6 +456,20 @@ impl Coordinator {
         Ok(entry)
     }
 
+    /// Cluster replication (DESIGN.md §Cluster): install a copy of an
+    /// owner node's entry under its original handle. The store
+    /// re-converts from the shipped A — a real EO event on this node, so
+    /// it is recorded like any other conversion (only when the entry was
+    /// actually installed; the idempotent resident case performs none).
+    pub fn replicate_entry(&self, src: &OperandEntry) -> Result<Arc<OperandEntry>, String> {
+        let already = self.store.peek_entry(src.handle).is_some();
+        let entry = self.store.register_replica(src, &self.cfg)?;
+        if !already && entry.plan.algo.is_sparse() {
+            self.metrics.record_conversions(1);
+        }
+        Ok(entry)
+    }
+
     /// Drop a registered operand. In-flight jobs finish against their
     /// pinned snapshot; subsequent handle requests fail fast.
     pub fn drop_a(&self, h: OperandId) -> bool {
@@ -459,9 +481,10 @@ impl Coordinator {
         self.store.list()
     }
 
-    /// Dimension of a registered A (no LRU/hit side effects; an unknown
-    /// handle still counts a store miss) — the serve layer sizes
-    /// synthetic B operands with this and rejects unknown handles here.
+    /// Dimension of a registered A (no LRU side effects; symmetric gauge
+    /// accounting — a resolved probe counts a store hit, an unknown
+    /// handle a miss) — the serve layer sizes synthetic B operands with
+    /// this and rejects unknown handles here.
     pub fn operand_dims(&self, h: OperandId) -> Option<usize> {
         self.store.peek_dims(h)
     }

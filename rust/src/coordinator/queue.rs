@@ -155,6 +155,9 @@ impl<T> BoundedQueue<T> {
     /// * Otherwise one read sets the deadline and each wake re-reads it;
     ///   the window elapsing or the queue closing releases the partial
     ///   batch ([`WindowOutcome::TimedOut`]).
+    /// * Condvar waits are bounded by clock reads (each wait spans the
+    ///   clock's remaining window, so waits ≤ reads − 2): holding a batch
+    ///   open never busy-spins the worker on fixed real-time slices.
     pub fn pop_batch_windowed(
         &self,
         max: usize,
@@ -184,16 +187,21 @@ impl<T> BoundedQueue<T> {
         }
         // Partial batch: hold it open until the window elapses, the queue
         // closes, or a late arrival fills it. The deadline lives on the
-        // injected clock; the condvar waits are short real-time slices
-        // (clamped to [1µs, 1ms]) purely to re-check, so a scripted clock
-        // fully controls the fuse-vs-timeout decision.
+        // injected clock, and so does each condvar wait: the slice is the
+        // clock's *remaining* window (floored at 1µs so a sub-µs remainder
+        // still parks), so a wake is always a push/close notification or
+        // the window genuinely elapsing — never a fixed real-time tick.
+        // Waits are therefore bounded by clock reads, not wall time: a
+        // scripted clock that sits still costs one parked wait, not a
+        // busy-spin at ~1ms granularity.
         let deadline = clock.now_s() + window_s;
         loop {
-            if g.closed || clock.now_s() >= deadline {
+            let now = clock.now_s();
+            if g.closed || now >= deadline {
                 self.not_full.notify_all();
                 return Some((batch, WindowOutcome::TimedOut));
             }
-            let slice = std::time::Duration::from_secs_f64(window_s.clamp(1e-6, 1e-3));
+            let slice = std::time::Duration::from_secs_f64((deadline - now).max(1e-6));
             let (g2, _) = self.not_empty.wait_timeout(g, slice).unwrap();
             g = g2;
             collect_affine(&mut g.deque, &mut batch, max, &affine);
@@ -417,5 +425,35 @@ mod tests {
         assert_eq!(batch, vec![(7, 0)]);
         // Closed and drained: the windowed pop reports end-of-queue.
         assert!(q.pop_batch_windowed(4, |h, c| h.0 == c.0, 1.0, &clock).is_none());
+    }
+
+    #[test]
+    fn windowed_stalled_clock_parks_with_bounded_condvar_waits() {
+        // The wait slice derives from the injected clock's remaining
+        // window, so a scripted clock that never nears its deadline costs
+        // ONE parked wait until the close notification — not a wake every
+        // fixed 1ms real-time slice. Each wait is preceded by exactly one
+        // clock read, so the read counter bounds the wait count: deadline
+        // read + pre-wait read + post-wake read = 3 (a spurious OS wakeup
+        // can add the odd extra read; anything near the old ~30 reads for
+        // a 30ms stall means the fixed-slice spin is back).
+        let q = Arc::new(BoundedQueue::new(16));
+        q.push((7, 0));
+        let q2 = Arc::clone(&q);
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            q2.close();
+        });
+        let clock = ScriptedClock::with_step(vec![0.0], 1e-9);
+        let (batch, outcome) =
+            q.pop_batch_windowed(4, |h, c| h.0 == c.0, 3600.0, &clock).unwrap();
+        closer.join().unwrap();
+        assert_eq!(outcome, WindowOutcome::TimedOut);
+        assert_eq!(batch, vec![(7, 0)]);
+        assert!(
+            clock.reads() <= 6,
+            "stalled-clock window must park, not spin: {} clock reads over a 30ms stall",
+            clock.reads()
+        );
     }
 }

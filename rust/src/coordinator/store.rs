@@ -343,46 +343,20 @@ impl OperandStore {
         if let Some(existing) = g.resident(&a, sig, hint) {
             return Ok((existing, converted));
         }
-        // Two-phase eviction: pick least-recently-used unpinned victims
-        // until the new entry fits, and commit the removals only once it
-        // provably does — a registration that cannot fit must not evict
-        // anything (pins are an eviction barrier, not victims; observed-
-        // unpinned entries cannot gain a pin while we hold the lock, since
-        // `checkout` also locks).
-        if g.bytes + bytes > self.budget {
-            let mut victims: Vec<(u64, u64, u64)> = g
-                .entries
-                .iter()
-                // A slot is evictable only when neither its published
-                // entry nor any retired (superseded, still-pinned)
-                // version is held by an in-flight job.
-                .filter(|(_, s)| !s.entry.pinned() && s.retired.is_empty())
-                .map(|(&id, s)| (s.last_used, id, s.entry.bytes))
-                .collect();
-            victims.sort_unstable();
-            let mut freed = 0u64;
-            let mut take = 0usize;
-            while g.bytes - freed + bytes > self.budget && take < victims.len() {
-                freed += victims[take].2;
-                take += 1;
-            }
-            if g.bytes - freed + bytes > self.budget {
-                return Err(format!(
-                    "operand store budget exhausted ({} B resident, {} B of it pinned; \
-                     a {} B entry cannot fit the {} B budget)",
-                    g.bytes,
-                    g.bytes - victims.iter().map(|v| v.2).sum::<u64>(),
-                    bytes,
-                    self.budget
-                ));
-            }
-            for &(_, id, _) in &victims[..take] {
-                let slot = g.entries.remove(&id).expect("victim resident");
-                g.bytes -= slot.entry.bytes;
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+        self.evict_for(&mut g, bytes)?;
+        // Owned-id sequence (DESIGN.md §Cluster): a clustered store only
+        // assigns handle ids its own shard owns on the consistent-hash
+        // ring, so `ring.owner(handle)` always resolves to the node that
+        // registered it and a stateless router can route any handle with
+        // no translation map. Unclustered (`shard: None`) the sequence is
+        // the dense 1, 2, 3… it has always been, bit-for-bit.
+        g.next_id += 1;
+        if let Some(spec) = cfg.shard {
+            let ring = spec.ring();
+            while !spec.owns(&ring, g.next_id) {
+                g.next_id += 1;
             }
         }
-        g.next_id += 1;
         g.tick += 1;
         let handle = OperandId(g.next_id);
         let entry = Arc::new(OperandEntry {
@@ -406,6 +380,50 @@ impl OperandStore {
             Slot { entry: Arc::clone(&entry), last_used: tick, retired: Vec::new() },
         );
         Ok((entry, converted))
+    }
+
+    /// Two-phase eviction under the insert lock: pick least-recently-used
+    /// unpinned victims until `bytes` more would fit, and commit the
+    /// removals only once they provably suffice — an insert that cannot
+    /// fit must not evict anything (pins are an eviction barrier, not
+    /// victims; observed-unpinned entries cannot gain a pin while we hold
+    /// the lock, since `checkout` also locks).
+    fn evict_for(&self, g: &mut Inner, bytes: u64) -> Result<(), String> {
+        if g.bytes + bytes <= self.budget {
+            return Ok(());
+        }
+        let mut victims: Vec<(u64, u64, u64)> = g
+            .entries
+            .iter()
+            // A slot is evictable only when neither its published
+            // entry nor any retired (superseded, still-pinned)
+            // version is held by an in-flight job.
+            .filter(|(_, s)| !s.entry.pinned() && s.retired.is_empty())
+            .map(|(&id, s)| (s.last_used, id, s.entry.bytes))
+            .collect();
+        victims.sort_unstable();
+        let mut freed = 0u64;
+        let mut take = 0usize;
+        while g.bytes - freed + bytes > self.budget && take < victims.len() {
+            freed += victims[take].2;
+            take += 1;
+        }
+        if g.bytes - freed + bytes > self.budget {
+            return Err(format!(
+                "operand store budget exhausted ({} B resident, {} B of it pinned; \
+                 a {} B entry cannot fit the {} B budget)",
+                g.bytes,
+                g.bytes - victims.iter().map(|v| v.2).sum::<u64>(),
+                bytes,
+                self.budget
+            ));
+        }
+        for &(_, id, _) in &victims[..take] {
+            let slot = g.entries.remove(&id).expect("victim resident");
+            g.bytes -= slot.entry.bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
     }
 
     /// Resident entry with this exact content and hint, LRU-refreshed
@@ -434,17 +452,84 @@ impl OperandStore {
         }
     }
 
-    /// Dimension of a registered A without touching LRU order or the hit
-    /// counter (the serve layer uses this to size synthetic B operands).
-    /// An unknown handle still counts a store **miss** — wire-path
-    /// rejections resolve here, before `checkout` ever runs, and must
-    /// surface in the miss gauge.
+    /// Dimension of a registered A without touching LRU order (the serve
+    /// layer uses this to size synthetic B operands). Gauge accounting is
+    /// **symmetric**: a resolved probe counts a hit exactly as an unknown
+    /// handle counts a miss. Counting only the misses would deflate the
+    /// served hit rate one probe per wire request — and the cluster's
+    /// replication heuristic consumes that rate to decide which operands
+    /// are hot (DESIGN.md §Cluster).
     pub fn peek_dims(&self, h: OperandId) -> Option<usize> {
         let dims = self.inner.lock().unwrap().entries.get(&h.0).map(|s| s.entry.a.rows);
-        if dims.is_none() {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-        }
+        match dims {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
         dims
+    }
+
+    /// Control-plane lookup of a resident entry: no pin, no LRU bump, no
+    /// gauge traffic. The cluster replicator reads the owner's entry here
+    /// before copying it to replica nodes — replication must observe the
+    /// store, never perturb the hit rate it is driven by.
+    pub fn peek_entry(&self, h: OperandId) -> Option<Arc<OperandEntry>> {
+        self.inner.lock().unwrap().entries.get(&h.0).map(|s| Arc::clone(&s.entry))
+    }
+
+    /// Cluster replication hook (DESIGN.md §Cluster): install a copy of
+    /// another node's entry under its **original handle**. The replica
+    /// re-converts the shipped dense A from the owner's registration-time
+    /// stats and plan — conversion is deterministic, so the replica's
+    /// device slabs, and every result later computed from them, are
+    /// bitwise identical to the owner's. Id-sequence safety: the owner
+    /// assigned this handle from its owned-id ring partition, which this
+    /// node's own sequence never enters, so the forced insert cannot
+    /// collide with a locally assigned id. Idempotent: a handle already
+    /// resident (re-replication, or a dedup alias) returns the resident
+    /// entry untouched. Budget rules match `register`, including the
+    /// two-phase LRU eviction.
+    pub fn register_replica(
+        &self,
+        src: &OperandEntry,
+        cfg: &CoordinatorConfig,
+    ) -> Result<Arc<OperandEntry>, String> {
+        // Convert outside the lock, exactly like registration.
+        let operand = device_operand_for(&src.a, &src.stats, &src.plan, cfg)?;
+        let bytes = (src.a.data.len() * 4 + operand.bytes()) as u64;
+        if bytes > self.budget {
+            return Err(format!(
+                "replica ({bytes} B) exceeds the store budget ({} B)",
+                self.budget
+            ));
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.purge_retired();
+        if let Some(slot) = g.entries.get(&src.handle.0) {
+            return Ok(Arc::clone(&slot.entry));
+        }
+        self.evict_for(&mut g, bytes)?;
+        g.tick += 1;
+        let tick = g.tick;
+        let entry = Arc::new(OperandEntry {
+            handle: src.handle,
+            a: src.a.clone(),
+            sig: src.sig,
+            hint: src.hint,
+            stats: src.stats.clone(),
+            plan: src.plan.clone(),
+            candidates: src.candidates.clone(),
+            operand,
+            convert_s: src.convert_s,
+            bytes,
+            version: src.version,
+            pins: AtomicUsize::new(0),
+        });
+        g.bytes += bytes;
+        g.entries.insert(
+            src.handle.0,
+            Slot { entry: Arc::clone(&entry), last_used: tick, retired: Vec::new() },
+        );
+        Ok(entry)
     }
 
     /// Model-driven route flip: republish `old`'s handle under the
@@ -787,12 +872,14 @@ mod tests {
         assert!(store.checkout(OperandId(9999)).is_none(), "unknown handle misses");
         let st = store.stats();
         assert_eq!((st.hits, st.misses), (1, 1));
-        // peek_dims: no hit/LRU side effects on success, but an unknown
-        // handle still counts a miss (the serve layer rejects there).
+        // peek_dims: no LRU side effects, but gauge accounting is
+        // symmetric — a resolved probe counts a hit exactly as an unknown
+        // handle counts a miss, so wire-path dimension probes can never
+        // deflate the hit rate the replication heuristic consumes.
         assert_eq!(store.peek_dims(e.handle), Some(64));
         assert_eq!(store.peek_dims(OperandId(9999)), None);
         let st = store.stats();
-        assert_eq!((st.hits, st.misses), (1, 2), "peek miss counts; peek hit does not");
+        assert_eq!((st.hits, st.misses), (2, 2), "peek accounting is symmetric");
         // Remove while pinned: later lookups miss, the pin's snapshot lives.
         assert!(store.remove(e.handle));
         assert!(!store.remove(e.handle), "double drop reports not-resident");
@@ -1221,5 +1308,68 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Cluster id admission: a sharded store only assigns handles its
+    /// ring position owns, an unsharded store keeps the dense sequence,
+    /// and K=1 sharding degenerates to exactly that dense sequence.
+    #[test]
+    fn sharded_store_assigns_only_owned_handles() {
+        use super::super::shard::{Ring, ShardSpec};
+        let plain = OperandStore::new(64 << 20);
+        for (i, seed) in [21u64, 22, 23].iter().enumerate() {
+            let (e, _) = plain.register(sparse_a(*seed), None, &reg(), &cfg()).unwrap();
+            assert_eq!(e.handle, OperandId(i as u64 + 1), "unsharded: dense 1, 2, 3…");
+        }
+        let single = OperandStore::new(64 << 20);
+        let k1 = CoordinatorConfig { shard: Some(ShardSpec::node_of(0, 1)), ..cfg() };
+        for (i, seed) in [21u64, 22, 23].iter().enumerate() {
+            let (e, _) = single.register(sparse_a(*seed), None, &reg(), &k1).unwrap();
+            assert_eq!(e.handle, OperandId(i as u64 + 1), "K=1 is bit-for-bit the dense sequence");
+        }
+        // Three shards of one cluster: every assigned handle hashes back
+        // to its assigner, and the three id partitions are disjoint.
+        let ring = Ring::new(3, super::super::shard::DEFAULT_VNODES, super::super::shard::DEFAULT_RING_SEED);
+        let mut seen = std::collections::HashSet::new();
+        for node in 0..3u32 {
+            let store = OperandStore::new(64 << 20);
+            let shard = CoordinatorConfig { shard: Some(ShardSpec::node_of(node, 3)), ..cfg() };
+            for seed in [31u64, 32, 33, 34] {
+                let (e, _) = store.register(sparse_a(seed), None, &reg(), &shard).unwrap();
+                assert_eq!(ring.owner(e.handle.0), node, "assigner owns its handles");
+                assert!(seen.insert(e.handle.0), "id partitions are disjoint across nodes");
+            }
+        }
+    }
+
+    /// Cluster replication hook: the replica installs under the original
+    /// handle with bitwise-identical dense content and the same plan,
+    /// charges its own budget, counts no hit/miss gauges, and is
+    /// idempotent.
+    #[test]
+    fn register_replica_is_forced_handle_bitwise_and_idempotent() {
+        use super::super::shard::ShardSpec;
+        let owner = OperandStore::new(64 << 20);
+        let owner_cfg = CoordinatorConfig { shard: Some(ShardSpec::node_of(0, 3)), ..cfg() };
+        let (src, _) = owner.register(sparse_a(40), None, &reg(), &owner_cfg).unwrap();
+
+        let replica = OperandStore::new(64 << 20);
+        let replica_cfg = CoordinatorConfig { shard: Some(ShardSpec::node_of(1, 3)), ..cfg() };
+        let e = replica.register_replica(&src, &replica_cfg).unwrap();
+        assert_eq!(e.handle, src.handle, "replica keeps the owner's handle");
+        assert_eq!(e.a.data, src.a.data, "shipped A is bitwise identical");
+        assert_eq!(e.plan.algo, src.plan.algo);
+        assert_eq!(e.plan.artifact, src.plan.artifact);
+        assert_eq!(e.bytes, src.bytes, "deterministic conversion, same footprint");
+        assert_eq!(replica.bytes_used(), e.bytes);
+        let st = replica.stats();
+        assert_eq!((st.hits, st.misses), (0, 0), "replication is control-plane: no gauges");
+        // Idempotent: same resident entry, no second charge.
+        let e2 = replica.register_replica(&src, &replica_cfg).unwrap();
+        assert!(Arc::ptr_eq(&e, &e2));
+        assert_eq!(replica.bytes_used(), e.bytes);
+        // The replica serves checkouts exactly like a local registration.
+        let pin = replica.checkout(src.handle).expect("replica serves the handle");
+        assert_eq!(pin.a.data, src.a.data);
     }
 }

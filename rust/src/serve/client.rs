@@ -26,6 +26,27 @@ impl Client {
         Ok(Client { writer: stream, reader, bytes_sent: 0, bytes_received: 0 })
     }
 
+    /// Cluster-aware addressing: dial addresses in order and connect to
+    /// the first that answers. A client holding a cluster membership doc
+    /// passes the router address first, then the node addresses as
+    /// fallbacks (every node speaks the full protocol for the operands it
+    /// owns). Returns the last connect error if nothing is reachable.
+    pub fn connect_any<S: AsRef<str>>(addrs: &[S]) -> std::io::Result<Client> {
+        let mut last: Option<std::io::Error> = None;
+        for addr in addrs {
+            match Client::connect(addr.as_ref()) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "connect_any: empty address list",
+            )
+        }))
+    }
+
     /// Total bytes this client has put on / taken off the wire, across
     /// both planes: `(sent, received)`.
     pub fn bytes_on_wire(&self) -> (u64, u64) {

@@ -1,0 +1,1135 @@
+//! Sharded multi-coordinator cluster: N in-process coordinator nodes over
+//! loopback TCP behind one thin, stateless router (DESIGN.md §Cluster).
+//!
+//! The router speaks both wire planes on the front (the same first-byte
+//! sniff as `server.rs`) but never *re-encodes* a data-plane message: it
+//! decodes a copy only to pick a node, then forwards the **raw bytes**
+//! verbatim and relays the node's raw reply. Bit-faithfulness is therefore
+//! structural — a K-node cluster answers every request with exactly the
+//! bytes some single coordinator produced, which is what lets the
+//! differential suite demand bitwise equality with a one-node deployment.
+//!
+//! Placement is pure ring arithmetic (`coordinator::shard`): each
+//! `a_handle` routes to `ring.owner(handle)` — sound because a clustered
+//! store only ever assigns ids its own ring position owns — and each
+//! `put_a` routes by **content signature** (the same FNV-1a64 the store
+//! dedups by), so re-registering identical content from any client lands
+//! on the same node and dedups there. Inline/synthetic spdm payloads are
+//! location-independent; they prefer their content owner (batch affinity)
+//! but fail over to any live node.
+//!
+//! Hot-operand replication: the router counts handle traffic; once a
+//! handle crosses `replicate_after` *and* the owner's store hit gauge
+//! shows it serving from cache, the entry is re-registered on the next
+//! `replicas − 1` ring successors (`Coordinator::replicate_entry` —
+//! deterministic re-conversion, bitwise-identical slabs). Failover walks
+//! the same successor list when the owner's server is down; when nobody
+//! in the replica set serves, the client gets a **typed degradation
+//! error** ([`DEGRADED_PREFIX`]) instead of a hang or a silent retry.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::protocol::{
+    frame, parse_request, render_response, APayload, HandleInfo, Payload, Request, Response,
+};
+use super::server::{
+    is_timeout, materialize_a, peek_byte, read_exact_interruptible, Server, ServerConfig,
+};
+use crate::coordinator::{
+    ASig, Coordinator, CoordinatorConfig, MetricsSnapshot, OperandId, Ring, ShardSpec,
+    DEFAULT_RING_SEED, DEFAULT_VNODES,
+};
+use crate::json::{self, Value};
+use crate::runtime::Registry;
+
+/// Every degradation error the router originates starts with this prefix,
+/// so clients (and the differential suite) can distinguish "the cluster
+/// could not serve this" from an ordinary per-request error a single node
+/// would also have produced.
+pub const DEGRADED_PREFIX: &str = "cluster degraded: ";
+
+/// Membership codec version. A doc with any other version is a load-time
+/// error — ring parameters silently drifting between router and nodes
+/// would mean silent misrouting, the one failure mode the design forbids.
+pub const MEMBERSHIP_VERSION: u64 = 1;
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Cluster size N (≥ 1). N = 1 is the degenerate cluster the
+    /// differential suite compares against: same ring code path, dense
+    /// id sequence, bitwise-identical replies.
+    pub nodes: u32,
+    /// Replica-set size R: owner + R−1 ring successors (capped at N).
+    pub replicas: u32,
+    /// Ring virtual nodes per physical node.
+    pub vnodes: u32,
+    /// Ring seed — carried in the membership doc; all parties must agree.
+    pub seed: u64,
+    /// Router-observed handle requests before an operand is considered
+    /// hot and replicated to its ring successors.
+    pub replicate_after: u64,
+    /// Per-node coordinator configuration. The cluster fills in
+    /// `shard` itself (one `ShardSpec` per node).
+    pub node_cfg: CoordinatorConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 3,
+            replicas: 2,
+            vnodes: DEFAULT_VNODES,
+            seed: DEFAULT_RING_SEED,
+            replicate_after: 3,
+            node_cfg: CoordinatorConfig::default(),
+        }
+    }
+}
+
+/// One node's row in the membership doc.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeInfo {
+    pub id: u32,
+    pub addr: String,
+}
+
+/// The versioned cluster membership document: everything a router (or a
+/// cluster-aware client) needs to compute placement identically to every
+/// other party — ring parameters plus the node address list. JSON on the
+/// wire; the seed travels as a hex string because it exceeds the 2⁵³
+/// integer range a JSON number (f64) can carry exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Membership {
+    pub version: u64,
+    pub seed: u64,
+    pub vnodes: u32,
+    pub replicas: u32,
+    pub nodes: Vec<NodeInfo>,
+}
+
+impl Membership {
+    pub fn to_json(&self) -> String {
+        let nodes = Value::Arr(
+            self.nodes
+                .iter()
+                .map(|n| {
+                    Value::obj()
+                        .field("id", n.id as u64)
+                        .field("addr", n.addr.as_str())
+                        .build()
+                })
+                .collect(),
+        );
+        json::write(
+            &Value::obj()
+                .field("version", self.version)
+                .field("seed_hex", format!("{:016x}", self.seed))
+                .field("vnodes", self.vnodes as u64)
+                .field("replicas", self.replicas as u64)
+                .field("nodes", nodes)
+                .build(),
+        )
+    }
+
+    pub fn from_json(s: &str) -> Result<Membership, String> {
+        let v = json::parse(s).map_err(|e| format!("membership: unparseable JSON ({e:?})"))?;
+        let version = v
+            .get("version")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| "membership: missing version".to_string())?;
+        if version != MEMBERSHIP_VERSION {
+            return Err(format!(
+                "membership: version {version} is not the supported v{MEMBERSHIP_VERSION}"
+            ));
+        }
+        let seed_hex = v
+            .get("seed_hex")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "membership: missing seed_hex".to_string())?;
+        let seed = u64::from_str_radix(seed_hex, 16)
+            .map_err(|_| format!("membership: bad seed_hex {seed_hex:?}"))?;
+        let vnodes = v
+            .get("vnodes")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| "membership: missing vnodes".to_string())? as u32;
+        if vnodes == 0 {
+            return Err("membership: vnodes must be >= 1".into());
+        }
+        let replicas = v
+            .get("replicas")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| "membership: missing replicas".to_string())? as u32;
+        let rows = v
+            .get("nodes")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "membership: missing nodes".to_string())?;
+        let mut nodes = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let id = row
+                .get("id")
+                .and_then(Value::as_u64)
+                .ok_or_else(|| "membership: node row missing id".to_string())?
+                as u32;
+            // Ids must be dense 0..N: ring positions are derived from the
+            // index, so a sparse id space would diverge from placement.
+            if id as usize != i {
+                return Err(format!("membership: node ids must be dense 0..N (got {id} at row {i})"));
+            }
+            let addr = row
+                .get("addr")
+                .and_then(Value::as_str)
+                .ok_or_else(|| "membership: node row missing addr".to_string())?
+                .to_string();
+            nodes.push(NodeInfo { id, addr });
+        }
+        if nodes.is_empty() {
+            return Err("membership: empty node list".into());
+        }
+        Ok(Membership { version, seed, vnodes, replicas, nodes })
+    }
+
+    /// The ring this membership describes — identical on every party that
+    /// holds the same doc.
+    pub fn ring(&self) -> Ring {
+        Ring::new(self.nodes.len() as u32, self.vnodes, self.seed)
+    }
+}
+
+/// A running cluster: N coordinator nodes (each a full `Server` on an
+/// ephemeral loopback port, its store shard-filtered to its ring slice)
+/// plus the router front end. Dropping (or `shutdown`) stops everything.
+pub struct Cluster {
+    nodes: Vec<NodeHandle>,
+    shared: Arc<RouterShared>,
+    membership: Membership,
+    router_addr: String,
+    router_stop: Arc<AtomicBool>,
+    router_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+struct NodeHandle {
+    coord: Arc<Coordinator>,
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// State every router connection shares: the ring, the node table (wire
+/// address for the data plane, in-process `Arc<Coordinator>` for the
+/// control plane — aggregation and replication never cross the wire),
+/// and the hot-handle counters.
+struct RouterShared {
+    ring: Ring,
+    seed: u64,
+    vnodes: u32,
+    replicas: u32,
+    replicate_after: u64,
+    nodes: Vec<NodeRef>,
+    /// Router-observed handle-spdm counts, the replication trigger.
+    hot: Mutex<HashMap<u64, u64>>,
+}
+
+struct NodeRef {
+    addr: String,
+    coord: Arc<Coordinator>,
+}
+
+impl Cluster {
+    pub fn start(cfg: &ClusterConfig, registry: Arc<Registry>) -> std::io::Result<Cluster> {
+        assert!(cfg.nodes >= 1, "a cluster needs at least one node");
+        let mut nodes = Vec::with_capacity(cfg.nodes as usize);
+        for i in 0..cfg.nodes {
+            let mut node_cfg = cfg.node_cfg;
+            node_cfg.shard =
+                Some(ShardSpec { nodes: cfg.nodes, node: i, vnodes: cfg.vnodes, seed: cfg.seed });
+            let coord = Arc::new(Coordinator::new(Arc::clone(&registry), node_cfg));
+            let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord))?;
+            let addr = server.local_addr()?.to_string();
+            let stop = server.stop_handle();
+            let thread = std::thread::spawn(move || {
+                let _ = server.run();
+            });
+            nodes.push(NodeHandle { coord, addr, stop, thread: Some(thread) });
+        }
+        let shared = Arc::new(RouterShared {
+            ring: Ring::new(cfg.nodes, cfg.vnodes, cfg.seed),
+            seed: cfg.seed,
+            vnodes: cfg.vnodes,
+            replicas: cfg.replicas.max(1),
+            replicate_after: cfg.replicate_after.max(1),
+            nodes: nodes
+                .iter()
+                .map(|n| NodeRef { addr: n.addr.clone(), coord: Arc::clone(&n.coord) })
+                .collect(),
+            hot: Mutex::new(HashMap::new()),
+        });
+        let membership = Membership {
+            version: MEMBERSHIP_VERSION,
+            seed: cfg.seed,
+            vnodes: cfg.vnodes,
+            replicas: shared.replicas,
+            nodes: nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| NodeInfo { id: i as u32, addr: n.addr.clone() })
+                .collect(),
+        };
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let router_addr = listener.local_addr()?.to_string();
+        let router_stop = Arc::new(AtomicBool::new(false));
+        let router_thread = {
+            let stop = Arc::clone(&router_stop);
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let _ = router_accept_loop(listener, &shared, &stop);
+            })
+        };
+        Ok(Cluster {
+            nodes,
+            shared,
+            membership,
+            router_addr,
+            router_stop,
+            router_thread: Some(router_thread),
+        })
+    }
+
+    /// The router's front-end address — what clients dial.
+    pub fn router_addr(&self) -> &str {
+        &self.router_addr
+    }
+
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Node `i`'s in-process coordinator — the control-plane view tests
+    /// use to read per-node gauges and stores directly.
+    pub fn coordinator(&self, i: usize) -> Arc<Coordinator> {
+        Arc::clone(&self.nodes[i].coord)
+    }
+
+    pub fn node_addr(&self, i: usize) -> &str {
+        &self.nodes[i].addr
+    }
+
+    /// The node owning `key` (handle id or content signature).
+    pub fn owner_of(&self, key: u64) -> u32 {
+        self.shared.ring.owner(key)
+    }
+
+    /// The failover order for `key`: owner first, then ring successors.
+    pub fn replica_chain(&self, key: u64) -> Vec<u32> {
+        self.shared.ring.replicas(key, self.shared.replicas)
+    }
+
+    /// Force-replicate a handle to its ring successors now (the same
+    /// operation hot-operand traffic triggers). Returns how many fresh
+    /// replicas were installed (already-resident ones are skipped).
+    pub fn replicate(&self, a_handle: u64) -> Result<usize, String> {
+        let chain = self.shared.ring.replicas(a_handle, self.shared.replicas);
+        let owner = &self.shared.nodes[chain[0] as usize];
+        let entry = owner
+            .coord
+            .store()
+            .peek_entry(OperandId(a_handle))
+            .ok_or_else(|| format!("a#{a_handle} is not registered on its owner node {}", chain[0]))?;
+        let mut installed = 0;
+        for &rep in &chain[1..] {
+            let coord = &self.shared.nodes[rep as usize].coord;
+            if coord.store().peek_entry(OperandId(a_handle)).is_none() {
+                coord.replicate_entry(&entry)?;
+                installed += 1;
+            }
+        }
+        Ok(installed)
+    }
+
+    /// Stop node `i`'s TCP server (the coordinator stays alive, holding
+    /// its store — this models a node whose serving endpoint is down,
+    /// the failover case the differential suite drives).
+    pub fn stop_node(&mut self, i: usize) {
+        self.nodes[i].stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.nodes[i].thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Cluster-wide aggregated metrics: counters, gauges, histograms and
+    /// per-algo tallies sum across nodes (see [`aggregate_snapshots`]).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        aggregate(&self.shared)
+    }
+
+    pub fn shutdown(&mut self) {
+        self.router_stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.router_thread.take() {
+            let _ = t.join();
+        }
+        for n in &mut self.nodes {
+            n.stop.store(true, Ordering::SeqCst);
+            if let Some(t) = n.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn router_accept_loop(
+    listener: TcpListener,
+    shared: &Arc<RouterShared>,
+    stop: &Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let shared = Arc::clone(shared);
+                let stop = Arc::clone(stop);
+                conns.push(std::thread::spawn(move || {
+                    let _ = router_connection(stream, &shared, &stop);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+/// One front-end connection: the same sniff-and-dispatch loop as
+/// `server::handle_connection`, except each message is *routed* (raw-byte
+/// forwarded) instead of dispatched locally. Backend connections are
+/// per-front-connection and lazy, so one slow client never holds locks
+/// other clients contend on.
+fn router_connection(
+    stream: TcpStream,
+    shared: &RouterShared,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut payload: Vec<u8> = Vec::new();
+    let mut backends = Backends::new(shared.nodes.len());
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let first = if line.is_empty() {
+            match peek_byte(&mut reader, stop)? {
+                Some(b) => b,
+                None => return Ok(()),
+            }
+        } else {
+            b'{'
+        };
+        if first == frame::MAGIC {
+            let mut hdr = [0u8; frame::HEADER_LEN];
+            if !read_exact_interruptible(&mut reader, &mut hdr, stop)? {
+                return Ok(());
+            }
+            let h = match frame::parse_header(&hdr) {
+                Ok(h) => h,
+                Err(e) => {
+                    writer.write_all(&frame::encode_resp_err(0, &e))?;
+                    writer.flush()?;
+                    return Ok(());
+                }
+            };
+            payload.resize(h.len, 0);
+            if !read_exact_interruptible(&mut reader, &mut payload, stop)? {
+                return Ok(());
+            }
+            let reply = route_frame(&hdr, h.ftype, &payload, shared, &mut backends);
+            writer.write_all(&reply)?;
+            writer.flush()?;
+        } else {
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()),
+                Ok(_) => {
+                    let request = line.trim().to_string();
+                    line.clear();
+                    if request.is_empty() {
+                        continue;
+                    }
+                    let reply = route_json(&request, shared, &mut backends, stop);
+                    writer.write_all(reply.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                }
+                Err(e) if is_timeout(&e) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Lazily-dialed backend connections, one slot per node, owned by a
+/// single front-end connection. Any transport error drops the slot so
+/// the next use re-dials — which is also how a stopped node is detected
+/// (connect refused, or EOF on a connection its server closed).
+struct Backends {
+    conns: Vec<Option<Conn>>,
+}
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Backends {
+    fn new(n: usize) -> Backends {
+        Backends { conns: (0..n).map(|_| None).collect() }
+    }
+
+    fn conn(&mut self, shared: &RouterShared, node: u32) -> std::io::Result<&mut Conn> {
+        let slot = &mut self.conns[node as usize];
+        if slot.is_none() {
+            let stream = TcpStream::connect(&shared.nodes[node as usize].addr)?;
+            let reader = BufReader::new(stream.try_clone()?);
+            *slot = Some(Conn { writer: stream, reader });
+        }
+        Ok(slot.as_mut().unwrap())
+    }
+
+    /// Forward one JSON line, return the node's reply line (newline
+    /// stripped) — relayed verbatim to the client.
+    fn json(&mut self, shared: &RouterShared, node: u32, line: &str) -> std::io::Result<String> {
+        let r = (|| {
+            let c = self.conn(shared, node)?;
+            c.writer.write_all(line.as_bytes())?;
+            c.writer.write_all(b"\n")?;
+            c.writer.flush()?;
+            let mut buf = String::new();
+            if c.reader.read_line(&mut buf)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "backend closed the connection",
+                ));
+            }
+            buf.truncate(buf.trim_end().len());
+            Ok(buf)
+        })();
+        if r.is_err() {
+            self.conns[node as usize] = None;
+        }
+        r
+    }
+
+    /// Forward one raw v3 frame, return the node's raw reply frame
+    /// (header + payload) — relayed verbatim to the client.
+    fn frame(&mut self, shared: &RouterShared, node: u32, raw: &[u8]) -> std::io::Result<Vec<u8>> {
+        let r = (|| {
+            let c = self.conn(shared, node)?;
+            c.writer.write_all(raw)?;
+            c.writer.flush()?;
+            let mut hdr = [0u8; frame::HEADER_LEN];
+            c.reader.read_exact(&mut hdr)?;
+            let h = frame::parse_header(&hdr)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+            let mut reply = Vec::with_capacity(frame::HEADER_LEN + h.len);
+            reply.extend_from_slice(&hdr);
+            let start = reply.len();
+            reply.resize(start + h.len, 0);
+            c.reader.read_exact(&mut reply[start..])?;
+            Ok(reply)
+        })();
+        if r.is_err() {
+            self.conns[node as usize] = None;
+        }
+        r
+    }
+}
+
+fn degraded_msg(why: &str) -> String {
+    format!("{DEGRADED_PREFIX}{why}")
+}
+
+fn degraded_response(id: u64, why: &str) -> Response {
+    Response { id, ok: false, error: Some(degraded_msg(why)), ..Default::default() }
+}
+
+/// Route one JSON request line. Data-plane requests forward raw; control
+///-plane requests (metrics/stats/explain/list_a) aggregate across the
+/// in-process coordinators — they describe the *cluster*, so their shape
+/// intentionally sums rather than proxies one node's view.
+fn route_json(line: &str, shared: &RouterShared, be: &mut Backends, stop: &AtomicBool) -> String {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            let id = json::parse(line)
+                .ok()
+                .and_then(|v| v.get("id").and_then(Value::as_u64))
+                .unwrap_or(0);
+            return render_response(&Response { id, ok: false, error: Some(e), ..Default::default() });
+        }
+    };
+    match req {
+        // The router answers liveness itself — the rendered bytes are
+        // identical to a single server's reply, and a ping must succeed
+        // even with every node down (it probes the front end).
+        Request::Ping { id } => render_response(&Response { id, ok: true, ..Default::default() }),
+        Request::Shutdown { id } => {
+            // Broadcast, then stop the router. Nodes already down are
+            // already stopped — their error is not the client's problem.
+            for node in 0..shared.nodes.len() as u32 {
+                let _ = be.json(shared, node, line);
+            }
+            stop.store(true, Ordering::SeqCst);
+            render_response(&Response { id, ok: true, ..Default::default() })
+        }
+        Request::Metrics { id } => render_response(&Response {
+            id,
+            ok: true,
+            metrics: Some(aggregate(shared).render()),
+            ..Default::default()
+        }),
+        Request::Stats { id } => render_response(&Response {
+            id,
+            ok: true,
+            metrics: Some(aggregate(shared).to_json()),
+            ..Default::default()
+        }),
+        Request::Explain { id } => render_response(&Response {
+            id,
+            ok: true,
+            routing: Some(cluster_explain_json(shared)),
+            ..Default::default()
+        }),
+        Request::ListA { id } => {
+            let mut handles: Vec<HandleInfo> = shared
+                .nodes
+                .iter()
+                .flat_map(|n| n.coord.list_a())
+                .map(|s| HandleInfo {
+                    a_handle: s.handle.0,
+                    n: s.n,
+                    nnz: s.nnz,
+                    algo: s.algo.as_str().to_string(),
+                    artifact: s.artifact,
+                    bytes: s.bytes,
+                })
+                .collect();
+            // Replica copies are the same logical operand — one row each.
+            handles.sort_by_key(|h| h.a_handle);
+            handles.dedup_by_key(|h| h.a_handle);
+            render_response(&Response { id, ok: true, handles: Some(handles), ..Default::default() })
+        }
+        Request::DropA { id, a_handle } => {
+            // Mutations require the owner (a replica-side drop would
+            // resurrect on the next failover read). Owner reply relays
+            // verbatim; replica copies and the hot counter retire
+            // in-process afterwards.
+            let chain = shared.ring.replicas(a_handle, shared.replicas);
+            match be.json(shared, chain[0], line) {
+                Ok(reply) => {
+                    for &rep in &chain[1..] {
+                        shared.nodes[rep as usize].coord.drop_a(OperandId(a_handle));
+                    }
+                    shared.hot.lock().unwrap().remove(&a_handle);
+                    reply
+                }
+                Err(_) => render_response(&degraded_response(
+                    id,
+                    &format!("drop_a owner node {} of a#{a_handle} is unreachable", chain[0]),
+                )),
+            }
+        }
+        Request::PutA { id, n, payload, .. } => {
+            let key = match put_key(n, payload) {
+                Ok(k) => k,
+                Err(e) => {
+                    return render_response(&Response {
+                        id,
+                        ok: false,
+                        error: Some(e),
+                        ..Default::default()
+                    })
+                }
+            };
+            let owner = shared.ring.owner(key);
+            match be.json(shared, owner, line) {
+                Ok(reply) => reply,
+                Err(_) => render_response(&degraded_response(
+                    id,
+                    &format!("put_a owner node {owner} is unreachable"),
+                )),
+            }
+        }
+        Request::Spdm { id, n, payload, .. } => match payload {
+            Payload::Handle { a_handle, .. } => {
+                note_handle_traffic(shared, a_handle);
+                let chain = shared.ring.replicas(a_handle, shared.replicas);
+                for (i, &node) in chain.iter().enumerate() {
+                    if let Ok(reply) = be.json(shared, node, line) {
+                        // The owner's answer is authoritative, including
+                        // "unknown handle". A *replica* saying unknown
+                        // only means the copy isn't there — keep walking.
+                        if i > 0 && reply.contains("unknown operand handle") {
+                            continue;
+                        }
+                        return reply;
+                    }
+                }
+                render_response(&degraded_response(
+                    id,
+                    &format!(
+                        "owner node {} of a#{a_handle} is unreachable and no replica serves it",
+                        chain[0]
+                    ),
+                ))
+            }
+            Payload::Inline { ref a, .. } => {
+                forward_json_any(line, id, content_key(n, a), shared, be)
+            }
+            Payload::Synthetic { sparsity, ref pattern, seed } => {
+                forward_json_any(line, id, synthetic_key(n, sparsity, pattern, seed), shared, be)
+            }
+        },
+    }
+}
+
+/// Location-independent payloads (inline/synthetic spdm): prefer the
+/// content owner so identical content batches on one node, but any live
+/// node computes the identical answer — fail over through the whole ring.
+fn forward_json_any(
+    line: &str,
+    id: u64,
+    key: u64,
+    shared: &RouterShared,
+    be: &mut Backends,
+) -> String {
+    for &node in &shared.ring.replicas(key, shared.ring.nodes()) {
+        if let Ok(reply) = be.json(shared, node, line) {
+            return reply;
+        }
+    }
+    render_response(&degraded_response(id, "no cluster node is reachable"))
+}
+
+/// Route one binary v3 frame. Same decision tree as the JSON plane; the
+/// forwarded bytes are the client's original header + payload, and the
+/// reply is the node's raw frame.
+fn route_frame(
+    hdr: &[u8; frame::HEADER_LEN],
+    ftype: u8,
+    payload: &[u8],
+    shared: &RouterShared,
+    be: &mut Backends,
+) -> Vec<u8> {
+    let (req, _want_c) = match frame::decode_request(ftype, payload) {
+        Ok(x) => x,
+        Err(e) => return frame::encode_resp_err(frame::request_id_hint(payload), &e),
+    };
+    let mut raw = Vec::with_capacity(frame::HEADER_LEN + payload.len());
+    raw.extend_from_slice(hdr);
+    raw.extend_from_slice(payload);
+    match req {
+        Request::Ping { id } => frame::encode_resp_pong(id),
+        Request::PutA { id, n, payload, .. } => {
+            let key = match put_key(n, payload) {
+                Ok(k) => k,
+                Err(e) => return frame::encode_resp_err(id, &e),
+            };
+            let owner = shared.ring.owner(key);
+            match be.frame(shared, owner, &raw) {
+                Ok(reply) => reply,
+                Err(_) => frame::encode_resp_err(
+                    id,
+                    &degraded_msg(&format!("put_a owner node {owner} is unreachable")),
+                ),
+            }
+        }
+        Request::Spdm { id, n, payload, .. } => match payload {
+            Payload::Handle { a_handle, .. } => {
+                note_handle_traffic(shared, a_handle);
+                let chain = shared.ring.replicas(a_handle, shared.replicas);
+                for (i, &node) in chain.iter().enumerate() {
+                    if let Ok(reply) = be.frame(shared, node, &raw) {
+                        if i > 0 && frame_is_unknown_handle(&reply) {
+                            continue;
+                        }
+                        return reply;
+                    }
+                }
+                frame::encode_resp_err(
+                    id,
+                    &degraded_msg(&format!(
+                        "owner node {} of a#{a_handle} is unreachable and no replica serves it",
+                        chain[0]
+                    )),
+                )
+            }
+            Payload::Inline { ref a, .. } => {
+                forward_frame_any(&raw, id, content_key(n, a), shared, be)
+            }
+            Payload::Synthetic { sparsity, ref pattern, seed } => {
+                forward_frame_any(&raw, id, synthetic_key(n, sparsity, pattern, seed), shared, be)
+            }
+        },
+        // decode_request only yields Spdm/PutA/Ping from v3 frame types;
+        // answer defensively rather than panic at a trust boundary.
+        _ => frame::encode_resp_err(0, "unsupported frame request"),
+    }
+}
+
+fn forward_frame_any(
+    raw: &[u8],
+    id: u64,
+    key: u64,
+    shared: &RouterShared,
+    be: &mut Backends,
+) -> Vec<u8> {
+    for &node in &shared.ring.replicas(key, shared.ring.nodes()) {
+        if let Ok(reply) = be.frame(shared, node, raw) {
+            return reply;
+        }
+    }
+    frame::encode_resp_err(id, &degraded_msg("no cluster node is reachable"))
+}
+
+/// Is this raw reply frame a typed error naming an unknown handle?
+/// (Error payload layout: `id u64 | utf8 message`.)
+fn frame_is_unknown_handle(reply: &[u8]) -> bool {
+    if reply.len() < frame::HEADER_LEN + 8 {
+        return false;
+    }
+    let hdr: [u8; frame::HEADER_LEN] = match reply[..frame::HEADER_LEN].try_into() {
+        Ok(h) => h,
+        Err(_) => return false,
+    };
+    match frame::parse_header(&hdr) {
+        Ok(h) if h.ftype == frame::FT_RESP_ERR => {
+            std::str::from_utf8(&reply[frame::HEADER_LEN + 8..])
+                .map(|m| m.contains("unknown operand handle"))
+                .unwrap_or(false)
+        }
+        _ => false,
+    }
+}
+
+/// Count one routed handle request; once the handle crosses the hot
+/// threshold *and* the owner's store hit gauge confirms it is serving
+/// from cache (the gauge `peek_dims` now feeds symmetrically), install
+/// replicas on the ring successors. Synchronous and idempotent —
+/// already-resident replicas are skipped, so steady-state cost is one
+/// map lookup per node. Runs through the in-process coordinators, so a
+/// node whose *server* is down can still receive (or donate) a replica.
+fn note_handle_traffic(shared: &RouterShared, a_handle: u64) {
+    let count = {
+        let mut hot = shared.hot.lock().unwrap();
+        let c = hot.entry(a_handle).or_insert(0);
+        *c += 1;
+        *c
+    };
+    if count < shared.replicate_after {
+        return;
+    }
+    let chain = shared.ring.replicas(a_handle, shared.replicas);
+    if chain.len() < 2 {
+        return;
+    }
+    let owner = &shared.nodes[chain[0] as usize];
+    if owner.coord.store().stats().hits == 0 {
+        return;
+    }
+    let entry = match owner.coord.store().peek_entry(OperandId(a_handle)) {
+        Some(e) => e,
+        None => return,
+    };
+    for &rep in &chain[1..] {
+        let coord = &shared.nodes[rep as usize].coord;
+        if coord.store().peek_entry(OperandId(a_handle)).is_none() {
+            let _ = coord.replicate_entry(&entry);
+        }
+    }
+}
+
+/// Routing key for `put_a`: the FNV-1a64 content signature — the same
+/// hash the store dedups by, so identical content always lands (and
+/// dedups) on one node. Synthetic payloads are materialized first so an
+/// inline re-registration of the generated matrix routes identically.
+fn put_key(n: usize, payload: APayload) -> Result<u64, String> {
+    match payload {
+        APayload::Inline { ref a } => Ok(content_key(n, a)),
+        payload @ APayload::Synthetic { .. } => {
+            let m = materialize_a(n, payload)?;
+            Ok(ASig::of(&m).hash)
+        }
+    }
+}
+
+/// FNV-1a64 over `(rows, cols, element bits)` — bit-for-bit the scheme of
+/// `ASig::of`, applied to a raw payload slice without building a `Mat`.
+fn content_key(n: usize, data: &[f32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(PRIME);
+    };
+    mix(n as u64);
+    mix(n as u64);
+    for &v in data {
+        mix(v.to_bits() as u64);
+    }
+    h
+}
+
+/// Routing key for synthetic spdm payloads: a deterministic hash of the
+/// generation parameters (cheaper than materializing n² floats just to
+/// route a location-independent request).
+fn synthetic_key(n: usize, sparsity: f64, pattern: &str, seed: u64) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(PRIME);
+    };
+    mix(n as u64);
+    mix(sparsity.to_bits());
+    for b in pattern.bytes() {
+        mix(b as u64);
+    }
+    mix(seed);
+    h
+}
+
+fn aggregate(shared: &RouterShared) -> MetricsSnapshot {
+    let snaps: Vec<MetricsSnapshot> =
+        shared.nodes.iter().map(|n| n.coord.snapshot()).collect();
+    aggregate_snapshots(&snaps)
+}
+
+/// Merge per-node snapshots into one cluster view: every counter, gauge,
+/// histogram bucket and per-algo tally **sums exactly** (the property the
+/// differential suite pins); throughput sums; latency percentiles take
+/// the max across nodes (a conservative cluster tail — percentiles of
+/// disjoint populations don't add); phase means weight by completed jobs.
+pub fn aggregate_snapshots(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
+    let mut out = MetricsSnapshot {
+        submitted: 0,
+        completed: 0,
+        errors: 0,
+        verify_failures: 0,
+        bytes_copied: 0,
+        copies_avoided: 0,
+        conversions_amortized: 0,
+        conversions_total: 0,
+        store_entries: 0,
+        store_bytes: 0,
+        store_budget_bytes: 0,
+        store_hits: 0,
+        store_misses: 0,
+        store_evictions: 0,
+        route_flips: 0,
+        explorations: 0,
+        window_hits: 0,
+        window_timeouts: 0,
+        batch_hist: Vec::new(),
+        throughput_rps: 0.0,
+        p50_s: 0.0,
+        p95_s: 0.0,
+        p99_s: 0.0,
+        mean_kernel_s: 0.0,
+        mean_convert_s: 0.0,
+        per_algo: HashMap::new(),
+    };
+    let (mut kernel_w, mut convert_w, mut weight) = (0.0f64, 0.0f64, 0u64);
+    for s in snaps {
+        out.submitted += s.submitted;
+        out.completed += s.completed;
+        out.errors += s.errors;
+        out.verify_failures += s.verify_failures;
+        out.bytes_copied += s.bytes_copied;
+        out.copies_avoided += s.copies_avoided;
+        out.conversions_amortized += s.conversions_amortized;
+        out.conversions_total += s.conversions_total;
+        out.store_entries += s.store_entries;
+        out.store_bytes += s.store_bytes;
+        out.store_budget_bytes += s.store_budget_bytes;
+        out.store_hits += s.store_hits;
+        out.store_misses += s.store_misses;
+        out.store_evictions += s.store_evictions;
+        out.route_flips += s.route_flips;
+        out.explorations += s.explorations;
+        out.window_hits += s.window_hits;
+        out.window_timeouts += s.window_timeouts;
+        if s.batch_hist.len() > out.batch_hist.len() {
+            out.batch_hist.resize(s.batch_hist.len(), 0);
+        }
+        for (w, &c) in s.batch_hist.iter().enumerate() {
+            out.batch_hist[w] += c;
+        }
+        out.throughput_rps += s.throughput_rps;
+        out.p50_s = out.p50_s.max(s.p50_s);
+        out.p95_s = out.p95_s.max(s.p95_s);
+        out.p99_s = out.p99_s.max(s.p99_s);
+        kernel_w += s.mean_kernel_s * s.completed as f64;
+        convert_w += s.mean_convert_s * s.completed as f64;
+        weight += s.completed;
+        for (k, v) in &s.per_algo {
+            *out.per_algo.entry(*k).or_insert(0) += v;
+        }
+    }
+    if weight > 0 {
+        out.mean_kernel_s = kernel_w / weight as f64;
+        out.mean_convert_s = convert_w / weight as f64;
+    }
+    out
+}
+
+/// Cluster `explain`: the ring parameters plus every node's own explain
+/// document embedded verbatim (parsed and re-nested, not re-derived).
+fn cluster_explain_json(shared: &RouterShared) -> String {
+    let nodes: Vec<Value> = shared
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            let doc = json::parse(&n.coord.explain_json()).unwrap_or(Value::Null);
+            Value::obj()
+                .field("node", i)
+                .field("addr", n.addr.as_str())
+                .field("routing", doc)
+                .build()
+        })
+        .collect();
+    json::write(
+        &Value::obj()
+            .field(
+                "cluster",
+                Value::obj()
+                    .field("nodes", shared.nodes.len())
+                    .field("replicas", shared.replicas as u64)
+                    .field("vnodes", shared.vnodes as u64)
+                    .field("seed_hex", format!("{:016x}", shared.seed))
+                    .build(),
+            )
+            .field("nodes", Value::Arr(nodes))
+            .build(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ndarray::Mat;
+
+    #[test]
+    fn membership_codec_round_trips_exactly() {
+        let m = Membership {
+            version: MEMBERSHIP_VERSION,
+            seed: DEFAULT_RING_SEED, // > 2^53: must survive JSON exactly
+            vnodes: DEFAULT_VNODES,
+            replicas: 2,
+            nodes: vec![
+                NodeInfo { id: 0, addr: "127.0.0.1:4100".into() },
+                NodeInfo { id: 1, addr: "127.0.0.1:4101".into() },
+                NodeInfo { id: 2, addr: "127.0.0.1:4102".into() },
+            ],
+        };
+        let back = Membership::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.seed, 0x5EED_C0DE_0B57_AC1E, "seed survives the hex codec bit-exactly");
+        // Both parties derive the identical ring from the doc.
+        let (r1, r2) = (m.ring(), back.ring());
+        for key in 0..1_000u64 {
+            assert_eq!(r1.owner(key), r2.owner(key));
+        }
+    }
+
+    #[test]
+    fn membership_codec_rejects_version_skew_and_malformed_docs() {
+        let good = Membership {
+            version: MEMBERSHIP_VERSION,
+            seed: 7,
+            vnodes: 4,
+            replicas: 2,
+            nodes: vec![NodeInfo { id: 0, addr: "127.0.0.1:1".into() }],
+        }
+        .to_json();
+        let skewed = good.replace("\"version\":1", "\"version\":2");
+        let err = Membership::from_json(&skewed).unwrap_err();
+        assert!(err.contains("version 2"), "version mismatch must be a load-time error: {err}");
+        assert!(Membership::from_json("{}").is_err());
+        assert!(Membership::from_json("not json").is_err());
+        // Sparse node ids would desynchronize placement.
+        let sparse = good.replace("\"id\":0", "\"id\":5");
+        assert!(Membership::from_json(&sparse).unwrap_err().contains("dense"));
+    }
+
+    #[test]
+    fn content_key_matches_the_store_signature() {
+        let data = vec![1.0f32, 0.0, -2.5, 3.25, 0.0, 7.0, 0.0, 0.0, 1.5];
+        let m = Mat::from_vec(3, 3, data.clone());
+        assert_eq!(
+            content_key(3, &data),
+            ASig::of(&m).hash,
+            "router routes put_a by the exact signature the store dedups by"
+        );
+    }
+
+    #[test]
+    fn aggregate_snapshots_sums_counters_histograms_and_per_algo() {
+        let mut a = aggregate_snapshots(&[]);
+        a.submitted = 3;
+        a.completed = 2;
+        a.store_hits = 5;
+        a.batch_hist = vec![0, 2, 1];
+        a.mean_kernel_s = 2.0;
+        a.per_algo.insert("gcoo", 2);
+        let mut b = aggregate_snapshots(&[]);
+        b.submitted = 4;
+        b.completed = 4;
+        b.store_hits = 7;
+        b.batch_hist = vec![0, 1, 0, 9];
+        b.mean_kernel_s = 5.0;
+        b.per_algo.insert("gcoo", 1);
+        b.per_algo.insert("dense", 3);
+        let sum = aggregate_snapshots(&[a, b]);
+        assert_eq!(sum.submitted, 7);
+        assert_eq!(sum.completed, 6);
+        assert_eq!(sum.store_hits, 12);
+        assert_eq!(sum.batch_hist, vec![0, 3, 1, 9], "ragged histograms sum bucket-wise");
+        assert_eq!(sum.per_algo["gcoo"], 3);
+        assert_eq!(sum.per_algo["dense"], 3);
+        // completed-weighted phase mean: (2·2 + 5·4) / 6
+        assert!((sum.mean_kernel_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthetic_key_separates_every_parameter() {
+        let base = synthetic_key(64, 0.9, "uniform", 1);
+        assert_ne!(base, synthetic_key(65, 0.9, "uniform", 1));
+        assert_ne!(base, synthetic_key(64, 0.8, "uniform", 1));
+        assert_ne!(base, synthetic_key(64, 0.9, "banded", 1));
+        assert_ne!(base, synthetic_key(64, 0.9, "uniform", 2));
+        assert_eq!(base, synthetic_key(64, 0.9, "uniform", 1), "deterministic");
+    }
+}

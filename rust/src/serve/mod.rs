@@ -1,4 +1,8 @@
-//! Serving layer: two wire planes over one TCP listener, server and client.
+//! Serving layer: two wire planes over one TCP listener, server, client,
+//! and the sharded multi-coordinator cluster (`cluster.rs`): N coordinator
+//! nodes behind a stateless consistent-hash router that forwards raw
+//! bytes, replicates hot operands, and fails over to ring successors — a
+//! K-node cluster answers bitwise identically to a single node.
 //!
 //! The JSON debug/compat plane (v1/v2, line-delimited) is byte-for-byte
 //! unchanged; the binary data plane (v3, [`frame`]) ships operands as raw
@@ -17,9 +21,14 @@
 
 mod protocol;
 mod server;
+mod cluster;
 mod client;
 mod trace;
 
+pub use cluster::{
+    aggregate_snapshots, Cluster, ClusterConfig, Membership, NodeInfo, DEGRADED_PREFIX,
+    MEMBERSHIP_VERSION,
+};
 pub use protocol::{
     frame, parse_request, parse_response, render_response, APayload, BPayload, HandleInfo,
     Payload, Request, Response,

@@ -711,6 +711,41 @@ pub mod frame {
         w.finish()
     }
 
+    /// Validate a frame's declared n×n dims against the bytes it actually
+    /// carries **before any buffer is sized**, in checked u64 arithmetic.
+    /// The declared `n` is attacker-controlled: `operands·n²·4` wraps even
+    /// in 64-bit release math (n = 2³¹ makes `2·n²·4` ≡ 0 mod 2⁶⁴, so an
+    /// empty payload would pass an unchecked equality and the decoder
+    /// would then try to reserve n² floats). Overflow or an implied size
+    /// beyond [`MAX_PAYLOAD`] is rejected with a typed error, as is any
+    /// mismatch with `remaining`. Returns the per-operand float count the
+    /// cursor may safely allocate.
+    fn checked_operand_floats(
+        n: usize,
+        operands: usize,
+        remaining: usize,
+        what: &str,
+    ) -> Result<usize, String> {
+        let bytes = (n as u64)
+            .checked_mul(n as u64)
+            .and_then(|e| e.checked_mul(4))
+            .and_then(|b| b.checked_mul(operands as u64))
+            .filter(|&b| b <= MAX_PAYLOAD as u64);
+        let bytes = bytes.ok_or_else(|| {
+            format!(
+                "{what} declares dims {n}x{n}: {operands}·n²·4 operand bytes overflow the \
+                 {MAX_PAYLOAD}-byte frame cap"
+            )
+        })?;
+        if bytes != remaining as u64 {
+            return Err(format!(
+                "{what} payload carries {remaining} operand bytes, expected {operands}·n²·4 = \
+                 {bytes} for n={n}"
+            ));
+        }
+        Ok(n * n)
+    }
+
     /// Decode a request frame payload into the **same [`Request`] the JSON
     /// plane produces** — from here on the two planes share one dispatch
     /// path, which is what makes "encoding never changes results" a
@@ -727,15 +762,9 @@ pub mod frame {
                 if n == 0 {
                     return Err("n must be positive".into());
                 }
-                if c.remaining() != 2 * n * n * 4 {
-                    return Err(format!(
-                        "inline payload carries {} operand bytes, expected 2·n²·4 = {}",
-                        c.remaining(),
-                        2 * n * n * 4
-                    ));
-                }
-                let a = c.f32s(n * n, "a")?;
-                let b = c.f32s(n * n, "b")?;
+                let floats = checked_operand_floats(n, 2, c.remaining(), "spdm_inline")?;
+                let a = c.f32s(floats, "a")?;
+                let b = c.f32s(floats, "b")?;
                 c.done("spdm_inline")?;
                 Ok((
                     Request::Spdm {
@@ -757,14 +786,8 @@ pub mod frame {
                 if n == 0 {
                     return Err("n must be positive".into());
                 }
-                if c.remaining() != n * n * 4 {
-                    return Err(format!(
-                        "handle payload carries {} b bytes, expected n²·4 = {}",
-                        c.remaining(),
-                        n * n * 4
-                    ));
-                }
-                let b = c.f32s(n * n, "b")?;
+                let floats = checked_operand_floats(n, 1, c.remaining(), "spdm_handle_b")?;
+                let b = c.f32s(floats, "b")?;
                 c.done("spdm_handle_b")?;
                 Ok((
                     Request::Spdm {
@@ -802,14 +825,8 @@ pub mod frame {
                 if n == 0 {
                     return Err("n must be positive".into());
                 }
-                if c.remaining() != n * n * 4 {
-                    return Err(format!(
-                        "put_a payload carries {} a bytes, expected n²·4 = {}",
-                        c.remaining(),
-                        n * n * 4
-                    ));
-                }
-                let a = c.f32s(n * n, "a")?;
+                let floats = checked_operand_floats(n, 1, c.remaining(), "put_a")?;
+                let a = c.f32s(floats, "a")?;
                 c.done("put_a")?;
                 Ok((
                     Request::PutA {
@@ -936,7 +953,12 @@ pub mod frame {
                 let artifact = utf8(c.take(alen)?, "artifact")?;
                 let c_n = c.u32()? as usize;
                 let mat = if c_n > 0 {
-                    let bytes = c.take(c_n * c_n * 4)?;
+                    // Same checked-dims rule as the request side: the
+                    // declared C size must match what the frame carries
+                    // before `take` sizes anything (`c_n²·4` wraps for
+                    // adversarial c_n just like the operand paths).
+                    let floats = checked_operand_floats(c_n, 1, c.remaining(), "resp_spdm c")?;
+                    let bytes = c.take(floats * 4)?;
                     let mut m = Mat::zeros(0, 0);
                     m.fill_from_le_bytes(c_n, c_n, bytes)?;
                     Some(m)
@@ -1497,6 +1519,69 @@ mod tests {
             assert!(frame::decode_request(h.ftype, &long).is_err());
         }
         assert!(frame::decode_request(0x7E, &[0u8; 8]).is_err(), "unknown frame type");
+    }
+
+    /// Satellite (PR 8): declared dims are validated with checked
+    /// arithmetic *before* any buffer is sized. A tiny frame claiming a
+    /// 60000×60000 A (≈ 28.8 GB of operands) must get a typed error, and
+    /// an n crafted so the old unchecked `2·n²·4` wraps to 0 mod 2⁶⁴
+    /// (n = 2³¹, empty operand region) must not slip past the length
+    /// equality into an n²-float reservation.
+    #[test]
+    fn frame_checked_dims_reject_overflow_and_wrap_before_allocation() {
+        // id u64 | n u32 | flags u8 | algo u8 — header fields only, no
+        // operand bytes at all (a "20-byte frame" in ISSUE terms).
+        let tiny_inline = |n: u32| {
+            let mut p = Vec::new();
+            p.extend_from_slice(&7u64.to_le_bytes());
+            p.extend_from_slice(&n.to_le_bytes());
+            p.push(0); // flags
+            p.push(0); // algo auto
+            p
+        };
+        // Over the frame cap: typed error naming the declared dims.
+        let err = frame::decode_request(frame::FT_SPDM_INLINE, &tiny_inline(60000)).unwrap_err();
+        assert!(err.contains("60000x60000"), "error names the declared dims: {err}");
+        assert!(err.contains("overflow"), "{err}");
+        // u64 wrap bait: 2·(2³¹)²·4 ≡ 0 mod 2⁶⁴ matches the empty operand
+        // region under unchecked math. Checked math rejects it instead.
+        let err =
+            frame::decode_request(frame::FT_SPDM_INLINE, &tiny_inline(0x8000_0000)).unwrap_err();
+        assert!(err.contains("overflow"), "wrapping dims must be typed errors: {err}");
+        // Same screen on the single-operand frames (handle-B and put_a).
+        let mut hb = Vec::new();
+        hb.extend_from_slice(&7u64.to_le_bytes()); // id
+        hb.extend_from_slice(&1u64.to_le_bytes()); // a_handle
+        hb.extend_from_slice(&0xFFFF_FFFFu32.to_le_bytes()); // n
+        hb.extend_from_slice(&[0, 0]); // flags, algo
+        let err = frame::decode_request(frame::FT_SPDM_HANDLE_B, &hb).unwrap_err();
+        assert!(err.contains("overflow"), "{err}");
+        let mut pa = Vec::new();
+        pa.extend_from_slice(&7u64.to_le_bytes()); // id
+        pa.extend_from_slice(&0x8000_0000u32.to_le_bytes()); // n
+        pa.push(0); // algo
+        let err = frame::decode_request(frame::FT_PUT_A, &pa).unwrap_err();
+        assert!(err.contains("overflow"), "{err}");
+        // Plain mismatch (no overflow): dims and carried bytes disagree.
+        let bytes = frame::encode_spdm_handle_b(1, 1, 3, &[1.0f32; 4], None, false, false);
+        let (h, p) = split(&bytes);
+        let err = frame::decode_request(h.ftype, p).unwrap_err();
+        assert!(err.contains("expected 1·n²·4"), "typed mismatch error: {err}");
+        // Response side: a reply claiming a huge C with no bytes behind it
+        // is rejected by the same checked-dims rule.
+        let mut resp = Vec::new();
+        resp.extend_from_slice(&1u64.to_le_bytes()); // id
+        resp.push(1); // algo gcoo
+        resp.push(-1i8 as u8); // verified absent
+        resp.extend_from_slice(&0u32.to_le_bytes()); // n_exec
+        resp.extend_from_slice(&[0u8; 24]); // convert/kernel/total ms
+        resp.push(0); // has_checksum
+        resp.extend_from_slice(&[0u8; 8]); // checksum
+        resp.extend_from_slice(&0u64.to_le_bytes()); // a_handle none
+        resp.extend_from_slice(&0u16.to_le_bytes()); // artifact len 0
+        resp.extend_from_slice(&0x8000_0000u32.to_le_bytes()); // c_n wrap bait
+        let err = frame::decode_response(frame::FT_RESP_SPDM, &resp).unwrap_err();
+        assert!(err.contains("overflow"), "response C dims are checked too: {err}");
     }
 
     /// Satellite: non-finite floats cannot smuggle through the raw f32

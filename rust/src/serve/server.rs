@@ -96,8 +96,9 @@ impl Server {
 }
 
 /// True for the io::ErrorKinds the read timeout produces — a tick to
-/// re-check `stop`, not a connection failure.
-fn is_timeout(e: &std::io::Error) -> bool {
+/// re-check `stop`, not a connection failure. (Shared with the cluster
+/// router, whose front-end loop is the same sniff-and-dispatch.)
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     matches!(
         e.kind(),
         std::io::ErrorKind::WouldBlock
@@ -108,7 +109,10 @@ fn is_timeout(e: &std::io::Error) -> bool {
 
 /// Wait for the next byte and return it **without consuming it** (the
 /// first-byte sniff). `Ok(None)` on EOF or stop.
-fn peek_byte(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> std::io::Result<Option<u8>> {
+pub(crate) fn peek_byte(
+    reader: &mut BufReader<TcpStream>,
+    stop: &AtomicBool,
+) -> std::io::Result<Option<u8>> {
     loop {
         if stop.load(Ordering::SeqCst) {
             return Ok(None);
@@ -124,7 +128,7 @@ fn peek_byte(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> std::io::R
 
 /// `read_exact` that honors the read timeout so an idle mid-frame
 /// connection still re-checks `stop`. `Ok(false)` on EOF or stop.
-fn read_exact_interruptible(
+pub(crate) fn read_exact_interruptible(
     reader: &mut BufReader<TcpStream>,
     buf: &mut [u8],
     stop: &AtomicBool,
@@ -475,7 +479,9 @@ fn build_spdm(
 /// at parse time (`synthetic_params`); the check here is defense in depth
 /// at the trust boundary — a server answers with an error, never a panic.
 /// By value: an inline operand moves into the store without another copy.
-fn materialize_a(n: usize, payload: APayload) -> Result<Mat, String> {
+/// (Shared with the cluster router, which materializes synthetic `put_a`
+/// payloads to route them by content signature.)
+pub(crate) fn materialize_a(n: usize, payload: APayload) -> Result<Mat, String> {
     match payload {
         APayload::Inline { a } => Ok(Mat::from_vec(n, n, a)),
         APayload::Synthetic { sparsity, pattern, seed } => {

@@ -1,0 +1,409 @@
+//! Cluster differential: a K-node sharded cluster behind the stateless
+//! router must answer every data-plane request **bitwise identically** to
+//! a single coordinator — sharding changes where work runs, never what it
+//! computes. Runnable without `make artifacts` (stub registry under
+//! `target/`). Covers:
+//!
+//! * all 6 corpus patterns × {inline, handle, seeded-B} × {JSON v2,
+//!   binary v3} through a 3-node cluster (admission window ON) vs one
+//!   plain single-node server (window OFF): checksum bits equal, full C
+//!   (`want_c`) bitwise equal, routing (`algo`) equal. Handles are
+//!   compared *behaviorally* — the cluster's owned-id sequence assigns
+//!   different handle values by design;
+//! * owner-down failover: a replicated operand keeps answering with
+//!   bitwise-identical results from a ring successor on both planes; an
+//!   unreplicated operand owned by the same stopped node earns the typed
+//!   degradation error (`DEGRADED_PREFIX`) on both planes;
+//! * cluster `stats` aggregation: the router's snapshot sums the per-node
+//!   coordinator gauges exactly (counters, store gauges, batch_hist).
+//!
+//! Ring-placement unit tests live in `src/coordinator/shard.rs`; the
+//! membership-codec and snapshot-aggregation unit tests in
+//! `src/serve/cluster.rs` (both run via `cargo test --lib`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use gcoospdm::coordinator::{Coordinator, CoordinatorConfig};
+use gcoospdm::gen;
+use gcoospdm::json::{self, Value};
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::Registry;
+use gcoospdm::serve::{
+    Client, Cluster, ClusterConfig, Membership, Server, ServerConfig, DEGRADED_PREFIX,
+};
+
+/// Stub registry at n=64, same shape as the wire_differential stub
+/// (distinct target dir so parallel test binaries never race on files).
+fn runnable_registry() -> Arc<Registry> {
+    let dir = PathBuf::from("target/cluster_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Arc::new(Registry::from_manifest_json(manifest, dir).expect("stub manifest parses"))
+}
+
+/// One plain single-node server: one worker, admission window OFF — the
+/// reference deployment every cluster reply is compared against.
+fn boot_single() -> (Arc<Coordinator>, String, std::thread::JoinHandle<()>) {
+    let cfg = CoordinatorConfig { workers: 1, ..Default::default() };
+    let coord = Arc::new(Coordinator::new(runnable_registry(), cfg));
+    let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    (coord, addr, handle)
+}
+
+/// A 3-node cluster with the admission window ON — together with the
+/// window-off single node, one matrix run covers both window modes.
+fn boot_cluster(replicate_after: u64) -> Cluster {
+    let cfg = ClusterConfig {
+        nodes: 3,
+        replicas: 2,
+        replicate_after,
+        node_cfg: CoordinatorConfig {
+            workers: 1,
+            admission_window_us: 2_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    Cluster::start(&cfg, runnable_registry()).expect("cluster starts")
+}
+
+fn bits(x: Option<f64>) -> u64 {
+    x.expect("reply carries a checksum").to_bits()
+}
+
+fn assert_c_bits_equal(got: &Mat, want: &Mat, what: &str) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{what}: C dims");
+    for (i, (g, w)) in got.data.iter().zip(want.data.iter()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: C[{i}] bitwise");
+    }
+}
+
+/// The acceptance matrix: 6 patterns × {inline, handle+inline-B,
+/// handle+seeded-B} × {JSON, binary}, 3-node window-on cluster vs plain
+/// single node, every checksum and every want_c C compared bitwise.
+#[test]
+fn corpus_bitwise_identical_cluster_vs_single_node() {
+    let (_coord, single_addr, single_thread) = boot_single();
+    let mut cluster = boot_cluster(3);
+    let mut sc = Client::connect(&single_addr).unwrap();
+    let mut cc = Client::connect(cluster.router_addr()).unwrap();
+
+    let n = 64usize;
+    let mut id = 1_000u64;
+    for (pi, pat) in gen::Pattern::ALL.iter().enumerate() {
+        let seed = 4_000 + pi as u64;
+        let mut rng = Rng::new(seed);
+        let a = gen::generate(*pat, n, 0.9, &mut rng);
+        let b = Mat::randn(n, n, &mut rng);
+        let what = pat.name();
+
+        // Inline, JSON plane.
+        let rs = sc.spdm_inline(id, n, &a.data, &b.data, false).unwrap();
+        let rc = cc.spdm_inline(id, n, &a.data, &b.data, false).unwrap();
+        assert!(rs.ok && rc.ok, "{what}: {:?} / {:?}", rs.error, rc.error);
+        assert_eq!(bits(rs.checksum), bits(rc.checksum), "{what}: inline JSON checksum");
+        assert_eq!(rs.algo, rc.algo, "{what}: same routing on both deployments");
+
+        // Inline, binary plane with the full C back.
+        let (rs, cs) = sc.spdm_inline_bin(id + 1, n, &a.data, &b.data, None, false, true).unwrap();
+        let (rc, ccm) = cc.spdm_inline_bin(id + 1, n, &a.data, &b.data, None, false, true).unwrap();
+        assert!(rs.ok && rc.ok, "{what}: {:?} / {:?}", rs.error, rc.error);
+        assert_eq!(bits(rs.checksum), bits(rc.checksum), "{what}: inline binary checksum");
+        assert_c_bits_equal(
+            ccm.as_ref().expect("cluster want_c C"),
+            cs.as_ref().expect("single want_c C"),
+            &format!("{what}: inline"),
+        );
+
+        // Register A on both deployments. Handle VALUES differ by design
+        // (the cluster's store assigns only ring-owned ids); everything
+        // observable through them must not.
+        let ps = sc.put_a_inline(id + 2, n, &a.data, "auto").unwrap();
+        let pc = cc.put_a_inline(id + 2, n, &a.data, "auto").unwrap();
+        assert!(ps.ok && pc.ok, "{what}: {:?} / {:?}", ps.error, pc.error);
+        assert_eq!(ps.algo, pc.algo, "{what}: same put_a routing");
+        assert_eq!(ps.artifact, pc.artifact, "{what}: same put_a artifact");
+        let hs = ps.a_handle.expect("single handle");
+        let hc = pc.a_handle.expect("cluster handle");
+        // The owned-id sequence makes the handle self-routing: its ring
+        // owner is exactly the node whose store registered it.
+        let hc_owner = cluster.owner_of(hc) as usize;
+        assert!(
+            cluster
+                .coordinator(hc_owner)
+                .store()
+                .peek_entry(gcoospdm::coordinator::OperandId(hc))
+                .is_some(),
+            "{what}: the ring owner's store holds the handle it assigned"
+        );
+
+        // Handle + inline B: JSON and binary (full C) planes.
+        let rs = sc.spdm_handle(id + 3, hs, &b.data, false).unwrap();
+        let rc = cc.spdm_handle(id + 3, hc, &b.data, false).unwrap();
+        assert!(rs.ok && rc.ok, "{what}: {:?} / {:?}", rs.error, rc.error);
+        assert_eq!(bits(rs.checksum), bits(rc.checksum), "{what}: handle JSON checksum");
+        let (rs, cs) = sc.spdm_handle_bin(id + 4, hs, n, &b.data, None, false, true).unwrap();
+        let (rc, ccm) = cc.spdm_handle_bin(id + 4, hc, n, &b.data, None, false, true).unwrap();
+        assert!(rs.ok && rc.ok, "{what}: {:?} / {:?}", rs.error, rc.error);
+        assert_eq!(bits(rs.checksum), bits(rc.checksum), "{what}: handle binary checksum");
+        assert_c_bits_equal(
+            ccm.as_ref().expect("cluster want_c C"),
+            cs.as_ref().expect("single want_c C"),
+            &format!("{what}: handle"),
+        );
+
+        // Handle + seeded B (the server materializes B from the seed —
+        // same dims, same seed, same B on every node).
+        let rs = sc.spdm_handle_synthetic_b(id + 5, hs, seed * 7, false).unwrap();
+        let rc = cc.spdm_handle_synthetic_b(id + 5, hc, seed * 7, false).unwrap();
+        assert!(rs.ok && rc.ok, "{what}: {:?} / {:?}", rs.error, rc.error);
+        assert_eq!(bits(rs.checksum), bits(rc.checksum), "{what}: seeded-B JSON checksum");
+        let (rs, cs) = sc
+            .spdm_handle_synthetic_b_bin(id + 6, hs, seed * 7, None, false, true)
+            .unwrap();
+        let (rc, ccm) = cc
+            .spdm_handle_synthetic_b_bin(id + 6, hc, seed * 7, None, false, true)
+            .unwrap();
+        assert!(rs.ok && rc.ok, "{what}: {:?} / {:?}", rs.error, rc.error);
+        assert_eq!(bits(rs.checksum), bits(rc.checksum), "{what}: seeded-B binary checksum");
+        assert_c_bits_equal(
+            ccm.as_ref().expect("cluster want_c C"),
+            cs.as_ref().expect("single want_c C"),
+            &format!("{what}: seeded-B"),
+        );
+
+        // Drop on both; a re-use afterwards earns the same typed error.
+        let ds = sc.drop_a(id + 7, hs).unwrap();
+        let dc = cc.drop_a(id + 7, hc).unwrap();
+        assert!(ds.ok && dc.ok, "{what}: drop: {:?} / {:?}", ds.error, dc.error);
+        let rs = sc.spdm_handle(id + 8, hs, &b.data, false).unwrap();
+        let rc = cc.spdm_handle(id + 8, hc, &b.data, false).unwrap();
+        assert!(!rs.ok && !rc.ok, "{what}: dropped handles must not serve");
+        assert!(
+            rs.error.as_deref().unwrap_or("").contains("unknown operand handle")
+                && rc.error.as_deref().unwrap_or("").contains("unknown operand handle"),
+            "{what}: same typed error after drop: {:?} / {:?}",
+            rs.error,
+            rc.error
+        );
+
+        id += 10;
+    }
+
+    // Window coverage sanity: the cluster really ran with the admission
+    // window on (its nodes saw windowed batches) and the single node ran
+    // with it off.
+    let agg = cluster.snapshot();
+    assert!(
+        agg.window_hits + agg.window_timeouts > 0,
+        "cluster nodes must have exercised the admission window"
+    );
+    assert_eq!(_coord.snapshot().window_hits, 0, "single node runs window-off");
+
+    let _ = sc.shutdown(9_999);
+    let _ = single_thread.join();
+    cluster.shutdown();
+}
+
+/// Owner-down failover: replicated operands keep answering bitwise
+/// identically from a ring successor; an unreplicated operand owned by
+/// the same stopped node degrades with the typed error — on both planes.
+#[test]
+fn owner_down_failover_is_bitwise_and_unreplicated_degrades_typed() {
+    // Huge replicate_after: replication happens only when the test says so.
+    let mut cluster = boot_cluster(u64::MAX);
+    let mut client = Client::connect(cluster.router_addr()).unwrap();
+
+    let n = 64usize;
+    let mut rng = Rng::new(77);
+    let a1 = gen::generate(gen::Pattern::ALL[0], n, 0.9, &mut rng);
+    let b = Mat::randn(n, n, &mut rng);
+
+    let p1 = client.put_a_inline(1, n, &a1.data, "auto").unwrap();
+    assert!(p1.ok, "{:?}", p1.error);
+    let h1 = p1.a_handle.unwrap();
+    let owner = cluster.owner_of(h1);
+
+    // A second operand owned by the same node (so stopping that node
+    // takes both down): scan seeds until content routing lands there.
+    let mut h2 = None;
+    for seed in 100..200u64 {
+        let mut rng = Rng::new(seed);
+        let a2 = gen::generate(gen::Pattern::ALL[1], n, 0.9, &mut rng);
+        let p2 = client.put_a_inline(seed, n, &a2.data, "auto").unwrap();
+        assert!(p2.ok, "{:?}", p2.error);
+        let h = p2.a_handle.unwrap();
+        if cluster.owner_of(h) == owner {
+            h2 = Some(h);
+            break;
+        }
+        let _ = client.drop_a(seed + 1_000, h);
+    }
+    let h2 = h2.expect("some seed lands on the same owner within 100 tries");
+
+    // Baseline bits with the owner up.
+    let base_json = client.spdm_handle(10, h1, &b.data, false).unwrap();
+    assert!(base_json.ok, "{:?}", base_json.error);
+    let (base_bin, base_c) = client.spdm_handle_bin(11, h1, n, &b.data, None, false, true).unwrap();
+    assert!(base_bin.ok, "{:?}", base_bin.error);
+    let base_c = base_c.expect("baseline C");
+
+    // Replicate h1 (and only h1) to its ring successor, then kill the
+    // owner's serving endpoint.
+    let installed = cluster.replicate(h1).expect("replication succeeds");
+    assert_eq!(installed, 1, "one fresh replica on the 2-replica ring");
+    let chain = cluster.replica_chain(h1);
+    assert_eq!(chain[0], owner);
+    assert!(
+        cluster.coordinator(chain[1] as usize).store().peek_entry(
+            gcoospdm::coordinator::OperandId(h1)
+        ).is_some(),
+        "replica node holds the copy"
+    );
+    cluster.stop_node(owner as usize);
+
+    // Replicated operand: served from the successor, bitwise identical,
+    // both planes — on the SAME client connection (its cached backend
+    // route to the dead owner must fail over) and on a fresh one.
+    for c in [&mut client, &mut Client::connect(cluster.router_addr()).unwrap()] {
+        let r = c.spdm_handle(20, h1, &b.data, false).unwrap();
+        assert!(r.ok, "failover JSON serves: {:?}", r.error);
+        assert_eq!(bits(r.checksum), bits(base_json.checksum), "failover JSON checksum bits");
+        let (r, cm) = c.spdm_handle_bin(21, h1, n, &b.data, None, false, true).unwrap();
+        assert!(r.ok, "failover binary serves: {:?}", r.error);
+        assert_eq!(bits(r.checksum), bits(base_bin.checksum), "failover binary checksum bits");
+        assert_c_bits_equal(cm.as_ref().expect("failover C"), &base_c, "failover");
+
+        // Unreplicated operand on the stopped owner: typed degradation
+        // error, not a hang, not a silent wrong answer — both planes.
+        let r = c.spdm_handle(22, h2, &b.data, false).unwrap();
+        assert!(!r.ok, "unreplicated operand must not serve");
+        let err = r.error.unwrap_or_default();
+        assert!(err.starts_with(DEGRADED_PREFIX), "typed degradation (JSON): {err}");
+        let (r, _) = c.spdm_handle_bin(23, h2, n, &b.data, None, false, false).unwrap();
+        assert!(!r.ok, "unreplicated operand must not serve on the binary plane");
+        let err = r.error.unwrap_or_default();
+        assert!(err.starts_with(DEGRADED_PREFIX), "typed degradation (binary): {err}");
+    }
+
+    cluster.shutdown();
+}
+
+/// Cluster `stats` sums the per-node gauges exactly: every counter in the
+/// router's aggregated snapshot equals the sum over the in-process node
+/// coordinators, taken on quiesced traffic.
+#[test]
+fn cluster_stats_aggregation_sums_node_gauges_exactly() {
+    let mut cluster = boot_cluster(2);
+    let mut client = Client::connect(cluster.router_addr()).unwrap();
+
+    let n = 64usize;
+    let mut rng = Rng::new(5);
+    let a = gen::generate(gen::Pattern::ALL[2], n, 0.9, &mut rng);
+    let b = Mat::randn(n, n, &mut rng);
+    let p = client.put_a_inline(1, n, &a.data, "auto").unwrap();
+    assert!(p.ok, "{:?}", p.error);
+    let h = p.a_handle.unwrap();
+    for i in 0..5u64 {
+        let r = client.spdm_handle(10 + i, h, &b.data, false).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+    }
+    // Spread some inline traffic (content keys land where they land) and
+    // one error so the error counter is non-trivial somewhere.
+    for i in 0..4u64 {
+        let mut rng = Rng::new(50 + i);
+        let ai = gen::generate(gen::Pattern::ALL[i as usize % 6], n, 0.9, &mut rng);
+        let bi = Mat::randn(n, n, &mut rng);
+        let r = client.spdm_inline(30 + i, n, &ai.data, &bi.data, false).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+    }
+    let r = client.drop_a(90, 999_999).unwrap();
+    assert!(!r.ok, "bogus drop must fail");
+
+    // All traffic above is run_sync — replies arrived, so every node's
+    // metrics are settled. Compare the wire-aggregated stats to the sum
+    // of the in-process snapshots.
+    let reply = client.stats(100).unwrap();
+    assert!(reply.ok, "{:?}", reply.error);
+    let doc = json::parse(&reply.metrics.expect("stats carries metrics")).unwrap();
+    let agg = cluster.snapshot();
+    let sum_of = |f: fn(&gcoospdm::coordinator::MetricsSnapshot) -> u64| -> u64 {
+        (0..cluster.node_count()).map(|i| f(&cluster.coordinator(i).snapshot())).sum()
+    };
+    let field = |k: &str| -> u64 {
+        doc.get(k).and_then(Value::as_u64).unwrap_or_else(|| panic!("stats field {k}"))
+    };
+    for (name, by_node, via_wire) in [
+        ("submitted", sum_of(|s| s.submitted), field("submitted")),
+        ("completed", sum_of(|s| s.completed), field("completed")),
+        ("errors", sum_of(|s| s.errors), field("errors")),
+        ("verify_failures", sum_of(|s| s.verify_failures), field("verify_failures")),
+        ("conversions_total", sum_of(|s| s.conversions_total), field("conversions_total")),
+        ("store_entries", sum_of(|s| s.store_entries), field("store_entries")),
+        ("store_bytes", sum_of(|s| s.store_bytes), field("store_bytes")),
+        ("store_budget_bytes", sum_of(|s| s.store_budget_bytes), field("store_budget_bytes")),
+        ("store_hits", sum_of(|s| s.store_hits), field("store_hits")),
+        ("store_misses", sum_of(|s| s.store_misses), field("store_misses")),
+        ("store_evictions", sum_of(|s| s.store_evictions), field("store_evictions")),
+        ("window_hits", sum_of(|s| s.window_hits), field("window_hits")),
+        ("window_timeouts", sum_of(|s| s.window_timeouts), field("window_timeouts")),
+    ] {
+        assert_eq!(via_wire, by_node, "stats field {name} must sum node gauges exactly");
+    }
+    // The aggregated snapshot the router serves is the same function the
+    // Cluster accessor exposes.
+    assert_eq!(field("submitted"), agg.submitted);
+    assert_eq!(field("store_hits"), agg.store_hits);
+    let hist: u64 = doc
+        .get("batch_hist")
+        .and_then(Value::as_arr)
+        .expect("batch_hist array")
+        .iter()
+        .filter_map(Value::as_u64)
+        .sum();
+    let hist_by_node: u64 =
+        (0..cluster.node_count()).map(|i| cluster.coordinator(i).snapshot().batch_hist.iter().sum::<u64>()).sum();
+    assert_eq!(hist, hist_by_node, "batch_hist sums bucket-wise");
+
+    cluster.shutdown();
+}
+
+/// Cluster-aware addressing: the membership doc round-trips over its
+/// codec, and `connect_any` dials through dead addresses to a live one.
+#[test]
+fn membership_doc_and_connect_any_reach_the_cluster() {
+    let mut cluster = boot_cluster(3);
+    let doc = cluster.membership().to_json();
+    let back = Membership::from_json(&doc).expect("membership round-trips");
+    assert_eq!(&back, cluster.membership());
+    assert_eq!(back.nodes.len(), 3);
+
+    // Router first, node addresses as fallback — and a dead address in
+    // front must not prevent the connect.
+    let mut addrs = vec!["127.0.0.1:1".to_string(), cluster.router_addr().to_string()];
+    addrs.extend(back.nodes.iter().map(|n| n.addr.clone()));
+    let mut client = Client::connect_any(&addrs).expect("connect_any finds the router");
+    let r = client.ping(1).unwrap();
+    assert!(r.ok);
+    let r = client.ping_bin(2).unwrap();
+    assert!(r.ok, "both planes answer through connect_any");
+
+    assert!(Client::connect_any(&["127.0.0.1:1"]).is_err(), "all-dead list errors");
+    cluster.shutdown();
+}

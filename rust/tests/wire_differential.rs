@@ -265,6 +265,79 @@ fn crafted_nan_payload_gets_typed_error_frame_with_request_id() {
     server.join().unwrap();
 }
 
+/// Checked-dims validation (PR 8 satellite): a crafted frame whose
+/// declared n×n dims disagree with — or arithmetically overflow — the
+/// operand bytes it carries earns a typed error frame with the request id
+/// *before any buffer is sized*. A 20-byte frame claiming a 60000×60000 A
+/// must never turn into a multi-GB reservation, and an n = 2³¹ wrap bait
+/// (old unchecked `2·n²·4` ≡ 0 mod 2⁶⁴ matches an empty operand region)
+/// must not slip through the length equality.
+#[test]
+fn crafted_dim_mismatch_and_overflow_frames_get_typed_errors() {
+    let (_coord, addr, server) = boot(one_worker());
+    let mut stream = TcpStream::connect(&addr).unwrap();
+
+    // Hand-build a raw spdm_inline frame: header + the 14 fixed payload
+    // bytes (id u64 | n u32 | flags u8 | algo u8), zero operand bytes.
+    let send_tiny_inline = |stream: &mut TcpStream, id: u64, n: u32| {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&id.to_le_bytes());
+        payload.extend_from_slice(&n.to_le_bytes());
+        payload.extend_from_slice(&[0, 0]); // flags, algo auto
+        let mut msg = vec![frame::MAGIC, frame::VERSION, frame::FT_SPDM_INLINE];
+        msg.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        msg.extend_from_slice(&payload);
+        stream.write_all(&msg).unwrap();
+        stream.flush().unwrap();
+    };
+    let read_reply = |stream: &mut TcpStream| {
+        let mut hdr = [0u8; frame::HEADER_LEN];
+        stream.read_exact(&mut hdr).unwrap();
+        let h = frame::parse_header(&hdr).unwrap();
+        let mut payload = vec![0u8; h.len];
+        stream.read_exact(&mut payload).unwrap();
+        frame::decode_response(h.ftype, &payload).unwrap().0
+    };
+
+    // Over the 256 MiB frame cap: typed error naming the declared dims.
+    send_tiny_inline(&mut stream, 51, 60000);
+    let resp = read_reply(&mut stream);
+    assert!(!resp.ok);
+    assert_eq!(resp.id, 51, "error frame carries the request id");
+    let err = resp.error.unwrap();
+    assert!(err.contains("60000x60000") && err.contains("overflow"), "{err}");
+
+    // u64 wrap bait on the same (still-open) connection.
+    send_tiny_inline(&mut stream, 52, 0x8000_0000);
+    let resp = read_reply(&mut stream);
+    assert!(!resp.ok);
+    assert_eq!(resp.id, 52);
+    assert!(resp.error.unwrap().contains("overflow"));
+
+    // Plain mismatch: dims say 8×8 per operand, frame carries 4 floats.
+    let short = [1.0f32; 4];
+    let bytes = frame::encode_spdm_handle_b(53, 1, 8, &short, None, false, false);
+    stream.write_all(&bytes).unwrap();
+    stream.flush().unwrap();
+    let resp = read_reply(&mut stream);
+    assert!(!resp.ok);
+    assert_eq!(resp.id, 53);
+    let err = resp.error.unwrap();
+    assert!(err.contains("expected 1·n²·4"), "typed mismatch error: {err}");
+
+    // Dim rejections are payload-level: the same socket still serves.
+    stream.write_all(&frame::encode_ping(54)).unwrap();
+    stream.flush().unwrap();
+    let resp = read_reply(&mut stream);
+    assert!(resp.ok, "connection survives dim rejections");
+    assert_eq!(resp.id, 54);
+    drop(stream);
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.shutdown(99).unwrap();
+    server.join().unwrap();
+}
+
 /// A bad frame header (wrong version under the real magic) is
 /// unresyncable: the server replies with a typed error frame and closes
 /// the connection.
