@@ -1,0 +1,236 @@
+#!/usr/bin/env python3
+"""Toolchain-less static audit for the rust crate (ISSUE 9 satellite).
+
+The growth containers don't always ship cargo, but every PR still lands
+Rust that must at least be *structurally* sound. This script catches the
+two classes of breakage a text edit can introduce without a compiler:
+
+1. **Delimiter balance** — `()`, `[]`, `{}` must balance per file, after
+   stripping line/block comments (nested), string literals (including
+   raw strings with any `#` count and byte strings), char literals, and
+   lifetimes (`'a` is not an unterminated char).
+2. **Import cross-check** — every leaf imported via `use gcoospdm::...`
+   in `rust/tests` and `rust/benches` must correspond to a `pub` symbol
+   (`fn`/`struct`/`enum`/`trait`/`type`/`mod`/`const`/`static`, or a
+   `pub use` re-export leaf/alias) declared somewhere under `rust/src`.
+   This is what catches a test written against a misremembered API name.
+
+Usage: python3 python/scripts/static_audit.py [repo_root]
+Exit 0 iff both audits pass. Runs in ci.sh before any cargo step, so a
+container without the toolchain still gets a meaningful gate.
+"""
+
+import os
+import re
+import sys
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {v: k for k, v in OPEN.items()}
+
+
+def strip_rust(src):
+    """Replace comments/strings/chars with spaces, preserving newlines."""
+    out = []
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        # Line comment (// and ///): drop to end of line.
+        if c == "/" and nxt == "/":
+            j = src.find("\n", i)
+            if j == -1:
+                j = n
+            out.append(" " * (j - i))
+            i = j
+            continue
+        # Block comment, nested per Rust.
+        if c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            out.append("".join(ch if ch == "\n" else " " for ch in src[i:j]))
+            i = j
+            continue
+        # Raw (byte) string: r"..."  r#"..."#  br##"..."## etc.
+        m = re.match(r'(?:b?r)(#*)"', src[i:])
+        if m and (i == 0 or not (src[i - 1].isalnum() or src[i - 1] == "_")):
+            close = '"' + m.group(1)
+            j = src.find(close, i + m.end())
+            j = n if j == -1 else j + len(close)
+            out.append("".join(ch if ch == "\n" else " " for ch in src[i:j]))
+            i = j
+            continue
+        # Plain / byte string with escapes.
+        if c == '"' or (c == "b" and nxt == '"' and (i == 0 or not (src[i - 1].isalnum() or src[i - 1] == "_"))):
+            j = i + (2 if c == "b" else 1)
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            out.append("".join(ch if ch == "\n" else " " for ch in src[i:j]))
+            i = j
+            continue
+        # Char literal vs lifetime.
+        if c == "'":
+            if nxt == "\\":
+                j = i + 2
+                while j < n and src[j] != "'":
+                    j += 1
+                out.append(" " * (j + 1 - i))
+                i = j + 1
+                continue
+            if i + 2 < n and src[i + 2] == "'" and nxt not in ("'", "\n"):
+                out.append("   ")
+                i += 3
+                continue
+            # Lifetime (or labeled loop): drop the quote alone.
+            out.append(" ")
+            i += 1
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def check_balance(path, stripped):
+    errs = []
+    stack = []
+    line = 1
+    for ch in stripped:
+        if ch == "\n":
+            line += 1
+        elif ch in OPEN:
+            stack.append((ch, line))
+        elif ch in CLOSE:
+            if not stack or stack[-1][0] != CLOSE[ch]:
+                errs.append(f"{path}:{line}: unmatched `{ch}`")
+                return errs  # later errors are cascade noise
+            stack.pop()
+    for ch, ln in stack:
+        errs.append(f"{path}:{ln}: unclosed `{ch}`")
+    return errs
+
+
+PUB_DECL = re.compile(
+    r"\bpub(?:\s*\(\s*[\w: ]*\))?\s+(?:unsafe\s+)?(?:async\s+)?(?:extern\s+\"[^\"]*\"\s+)?"
+    r"(fn|struct|enum|trait|type|mod|const|static|union)\s+([A-Za-z_]\w*)"
+)
+PUB_USE = re.compile(r"\bpub\s+use\s+([^;]+);")
+TEST_USE = re.compile(r"\buse\s+gcoospdm\s*::\s*([^;]+);")
+
+
+def use_leaves(clause):
+    """Leaf names of a use clause: `a::{B, c::D as E, self}` -> B, D/E."""
+    clause = clause.strip()
+    leaves = set()
+
+    def walk(s, parent):
+        s = s.strip()
+        if s.endswith("}"):
+            head, _, body = s.partition("{")
+            body = body.rsplit("}", 1)[0]
+            head_leaf = head.strip().rstrip(":").rsplit("::", 1)[-1].strip() or parent
+            depth, item = 0, []
+            for ch in body:
+                if ch == "{":
+                    depth += 1
+                elif ch == "}":
+                    depth -= 1
+                if ch == "," and depth == 0:
+                    walk("".join(item), head_leaf)
+                    item = []
+                else:
+                    item.append(ch)
+            if "".join(item).strip():
+                walk("".join(item), head_leaf)
+            return
+        if " as " in s:
+            orig, alias = s.split(" as ", 1)
+            leaves.add(orig.strip().rsplit("::", 1)[-1])
+            leaves.add(alias.strip())
+            return
+        leaf = s.rsplit("::", 1)[-1].strip()
+        if leaf == "self":
+            # `x::{self}` imports `x` itself
+            head = s.rsplit("::", 1)[0].rsplit("::", 1)[-1].strip() or parent
+            if head and head != "self":
+                leaves.add(head)
+        elif leaf and leaf != "*":
+            leaves.add(leaf)
+
+    walk(clause, "")
+    return leaves
+
+
+def collect(root, subdirs):
+    files = []
+    for sub in subdirs:
+        d = os.path.join(root, sub)
+        if not os.path.isdir(d):
+            continue
+        for dirpath, _, names in os.walk(d):
+            files.extend(os.path.join(dirpath, f) for f in sorted(names) if f.endswith(".rs"))
+    return files
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    src_files = collect(root, ["rust/src"])
+    consumer_files = collect(root, ["rust/tests", "rust/benches", "rust/examples"])
+    if not src_files:
+        sys.exit(f"static_audit: no rust sources under {root}")
+
+    errors = []
+
+    # Audit 1: delimiter balance over sources AND consumers.
+    stripped_by_file = {}
+    for path in src_files + consumer_files:
+        with open(path, encoding="utf-8") as fh:
+            stripped = strip_rust(fh.read())
+        stripped_by_file[path] = stripped
+        errors.extend(check_balance(os.path.relpath(path, root), stripped))
+
+    # Audit 2: pub symbols vs `use gcoospdm::` leaves.
+    declared = set()
+    for path in src_files:
+        stripped = stripped_by_file[path]
+        for m in PUB_DECL.finditer(stripped):
+            declared.add(m.group(2))
+        for m in PUB_USE.finditer(stripped):
+            declared |= use_leaves(m.group(1))
+        # file-backed modules are implicitly declared by their path
+        declared.add(os.path.splitext(os.path.basename(path))[0])
+        declared.add(os.path.basename(os.path.dirname(path)))
+
+    imported = 0
+    for path in consumer_files:
+        rel = os.path.relpath(path, root)
+        for m in TEST_USE.finditer(stripped_by_file[path]):
+            for leaf in use_leaves(m.group(1)):
+                imported += 1
+                if leaf not in declared:
+                    errors.append(f"{rel}: `use gcoospdm::...::{leaf}` has no pub declaration in rust/src")
+
+    if errors:
+        print("static_audit: FAIL", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"static_audit: OK — {len(src_files) + len(consumer_files)} files balanced, "
+          f"{imported} crate imports resolved against {len(declared)} pub symbols")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,13 +12,19 @@
 //! latency percentiles with the admission window on vs off, and a
 //! cluster-vs-single A/B: the same handle workload through one plain
 //! server vs a 3-node sharded cluster behind the consistent-hash router
-//! (bitwise-checked checksums, req/s both sides = router overhead).
+//! (bitwise-checked checksums, req/s both sides = router overhead),
+//! a hot-tenant-vs-fair A/B (a flooding tenant ahead of a light tenant:
+//! FIFO vs weighted DRR lanes, bitwise-checked checksums, light tenant's
+//! time-to-drain both sides), and a spill-promote-vs-reconvert A/B (a
+//! demoted handle served by one sequential slab read vs re-shipping A
+//! inline and reconverting per request — bitwise-checked checksums and
+//! a conversion counter pinned across the promote cycles).
 //!
 //! The engine only needs artifact files to *exist*, so the bench fabricates
 //! a runnable registry under `target/` — no `make artifacts` required.
 //!
 //! Besides the printed lines, every run emits a machine-readable summary
-//! (`BENCH_8.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
+//! (`BENCH_9.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
 //! latency percentiles, wire bytes per request, and the
 //! copy/conversion/flip/window counters.
 //!
@@ -33,7 +39,7 @@ use gcoospdm::convert;
 use gcoospdm::json::{self, Value};
 use gcoospdm::coordinator::{
     process_batch_ws, process_one_ws, BatchJob, Coordinator, CoordinatorConfig, Selector,
-    SpdmRequest, TunerConfig, Workspace,
+    SpdmRequest, TenantSpec, TunerConfig, Workspace,
 };
 use gcoospdm::gen;
 use gcoospdm::ndarray::Mat;
@@ -136,7 +142,7 @@ fn main() {
     let cfg = CoordinatorConfig { workers: 2, ..Default::default() };
     println!("serve_hotpath: {} requests, fixed seeds, quick={quick}", iters);
 
-    // Per-phase results, emitted as BENCH_8.json at the end of the run
+    // Per-phase results, emitted as BENCH_9.json at the end of the run
     // (machine-readable mirror of the printed lines; ci.sh --quick runs this).
     let mut phases: Vec<Value> = Vec::new();
 
@@ -759,11 +765,234 @@ fn main() {
         );
     }
 
-    // --- Emit BENCH_8.json ---------------------------------------------
+    // --- Phase 9: hot-tenant vs weighted-fair A/B (fixed seeds) ---------
+    // A flooding tenant submits a burst ahead of a light tenant's handful
+    // of requests. Untenanted FIFO drains the flood first; weighted DRR
+    // lanes interleave, so the light tenant's last reply lands long before
+    // the flood finishes. Checksums are asserted bitwise equal across the
+    // two scheduling regimes — fairness changes *order*, never *bits*.
+    {
+        let heavy_n: usize = if quick { 16 } else { 48 };
+        let light_n: usize = if quick { 4 } else { 12 };
+        let n = 256usize;
+        let mut rng = Rng::new(9000);
+        let a_heavy = gen::uniform(n, 0.99, &mut rng);
+        let a_light = gen::uniform(n, 0.99, &mut rng);
+        let bs_heavy: Vec<Mat> = (0..heavy_n).map(|_| Mat::randn(n, n, &mut rng)).collect();
+        let bs_light: Vec<Mat> = (0..light_n).map(|_| Mat::randn(n, n, &mut rng)).collect();
+
+        // Returns (light-drain seconds, total seconds, checksum bits by id).
+        let run = |tenants: Vec<TenantSpec>| {
+            let tagged = !tenants.is_empty();
+            let coord = Coordinator::new(
+                Arc::new(registry()),
+                CoordinatorConfig { workers: 1, tenants, ..Default::default() },
+            );
+            let (eh, el) = if tagged {
+                (
+                    coord.put_a_for("heavy", a_heavy.clone(), None).expect("put_a heavy"),
+                    coord.put_a_for("light", a_light.clone(), None).expect("put_a light"),
+                )
+            } else {
+                (
+                    coord.put_a(a_heavy.clone(), None).expect("put_a heavy"),
+                    coord.put_a(a_light.clone(), None).expect("put_a light"),
+                )
+            };
+            let warm = coord.run_sync(SpdmRequest::for_handle(9999, eh.handle, bs_heavy[0].clone()));
+            assert!(warm.ok(), "{:?}", warm.error);
+            let t0 = Instant::now();
+            let heavy_rxs: Vec<_> = bs_heavy
+                .iter()
+                .enumerate()
+                .map(|(i, b)| {
+                    let mut r = SpdmRequest::for_handle(i as u64, eh.handle, b.clone());
+                    if tagged {
+                        r = r.with_tenant("heavy");
+                    }
+                    coord.submit(r).expect("queue open")
+                })
+                .collect();
+            let light_rxs: Vec<_> = bs_light
+                .iter()
+                .enumerate()
+                .map(|(i, b)| {
+                    let mut r =
+                        SpdmRequest::for_handle((1000 + i) as u64, el.handle, b.clone());
+                    if tagged {
+                        r = r.with_tenant("light");
+                    }
+                    coord.submit(r).expect("queue open")
+                })
+                .collect();
+            let checksum = |resp: gcoospdm::coordinator::SpdmResponse| {
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                let c = resp.c.expect("response carries C");
+                let sum: f64 = c.data.iter().map(|x| *x as f64).sum();
+                sum.to_bits()
+            };
+            let light_sums: Vec<u64> =
+                light_rxs.into_iter().map(|rx| checksum(rx.recv().expect("reply"))).collect();
+            let light_s = t0.elapsed().as_secs_f64();
+            let heavy_sums: Vec<u64> =
+                heavy_rxs.into_iter().map(|rx| checksum(rx.recv().expect("reply"))).collect();
+            let total_s = t0.elapsed().as_secs_f64();
+            coord.shutdown();
+            (light_s, total_s, heavy_sums, light_sums)
+        };
+
+        let (fifo_light_s, fifo_total_s, fifo_heavy, fifo_light) = run(Vec::new());
+        let (fair_light_s, fair_total_s, fair_heavy, fair_light) = run(vec![
+            TenantSpec { name: "heavy".into(), weight: 1, ..TenantSpec::unlimited("heavy") },
+            TenantSpec { name: "light".into(), weight: 4, ..TenantSpec::unlimited("light") },
+        ]);
+        assert_eq!(fifo_heavy, fair_heavy, "fair scheduling must never change heavy-tenant bits");
+        assert_eq!(fifo_light, fair_light, "fair scheduling must never change light-tenant bits");
+        println!(
+            "hot-tenant vs fair (flood {heavy_n} ahead of {light_n}): light drained in \
+             {:.1} ms fair vs {:.1} ms FIFO (totals {:.1} / {:.1} ms)",
+            fair_light_s * 1e3,
+            fifo_light_s * 1e3,
+            fair_total_s * 1e3,
+            fifo_total_s * 1e3
+        );
+        phases.push(
+            Value::obj()
+                .field("phase", "tenant_fairness")
+                .field("flood_requests", heavy_n)
+                .field("light_requests", light_n)
+                .field("light_drain_ms_fifo", fifo_light_s * 1e3)
+                .field("light_drain_ms_fair", fair_light_s * 1e3)
+                .field("total_ms_fifo", fifo_total_s * 1e3)
+                .field("total_ms_fair", fair_total_s * 1e3)
+                .field("bitwise_identical", true)
+                .build(),
+        );
+    }
+
+    // --- Phase 10: spill promote vs inline reconvert (fixed seeds) ------
+    // Two operands thrash one tenant's single-entry slice, so every handle
+    // request promotes a demoted entry from the disk tier (one sequential
+    // slab read, zero reconversion — the counter is pinned). The baseline
+    // is what a spill-less server forces on an evicted client: re-ship A
+    // inline and pay the conversion again on every request.
+    {
+        let cycles: usize = if quick { 6 } else { 24 };
+        let n = 256usize;
+        let mut rng = Rng::new(9500);
+        let a1 = gen::uniform(n, 0.99, &mut rng);
+        let a2 = gen::uniform(n, 0.99, &mut rng);
+        let bs: Vec<Mat> = (0..2).map(|_| Mat::randn(n, n, &mut rng)).collect();
+
+        // Size the slice off real registrations: fits either, never both.
+        let (slice, base_sums, reconvert_rps, reconvert_conversions) = {
+            let coord = Coordinator::new(
+                Arc::new(registry()),
+                CoordinatorConfig { workers: 1, ..Default::default() },
+            );
+            let e1 = coord.put_a(a1.clone(), None).expect("put_a a1");
+            let e2 = coord.put_a(a2.clone(), None).expect("put_a a2");
+            let slice = (e1.bytes.max(e2.bytes) + e1.bytes + e2.bytes) / 2;
+            let warm = coord.run_sync(SpdmRequest::new(9999, a1.clone(), bs[0].clone()));
+            assert!(warm.ok(), "{:?}", warm.error);
+            let conv0 = coord.snapshot().conversions_total;
+            let t0 = Instant::now();
+            let mut sums = Vec::new();
+            for i in 0..cycles {
+                for (k, a) in [&a1, &a2].into_iter().enumerate() {
+                    let resp = coord.run_sync(SpdmRequest::new(
+                        (i * 2 + k) as u64,
+                        a.clone(),
+                        bs[k].clone(),
+                    ));
+                    assert!(resp.ok(), "{:?}", resp.error);
+                    let sum: f64 =
+                        resp.c.expect("C").data.iter().map(|x| *x as f64).sum();
+                    sums.push(sum.to_bits());
+                }
+            }
+            let rps = (cycles * 2) as f64 / t0.elapsed().as_secs_f64();
+            let conversions = coord.snapshot().conversions_total - conv0;
+            coord.shutdown();
+            (slice, sums, rps, conversions)
+        };
+
+        let spill_dir = std::env::temp_dir()
+            .join(format!("gcoospdm_bench_spill_{}", std::process::id()));
+        let coord = Coordinator::new(
+            Arc::new(registry()),
+            CoordinatorConfig {
+                workers: 1,
+                tenants: vec![TenantSpec {
+                    store_slice_bytes: slice,
+                    ..TenantSpec::unlimited("solo")
+                }],
+                spill_dir: Some(spill_dir.clone()),
+                ..Default::default()
+            },
+        );
+        let e1 = coord.put_a_for("solo", a1.clone(), None).expect("put_a a1");
+        let e2 = coord.put_a_for("solo", a2.clone(), None).expect("put_a a2");
+        let handles = [e1.handle, e2.handle];
+        let conv0 = coord.snapshot().conversions_total;
+        let t0 = Instant::now();
+        let mut promote_sums = Vec::new();
+        for i in 0..cycles {
+            for k in 0..2usize {
+                // Each request targets the currently-demoted operand: one
+                // promote (and one displacement) per request.
+                let resp = coord.run_sync(
+                    SpdmRequest::for_handle((i * 2 + k) as u64, handles[k], bs[k].clone())
+                        .with_tenant("solo"),
+                );
+                assert!(resp.ok(), "{:?}", resp.error);
+                let sum: f64 = resp.c.expect("C").data.iter().map(|x| *x as f64).sum();
+                promote_sums.push(sum.to_bits());
+            }
+        }
+        let promote_rps = (cycles * 2) as f64 / t0.elapsed().as_secs_f64();
+        assert_eq!(
+            coord.snapshot().conversions_total - conv0,
+            0,
+            "promote cycles must never reconvert"
+        );
+        let st = coord.store().stats();
+        assert_eq!(
+            base_sums, promote_sums,
+            "spill promotion must serve bitwise-identical results"
+        );
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&spill_dir);
+
+        println!(
+            "spill promote vs reconvert: promote {promote_rps:.1} req/s | inline reconvert \
+             {reconvert_rps:.1} req/s | speedup {:.2}x ({} promotes, {} spill writes, \
+             0 vs {} conversions)",
+            promote_rps / reconvert_rps,
+            st.spill_promotes,
+            st.spill_writes,
+            reconvert_conversions
+        );
+        phases.push(
+            Value::obj()
+                .field("phase", "spill_promote_vs_reconvert")
+                .field("promote_req_s", promote_rps)
+                .field("reconvert_req_s", reconvert_rps)
+                .field("speedup", promote_rps / reconvert_rps)
+                .field("spill_writes", st.spill_writes)
+                .field("spill_promotes", st.spill_promotes)
+                .field("reconvert_conversions", reconvert_conversions)
+                .field("promote_conversions", 0u64)
+                .field("bitwise_identical", true)
+                .build(),
+        );
+    }
+
+    // --- Emit BENCH_9.json ---------------------------------------------
     // cwd under `cargo bench` (and ci.sh) is the crate root `rust/`, so the
     // default lands next to the repo-level BENCH files. Override with
     // BENCH_JSON=/path to redirect.
-    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_8.json".to_string());
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_9.json".to_string());
     let doc = Value::obj()
         .field("bench", "serve_hotpath")
         .field("generated", true)

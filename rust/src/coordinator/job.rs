@@ -1,6 +1,7 @@
 //! Job types crossing the coordinator boundary.
 
 use super::store::{OperandEntry, OperandId};
+use super::tenant::DEFAULT_TENANT;
 use crate::ndarray::Mat;
 
 /// Algorithm families (defined next to the planner in `runtime::plan`,
@@ -96,13 +97,26 @@ pub struct SpdmRequest {
     /// for inline operands; for handle operands a placeholder until
     /// [`super::Coordinator::submit`] copies the store entry's signature in.
     pub a_sig: ASig,
+    /// Owning tenant (ISSUE 9): the scheduling lane, token bucket, and
+    /// store slice this request charges. [`DEFAULT_TENANT`] when absent
+    /// on the wire — and batch affinity additionally requires equal
+    /// tenants, so fusion never crosses a tenant boundary.
+    pub tenant: String,
 }
 
 impl SpdmRequest {
     /// Inline-A request (the v1 constructor — unchanged call shape).
     pub fn new(id: u64, a: Mat, b: Mat) -> Self {
         let a_sig = ASig::of(&a);
-        SpdmRequest { id, a: AOperand::Inline(a), b, algo_hint: None, verify: false, a_sig }
+        SpdmRequest {
+            id,
+            a: AOperand::Inline(a),
+            b,
+            algo_hint: None,
+            verify: false,
+            a_sig,
+            tenant: DEFAULT_TENANT.to_string(),
+        }
     }
 
     /// Handle-A request. The signature is a placeholder derived from the
@@ -111,7 +125,21 @@ impl SpdmRequest {
     /// mixed handle/inline traffic batches on equal content.
     pub fn for_handle(id: u64, handle: OperandId, b: Mat) -> Self {
         let a_sig = ASig { rows: 0, cols: 0, nnz: 0, hash: handle.0 };
-        SpdmRequest { id, a: AOperand::Handle(handle), b, algo_hint: None, verify: false, a_sig }
+        SpdmRequest {
+            id,
+            a: AOperand::Handle(handle),
+            b,
+            algo_hint: None,
+            verify: false,
+            a_sig,
+            tenant: DEFAULT_TENANT.to_string(),
+        }
+    }
+
+    /// Builder: tag the request with its owning tenant.
+    pub fn with_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
+        self
     }
 
     /// The dense A this request multiplies by: the inline payload, or the

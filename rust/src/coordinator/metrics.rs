@@ -171,6 +171,9 @@ impl Metrics {
             store_hits: 0,
             store_misses: 0,
             store_evictions: 0,
+            spill_writes: 0,
+            spill_promotes: 0,
+            spill_bytes: 0,
             route_flips: 0,
             explorations: 0,
             window_hits: self.window_hits.load(Ordering::Relaxed),
@@ -225,6 +228,14 @@ pub struct MetricsSnapshot {
     pub store_hits: u64,
     pub store_misses: u64,
     pub store_evictions: u64,
+    /// Spill-tier gauges (ISSUE 9), filled by `Coordinator::snapshot` from
+    /// the store's spill tier (zero from a bare `Metrics::snapshot`, and
+    /// zero with no `spill_dir` configured): entries demoted to disk,
+    /// entries promoted back by a handle miss, and file bytes resident in
+    /// the tier right now.
+    pub spill_writes: u64,
+    pub spill_promotes: u64,
+    pub spill_bytes: u64,
     /// Adaptive-routing counters, filled by `Coordinator::snapshot` from
     /// the tuner (zero from a bare `Metrics::snapshot`): model-driven
     /// route flips (entry republishes) and seeded exploration executions.
@@ -276,6 +287,7 @@ impl MetricsSnapshot {
              batches:  width hist {:?} (mean width {:.2}) / {} conversions amortized\n\
              window:   {} filled / {} timed out\n\
              store:    {} operands / {} B of {} B budget / {} hits / {} misses / {} evictions / {} conversions total\n\
+             spill:    {} writes / {} promotes / {} B on disk\n\
              routing:  {} route flips / {} explorations\n\
              rate:     {:.1} req/s   per-algo: {:?}",
             self.submitted,
@@ -301,6 +313,9 @@ impl MetricsSnapshot {
             self.store_misses,
             self.store_evictions,
             self.conversions_total,
+            self.spill_writes,
+            self.spill_promotes,
+            self.spill_bytes,
             self.route_flips,
             self.explorations,
             self.throughput_rps,
@@ -335,6 +350,9 @@ impl MetricsSnapshot {
                 .field("store_hits", self.store_hits)
                 .field("store_misses", self.store_misses)
                 .field("store_evictions", self.store_evictions)
+                .field("spill_writes", self.spill_writes)
+                .field("spill_promotes", self.spill_promotes)
+                .field("spill_bytes", self.spill_bytes)
                 .field("route_flips", self.route_flips)
                 .field("explorations", self.explorations)
                 .field("window_hits", self.window_hits)
@@ -462,13 +480,20 @@ mod tests {
         s.store_hits = 7;
         s.store_misses = 1;
         s.store_evictions = 1;
+        s.spill_writes = 4;
+        s.spill_promotes = 2;
+        s.spill_bytes = 1024;
         s.route_flips = 2;
         s.explorations = 5;
         assert!(s.render().contains("2 operands / 4096 B of 8192 B budget"));
         assert!(s.render().contains("3 conversions total"));
+        assert!(s.render().contains("4 writes / 2 promotes / 1024 B on disk"));
         assert!(s.render().contains("2 route flips / 5 explorations"));
         let v = crate::json::parse(&s.to_json()).unwrap();
         assert_eq!(v.get("conversions_total").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("spill_writes").unwrap().as_u64(), Some(4));
+        assert_eq!(v.get("spill_promotes").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("spill_bytes").unwrap().as_u64(), Some(1024));
         assert_eq!(v.get("route_flips").unwrap().as_u64(), Some(2));
         assert_eq!(v.get("explorations").unwrap().as_u64(), Some(5));
         assert_eq!(v.get("store_hits").unwrap().as_u64(), Some(7));

@@ -25,7 +25,9 @@ mod selector;
 mod metrics;
 mod pool;
 mod shard;
+mod spill;
 mod store;
+mod tenant;
 mod tuner;
 mod workspace;
 
@@ -38,8 +40,12 @@ pub use pool::{
     process_one_ws, BatchJob, Coordinator, CoordinatorConfig, SubmitError, TuneCtx,
 };
 pub use shard::{Ring, ShardSpec, DEFAULT_RING_SEED, DEFAULT_VNODES};
+pub use spill::{RestoredEntry, SpillRow, SpillStats, SpillStore};
 pub use store::{
     OperandEntry, OperandId, OperandPin, OperandStore, OperandSummary, StoreStats,
+};
+pub use tenant::{
+    TenantRegistry, TenantSpec, DEFAULT_TENANT, MAX_TENANT_LEN, QUOTA_EXCEEDED, RATE_LIMITED,
 };
 pub use tuner::{
     explore_draw, Clock, ModelKey, PerfModel, RealClock, ScriptedClock, Tuner, TunerConfig,

@@ -19,6 +19,7 @@
 //!   + total, store gauges). Width-1 batches take [`process_one_ws`], the
 //!   sequential special case the differential suites compare against.
 
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -28,7 +29,9 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::queue::BoundedQueue;
 use super::selector::{Selector, SelectorPolicy};
 use super::shard::ShardSpec;
+use super::spill::SpillStore;
 use super::store::{OperandEntry, OperandId, OperandPin, OperandStore, OperandSummary};
+use super::tenant::{TenantRegistry, TenantSpec, DEFAULT_TENANT};
 use super::tuner::{Clock, ModelKey, RealClock, Tuner, TunerConfig};
 use super::workspace::Workspace;
 use crate::convert::{self, AStats};
@@ -38,7 +41,7 @@ use crate::runtime::{Engine, ExecPlan, Registry, SpdmOutput};
 use crate::sparse::{EllSlabs, GcooSlabs};
 
 /// Coordinator tuning knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub workers: usize,
     pub queue_cap: usize,
@@ -67,6 +70,16 @@ pub struct CoordinatorConfig {
     /// resolve any handle's owner by hashing the id — no translation
     /// maps. `None` keeps the dense 1, 2, 3… sequence bit-for-bit.
     pub shard: Option<ShardSpec>,
+    /// Tenant specs (ISSUE 9): per-tenant DRR weight, token-bucket rate,
+    /// and store slice. Empty (the default) = the unlimited `default`
+    /// tenant only — laneless queue, no rate limiting, whole-budget
+    /// slice, bit-for-bit pre-tenancy behavior.
+    pub tenants: Vec<TenantSpec>,
+    /// Directory for the disk spill tier (`None` = no tier: evictions
+    /// destroy the conversion, the pre-spill behavior).
+    pub spill_dir: Option<PathBuf>,
+    /// File-byte budget of the spill tier (0 = unbounded).
+    pub spill_budget_bytes: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -82,6 +95,9 @@ impl Default for CoordinatorConfig {
             tuning: TunerConfig::default(),
             admission_window_us: 0,
             shard: None,
+            tenants: Vec::new(),
+            spill_dir: None,
+            spill_budget_bytes: 256 << 20,
         }
     }
 }
@@ -98,14 +114,20 @@ pub struct TuneCtx<'a> {
 }
 
 /// Typed submission failure — the coordinator refusing a request is an
-/// expected condition (shutdown race, unregistered operand), not a panic.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// expected condition (shutdown race, unregistered operand, a tenant over
+/// its token bucket), not a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubmitError {
     /// The coordinator's queue is closed (shutdown started or completed).
     ShutDown,
     /// The request references an operand handle that is not registered
     /// (never was, was dropped, or was evicted).
     UnknownHandle(OperandId),
+    /// The tenant's token bucket is empty (ISSUE 9). The payload is the
+    /// full typed message (`RATE_LIMITED: …`) the wire layers forward
+    /// verbatim; the connection stays open and the bucket refills with
+    /// time — retry, don't reconnect.
+    RateLimited(String),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -113,6 +135,7 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::ShutDown => write!(f, "coordinator is shut down"),
             SubmitError::UnknownHandle(h) => write!(f, "unknown operand handle {h}"),
+            SubmitError::RateLimited(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -161,6 +184,7 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     store: Arc<OperandStore>,
     tuner: Arc<Tuner>,
+    tenants: Arc<TenantRegistry>,
     registry: Arc<Registry>,
     cfg: CoordinatorConfig,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -180,9 +204,36 @@ impl Coordinator {
         cfg: CoordinatorConfig,
         clock: Arc<dyn Clock>,
     ) -> Self {
-        let queue = Arc::new(BoundedQueue::<Job>::new(cfg.queue_cap));
+        // Tenancy (ISSUE 9): one registry drives all three planes — DRR
+        // lanes in the queue, token buckets at submit, store slices at
+        // eviction. With no tenants configured the registry is the single
+        // unlimited `default` tenant, `lanes()` is empty, and every path
+        // below is bit-for-bit the pre-tenancy coordinator.
+        let tenants = Arc::new(TenantRegistry::new(&cfg.tenants, Arc::clone(&clock)));
+        let lanes = tenants.lanes();
+        let queue = Arc::new(if lanes.is_empty() {
+            BoundedQueue::<Job>::new(cfg.queue_cap)
+        } else {
+            BoundedQueue::<Job>::with_lanes(cfg.queue_cap, &lanes)
+        });
         let metrics = Arc::new(Metrics::new());
-        let store = Arc::new(OperandStore::new(cfg.store_budget_bytes));
+        // Spill tier: best-effort — an unusable directory degrades to the
+        // pre-spill behavior (evictions destroy the conversion) rather
+        // than failing construction.
+        let spill = cfg.spill_dir.as_ref().and_then(|dir| {
+            match SpillStore::new(dir, cfg.spill_budget_bytes) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    eprintln!("spill tier disabled: {e}");
+                    None
+                }
+            }
+        });
+        let store = Arc::new(OperandStore::with_tiers(
+            cfg.store_budget_bytes,
+            Some(Arc::clone(&tenants)),
+            spill,
+        ));
         let tuner = Arc::new(Tuner::new(cfg.tuning, Arc::clone(&clock)));
         let handles = (0..cfg.workers.max(1))
             .map(|w| {
@@ -192,6 +243,7 @@ impl Coordinator {
                 let store = Arc::clone(&store);
                 let tuner = Arc::clone(&tuner);
                 let clock = Arc::clone(&clock);
+                let cfg = cfg.clone();
                 std::thread::Builder::new()
                     .name(format!("coordinator-{w}"))
                     .spawn(move || {
@@ -298,7 +350,7 @@ impl Coordinator {
                     .expect("spawn coordinator worker")
             })
             .collect();
-        Coordinator { queue, metrics, store, tuner, registry, cfg, handles }
+        Coordinator { queue, metrics, store, tuner, tenants, registry, cfg, handles }
     }
 
     /// Enqueue a request; the receiver yields the response when done.
@@ -312,6 +364,11 @@ impl Coordinator {
     /// An unregistered/dropped handle fails fast with
     /// [`SubmitError::UnknownHandle`].
     pub fn submit(&self, mut req: SpdmRequest) -> Result<mpsc::Receiver<SpdmResponse>, SubmitError> {
+        // Token-bucket admission first (ISSUE 9): a rate-limited request
+        // must not touch the store (no checkout, no promotion, no gauge
+        // drift) — the refusal is pure backpressure. Unlimited tenants
+        // (and the untenanted default) admit with zero clock reads.
+        self.tenants.admit(&req.tenant).map_err(SubmitError::RateLimited)?;
         let pin = match &req.a {
             AOperand::Handle(h) => match self.store.checkout(*h) {
                 Some(p) => {
@@ -326,7 +383,8 @@ impl Coordinator {
         // Count before pushing so `submitted >= completed` always holds in
         // snapshots; undo on rejection.
         self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        if !self.queue.push(Job { req, pin, enqueued: Instant::now(), reply: tx }) {
+        let lane = self.tenants.resolve_owned(&req.tenant);
+        if !self.queue.push_to(&lane, Job { req, pin, enqueued: Instant::now(), reply: tx }) {
             self.metrics.submitted.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
             return Err(SubmitError::ShutDown);
         }
@@ -362,6 +420,9 @@ impl Coordinator {
         snap.store_hits = st.hits;
         snap.store_misses = st.misses;
         snap.store_evictions = st.evictions;
+        snap.spill_writes = st.spill_writes;
+        snap.spill_promotes = st.spill_promotes;
+        snap.spill_bytes = st.spill_bytes;
         snap.route_flips = self.tuner.route_flips();
         snap.explorations = self.tuner.explorations_total();
         snap
@@ -449,11 +510,33 @@ impl Coordinator {
     /// executes from the cached slabs. Registering content already resident
     /// (same bytes, same hint) dedups to the existing handle.
     pub fn put_a(&self, a: Mat, hint: Option<Algo>) -> Result<Arc<OperandEntry>, String> {
-        let (entry, converted) = self.store.register(a, hint, &self.registry, &self.cfg)?;
+        self.put_a_for(DEFAULT_TENANT, a, hint)
+    }
+
+    /// [`Coordinator::put_a`] on behalf of a tenant (ISSUE 9): the
+    /// registration passes the tenant's token bucket (`RATE_LIMITED: …`
+    /// errors when flooding) and charges the tenant's store slice
+    /// (`QUOTA_EXCEEDED: …` when the slice cannot fit it) — both typed
+    /// string errors the wire layers forward without closing the
+    /// connection.
+    pub fn put_a_for(
+        &self,
+        tenant: &str,
+        a: Mat,
+        hint: Option<Algo>,
+    ) -> Result<Arc<OperandEntry>, String> {
+        self.tenants.admit(tenant)?;
+        let (entry, converted) =
+            self.store.register_for(tenant, a, hint, &self.registry, &self.cfg)?;
         if converted {
             self.metrics.record_conversions(1);
         }
         Ok(entry)
+    }
+
+    /// The tenant registry (wire layers resolve ids and tests inspect it).
+    pub fn tenants(&self) -> Arc<TenantRegistry> {
+        Arc::clone(&self.tenants)
     }
 
     /// Cluster replication (DESIGN.md §Cluster): install a copy of an
@@ -532,7 +615,11 @@ impl Drop for Coordinator {
 /// element-data comparison before fusing, so even a constructed hash
 /// collision cannot cross-wire results.
 pub fn batch_affine(a: &SpdmRequest, b: &SpdmRequest) -> bool {
-    a.algo_hint == b.algo_hint
+    // Fusion never crosses a tenant boundary (ISSUE 9): a fused batch is
+    // one scheduling unit, so cross-tenant fusion would let one tenant's
+    // traffic ride another's lane and defeat weighted-fair dequeue.
+    a.tenant == b.tenant
+        && a.algo_hint == b.algo_hint
         && match (&a.a, &b.a) {
             (AOperand::Handle(x), AOperand::Handle(y)) => x == y,
             _ => a.a_sig == b.a_sig,

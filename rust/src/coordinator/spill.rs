@@ -1,0 +1,797 @@
+//! Disk-backed spill tier behind the operand store (ISSUE 9).
+//!
+//! The paper's economics — pay the conversion overhead (EO) once,
+//! amortize it across every reuse — stop at the RAM budget today: an
+//! eviction destroys the converted slabs and the next reference pays a
+//! full O(n²) rescan + reconvert. The spill tier extends the storage
+//! hierarchy one level: on eviction the entry's **already-converted**
+//! [`DeviceOperand`] serializes to a length-prefixed slab file (raw
+//! little-endian, the same codec discipline as wire v3) together with its
+//! `ASig`, plan, candidates, stats, and dense A; a later handle miss
+//! checks the spill index before failing and **promotes** the entry back
+//! by one sequential read — no rescan, no reconvert — then verifies the
+//! content signature bit-for-bit before serving. Residency moves, result
+//! bits never do.
+//!
+//! File format (version 1, all integers little-endian; `str` = u16 byte
+//! length + UTF-8; `slab` = u64 byte length + raw LE elements):
+//!
+//! | section    | layout                                                   |
+//! |------------|----------------------------------------------------------|
+//! | header     | magic `GSPL` (4) · version u8                            |
+//! | identity   | tenant str · handle u64 · entry version u64              |
+//! | sig        | rows u64 · cols u64 · nnz u64 · hash u64                 |
+//! | hint       | u8 (0 = none, else algo byte)                            |
+//! | plan       | algo u8 · n_exec u64 · cap u64 · width u64 · artifact str · reason str |
+//! | candidates | u16 count · plan …                                       |
+//! | stats      | rows u64 · cols u64 · p u64 · nnz u64 · max_row_nnz u64 · u32 count · u32 … |
+//! | convert_s  | f64                                                      |
+//! | dense A    | rows u64 · cols u64 · f32 slab                           |
+//! | operand    | tag u8 (0 gcoo · 1 ell · 2 dense) · geometry · slabs     |
+//! | footer     | entry bytes u64                                          |
+//!
+//! The dense A is serialized outright rather than reconstructed from the
+//! slabs on promote: the nnz scan drops explicit `-0.0` entries, so a
+//! slab-reconstructed A could differ from the registered A in sign bits
+//! and break the `ASig` bit-hash — and the oracle/fallback paths need
+//! the exact dense operand anyway. `ExecPlan::reason` is `&'static str`;
+//! promotion interns the stored reason against the selector/tuner
+//! vocabulary and falls back to `"restored"` for anything unknown.
+//!
+//! The tier is byte-budgeted like the RAM store: oldest spill files are
+//! deleted first when the budget overflows (the tier below disk is
+//! nothing — the conversion is then genuinely lost). Gauges
+//! (`spill_writes` / `spill_promotes` / `spill_bytes`) surface through
+//! `StoreStats` → `/stats`, `explain`, and the cluster's
+//! `aggregate_snapshots`.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::job::{ASig, Algo};
+use super::store::{OperandEntry, OperandId};
+use crate::convert::AStats;
+use crate::ndarray::Mat;
+use crate::runtime::{DeviceOperand, ExecPlan};
+use crate::sparse::{Ell, GcooPadded};
+
+const MAGIC: &[u8; 4] = b"GSPL";
+const VERSION: u8 = 1;
+
+/// Every `&'static` reason the selector/tuner stack publishes; promotion
+/// interns against this vocabulary (see `intern_reason`).
+const REASONS: &[&str] = &[
+    "hint",
+    "sparse-crossover",
+    "gcoo-capacity-fallback",
+    "sparse-capacity-exhausted",
+    "below-crossover",
+    "candidate",
+    "measured",
+    "explore",
+    "measured-flip",
+    "restored",
+];
+
+fn intern_reason(s: &str) -> &'static str {
+    for r in REASONS {
+        if s == *r {
+            return r;
+        }
+    }
+    "restored"
+}
+
+fn algo_byte(a: Algo) -> u8 {
+    match a {
+        Algo::Gcoo => 1,
+        Algo::GcooNoreuse => 2,
+        Algo::Csr => 3,
+        Algo::DenseXla => 4,
+        Algo::DensePallas => 5,
+    }
+}
+
+fn algo_from(b: u8) -> Result<Algo, String> {
+    Ok(match b {
+        1 => Algo::Gcoo,
+        2 => Algo::GcooNoreuse,
+        3 => Algo::Csr,
+        4 => Algo::DenseXla,
+        5 => Algo::DensePallas,
+        other => return Err(format!("spill: unknown algo byte {other}")),
+    })
+}
+
+// ---- encoder ------------------------------------------------------------
+
+struct Wr {
+    out: Vec<u8>,
+}
+
+impl Wr {
+    fn u8(&mut self, v: u8) {
+        self.out.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        assert!(s.len() <= u16::MAX as usize, "spill string too long");
+        self.u16(s.len() as u16);
+        self.out.extend_from_slice(s.as_bytes());
+    }
+    fn f32_slab(&mut self, v: &[f32]) {
+        self.u64((v.len() * 4) as u64);
+        for x in v {
+            self.out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn i32_slab(&mut self, v: &[i32]) {
+        self.u64((v.len() * 4) as u64);
+        for x in v {
+            self.out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn plan(&mut self, p: &ExecPlan) {
+        self.u8(algo_byte(p.algo));
+        self.u64(p.n_exec as u64);
+        self.u64(p.cap as u64);
+        self.u64(p.width as u64);
+        self.str(&p.artifact);
+        self.str(p.reason);
+    }
+}
+
+// ---- decoder ------------------------------------------------------------
+
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.i + n > self.b.len() {
+            return Err(format!(
+                "spill: truncated file (need {} bytes at offset {}, have {})",
+                n,
+                self.i,
+                self.b.len()
+            ));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn usize(&mut self) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("spill: value {v} overflows usize"))
+    }
+    fn str(&mut self) -> Result<String, String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "spill: invalid UTF-8".to_string())
+    }
+    fn f32_slab(&mut self) -> Result<Vec<f32>, String> {
+        let bytes = self.usize()?;
+        if bytes % 4 != 0 {
+            return Err(format!("spill: f32 slab length {bytes} not a multiple of 4"));
+        }
+        let raw = self.take(bytes)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn i32_slab(&mut self) -> Result<Vec<i32>, String> {
+        let bytes = self.usize()?;
+        if bytes % 4 != 0 {
+            return Err(format!("spill: i32 slab length {bytes} not a multiple of 4"));
+        }
+        let raw = self.take(bytes)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn plan(&mut self) -> Result<ExecPlan, String> {
+        let algo = algo_from(self.u8()?)?;
+        let n_exec = self.usize()?;
+        let cap = self.usize()?;
+        let width = self.usize()?;
+        let artifact = self.str()?;
+        let reason = intern_reason(&self.str()?);
+        Ok(ExecPlan { algo, n_exec, cap, artifact, reason, width })
+    }
+    fn done(&self) -> Result<(), String> {
+        if self.i != self.b.len() {
+            return Err(format!(
+                "spill: {} trailing bytes after decode",
+                self.b.len() - self.i
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn encode_entry(entry: &OperandEntry, tenant: &str) -> Vec<u8> {
+    let mut w = Wr { out: Vec::with_capacity(entry.bytes as usize + 256) };
+    w.out.extend_from_slice(MAGIC);
+    w.u8(VERSION);
+    w.str(tenant);
+    w.u64(entry.handle.0);
+    w.u64(entry.version);
+    w.u64(entry.sig.rows as u64);
+    w.u64(entry.sig.cols as u64);
+    w.u64(entry.sig.nnz as u64);
+    w.u64(entry.sig.hash);
+    w.u8(entry.hint.map_or(0, algo_byte));
+    w.plan(&entry.plan);
+    assert!(entry.candidates.len() <= u16::MAX as usize);
+    w.u16(entry.candidates.len() as u16);
+    for c in &entry.candidates {
+        w.plan(c);
+    }
+    w.u64(entry.stats.rows as u64);
+    w.u64(entry.stats.cols as u64);
+    w.u64(entry.stats.p as u64);
+    w.u64(entry.stats.nnz as u64);
+    w.u64(entry.stats.max_row_nnz as u64);
+    w.u32(entry.stats.nnz_per_band.len() as u32);
+    for &b in &entry.stats.nnz_per_band {
+        w.u32(b);
+    }
+    w.f64(entry.convert_s);
+    w.u64(entry.a.rows as u64);
+    w.u64(entry.a.cols as u64);
+    w.f32_slab(&entry.a.data);
+    match &entry.operand {
+        DeviceOperand::Gcoo(g) => {
+            w.u8(0);
+            w.u64(g.g as u64);
+            w.u64(g.cap as u64);
+            w.u64(g.p as u64);
+            w.u64(g.n as u64);
+            w.f32_slab(&g.vals);
+            w.i32_slab(&g.rows);
+            w.i32_slab(&g.cols);
+        }
+        DeviceOperand::Ell(e) => {
+            w.u8(1);
+            w.u64(e.n as u64);
+            w.u64(e.rowcap as u64);
+            w.f32_slab(&e.vals);
+            w.i32_slab(&e.cols);
+        }
+        DeviceOperand::Dense(m) => {
+            w.u8(2);
+            w.u64(m.rows as u64);
+            w.u64(m.cols as u64);
+            w.f32_slab(&m.data);
+        }
+    }
+    w.u64(entry.bytes);
+    w.out
+}
+
+/// A spilled entry decoded back from disk: every field the store needs to
+/// republish the operand (the store reconstructs the `OperandEntry` — its
+/// pin counter is store-private).
+#[derive(Debug)]
+pub struct RestoredEntry {
+    pub tenant: String,
+    pub handle: OperandId,
+    pub version: u64,
+    pub a: Mat,
+    pub sig: ASig,
+    pub hint: Option<Algo>,
+    pub stats: AStats,
+    pub plan: ExecPlan,
+    pub candidates: Vec<ExecPlan>,
+    pub operand: DeviceOperand,
+    pub convert_s: f64,
+    pub bytes: u64,
+}
+
+fn decode_entry(buf: &[u8]) -> Result<RestoredEntry, String> {
+    let mut r = Rd { b: buf, i: 0 };
+    if r.take(4)? != MAGIC {
+        return Err("spill: bad magic".to_string());
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(format!("spill: unsupported file version {version}"));
+    }
+    let tenant = r.str()?;
+    let handle = OperandId(r.u64()?);
+    let entry_version = r.u64()?;
+    let sig = ASig {
+        rows: r.usize()?,
+        cols: r.usize()?,
+        nnz: r.usize()?,
+        hash: r.u64()?,
+    };
+    let hint = match r.u8()? {
+        0 => None,
+        b => Some(algo_from(b)?),
+    };
+    let plan = r.plan()?;
+    let n_cand = r.u16()? as usize;
+    let mut candidates = Vec::with_capacity(n_cand);
+    for _ in 0..n_cand {
+        candidates.push(r.plan()?);
+    }
+    let stats = AStats {
+        rows: r.usize()?,
+        cols: r.usize()?,
+        p: r.usize()?,
+        nnz: r.usize()?,
+        max_row_nnz: r.usize()?,
+        nnz_per_band: {
+            let count = r.u32()? as usize;
+            let mut v = Vec::with_capacity(count);
+            for _ in 0..count {
+                v.push(r.u32()?);
+            }
+            v
+        },
+    };
+    let convert_s = r.f64()?;
+    let a_rows = r.usize()?;
+    let a_cols = r.usize()?;
+    let a_data = r.f32_slab()?;
+    if a_data.len() != a_rows * a_cols {
+        return Err(format!(
+            "spill: dense A slab holds {} floats for a {a_rows}x{a_cols} matrix",
+            a_data.len()
+        ));
+    }
+    let a = Mat { rows: a_rows, cols: a_cols, data: a_data };
+    let operand = match r.u8()? {
+        0 => DeviceOperand::Gcoo(GcooPadded {
+            g: r.usize()?,
+            cap: r.usize()?,
+            p: r.usize()?,
+            n: r.usize()?,
+            vals: r.f32_slab()?,
+            rows: r.i32_slab()?,
+            cols: r.i32_slab()?,
+        }),
+        1 => DeviceOperand::Ell(Ell {
+            n: r.usize()?,
+            rowcap: r.usize()?,
+            vals: r.f32_slab()?,
+            cols: r.i32_slab()?,
+        }),
+        2 => {
+            let rows = r.usize()?;
+            let cols = r.usize()?;
+            let data = r.f32_slab()?;
+            if data.len() != rows * cols {
+                return Err("spill: dense operand slab/geometry mismatch".to_string());
+            }
+            DeviceOperand::Dense(Mat { rows, cols, data })
+        }
+        other => return Err(format!("spill: unknown operand tag {other}")),
+    };
+    let bytes = r.u64()?;
+    r.done()?;
+    Ok(RestoredEntry {
+        tenant,
+        handle,
+        version: entry_version,
+        a,
+        sig,
+        hint,
+        stats,
+        plan,
+        candidates,
+        operand,
+        convert_s,
+        bytes,
+    })
+}
+
+// ---- the tier -----------------------------------------------------------
+
+/// One spilled entry's index row (`list_a` tier = `spilled`).
+#[derive(Clone, Debug)]
+pub struct SpillRow {
+    pub handle: OperandId,
+    pub tenant: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub algo: Algo,
+    pub artifact: String,
+    /// RAM bytes the entry will charge again when promoted.
+    pub entry_bytes: u64,
+    /// The store tick the entry was last used at before demotion.
+    pub last_used_seq: u64,
+}
+
+struct Meta {
+    row: SpillRow,
+    path: PathBuf,
+    file_bytes: u64,
+    seq: u64,
+}
+
+struct SpillInner {
+    index: HashMap<u64, Meta>,
+    /// Demotion order (sequence numbers) for oldest-first budget eviction.
+    order: VecDeque<u64>,
+    bytes: u64,
+    next_seq: u64,
+}
+
+/// Point-in-time spill gauges (merged into [`super::store::StoreStats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpillStats {
+    pub writes: u64,
+    pub promotes: u64,
+    pub bytes: u64,
+}
+
+/// The disk spill tier: an in-memory index over length-prefixed slab
+/// files in `dir`. Files not recorded in the index (stale runs sharing
+/// the directory) are never read — the index is authoritative.
+pub struct SpillStore {
+    dir: PathBuf,
+    /// File-byte budget; 0 = unbounded.
+    budget: u64,
+    writes: AtomicU64,
+    promotes: AtomicU64,
+    inner: Mutex<SpillInner>,
+}
+
+impl SpillStore {
+    pub fn new(dir: &Path, budget_bytes: u64) -> Result<SpillStore, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("spill: cannot create {}: {e}", dir.display()))?;
+        Ok(SpillStore {
+            dir: dir.to_path_buf(),
+            budget: budget_bytes,
+            writes: AtomicU64::new(0),
+            promotes: AtomicU64::new(0),
+            inner: Mutex::new(SpillInner {
+                index: HashMap::new(),
+                order: VecDeque::new(),
+                bytes: 0,
+                next_seq: 0,
+            }),
+        })
+    }
+
+    /// Demote an evicted entry to disk: serialize the full entry (dense A
+    /// + converted device form + plan/stats/sig) to one slab file, then
+    /// trim the tier oldest-first if the file budget overflowed. A demote
+    /// failure is reported but non-fatal to eviction — the tier is a
+    /// cache under the store, never a correctness dependency.
+    pub fn demote(&self, entry: &OperandEntry, tenant: &str, last_used_seq: u64) -> Result<(), String> {
+        let buf = encode_entry(entry, tenant);
+        let path = self.dir.join(format!("a{}.spill", entry.handle.0));
+        std::fs::write(&path, &buf)
+            .map_err(|e| format!("spill: write {} failed: {e}", path.display()))?;
+        let file_bytes = buf.len() as u64;
+        let mut g = self.inner.lock().unwrap();
+        // Replace any stale record for this handle (re-demotion).
+        if let Some(old) = g.index.remove(&entry.handle.0) {
+            g.bytes -= old.file_bytes;
+        }
+        g.next_seq += 1;
+        let seq = g.next_seq;
+        g.index.insert(
+            entry.handle.0,
+            Meta {
+                row: SpillRow {
+                    handle: entry.handle,
+                    tenant: tenant.to_string(),
+                    n: entry.a.rows,
+                    nnz: entry.sig.nnz,
+                    algo: entry.plan.algo,
+                    artifact: entry.plan.artifact.clone(),
+                    entry_bytes: entry.bytes,
+                    last_used_seq,
+                },
+                path,
+                file_bytes,
+                seq,
+            },
+        );
+        g.order.push_back(seq);
+        g.bytes += file_bytes;
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        // Oldest-first trim: the tier below disk is nothing, so a trimmed
+        // conversion is genuinely lost.
+        if self.budget > 0 {
+            while g.bytes > self.budget {
+                let Some(oldest_seq) = g.order.pop_front() else { break };
+                let victim = g
+                    .index
+                    .iter()
+                    .find(|(_, m)| m.seq == oldest_seq)
+                    .map(|(&id, _)| id);
+                if let Some(id) = victim {
+                    let meta = g.index.remove(&id).unwrap();
+                    g.bytes -= meta.file_bytes;
+                    let _ = std::fs::remove_file(&meta.path);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether the tier holds this handle.
+    pub fn contains(&self, h: OperandId) -> bool {
+        self.inner.lock().unwrap().index.contains_key(&h.0)
+    }
+
+    /// Index row for a spilled handle (no file I/O).
+    pub fn meta(&self, h: OperandId) -> Option<SpillRow> {
+        self.inner.lock().unwrap().index.get(&h.0).map(|m| m.row.clone())
+    }
+
+    /// Promote a spilled handle: one sequential file read, full decode,
+    /// then **signature verification** — the dense A is re-hashed and
+    /// must reproduce the stored `ASig` bit-for-bit (a corrupt file is
+    /// dropped from the tier and reported, never served). On success the
+    /// file is consumed (the entry moves back up the hierarchy).
+    pub fn promote(&self, h: OperandId) -> Result<RestoredEntry, String> {
+        let path = {
+            let g = self.inner.lock().unwrap();
+            match g.index.get(&h.0) {
+                Some(m) => m.path.clone(),
+                None => return Err(format!("spill: {h} not in the spill index")),
+            }
+        };
+        let buf = std::fs::read(&path)
+            .map_err(|e| format!("spill: read {} failed: {e}", path.display()))?;
+        let restored = match decode_entry(&buf) {
+            Ok(r) => r,
+            Err(e) => {
+                self.discard(h);
+                return Err(e);
+            }
+        };
+        if restored.handle != h {
+            self.discard(h);
+            return Err(format!(
+                "spill: file for {h} names handle {}",
+                restored.handle
+            ));
+        }
+        let recomputed = ASig::of(&restored.a);
+        if recomputed != restored.sig {
+            self.discard(h);
+            return Err(format!("spill: {h} failed signature verification"));
+        }
+        self.discard(h);
+        self.promotes.fetch_add(1, Ordering::Relaxed);
+        Ok(restored)
+    }
+
+    /// Drop a spilled handle (file + index row); used by `drop_a`, by
+    /// promotion (the file is consumed), and on verification failure.
+    pub fn discard(&self, h: OperandId) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.index.remove(&h.0) {
+            Some(meta) => {
+                g.bytes -= meta.file_bytes;
+                let _ = std::fs::remove_file(&meta.path);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Every spilled row, ordered by handle.
+    pub fn list(&self) -> Vec<SpillRow> {
+        let g = self.inner.lock().unwrap();
+        let mut rows: Vec<SpillRow> = g.index.values().map(|m| m.row.clone()).collect();
+        rows.sort_by_key(|r| r.handle);
+        rows
+    }
+
+    pub fn stats(&self) -> SpillStats {
+        SpillStats {
+            writes: self.writes.load(Ordering::Relaxed),
+            promotes: self.promotes.load(Ordering::Relaxed),
+            bytes: self.inner.lock().unwrap().bytes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::CoordinatorConfig;
+    use crate::coordinator::store::OperandStore;
+    use crate::gen;
+    use crate::rng::Rng;
+    use crate::runtime::Registry;
+
+    fn reg() -> Registry {
+        let manifest = r#"{"artifacts": [
+            {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+             "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+            {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+             "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+            {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+             "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+            {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+             "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+        ]}"#;
+        Registry::from_manifest_json(manifest, std::path::PathBuf::from("/nope")).unwrap()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gcoospdm_spill_{}_{name}", std::process::id()))
+    }
+
+    fn sparse_a(seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        gen::uniform(64, 0.99, &mut rng)
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn operand_bitwise_eq(x: &DeviceOperand, y: &DeviceOperand) -> bool {
+        match (x, y) {
+            (DeviceOperand::Gcoo(a), DeviceOperand::Gcoo(b)) => {
+                (a.g, a.cap, a.p, a.n) == (b.g, b.cap, b.p, b.n)
+                    && bits(&a.vals) == bits(&b.vals)
+                    && a.rows == b.rows
+                    && a.cols == b.cols
+            }
+            (DeviceOperand::Ell(a), DeviceOperand::Ell(b)) => {
+                (a.n, a.rowcap) == (b.n, b.rowcap)
+                    && bits(&a.vals) == bits(&b.vals)
+                    && a.cols == b.cols
+            }
+            (DeviceOperand::Dense(a), DeviceOperand::Dense(b)) => {
+                (a.rows, a.cols) == (b.rows, b.cols) && bits(&a.data) == bits(&b.data)
+            }
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn demote_promote_round_trip_is_bitwise_and_counts_gauges() {
+        let dir = tmp("round_trip");
+        let spill = SpillStore::new(&dir, 0).unwrap();
+        let store = OperandStore::new(64 << 20);
+        let cfg = CoordinatorConfig::default();
+        let (e, _) = store.register(sparse_a(1), None, &reg(), &cfg).unwrap();
+        spill.demote(&e, "alpha", 7).unwrap();
+        assert!(spill.contains(e.handle));
+        let row = spill.meta(e.handle).unwrap();
+        assert_eq!((row.n, row.nnz, row.tenant.as_str(), row.last_used_seq), (64, e.sig.nnz, "alpha", 7));
+        let st = spill.stats();
+        assert_eq!(st.writes, 1);
+        assert!(st.bytes > 0);
+
+        let r = spill.promote(e.handle).unwrap();
+        assert_eq!(r.tenant, "alpha");
+        assert_eq!(r.handle, e.handle);
+        assert_eq!(r.sig, e.sig);
+        assert_eq!(r.version, e.version);
+        assert_eq!(bits(&r.a.data), bits(&e.a.data), "dense A survives bit-for-bit");
+        assert!(operand_bitwise_eq(&r.operand, &e.operand), "device slabs survive bit-for-bit");
+        assert_eq!(r.plan, e.plan, "plan survives (reason interned)");
+        assert_eq!(r.candidates, e.candidates);
+        assert_eq!(r.stats.nnz_per_band, e.stats.nnz_per_band);
+        assert_eq!(r.bytes, e.bytes);
+        assert_eq!(r.convert_s.to_bits(), e.convert_s.to_bits());
+        // Promotion consumes the file.
+        assert!(!spill.contains(e.handle));
+        let st = spill.stats();
+        assert_eq!((st.promotes, st.bytes), (1, 0));
+        assert!(spill.promote(e.handle).is_err(), "double promote misses");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_file_fails_verification_and_is_discarded() {
+        let dir = tmp("corrupt");
+        let spill = SpillStore::new(&dir, 0).unwrap();
+        let store = OperandStore::new(64 << 20);
+        let cfg = CoordinatorConfig::default();
+        let (e, _) = store.register(sparse_a(2), None, &reg(), &cfg).unwrap();
+        spill.demote(&e, "default", 1).unwrap();
+        // Flip one byte inside the dense-A slab: the recomputed ASig must
+        // catch it.
+        let path = dir.join(format!("a{}.spill", e.handle.0));
+        let mut buf = std::fs::read(&path).unwrap();
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0x40;
+        std::fs::write(&path, &buf).unwrap();
+        let err = spill.promote(e.handle).unwrap_err();
+        assert!(
+            err.contains("verification") || err.contains("spill:"),
+            "typed spill error, got: {err}"
+        );
+        assert!(!spill.contains(e.handle), "corrupt entry leaves the index");
+        assert_eq!(spill.stats().promotes, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_trims_oldest_first() {
+        let dir = tmp("budget");
+        let store = OperandStore::new(64 << 20);
+        let cfg = CoordinatorConfig::default();
+        let (e1, _) = store.register(sparse_a(3), None, &reg(), &cfg).unwrap();
+        let (e2, _) = store.register(sparse_a(4), None, &reg(), &cfg).unwrap();
+        let (e3, _) = store.register(sparse_a(5), None, &reg(), &cfg).unwrap();
+        let one_file = encode_entry(&e1, "default").len() as u64;
+        // Room for about two files.
+        let spill = SpillStore::new(&dir, one_file * 5 / 2).unwrap();
+        spill.demote(&e1, "default", 1).unwrap();
+        spill.demote(&e2, "default", 2).unwrap();
+        spill.demote(&e3, "default", 3).unwrap();
+        assert!(!spill.contains(e1.handle), "oldest spill file trimmed");
+        assert!(spill.contains(e2.handle));
+        assert!(spill.contains(e3.handle));
+        assert!(spill.stats().bytes <= one_file * 5 / 2);
+        assert_eq!(spill.stats().writes, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_and_garbage_files_error_not_panic() {
+        let dir = tmp("truncate");
+        let spill = SpillStore::new(&dir, 0).unwrap();
+        let store = OperandStore::new(64 << 20);
+        let cfg = CoordinatorConfig::default();
+        let (e, _) = store.register(sparse_a(6), None, &reg(), &cfg).unwrap();
+        spill.demote(&e, "default", 1).unwrap();
+        let path = dir.join(format!("a{}.spill", e.handle.0));
+        let buf = std::fs::read(&path).unwrap();
+        for cut in [0usize, 3, 4, 5, 20, buf.len() / 2, buf.len() - 1] {
+            assert!(decode_entry(&buf[..cut]).is_err(), "prefix of {cut} bytes must error");
+        }
+        let mut extended = buf.clone();
+        extended.push(0);
+        assert!(decode_entry(&extended).is_err(), "trailing byte must error");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reason_interning_covers_the_selector_vocabulary() {
+        for r in REASONS {
+            assert_eq!(intern_reason(r), *r);
+        }
+        assert_eq!(intern_reason("never-heard-of-it"), "restored");
+    }
+}

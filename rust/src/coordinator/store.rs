@@ -46,6 +46,8 @@ use std::time::Instant;
 use super::job::{ASig, Algo};
 use super::pool::CoordinatorConfig;
 use super::selector::Selector;
+use super::spill::SpillStore;
+use super::tenant::{TenantRegistry, DEFAULT_TENANT, QUOTA_EXCEEDED};
 use crate::convert::{self, AStats};
 use crate::ndarray::Mat;
 use crate::runtime::{DeviceOperand, ExecPlan, Registry};
@@ -70,6 +72,10 @@ impl std::fmt::Display for OperandId {
 #[derive(Debug)]
 pub struct OperandEntry {
     pub handle: OperandId,
+    /// Owning tenant (accounting identity; [`DEFAULT_TENANT`] untenanted).
+    /// Eviction pressure from one tenant's registrations can only claim
+    /// victims with the same owner — slice isolation (ISSUE 9).
+    pub tenant: String,
     pub a: Mat,
     pub sig: ASig,
     /// The algorithm hint registration was performed under (None = selector
@@ -154,6 +160,12 @@ pub struct OperandSummary {
     pub algo: Algo,
     pub artifact: String,
     pub bytes: u64,
+    /// Storage tier: `"ram"` (resident, servable now) or `"spilled"`
+    /// (demoted to the disk tier; the next reference promotes it back).
+    pub tier: &'static str,
+    /// The store tick the entry was last used at — operators read this to
+    /// see eviction/promotion candidates (higher = more recently used).
+    pub last_used_seq: u64,
 }
 
 /// Point-in-time store counters (merged into `MetricsSnapshot`).
@@ -165,6 +177,12 @@ pub struct StoreStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Entries demoted to the disk spill tier (0 when no tier configured).
+    pub spill_writes: u64,
+    /// Entries promoted back from disk by one sequential read.
+    pub spill_promotes: u64,
+    /// Bytes currently resident in spill files.
+    pub spill_bytes: u64,
 }
 
 struct Slot {
@@ -181,41 +199,75 @@ struct Inner {
     next_id: u64,
     tick: u64,
     bytes: u64,
+    /// Per-tenant resident bytes (published + retired versions). Absent
+    /// key = 0. Sums to `bytes` at all times.
+    tenant_bytes: HashMap<String, u64>,
 }
 
 impl Inner {
+    fn charge_tenant(&mut self, tenant: &str, bytes: u64) {
+        *self.tenant_bytes.entry(tenant.to_string()).or_insert(0) += bytes;
+    }
+
+    fn credit_tenant(&mut self, tenant: &str, bytes: u64) {
+        if let Some(v) = self.tenant_bytes.get_mut(tenant) {
+            *v = v.saturating_sub(bytes);
+            if *v == 0 {
+                self.tenant_bytes.remove(tenant);
+            }
+        }
+    }
+
+    fn tenant_resident(&self, tenant: &str) -> u64 {
+        self.tenant_bytes.get(tenant).copied().unwrap_or(0)
+    }
+
     /// Drop superseded entry versions whose pins have all been released,
     /// reclaiming their budget charge. Called under the lock by every
     /// path that reads or reshapes the byte accounting (registration,
     /// flips, gauges) — retired versions that remain afterwards are
     /// genuinely pinned.
     fn purge_retired(&mut self) {
-        let mut freed = 0u64;
+        let mut freed: Vec<(String, u64)> = Vec::new();
         for slot in self.entries.values_mut() {
             slot.retired.retain(|e| {
                 if e.pinned() {
                     true
                 } else {
-                    freed += e.bytes;
+                    freed.push((e.tenant.clone(), e.bytes));
                     false
                 }
             });
         }
-        self.bytes -= freed;
+        for (tenant, b) in freed {
+            self.bytes -= b;
+            self.credit_tenant(&tenant, b);
+        }
     }
 
     /// Locked dedup lookup: the resident entry with identical content
     /// (full element compare on signature match — a hash collision must
-    /// not alias two operands) and hint, LRU-refreshed. Deliberately does
-    /// NOT count a store hit: `hits`/`misses` measure served handle
-    /// traffic (`checkout`/`peek_dims`), not `put_a` dedups.
-    fn resident(&mut self, a: &Mat, sig: ASig, hint: Option<Algo>) -> Option<Arc<OperandEntry>> {
+    /// not alias two operands), hint, **and owning tenant** (two tenants
+    /// registering the same bytes get separate entries — dedup across
+    /// tenants would let one tenant's drop or eviction reach into
+    /// another's slice), LRU-refreshed. Deliberately does NOT count a
+    /// store hit: `hits`/`misses` measure served handle traffic
+    /// (`checkout`/`peek_dims`), not `put_a` dedups.
+    fn resident(
+        &mut self,
+        a: &Mat,
+        sig: ASig,
+        hint: Option<Algo>,
+        tenant: &str,
+    ) -> Option<Arc<OperandEntry>> {
         self.tick += 1;
         let tick = self.tick;
-        let slot = self
-            .entries
-            .values_mut()
-            .find(|s| s.entry.sig == sig && s.entry.hint == hint && s.entry.a.data == a.data)?;
+        let slot = self.entries.values_mut().find(|s| {
+            s.entry.sig == sig
+                && s.entry.hint == hint
+                && s.entry.tenant == tenant
+                && s.entry.a.data == a.data
+        })?;
         slot.last_used = tick;
         Some(Arc::clone(&slot.entry))
     }
@@ -228,22 +280,66 @@ pub struct OperandStore {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    /// Tenant specs for slice lookups (None = untenanted: one `default`
+    /// accounting bucket with the whole budget, bit-for-bit pre-tenancy).
+    tenants: Option<Arc<TenantRegistry>>,
+    /// Disk spill tier (None = evictions destroy the conversion, the
+    /// pre-spill behavior).
+    spill: Option<SpillStore>,
     inner: Mutex<Inner>,
 }
 
 impl OperandStore {
     pub fn new(budget_bytes: u64) -> Self {
+        OperandStore::with_tiers(budget_bytes, None, None)
+    }
+
+    /// Store with tenancy slices and/or a disk spill tier behind it.
+    pub fn with_tiers(
+        budget_bytes: u64,
+        tenants: Option<Arc<TenantRegistry>>,
+        spill: Option<SpillStore>,
+    ) -> Self {
         OperandStore {
             budget: budget_bytes,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            tenants,
+            spill,
             inner: Mutex::new(Inner {
                 entries: HashMap::new(),
                 next_id: 0,
                 tick: 0,
                 bytes: 0,
+                tenant_bytes: HashMap::new(),
             }),
+        }
+    }
+
+    /// The disk spill tier, when configured.
+    pub fn spill(&self) -> Option<&SpillStore> {
+        self.spill.as_ref()
+    }
+
+    /// Resident bytes currently charged to `tenant` (published + retired
+    /// versions) — the slice-isolation gauge the acceptance tests assert.
+    pub fn tenant_bytes_of(&self, tenant: &str) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        g.purge_retired();
+        g.tenant_resident(tenant)
+    }
+
+    /// The byte slice `tenant` may occupy (0 = whole budget).
+    fn slice_of(&self, tenant: &str) -> u64 {
+        self.tenants.as_ref().map_or(0, |t| t.slice_of(tenant))
+    }
+
+    /// The accounting identity a wire-level tenant id resolves to.
+    fn resolve_tenant(&self, tenant: &str) -> String {
+        match &self.tenants {
+            Some(t) => t.resolve_owned(tenant),
+            None => tenant.to_string(),
         }
     }
 
@@ -262,6 +358,24 @@ impl OperandStore {
         reg: &Registry,
         cfg: &CoordinatorConfig,
     ) -> Result<(Arc<OperandEntry>, bool), String> {
+        self.register_for(DEFAULT_TENANT, a, hint, reg, cfg)
+    }
+
+    /// [`OperandStore::register`] on behalf of a tenant: the entry charges
+    /// the tenant's byte slice, evicts only the tenant's own entries under
+    /// pressure, and fails with a typed `QUOTA_EXCEEDED` error when the
+    /// slice cannot fit it. The `default` tenant with no configured slice
+    /// is bit-for-bit the untenanted path.
+    pub fn register_for(
+        &self,
+        tenant: &str,
+        a: Mat,
+        hint: Option<Algo>,
+        reg: &Registry,
+        cfg: &CoordinatorConfig,
+    ) -> Result<(Arc<OperandEntry>, bool), String> {
+        let tenant = self.resolve_tenant(tenant);
+        let slice = self.slice_of(&tenant);
         let n = a.rows;
         if n == 0 || a.cols != n {
             return Err(format!("registered A must be square and non-empty, got {}x{}", a.rows, a.cols));
@@ -277,11 +391,18 @@ impl OperandStore {
                 self.budget
             ));
         }
+        if slice > 0 && (a.data.len() * 4) as u64 > slice {
+            return Err(format!(
+                "{QUOTA_EXCEEDED}: tenant `{tenant}` operand (≥{} B dense) exceeds its {slice} B store slice",
+                a.data.len() * 4
+            ));
+        }
         let sig = ASig::of(&a);
         // Dedup: same content (full element compare on signature match —
         // a hash collision must not alias two operands) under the same
-        // hint → the existing handle, refreshed in the LRU order.
-        if let Some(entry) = self.find_resident(&a, sig, hint) {
+        // hint and tenant → the existing handle, refreshed in the LRU
+        // order.
+        if let Some(entry) = self.find_resident(&a, sig, hint, &tenant) {
             return Ok((entry, false));
         }
 
@@ -329,6 +450,11 @@ impl OperandStore {
                 self.budget
             ));
         }
+        if slice > 0 && bytes > slice {
+            return Err(format!(
+                "{QUOTA_EXCEEDED}: tenant `{tenant}` operand ({bytes} B) exceeds its {slice} B store slice"
+            ));
+        }
 
         let mut g = self.inner.lock().unwrap();
         g.purge_retired();
@@ -340,10 +466,10 @@ impl OperandStore {
         // hit, this thread really did pay the scan/conversion, so the
         // `converted` flag reports it (conversions_total counts EO events
         // performed, not entries created).
-        if let Some(existing) = g.resident(&a, sig, hint) {
+        if let Some(existing) = g.resident(&a, sig, hint, &tenant) {
             return Ok((existing, converted));
         }
-        self.evict_for(&mut g, bytes)?;
+        self.evict_for(&mut g, &tenant, slice, bytes)?;
         // Owned-id sequence (DESIGN.md §Cluster): a clustered store only
         // assigns handle ids its own shard owns on the consistent-hash
         // ring, so `ring.owner(handle)` always resolves to the node that
@@ -361,6 +487,7 @@ impl OperandStore {
         let handle = OperandId(g.next_id);
         let entry = Arc::new(OperandEntry {
             handle,
+            tenant: tenant.clone(),
             a,
             sig,
             hint,
@@ -374,6 +501,7 @@ impl OperandStore {
             pins: AtomicUsize::new(0),
         });
         g.bytes += bytes;
+        g.charge_tenant(&tenant, bytes);
         let tick = g.tick;
         g.entries.insert(
             handle.0,
@@ -388,27 +516,58 @@ impl OperandStore {
     /// fit must not evict anything (pins are an eviction barrier, not
     /// victims; observed-unpinned entries cannot gain a pin while we hold
     /// the lock, since `checkout` also locks).
-    fn evict_for(&self, g: &mut Inner, bytes: u64) -> Result<(), String> {
-        if g.bytes + bytes <= self.budget {
+    ///
+    /// **Tenancy:** victims are always the inserting tenant's own entries
+    /// — one tenant's registration pressure can never evict another
+    /// tenant's residents (slice isolation). The fit test covers both the
+    /// global budget and the tenant's slice (`slice` 0 = whole budget);
+    /// an unsatisfiable slice yields a typed `QUOTA_EXCEEDED` error, an
+    /// unsatisfiable budget keeps the pre-tenancy message. Untenanted,
+    /// every entry belongs to `default` and this is bit-for-bit the old
+    /// evictor.
+    ///
+    /// **Spill:** committed victims demote to the disk tier (file write
+    /// under the store lock — eviction is already a slow path, and the
+    /// lock guarantees a victim cannot be re-registered mid-demotion).
+    /// Demote failures are swallowed: the tier is a cache under the
+    /// store, never a correctness dependency.
+    fn evict_for(&self, g: &mut Inner, tenant: &str, slice: u64, bytes: u64) -> Result<(), String> {
+        let tb = g.tenant_resident(tenant);
+        let fits = |freed: u64| {
+            g.bytes - freed + bytes <= self.budget
+                && (slice == 0 || tb.saturating_sub(freed) + bytes <= slice)
+        };
+        if fits(0) {
             return Ok(());
         }
         let mut victims: Vec<(u64, u64, u64)> = g
             .entries
             .iter()
-            // A slot is evictable only when neither its published
-            // entry nor any retired (superseded, still-pinned)
-            // version is held by an in-flight job.
-            .filter(|(_, s)| !s.entry.pinned() && s.retired.is_empty())
+            // A slot is evictable only when it belongs to the inserting
+            // tenant and neither its published entry nor any retired
+            // (superseded, still-pinned) version is held by an in-flight
+            // job.
+            .filter(|(_, s)| {
+                s.entry.tenant == tenant && !s.entry.pinned() && s.retired.is_empty()
+            })
             .map(|(&id, s)| (s.last_used, id, s.entry.bytes))
             .collect();
         victims.sort_unstable();
         let mut freed = 0u64;
         let mut take = 0usize;
-        while g.bytes - freed + bytes > self.budget && take < victims.len() {
+        while !fits(freed) && take < victims.len() {
             freed += victims[take].2;
             take += 1;
         }
-        if g.bytes - freed + bytes > self.budget {
+        if !fits(freed) {
+            if slice > 0 && tb.saturating_sub(freed) + bytes > slice {
+                return Err(format!(
+                    "{QUOTA_EXCEEDED}: tenant `{tenant}` store slice exhausted \
+                     ({tb} B resident of a {slice} B slice, {} B of it pinned; \
+                     a {bytes} B entry cannot fit)",
+                    tb - victims.iter().map(|v| v.2).sum::<u64>(),
+                ));
+            }
             return Err(format!(
                 "operand store budget exhausted ({} B resident, {} B of it pinned; \
                  a {} B entry cannot fit the {} B budget)",
@@ -418,38 +577,110 @@ impl OperandStore {
                 self.budget
             ));
         }
-        for &(_, id, _) in &victims[..take] {
+        for &(last_used, id, _) in &victims[..take] {
             let slot = g.entries.remove(&id).expect("victim resident");
             g.bytes -= slot.entry.bytes;
+            g.credit_tenant(&slot.entry.tenant, slot.entry.bytes);
+            if let Some(spill) = &self.spill {
+                let _ = spill.demote(&slot.entry, &slot.entry.tenant, last_used);
+            }
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
     }
 
-    /// Resident entry with this exact content and hint, LRU-refreshed
-    /// (see [`Inner::resident`] — registration dedups are not store hits).
-    fn find_resident(&self, a: &Mat, sig: ASig, hint: Option<Algo>) -> Option<Arc<OperandEntry>> {
-        self.inner.lock().unwrap().resident(a, sig, hint)
+    /// Resident entry with this exact content, hint, and tenant,
+    /// LRU-refreshed (see [`Inner::resident`] — registration dedups are
+    /// not store hits).
+    fn find_resident(
+        &self,
+        a: &Mat,
+        sig: ASig,
+        hint: Option<Algo>,
+        tenant: &str,
+    ) -> Option<Arc<OperandEntry>> {
+        self.inner.lock().unwrap().resident(a, sig, hint, tenant)
     }
 
     /// Look up and pin an entry for an in-flight job (bumps the LRU order
-    /// and the hit counter; a missing handle counts a miss).
+    /// and the hit counter; a missing handle counts a miss). A handle
+    /// absent from RAM but present in the spill index is **promoted**
+    /// first — one sequential read, signature verified, re-inserted under
+    /// the owner's slice — and then served exactly like a resident hit.
+    /// Promotion never re-converts: the spilled device form is the one
+    /// registration built, so `conversions_total` is constant across a
+    /// demote/promote cycle.
     pub fn checkout(&self, h: OperandId) -> Option<OperandPin> {
-        let mut g = self.inner.lock().unwrap();
-        g.tick += 1;
-        let tick = g.tick;
-        match g.entries.get_mut(&h.0) {
-            Some(slot) => {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(slot) = g.entries.get_mut(&h.0) {
                 slot.last_used = tick;
                 slot.entry.pins.fetch_add(1, Ordering::SeqCst);
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(OperandPin { entry: Arc::clone(&slot.entry) })
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
+                return Some(OperandPin { entry: Arc::clone(&slot.entry) });
             }
         }
+        if let Some(pin) = self.promote_spilled(h) {
+            return Some(pin);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Promote a spilled handle back into RAM and pin it. The file read
+    /// and decode happen outside the store lock; insertion re-checks
+    /// residency (a concurrent checkout may have won the promotion race)
+    /// and evicts within the owner's slice to make room. Failure modes
+    /// all degrade to a miss: a corrupt or raced-away file, or a slice
+    /// that cannot fit the entry even after eviction (the conversion is
+    /// then genuinely lost — the promote consumed the file).
+    fn promote_spilled(&self, h: OperandId) -> Option<OperandPin> {
+        let spill = self.spill.as_ref()?;
+        if !spill.contains(h) {
+            return None;
+        }
+        let restored = spill.promote(h).ok()?;
+        let tenant = restored.tenant.clone();
+        let slice = self.slice_of(&tenant);
+        let mut g = self.inner.lock().unwrap();
+        g.purge_retired();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(slot) = g.entries.get_mut(&h.0) {
+            // Lost the promotion race: another thread already re-inserted
+            // the handle. Serve the resident winner.
+            slot.last_used = tick;
+            slot.entry.pins.fetch_add(1, Ordering::SeqCst);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(OperandPin { entry: Arc::clone(&slot.entry) });
+        }
+        self.evict_for(&mut g, &tenant, slice, restored.bytes).ok()?;
+        let entry = Arc::new(OperandEntry {
+            handle: restored.handle,
+            tenant: tenant.clone(),
+            a: restored.a,
+            sig: restored.sig,
+            hint: restored.hint,
+            stats: restored.stats,
+            plan: restored.plan,
+            candidates: restored.candidates,
+            operand: restored.operand,
+            convert_s: restored.convert_s,
+            bytes: restored.bytes,
+            version: restored.version,
+            // Born pinned: the promoting job holds it.
+            pins: AtomicUsize::new(1),
+        });
+        g.bytes += restored.bytes;
+        g.charge_tenant(&tenant, restored.bytes);
+        g.entries.insert(
+            h.0,
+            Slot { entry: Arc::clone(&entry), last_used: tick, retired: Vec::new() },
+        );
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(OperandPin { entry })
     }
 
     /// Dimension of a registered A without touching LRU order (the serve
@@ -461,6 +692,10 @@ impl OperandStore {
     /// are hot (DESIGN.md §Cluster).
     pub fn peek_dims(&self, h: OperandId) -> Option<usize> {
         let dims = self.inner.lock().unwrap().entries.get(&h.0).map(|s| s.entry.a.rows);
+        // A spilled handle is still a *known* handle: answer its dims from
+        // the spill index (no file I/O, no promotion — the serve layer
+        // only needs the size; the submit-time checkout promotes).
+        let dims = dims.or_else(|| self.spill.as_ref()?.meta(h).map(|r| r.n));
         match dims {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -502,16 +737,21 @@ impl OperandStore {
                 self.budget
             ));
         }
+        // The replica keeps the owner's tenant: slice isolation follows
+        // the operand across nodes.
+        let tenant = self.resolve_tenant(&src.tenant);
+        let slice = self.slice_of(&tenant);
         let mut g = self.inner.lock().unwrap();
         g.purge_retired();
         if let Some(slot) = g.entries.get(&src.handle.0) {
             return Ok(Arc::clone(&slot.entry));
         }
-        self.evict_for(&mut g, bytes)?;
+        self.evict_for(&mut g, &tenant, slice, bytes)?;
         g.tick += 1;
         let tick = g.tick;
         let entry = Arc::new(OperandEntry {
             handle: src.handle,
+            tenant: tenant.clone(),
             a: src.a.clone(),
             sig: src.sig,
             hint: src.hint,
@@ -525,6 +765,7 @@ impl OperandStore {
             pins: AtomicUsize::new(0),
         });
         g.bytes += bytes;
+        g.charge_tenant(&tenant, bytes);
         g.entries.insert(
             src.handle.0,
             Slot { entry: Arc::clone(&entry), last_used: tick, retired: Vec::new() },
@@ -594,6 +835,7 @@ impl OperandStore {
         let tick = g.tick;
         let entry = Arc::new(OperandEntry {
             handle: old.handle,
+            tenant: old.tenant.clone(),
             a: old.a.clone(),
             sig: old.sig,
             hint: old.hint,
@@ -615,8 +857,11 @@ impl OperandStore {
             // the pins drop (the flip must not lift the pin barrier).
             slot.retired.push(prev);
             g.bytes += bytes;
+            g.charge_tenant(&old.tenant, bytes);
         } else {
             g.bytes = g.bytes - prev.bytes + bytes;
+            g.credit_tenant(&old.tenant, prev.bytes);
+            g.charge_tenant(&old.tenant, bytes);
         }
         Ok(entry)
     }
@@ -635,32 +880,63 @@ impl OperandStore {
     /// finish against their snapshot; later lookups miss. Returns whether
     /// the handle was resident.
     pub fn remove(&self, h: OperandId) -> bool {
-        let mut g = self.inner.lock().unwrap();
-        match g.entries.remove(&h.0) {
-            Some(slot) => {
-                g.bytes -=
-                    slot.entry.bytes + slot.retired.iter().map(|e| e.bytes).sum::<u64>();
-                true
+        let ram = {
+            let mut g = self.inner.lock().unwrap();
+            match g.entries.remove(&h.0) {
+                Some(slot) => {
+                    let freed =
+                        slot.entry.bytes + slot.retired.iter().map(|e| e.bytes).sum::<u64>();
+                    g.bytes -= freed;
+                    g.credit_tenant(&slot.entry.tenant.clone(), freed);
+                    true
+                }
+                None => false,
             }
-            None => false,
-        }
+        };
+        // An explicit drop reaches the spill tier too: `drop_a` means
+        // gone, not demoted.
+        let spilled = self.spill.as_ref().is_some_and(|s| s.discard(h));
+        ram || spilled
     }
 
-    /// Summaries of every resident entry, ordered by handle (wire `list_a`).
+    /// Summaries of every known entry — RAM residents (`tier: "ram"`)
+    /// followed by spilled entries (`tier: "spilled"`) — ordered by
+    /// handle (wire `list_a`). A handle caught mid-promotion appears
+    /// once, preferring its RAM row.
     pub fn list(&self) -> Vec<OperandSummary> {
-        let g = self.inner.lock().unwrap();
-        let mut out: Vec<OperandSummary> = g
-            .entries
-            .values()
-            .map(|s| OperandSummary {
-                handle: s.entry.handle,
-                n: s.entry.a.rows,
-                nnz: s.entry.sig.nnz,
-                algo: s.entry.plan.algo,
-                artifact: s.entry.plan.artifact.clone(),
-                bytes: s.entry.bytes,
-            })
-            .collect();
+        let mut out: Vec<OperandSummary> = {
+            let g = self.inner.lock().unwrap();
+            g.entries
+                .values()
+                .map(|s| OperandSummary {
+                    handle: s.entry.handle,
+                    n: s.entry.a.rows,
+                    nnz: s.entry.sig.nnz,
+                    algo: s.entry.plan.algo,
+                    artifact: s.entry.plan.artifact.clone(),
+                    bytes: s.entry.bytes,
+                    tier: "ram",
+                    last_used_seq: s.last_used,
+                })
+                .collect()
+        };
+        if let Some(spill) = &self.spill {
+            for r in spill.list() {
+                if out.iter().any(|s| s.handle == r.handle) {
+                    continue;
+                }
+                out.push(OperandSummary {
+                    handle: r.handle,
+                    n: r.n,
+                    nnz: r.nnz,
+                    algo: r.algo,
+                    artifact: r.artifact,
+                    bytes: r.entry_bytes,
+                    tier: "spilled",
+                    last_used_seq: r.last_used_seq,
+                });
+            }
+        }
         out.sort_by_key(|s| s.handle);
         out
     }
@@ -684,6 +960,7 @@ impl OperandStore {
     }
 
     pub fn stats(&self) -> StoreStats {
+        let sp = self.spill.as_ref().map(|s| s.stats()).unwrap_or_default();
         let mut g = self.inner.lock().unwrap();
         g.purge_retired();
         StoreStats {
@@ -693,6 +970,9 @@ impl OperandStore {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            spill_writes: sp.writes,
+            spill_promotes: sp.promotes,
+            spill_bytes: sp.bytes,
         }
     }
 }
@@ -1340,6 +1620,103 @@ mod tests {
                 assert!(seen.insert(e.handle.0), "id partitions are disjoint across nodes");
             }
         }
+    }
+
+    /// Slice isolation (ISSUE 9 acceptance b): one tenant's registration
+    /// pressure evicts only its own entries, never another tenant's, and
+    /// an unsatisfiable slice is a typed `QUOTA_EXCEEDED` error.
+    #[test]
+    fn tenant_slices_isolate_eviction_and_type_quota_errors() {
+        use super::super::tenant::{TenantRegistry, TenantSpec};
+        use super::super::tuner::ScriptedClock;
+        let (probe, _) = OperandStore::new(u64::MAX)
+            .register(sparse_a(200), None, &reg(), &cfg())
+            .unwrap();
+        let eb = probe.bytes;
+        let spec = |name: &str, slice: u64| TenantSpec {
+            name: name.to_string(),
+            weight: 1,
+            rate_per_s: 0.0,
+            burst: 0.0,
+            store_slice_bytes: slice,
+        };
+        let clock = Arc::new(ScriptedClock::new(vec![]));
+        let tenants = Arc::new(TenantRegistry::new(
+            &[spec("alpha", eb * 3 / 2), spec("beta", eb * 3 / 2)],
+            clock,
+        ));
+        let store = OperandStore::with_tiers(eb * 4, Some(tenants), None);
+        let (ea, _) = store.register_for("alpha", sparse_a(201), None, &reg(), &cfg()).unwrap();
+        let (eb1, _) = store.register_for("beta", sparse_a(202), None, &reg(), &cfg()).unwrap();
+        assert_eq!((ea.tenant.as_str(), eb1.tenant.as_str()), ("alpha", "beta"));
+        // alpha's second registration exceeds its slice: it must evict
+        // alpha's own LRU entry and leave beta untouched.
+        let (ea2, _) = store.register_for("alpha", sparse_a(203), None, &reg(), &cfg()).unwrap();
+        assert!(store.checkout(eb1.handle).is_some(), "beta untouched by alpha's pressure");
+        assert!(store.checkout(ea.handle).is_none(), "alpha evicted its own LRU entry");
+        assert!(store.checkout(ea2.handle).is_some());
+        assert!(store.tenant_bytes_of("alpha") <= eb * 3 / 2, "slice gauge holds");
+        assert!(store.tenant_bytes_of("beta") > 0);
+        // With alpha's only resident pinned, the next alpha registration
+        // cannot fit its slice: typed quota error, nothing evicted.
+        let _pin = store.checkout(ea2.handle).unwrap();
+        let before = store.stats().evictions;
+        let err = store.register_for("alpha", sparse_a(204), None, &reg(), &cfg()).unwrap_err();
+        assert!(err.starts_with(QUOTA_EXCEEDED), "typed quota error, got: {err}");
+        assert!(err.contains("`alpha`"), "{err}");
+        assert_eq!(store.stats().evictions, before, "failed registration evicts nothing");
+        assert!(store.checkout(eb1.handle).is_some(), "beta still resident");
+    }
+
+    /// Spill tier behind the store: eviction demotes the full entry to
+    /// disk, `peek_dims` still answers, and a later checkout promotes it
+    /// back bitwise — same sig, same dense bits, same version — with the
+    /// spill gauges tracking every move.
+    #[test]
+    fn eviction_demotes_to_spill_and_checkout_promotes_bitwise() {
+        let dir = std::env::temp_dir()
+            .join(format!("gcoospdm_store_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (probe, _) = OperandStore::new(u64::MAX)
+            .register(sparse_a(210), None, &reg(), &cfg())
+            .unwrap();
+        let ebytes = probe.bytes;
+        let spill = SpillStore::new(&dir, 0).unwrap();
+        let store = OperandStore::with_tiers(ebytes * 5 / 2, None, Some(spill));
+        let (e1, _) = store.register(sparse_a(210), None, &reg(), &cfg()).unwrap();
+        let sig1 = e1.sig;
+        let a1_bits: Vec<u32> = e1.a.data.iter().map(|v| v.to_bits()).collect();
+        let (e2, _) = store.register(sparse_a(211), None, &reg(), &cfg()).unwrap();
+        drop(store.checkout(e2.handle)); // e1 becomes the LRU victim
+        let (e3, _) = store.register(sparse_a(212), None, &reg(), &cfg()).unwrap();
+        let st = store.stats();
+        assert_eq!((st.evictions, st.spill_writes), (1, 1), "eviction demoted e1");
+        assert!(st.spill_bytes > 0);
+        let listed = store.list();
+        assert_eq!(listed.iter().filter(|s| s.tier == "spilled").count(), 1);
+        assert_eq!(listed.iter().filter(|s| s.tier == "ram").count(), 2);
+        let spilled_row = listed.iter().find(|s| s.handle == e1.handle).unwrap();
+        assert_eq!((spilled_row.tier, spilled_row.n), ("spilled", 64));
+        assert_eq!(store.peek_dims(e1.handle), Some(64), "spilled handle answers dims");
+        // Checkout promotes by one sequential read: bitwise dense A, same
+        // sig and version, served as a hit. Making room demotes the LRU
+        // RAM resident (e2) in cascade.
+        let pin = store.checkout(e1.handle).expect("promoted");
+        assert_eq!(pin.entry().sig, sig1);
+        assert_eq!(pin.entry().version, 1);
+        let bits: Vec<u32> = pin.entry().a.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, a1_bits, "promoted dense A is bitwise identical");
+        let st = store.stats();
+        assert_eq!(st.spill_promotes, 1);
+        assert_eq!(st.spill_writes, 2, "promotion demoted the RAM LRU in cascade");
+        assert!(store.bytes_used() <= store.budget_bytes());
+        assert!(store.checkout(e3.handle).is_some(), "most-recent resident survived");
+        drop(pin);
+        // An explicit drop reaches the spill tier too.
+        assert!(store.remove(e2.handle), "spilled handle drops");
+        assert!(store.checkout(e2.handle).is_none());
+        assert_eq!(store.stats().spill_bytes, 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Cluster replication hook: the replica installs under the original

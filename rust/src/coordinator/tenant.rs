@@ -1,0 +1,288 @@
+//! Multi-tenant admission control: tenant specs, token-bucket rate
+//! limiting, and the quota/backpressure error grammar.
+//!
+//! A tenant id rides on both wire planes (an optional `tenant` field in
+//! JSON v2, a length-prefixed slot in binary v3 frames) and defaults to
+//! [`DEFAULT_TENANT`] when absent, so every pre-tenancy client stays
+//! byte-compatible. The registry owns three per-tenant knobs:
+//!
+//! * **weight** — the deficit-round-robin quantum used by the laned
+//!   [`super::BoundedQueue`] (fusion stays within a tenant's lane);
+//! * **rate / burst** — a token bucket consulted by `submit`/`put_a`;
+//!   an empty bucket yields a typed [`RATE_LIMITED`] error that never
+//!   closes the connection;
+//! * **store slice** — the byte budget `OperandStore` lets this tenant
+//!   occupy; registrations beyond it can evict only the tenant's own
+//!   entries and otherwise fail with a typed [`QUOTA_EXCEEDED`] error.
+//!
+//! Admission may change *scheduling order and residency*, never result
+//! bits: a request that is admitted computes exactly what it would have
+//! computed untenanted.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::tuner::Clock;
+
+/// The tenant every request without an explicit id belongs to.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Error-grammar prefix for token-bucket rejections.
+pub const RATE_LIMITED: &str = "RATE_LIMITED";
+
+/// Error-grammar prefix for store-slice rejections.
+pub const QUOTA_EXCEEDED: &str = "QUOTA_EXCEEDED";
+
+/// Wire-level ceiling on tenant-id length: the binary plane carries the
+/// id behind a u8 length prefix, and the JSON plane enforces the same
+/// bound for parity.
+pub const MAX_TENANT_LEN: usize = 255;
+
+/// Per-tenant admission knobs. A zero `rate_per_s` means unlimited (no
+/// bucket, no clock reads); a zero `store_slice_bytes` means the tenant
+/// may use the whole store budget (the pre-tenancy behavior).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// DRR quantum (items per round-robin visit). Clamped to >= 1.
+    pub weight: u32,
+    /// Token refill rate in requests per second; 0 = unlimited.
+    pub rate_per_s: f64,
+    /// Bucket capacity (maximum burst); 0 falls back to `rate_per_s`
+    /// rounded up, so a configured rate always admits at least one.
+    pub burst: f64,
+    /// Store-budget slice in bytes; 0 = the whole store budget.
+    pub store_slice_bytes: u64,
+}
+
+impl TenantSpec {
+    /// An unlimited spec: weight 1, no rate limit, whole-budget slice.
+    pub fn unlimited(name: &str) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            weight: 1,
+            rate_per_s: 0.0,
+            burst: 0.0,
+            store_slice_bytes: 0,
+        }
+    }
+
+    fn burst_cap(&self) -> f64 {
+        if self.burst > 0.0 {
+            self.burst
+        } else {
+            self.rate_per_s.ceil().max(1.0)
+        }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last_s: f64,
+    primed: bool,
+}
+
+/// Registry of tenant specs plus the live token buckets. Unknown tenant
+/// names share the `default` tenant's spec (and its bucket), so a typo'd
+/// id degrades to default-tenant treatment instead of a hole in the
+/// admission wall.
+pub struct TenantRegistry {
+    specs: HashMap<String, TenantSpec>,
+    default_spec: TenantSpec,
+    buckets: Mutex<HashMap<String, Bucket>>,
+    clock: Arc<dyn Clock>,
+}
+
+impl TenantRegistry {
+    /// Build from configured specs. A `default` spec is synthesized
+    /// (unlimited) when none is supplied, so the registry always has a
+    /// fallback identity.
+    pub fn new(tenants: &[TenantSpec], clock: Arc<dyn Clock>) -> TenantRegistry {
+        let mut specs: HashMap<String, TenantSpec> = HashMap::new();
+        for t in tenants {
+            let mut spec = t.clone();
+            spec.weight = spec.weight.max(1);
+            specs.insert(spec.name.clone(), spec);
+        }
+        let default_spec = specs
+            .get(DEFAULT_TENANT)
+            .cloned()
+            .unwrap_or_else(|| TenantSpec::unlimited(DEFAULT_TENANT));
+        specs.entry(DEFAULT_TENANT.to_string()).or_insert_with(|| default_spec.clone());
+        TenantRegistry { specs, default_spec, buckets: Mutex::new(HashMap::new()), clock }
+    }
+
+    /// Registry with only the unlimited default tenant (pre-tenancy
+    /// behavior; never reads the clock).
+    pub fn default_only(clock: Arc<dyn Clock>) -> TenantRegistry {
+        TenantRegistry::new(&[], clock)
+    }
+
+    /// The spec governing `tenant` (the default spec for unknown names).
+    pub fn spec_of(&self, tenant: &str) -> &TenantSpec {
+        self.specs.get(tenant).unwrap_or(&self.default_spec)
+    }
+
+    /// The accounting identity `tenant` resolves to: its own name when
+    /// configured, otherwise [`DEFAULT_TENANT`] (unknown tenants share
+    /// the default bucket and slice rather than minting fresh ones).
+    pub fn resolve_owned(&self, tenant: &str) -> String {
+        if self.specs.contains_key(tenant) {
+            tenant.to_string()
+        } else {
+            DEFAULT_TENANT.to_string()
+        }
+    }
+
+    /// DRR weight for `tenant`.
+    pub fn weight_of(&self, tenant: &str) -> u32 {
+        self.spec_of(tenant).weight.max(1)
+    }
+
+    /// Store-budget slice for `tenant` (0 = whole budget).
+    pub fn slice_of(&self, tenant: &str) -> u64 {
+        self.spec_of(tenant).store_slice_bytes
+    }
+
+    /// `(name, weight)` pairs for configuring queue lanes, default lane
+    /// included. Empty when no tenants are configured: the queue then
+    /// stays in its single-deque (pre-tenancy) mode.
+    pub fn lanes(&self) -> Vec<(String, u32)> {
+        if self.specs.len() == 1 && self.default_spec == TenantSpec::unlimited(DEFAULT_TENANT) {
+            return Vec::new();
+        }
+        let mut lanes: Vec<(String, u32)> =
+            self.specs.iter().map(|(n, s)| (n.clone(), s.weight.max(1))).collect();
+        lanes.sort();
+        lanes
+    }
+
+    /// Whether any tenant is configured beyond the unlimited default.
+    pub fn is_multi(&self) -> bool {
+        !self.lanes().is_empty()
+    }
+
+    /// Token-bucket admission for one request from `tenant`. Unlimited
+    /// tenants (rate 0) are admitted without reading the clock, so
+    /// scripted-clock tests of untenanted coordinators observe zero
+    /// extra reads. Returns the typed `RATE_LIMITED: ...` message on
+    /// rejection; the caller surfaces it as an error frame / JSON error
+    /// and keeps the connection open.
+    pub fn admit(&self, tenant: &str) -> Result<(), String> {
+        let spec = self.spec_of(tenant);
+        if spec.rate_per_s <= 0.0 {
+            return Ok(());
+        }
+        let now = self.clock.now_s();
+        let cap = spec.burst_cap();
+        let mut g = self.buckets.lock().unwrap();
+        let b = g.entry(spec.name.clone()).or_insert(Bucket {
+            tokens: cap,
+            last_s: now,
+            primed: false,
+        });
+        if b.primed {
+            let dt = (now - b.last_s).max(0.0);
+            b.tokens = (b.tokens + dt * spec.rate_per_s).min(cap);
+        } else {
+            b.primed = true;
+        }
+        b.last_s = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(format!(
+                "{}: tenant `{}` over {} req/s (burst {})",
+                RATE_LIMITED, spec.name, spec.rate_per_s, cap
+            ))
+        }
+    }
+}
+
+impl std::fmt::Debug for TenantRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut names: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        names.sort();
+        f.debug_struct("TenantRegistry").field("tenants", &names).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tuner::ScriptedClock;
+
+    fn spec(name: &str, weight: u32, rate: f64, burst: f64, slice: u64) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            weight,
+            rate_per_s: rate,
+            burst,
+            store_slice_bytes: slice,
+        }
+    }
+
+    #[test]
+    fn default_only_registry_is_unlimited_and_laneless() {
+        let clock = Arc::new(ScriptedClock::new(vec![]));
+        let reg = TenantRegistry::default_only(clock.clone());
+        assert!(!reg.is_multi());
+        assert!(reg.lanes().is_empty());
+        for _ in 0..100 {
+            assert!(reg.admit(DEFAULT_TENANT).is_ok());
+            assert!(reg.admit("anyone").is_ok());
+        }
+        assert_eq!(clock.reads(), 0, "unlimited tenants must not read the clock");
+        assert_eq!(reg.slice_of("anyone"), 0);
+        assert_eq!(reg.weight_of("anyone"), 1);
+    }
+
+    #[test]
+    fn token_bucket_rejects_with_typed_error_and_refills() {
+        // Scripted clock: bucket primed at t=0, flood, then advance 1s.
+        let clock = Arc::new(ScriptedClock::with_step(vec![0.0, 0.0, 0.0, 0.0, 1.0], 0.0));
+        let reg = TenantRegistry::new(&[spec("hot", 1, 2.0, 2.0, 0)], clock);
+        assert!(reg.admit("hot").is_ok());
+        assert!(reg.admit("hot").is_ok());
+        let err = reg.admit("hot").unwrap_err();
+        assert!(err.starts_with(RATE_LIMITED), "typed prefix, got: {err}");
+        assert!(err.contains("`hot`"), "names the tenant: {err}");
+        let err2 = reg.admit("hot").unwrap_err();
+        assert!(err2.starts_with(RATE_LIMITED));
+        // t=1.0: 2 req/s refill -> two more tokens.
+        assert!(reg.admit("hot").is_ok());
+    }
+
+    #[test]
+    fn burst_defaults_to_rate_and_unknown_names_share_default() {
+        let clock = Arc::new(ScriptedClock::with_step(vec![0.0], 0.0));
+        let reg = TenantRegistry::new(
+            &[spec("default", 2, 1.0, 0.0, 4096), spec("alpha", 3, 0.0, 0.0, 1 << 20)],
+            clock,
+        );
+        assert!(reg.is_multi());
+        assert_eq!(reg.lanes(), vec![("alpha".to_string(), 3), ("default".to_string(), 2)]);
+        // Unknown name resolves to default's spec: slice, weight, bucket.
+        assert_eq!(reg.slice_of("mystery"), 4096);
+        assert_eq!(reg.weight_of("mystery"), 2);
+        assert_eq!(reg.resolve_owned("mystery"), "default");
+        assert_eq!(reg.resolve_owned("alpha"), "alpha");
+        assert!(reg.admit("mystery").is_ok(), "burst defaults to ceil(rate) = 1");
+        let err = reg.admit("default").unwrap_err();
+        assert!(err.starts_with(RATE_LIMITED));
+        // Unknown names drained the shared default bucket.
+        assert!(reg.admit("mystery").is_err());
+        // alpha is unlimited.
+        for _ in 0..10 {
+            assert!(reg.admit("alpha").is_ok());
+        }
+    }
+
+    #[test]
+    fn weight_clamped_to_one() {
+        let clock = Arc::new(ScriptedClock::new(vec![]));
+        let reg = TenantRegistry::new(&[spec("z", 0, 0.0, 0.0, 0)], clock);
+        assert_eq!(reg.weight_of("z"), 1);
+    }
+}

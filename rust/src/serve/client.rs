@@ -17,13 +17,17 @@ pub struct Client {
     reader: BufReader<TcpStream>,
     bytes_sent: u64,
     bytes_received: u64,
+    /// Tenant id stamped onto every subsequent request on both planes
+    /// (ISSUE 9). `None` leaves the wire byte-identical to a pre-tenancy
+    /// client: no `tenant` field on JSON lines, untagged v3 frames.
+    tenant: Option<String>,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { writer: stream, reader, bytes_sent: 0, bytes_received: 0 })
+        Ok(Client { writer: stream, reader, bytes_sent: 0, bytes_received: 0, tenant: None })
     }
 
     /// Cluster-aware addressing: dial addresses in order and connect to
@@ -58,6 +62,26 @@ impl Client {
     pub fn reset_wire_counters(&mut self) {
         self.bytes_sent = 0;
         self.bytes_received = 0;
+    }
+
+    /// Tag (or untag, with `None`) every subsequent request with a tenant
+    /// id. Applies to both planes; `None` restores the pre-tenancy wire
+    /// encoding byte for byte.
+    pub fn set_tenant(&mut self, tenant: Option<&str>) {
+        self.tenant = tenant.map(str::to_string);
+    }
+
+    /// JSON plane: append the `tenant` field when one is set.
+    fn tag_tenant(&self, o: crate::json::ObjBuilder) -> crate::json::ObjBuilder {
+        match &self.tenant {
+            Some(t) => o.field("tenant", t.as_str()),
+            None => o,
+        }
+    }
+
+    /// Binary plane: the tenant slot payload ("" = encode untagged frames).
+    fn tenant_str(&self) -> &str {
+        self.tenant.as_deref().unwrap_or("")
     }
 
     fn round_trip(&mut self, line: &str) -> Result<Response, String> {
@@ -138,20 +162,17 @@ impl Client {
         algo: &str,
         verify: bool,
     ) -> Result<Response, String> {
-        let line = crate::json::write(
-            &Value::obj()
-                .field("id", id)
-                .field("type", "spdm")
-                .field("n", n)
-                .field("payload", "synthetic")
-                .field("sparsity", sparsity)
-                .field("pattern", pattern)
-                .field("seed", seed)
-                .field("algo", algo)
-                .field("verify", verify)
-                .build(),
-        );
-        self.round_trip(&line)
+        let line = Value::obj()
+            .field("id", id)
+            .field("type", "spdm")
+            .field("n", n)
+            .field("payload", "synthetic")
+            .field("sparsity", sparsity)
+            .field("pattern", pattern)
+            .field("seed", seed)
+            .field("algo", algo)
+            .field("verify", verify);
+        self.round_trip(&crate::json::write(&self.tag_tenant(line).build()))
     }
 
     /// Inline-payload SpDM request.
@@ -163,18 +184,15 @@ impl Client {
         b: &[f32],
         verify: bool,
     ) -> Result<Response, String> {
-        let line = crate::json::write(
-            &Value::obj()
-                .field("id", id)
-                .field("type", "spdm")
-                .field("n", n)
-                .field("payload", "inline")
-                .field("a", to_arr(a))
-                .field("b", to_arr(b))
-                .field("verify", verify)
-                .build(),
-        );
-        self.round_trip(&line)
+        let line = Value::obj()
+            .field("id", id)
+            .field("type", "spdm")
+            .field("n", n)
+            .field("payload", "inline")
+            .field("a", to_arr(a))
+            .field("b", to_arr(b))
+            .field("verify", verify);
+        self.round_trip(&crate::json::write(&self.tag_tenant(line).build()))
     }
 
     /// v2: register an inline A operand. The reply's `a_handle` names it;
@@ -187,17 +205,14 @@ impl Client {
         a: &[f32],
         algo: &str,
     ) -> Result<Response, String> {
-        let line = crate::json::write(
-            &Value::obj()
-                .field("id", id)
-                .field("type", "put_a")
-                .field("n", n)
-                .field("payload", "inline")
-                .field("a", to_arr(a))
-                .field("algo", algo)
-                .build(),
-        );
-        self.round_trip(&line)
+        let line = Value::obj()
+            .field("id", id)
+            .field("type", "put_a")
+            .field("n", n)
+            .field("payload", "inline")
+            .field("a", to_arr(a))
+            .field("algo", algo);
+        self.round_trip(&crate::json::write(&self.tag_tenant(line).build()))
     }
 
     /// v2: register a synthetic A operand (server-side generation).
@@ -211,19 +226,16 @@ impl Client {
         seed: u64,
         algo: &str,
     ) -> Result<Response, String> {
-        let line = crate::json::write(
-            &Value::obj()
-                .field("id", id)
-                .field("type", "put_a")
-                .field("n", n)
-                .field("payload", "synthetic")
-                .field("sparsity", sparsity)
-                .field("pattern", pattern)
-                .field("seed", seed)
-                .field("algo", algo)
-                .build(),
-        );
-        self.round_trip(&line)
+        let line = Value::obj()
+            .field("id", id)
+            .field("type", "put_a")
+            .field("n", n)
+            .field("payload", "synthetic")
+            .field("sparsity", sparsity)
+            .field("pattern", pattern)
+            .field("seed", seed)
+            .field("algo", algo);
+        self.round_trip(&crate::json::write(&self.tag_tenant(line).build()))
     }
 
     /// v2: multiply a registered A by an inline B.
@@ -234,16 +246,13 @@ impl Client {
         b: &[f32],
         verify: bool,
     ) -> Result<Response, String> {
-        let line = crate::json::write(
-            &Value::obj()
-                .field("id", id)
-                .field("type", "spdm")
-                .field("a_handle", a_handle)
-                .field("b", to_arr(b))
-                .field("verify", verify)
-                .build(),
-        );
-        self.round_trip(&line)
+        let line = Value::obj()
+            .field("id", id)
+            .field("type", "spdm")
+            .field("a_handle", a_handle)
+            .field("b", to_arr(b))
+            .field("verify", verify);
+        self.round_trip(&crate::json::write(&self.tag_tenant(line).build()))
     }
 
     /// v2: multiply a registered A by a synthetic (seeded) B — handle reuse
@@ -255,16 +264,13 @@ impl Client {
         seed: u64,
         verify: bool,
     ) -> Result<Response, String> {
-        let line = crate::json::write(
-            &Value::obj()
-                .field("id", id)
-                .field("type", "spdm")
-                .field("a_handle", a_handle)
-                .field("seed", seed)
-                .field("verify", verify)
-                .build(),
-        );
-        self.round_trip(&line)
+        let line = Value::obj()
+            .field("id", id)
+            .field("type", "spdm")
+            .field("a_handle", a_handle)
+            .field("seed", seed)
+            .field("verify", verify);
+        self.round_trip(&crate::json::write(&self.tag_tenant(line).build()))
     }
 
     /// v2: drop a registered operand.
@@ -301,7 +307,7 @@ impl Client {
         verify: bool,
         want_c: bool,
     ) -> Result<(Response, Option<Mat>), String> {
-        let f = frame::encode_spdm_inline(id, n, a, b, algo, verify, want_c);
+        let f = frame::encode_spdm_inline_t(id, n, a, b, algo, verify, want_c, self.tenant_str());
         self.frame_round_trip(&f)
     }
 
@@ -317,7 +323,16 @@ impl Client {
         verify: bool,
         want_c: bool,
     ) -> Result<(Response, Option<Mat>), String> {
-        let f = frame::encode_spdm_handle_b(id, a_handle, n, b, algo, verify, want_c);
+        let f = frame::encode_spdm_handle_b_t(
+            id,
+            a_handle,
+            n,
+            b,
+            algo,
+            verify,
+            want_c,
+            self.tenant_str(),
+        );
         self.frame_round_trip(&f)
     }
 
@@ -332,7 +347,15 @@ impl Client {
         verify: bool,
         want_c: bool,
     ) -> Result<(Response, Option<Mat>), String> {
-        let f = frame::encode_spdm_handle_seed(id, a_handle, seed, algo, verify, want_c);
+        let f = frame::encode_spdm_handle_seed_t(
+            id,
+            a_handle,
+            seed,
+            algo,
+            verify,
+            want_c,
+            self.tenant_str(),
+        );
         self.frame_round_trip(&f)
     }
 
@@ -344,7 +367,7 @@ impl Client {
         a: &[f32],
         algo: Option<Algo>,
     ) -> Result<Response, String> {
-        let f = frame::encode_put_a(id, n, a, algo);
+        let f = frame::encode_put_a_t(id, n, a, algo, self.tenant_str());
         self.frame_round_trip(&f).map(|(r, _)| r)
     }
 

@@ -41,7 +41,7 @@ use super::server::{
 };
 use crate::coordinator::{
     ASig, Coordinator, CoordinatorConfig, MetricsSnapshot, OperandId, Ring, ShardSpec,
-    DEFAULT_RING_SEED, DEFAULT_VNODES,
+    DEFAULT_RING_SEED, DEFAULT_TENANT, DEFAULT_VNODES,
 };
 use crate::json::{self, Value};
 use crate::runtime::Registry;
@@ -243,7 +243,13 @@ impl Cluster {
         assert!(cfg.nodes >= 1, "a cluster needs at least one node");
         let mut nodes = Vec::with_capacity(cfg.nodes as usize);
         for i in 0..cfg.nodes {
-            let mut node_cfg = cfg.node_cfg;
+            let mut node_cfg = cfg.node_cfg.clone();
+            // Spill slab files are named by handle id, so nodes sharing one
+            // directory would clobber each other — each node spills into
+            // its own subdirectory.
+            if let Some(dir) = &cfg.node_cfg.spill_dir {
+                node_cfg.spill_dir = Some(dir.join(format!("node{i}")));
+            }
             node_cfg.shard =
                 Some(ShardSpec { nodes: cfg.nodes, node: i, vnodes: cfg.vnodes, seed: cfg.seed });
             let coord = Arc::new(Coordinator::new(Arc::clone(&registry), node_cfg));
@@ -631,10 +637,14 @@ fn route_json(line: &str, shared: &RouterShared, be: &mut Backends, stop: &Atomi
                     algo: s.algo.as_str().to_string(),
                     artifact: s.artifact,
                     bytes: s.bytes,
+                    tier: s.tier.to_string(),
+                    last_used_seq: s.last_used_seq,
                 })
                 .collect();
-            // Replica copies are the same logical operand — one row each.
-            handles.sort_by_key(|h| h.a_handle);
+            // Replica copies are the same logical operand — one row each,
+            // and a RAM-resident copy wins over a spilled one (the row
+            // should describe the best tier the cluster can serve from).
+            handles.sort_by_key(|h| (h.a_handle, h.tier != "ram"));
             handles.dedup_by_key(|h| h.a_handle);
             render_response(&Response { id, ok: true, handles: Some(handles), ..Default::default() })
         }
@@ -658,8 +668,8 @@ fn route_json(line: &str, shared: &RouterShared, be: &mut Backends, stop: &Atomi
                 )),
             }
         }
-        Request::PutA { id, n, payload, .. } => {
-            let key = match put_key(n, payload) {
+        Request::PutA { id, n, payload, tenant, .. } => {
+            let key = match put_key(n, payload, &tenant) {
                 Ok(k) => k,
                 Err(e) => {
                     return render_response(&Response {
@@ -679,7 +689,7 @@ fn route_json(line: &str, shared: &RouterShared, be: &mut Backends, stop: &Atomi
                 )),
             }
         }
-        Request::Spdm { id, n, payload, .. } => match payload {
+        Request::Spdm { id, n, payload, tenant, .. } => match payload {
             Payload::Handle { a_handle, .. } => {
                 note_handle_traffic(shared, a_handle);
                 let chain = shared.ring.replicas(a_handle, shared.replicas);
@@ -703,11 +713,15 @@ fn route_json(line: &str, shared: &RouterShared, be: &mut Backends, stop: &Atomi
                 ))
             }
             Payload::Inline { ref a, .. } => {
-                forward_json_any(line, id, content_key(n, a), shared, be)
+                forward_json_any(line, id, mix_tenant(content_key(n, a), &tenant), shared, be)
             }
-            Payload::Synthetic { sparsity, ref pattern, seed } => {
-                forward_json_any(line, id, synthetic_key(n, sparsity, pattern, seed), shared, be)
-            }
+            Payload::Synthetic { sparsity, ref pattern, seed } => forward_json_any(
+                line,
+                id,
+                mix_tenant(synthetic_key(n, sparsity, pattern, seed), &tenant),
+                shared,
+                be,
+            ),
         },
     }
 }
@@ -749,8 +763,8 @@ fn route_frame(
     raw.extend_from_slice(payload);
     match req {
         Request::Ping { id } => frame::encode_resp_pong(id),
-        Request::PutA { id, n, payload, .. } => {
-            let key = match put_key(n, payload) {
+        Request::PutA { id, n, payload, tenant, .. } => {
+            let key = match put_key(n, payload, &tenant) {
                 Ok(k) => k,
                 Err(e) => return frame::encode_resp_err(id, &e),
             };
@@ -763,7 +777,7 @@ fn route_frame(
                 ),
             }
         }
-        Request::Spdm { id, n, payload, .. } => match payload {
+        Request::Spdm { id, n, payload, tenant, .. } => match payload {
             Payload::Handle { a_handle, .. } => {
                 note_handle_traffic(shared, a_handle);
                 let chain = shared.ring.replicas(a_handle, shared.replicas);
@@ -784,11 +798,15 @@ fn route_frame(
                 )
             }
             Payload::Inline { ref a, .. } => {
-                forward_frame_any(&raw, id, content_key(n, a), shared, be)
+                forward_frame_any(&raw, id, mix_tenant(content_key(n, a), &tenant), shared, be)
             }
-            Payload::Synthetic { sparsity, ref pattern, seed } => {
-                forward_frame_any(&raw, id, synthetic_key(n, sparsity, pattern, seed), shared, be)
-            }
+            Payload::Synthetic { sparsity, ref pattern, seed } => forward_frame_any(
+                &raw,
+                id,
+                mix_tenant(synthetic_key(n, sparsity, pattern, seed), &tenant),
+                shared,
+                be,
+            ),
         },
         // decode_request only yields Spdm/PutA/Ping from v3 frame types;
         // answer defensively rather than panic at a trust boundary.
@@ -872,14 +890,34 @@ fn note_handle_traffic(shared: &RouterShared, a_handle: u64) {
 /// hash the store dedups by, so identical content always lands (and
 /// dedups) on one node. Synthetic payloads are materialized first so an
 /// inline re-registration of the generated matrix routes identically.
-fn put_key(n: usize, payload: APayload) -> Result<u64, String> {
-    match payload {
-        APayload::Inline { ref a } => Ok(content_key(n, a)),
+/// The owning tenant folds into the key ([`mix_tenant`]) because store
+/// dedup is per-tenant: two tenants registering the same bytes are
+/// distinct operands and may as well land on distinct nodes.
+fn put_key(n: usize, payload: APayload, tenant: &str) -> Result<u64, String> {
+    let key = match payload {
+        APayload::Inline { ref a } => content_key(n, a),
         payload @ APayload::Synthetic { .. } => {
             let m = materialize_a(n, payload)?;
-            Ok(ASig::of(&m).hash)
+            ASig::of(&m).hash
         }
+    };
+    Ok(mix_tenant(key, tenant))
+}
+
+/// Fold a tenant id into a routing key. The `default` tenant returns the
+/// key untouched — untenanted traffic must place exactly as it did before
+/// tenancy existed (the N-node differential suite pins this).
+fn mix_tenant(key: u64, tenant: &str) -> u64 {
+    if tenant == DEFAULT_TENANT {
+        return key;
     }
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = key;
+    for b in tenant.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
 }
 
 /// FNV-1a64 over `(rows, cols, element bits)` — bit-for-bit the scheme of
@@ -947,6 +985,9 @@ pub fn aggregate_snapshots(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         store_hits: 0,
         store_misses: 0,
         store_evictions: 0,
+        spill_writes: 0,
+        spill_promotes: 0,
+        spill_bytes: 0,
         route_flips: 0,
         explorations: 0,
         window_hits: 0,
@@ -976,6 +1017,9 @@ pub fn aggregate_snapshots(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         out.store_hits += s.store_hits;
         out.store_misses += s.store_misses;
         out.store_evictions += s.store_evictions;
+        out.spill_writes += s.spill_writes;
+        out.spill_promotes += s.spill_promotes;
+        out.spill_bytes += s.spill_bytes;
         out.route_flips += s.route_flips;
         out.explorations += s.explorations;
         out.window_hits += s.window_hits;
@@ -1101,6 +1145,9 @@ mod tests {
         a.submitted = 3;
         a.completed = 2;
         a.store_hits = 5;
+        a.spill_writes = 2;
+        a.spill_promotes = 1;
+        a.spill_bytes = 100;
         a.batch_hist = vec![0, 2, 1];
         a.mean_kernel_s = 2.0;
         a.per_algo.insert("gcoo", 2);
@@ -1108,6 +1155,9 @@ mod tests {
         b.submitted = 4;
         b.completed = 4;
         b.store_hits = 7;
+        b.spill_writes = 3;
+        b.spill_promotes = 4;
+        b.spill_bytes = 28;
         b.batch_hist = vec![0, 1, 0, 9];
         b.mean_kernel_s = 5.0;
         b.per_algo.insert("gcoo", 1);
@@ -1116,11 +1166,26 @@ mod tests {
         assert_eq!(sum.submitted, 7);
         assert_eq!(sum.completed, 6);
         assert_eq!(sum.store_hits, 12);
+        assert_eq!(
+            (sum.spill_writes, sum.spill_promotes, sum.spill_bytes),
+            (5, 5, 128),
+            "spill gauges sum across nodes"
+        );
         assert_eq!(sum.batch_hist, vec![0, 3, 1, 9], "ragged histograms sum bucket-wise");
         assert_eq!(sum.per_algo["gcoo"], 3);
         assert_eq!(sum.per_algo["dense"], 3);
         // completed-weighted phase mean: (2·2 + 5·4) / 6
         assert!((sum.mean_kernel_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mix_tenant_leaves_default_placement_untouched() {
+        let key = content_key(3, &[1.0f32, 0.0, 2.0, 0.0, 3.0, 0.0, 0.0, 0.0, 4.0]);
+        assert_eq!(mix_tenant(key, DEFAULT_TENANT), key, "untenanted placement is pre-tenancy");
+        let (alpha, beta) = (mix_tenant(key, "alpha"), mix_tenant(key, "beta"));
+        assert_ne!(alpha, key, "tenanted keys diverge from the content key");
+        assert_ne!(alpha, beta, "distinct tenants, distinct placement");
+        assert_eq!(alpha, mix_tenant(key, "alpha"), "deterministic");
     }
 
     #[test]

@@ -57,7 +57,7 @@
 //! batches), and synthetic parameters (`sparsity` ∈ [0, 1), known
 //! `pattern`) fail the request here instead of leaking into generation.
 
-use crate::coordinator::Algo;
+use crate::coordinator::{Algo, DEFAULT_TENANT, MAX_TENANT_LEN};
 use crate::gen::Pattern;
 use crate::json::{self, Value};
 
@@ -97,10 +97,14 @@ pub enum Request {
         payload: Payload,
         algo: Option<Algo>,
         verify: bool,
+        /// Owning tenant (ISSUE 9): optional `tenant` field in JSON, a
+        /// flagged slot in v3 frames; absent ⇒ [`DEFAULT_TENANT`], keeping
+        /// every existing client line/frame byte-compatible.
+        tenant: String,
     },
     /// v2: register an A operand (plan + convert once, reply with the
     /// handle and the resolved routing).
-    PutA { id: u64, n: usize, payload: APayload, algo: Option<Algo> },
+    PutA { id: u64, n: usize, payload: APayload, algo: Option<Algo>, tenant: String },
     /// v2: drop a registered operand.
     DropA { id: u64, a_handle: u64 },
     /// v2: list registered operands with their routing/cost summaries.
@@ -125,6 +129,12 @@ pub struct HandleInfo {
     pub algo: String,
     pub artifact: String,
     pub bytes: u64,
+    /// Residency tier (ISSUE 9): `"ram"` (converted slabs resident) or
+    /// `"spilled"` (demoted to the disk tier, promoted on next use).
+    /// Parsed with a `"ram"` default so pre-tenancy replies still decode.
+    pub tier: String,
+    /// The store's LRU sequence at last use (0 = unknown / pre-tenancy).
+    pub last_used_seq: u64,
 }
 
 /// A server response (subset of fields depending on request type).
@@ -199,6 +209,51 @@ fn parse_algo(v: &Value) -> Result<Option<Algo>, String> {
     }
 }
 
+/// Optional `tenant` field (ISSUE 9): absent ⇒ the default tenant (every
+/// pre-tenancy line parses unchanged); present, it must be a non-empty
+/// string of at most [`MAX_TENANT_LEN`] bytes (the v3 frame slot is a
+/// u8-length-prefixed string, so the JSON plane enforces the same bound).
+fn parse_tenant(v: &Value) -> Result<String, String> {
+    match v.get("tenant") {
+        None => Ok(DEFAULT_TENANT.to_string()),
+        Some(t) => {
+            let s = t.as_str().ok_or("invalid tenant: must be a string")?;
+            if s.is_empty() {
+                return Err("invalid tenant: must be non-empty".into());
+            }
+            if s.len() > MAX_TENANT_LEN {
+                return Err(format!(
+                    "invalid tenant: {} bytes exceeds the {MAX_TENANT_LEN}-byte cap",
+                    s.len()
+                ));
+            }
+            Ok(s.to_string())
+        }
+    }
+}
+
+/// Satellite (ISSUE 9): the JSON plane enforces the binary plane's
+/// 256 MiB operand ceiling on inline payloads. The declared `n` is
+/// client-controlled, so the size is computed in checked u64 math exactly
+/// like [`frame`]'s pre-allocation screen — a huge inline request gets a
+/// typed error and the connection survives, it does not balloon the
+/// server's operand buffers.
+fn check_inline_cap(n: usize, operands: usize, what: &str) -> Result<(), String> {
+    let ok = (n as u64)
+        .checked_mul(n as u64)
+        .and_then(|e| e.checked_mul(4))
+        .and_then(|b| b.checked_mul(operands as u64))
+        .is_some_and(|b| b <= frame::MAX_PAYLOAD as u64);
+    if !ok {
+        return Err(format!(
+            "{what} declares dims {n}x{n}: {operands}·n²·4 inline operand bytes exceed the \
+             {}-byte cap",
+            frame::MAX_PAYLOAD
+        ));
+    }
+    Ok(())
+}
+
 pub fn parse_request(line: &str) -> Result<Request, String> {
     let v = json::parse(line).map_err(|e| e.to_string())?;
     let id = v.get("id").and_then(Value::as_u64).ok_or("missing id")?;
@@ -219,9 +274,21 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 let a_handle = ah.as_u64().ok_or("invalid a_handle")?;
                 let n = v.get("n").and_then(Value::as_usize).unwrap_or(0);
                 let b = if v.get("b").is_some() {
+                    if n > 0 {
+                        check_inline_cap(n, 1, "spdm")?;
+                    }
                     let b = finite_floats(&v, "b")?;
                     if n > 0 && b.len() != n * n {
                         return Err(format!("inline b size {} != n²={}", b.len(), n * n));
+                    }
+                    // No declared n: cap the actual array (the operand
+                    // still must fit the frame ceiling).
+                    if b.len() as u64 * 4 > frame::MAX_PAYLOAD as u64 {
+                        return Err(format!(
+                            "inline b carries {} floats, exceeding the {}-byte cap",
+                            b.len(),
+                            frame::MAX_PAYLOAD
+                        ));
                     }
                     BPayload::Inline(b)
                 } else {
@@ -235,6 +302,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                     payload: Payload::Handle { a_handle, b },
                     algo: parse_algo(&v)?,
                     verify: v.get("verify").and_then(Value::as_bool).unwrap_or(false),
+                    tenant: parse_tenant(&v)?,
                 });
             }
             let n = v.get("n").and_then(Value::as_usize).ok_or("missing n")?;
@@ -247,6 +315,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                     Payload::Synthetic { sparsity, pattern, seed }
                 }
                 "inline" => {
+                    check_inline_cap(n, 2, "spdm")?;
                     let a = finite_floats(&v, "a")?;
                     let b = finite_floats(&v, "b")?;
                     if a.len() != n * n || b.len() != n * n {
@@ -262,6 +331,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 payload,
                 algo: parse_algo(&v)?,
                 verify: v.get("verify").and_then(Value::as_bool).unwrap_or(false),
+                tenant: parse_tenant(&v)?,
             })
         }
         "put_a" => {
@@ -275,6 +345,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                     APayload::Synthetic { sparsity, pattern, seed }
                 }
                 "inline" => {
+                    check_inline_cap(n, 1, "put_a")?;
                     let a = finite_floats(&v, "a")?;
                     if a.len() != n * n {
                         return Err(format!("inline a size {} != n²={}", a.len(), n * n));
@@ -283,7 +354,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 }
                 other => return Err(format!("unknown payload kind {other}")),
             };
-            Ok(Request::PutA { id, n, payload, algo: parse_algo(&v)? })
+            Ok(Request::PutA { id, n, payload, algo: parse_algo(&v)?, tenant: parse_tenant(&v)? })
         }
         "drop_a" => {
             let a_handle = v.get("a_handle").and_then(Value::as_u64).ok_or("missing a_handle")?;
@@ -346,6 +417,8 @@ pub fn render_response(r: &Response) -> String {
                         .field("algo", h.algo.as_str())
                         .field("artifact", h.artifact.as_str())
                         .field("bytes", h.bytes)
+                        .field("tier", h.tier.as_str())
+                        .field("last_used_seq", h.last_used_seq)
                         .build()
                 })
                 .collect(),
@@ -383,6 +456,14 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
                         algo: x.get("algo")?.as_str()?.to_string(),
                         artifact: x.get("artifact")?.as_str()?.to_string(),
                         bytes: x.get("bytes")?.as_u64()?,
+                        // Pre-tenancy peers omit the tier columns; default
+                        // to resident so old replies keep parsing.
+                        tier: x
+                            .get("tier")
+                            .and_then(Value::as_str)
+                            .unwrap_or("ram")
+                            .to_string(),
+                        last_used_seq: x.get("last_used_seq").and_then(Value::as_u64).unwrap_or(0),
                     })
                 })
                 .collect()
@@ -407,7 +488,7 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
 /// list/drop/shutdown) intentionally stay JSON-only: the binary plane
 /// carries exactly the operand hot path. See DESIGN.md §Wire.
 pub mod frame {
-    use super::{Algo, BPayload, Payload, Request, Response};
+    use super::{Algo, BPayload, Payload, Request, Response, DEFAULT_TENANT};
     use crate::ndarray::Mat;
 
     /// First byte of every v3 frame. Deliberately distinct from `{`
@@ -427,6 +508,10 @@ pub mod frame {
     pub const FT_SPDM_HANDLE_SEED: u8 = 0x03;
     pub const FT_PUT_A: u8 = 0x04;
     pub const FT_PING: u8 = 0x05;
+    /// Tenant-tagged `put_a` (ISSUE 9). [`FT_PUT_A`] has no flags byte, so
+    /// the tenant slot needs its own frame type; untenanted clients keep
+    /// emitting byte-identical [`FT_PUT_A`] frames.
+    pub const FT_PUT_A_T: u8 = 0x06;
     // Response frame types.
     pub const FT_RESP_SPDM: u8 = 0x81;
     pub const FT_RESP_ERR: u8 = 0x82;
@@ -439,6 +524,10 @@ pub mod frame {
     /// JSON replies only carry the checksum; the binary plane can afford
     /// to return C because it is a memcpy, not an n² text render.
     const FLAG_WANT_C: u8 = 1 << 1;
+    /// The frame carries a tenant slot (`tlen u8 | tenant utf8`) between
+    /// the fixed fields and the operand bytes (ISSUE 9). Unset ⇒ the
+    /// default tenant and a byte-identical pre-tenancy frame.
+    const FLAG_TENANT: u8 = 1 << 2;
 
     /// Parsed frame header.
     #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -632,6 +721,24 @@ pub mod frame {
         (verify as u8) * FLAG_VERIFY | (want_c as u8) * FLAG_WANT_C
     }
 
+    /// Append the tenant slot (`tlen u8 | tenant utf8`). Callers gate on a
+    /// non-empty tenant; the u8 length prefix is what caps tenant names at
+    /// 255 bytes ([`super::MAX_TENANT_LEN`]) across both wire planes.
+    fn put_tenant(w: &mut Builder, tenant: &str) {
+        debug_assert!(!tenant.is_empty() && tenant.len() <= u8::MAX as usize);
+        w.u8(tenant.len() as u8);
+        w.bytes(tenant.as_bytes());
+    }
+
+    /// Read the flagged tenant slot.
+    fn read_tenant(c: &mut Cur<'_>) -> Result<String, String> {
+        let tlen = c.u8()? as usize;
+        if tlen == 0 {
+            return Err("invalid tenant: must be non-empty".into());
+        }
+        utf8(c.take(tlen)?, "tenant")
+    }
+
     /// `spdm` with both operands inline:
     /// `id u64 | n u32 | flags u8 | algo u8 | a n² f32 | b n² f32`.
     pub fn encode_spdm_inline(
@@ -648,6 +755,34 @@ pub mod frame {
         w.u32(n as u32);
         w.u8(flags(verify, want_c));
         w.u8(algo_to_byte(algo));
+        w.f32s(a);
+        w.f32s(b);
+        w.finish()
+    }
+
+    /// Tenant-tagged [`encode_spdm_inline`]: the tenant slot sits between
+    /// the fixed fields and the operands, gated by `FLAG_TENANT`. An empty
+    /// tenant delegates — byte-identical to the untenanted frame.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_spdm_inline_t(
+        id: u64,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+        tenant: &str,
+    ) -> Vec<u8> {
+        if tenant.is_empty() {
+            return encode_spdm_inline(id, n, a, b, algo, verify, want_c);
+        }
+        let mut w = Builder::new(FT_SPDM_INLINE, 15 + tenant.len() + (a.len() + b.len()) * 4);
+        w.u64(id);
+        w.u32(n as u32);
+        w.u8(flags(verify, want_c) | FLAG_TENANT);
+        w.u8(algo_to_byte(algo));
+        put_tenant(&mut w, tenant);
         w.f32s(a);
         w.f32s(b);
         w.finish()
@@ -674,6 +809,32 @@ pub mod frame {
         w.finish()
     }
 
+    /// Tenant-tagged [`encode_spdm_handle_b`] (empty tenant delegates).
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_spdm_handle_b_t(
+        id: u64,
+        a_handle: u64,
+        n: usize,
+        b: &[f32],
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+        tenant: &str,
+    ) -> Vec<u8> {
+        if tenant.is_empty() {
+            return encode_spdm_handle_b(id, a_handle, n, b, algo, verify, want_c);
+        }
+        let mut w = Builder::new(FT_SPDM_HANDLE_B, 23 + tenant.len() + b.len() * 4);
+        w.u64(id);
+        w.u64(a_handle);
+        w.u32(n as u32);
+        w.u8(flags(verify, want_c) | FLAG_TENANT);
+        w.u8(algo_to_byte(algo));
+        put_tenant(&mut w, tenant);
+        w.f32s(b);
+        w.finish()
+    }
+
     /// `spdm` by registered handle with server-side seeded B:
     /// `id u64 | a_handle u64 | seed u64 | flags u8 | algo u8`.
     pub fn encode_spdm_handle_seed(
@@ -693,6 +854,29 @@ pub mod frame {
         w.finish()
     }
 
+    /// Tenant-tagged [`encode_spdm_handle_seed`] (empty tenant delegates).
+    pub fn encode_spdm_handle_seed_t(
+        id: u64,
+        a_handle: u64,
+        seed: u64,
+        algo: Option<Algo>,
+        verify: bool,
+        want_c: bool,
+        tenant: &str,
+    ) -> Vec<u8> {
+        if tenant.is_empty() {
+            return encode_spdm_handle_seed(id, a_handle, seed, algo, verify, want_c);
+        }
+        let mut w = Builder::new(FT_SPDM_HANDLE_SEED, 27 + tenant.len());
+        w.u64(id);
+        w.u64(a_handle);
+        w.u64(seed);
+        w.u8(flags(verify, want_c) | FLAG_TENANT);
+        w.u8(algo_to_byte(algo));
+        put_tenant(&mut w, tenant);
+        w.finish()
+    }
+
     /// `put_a` with an inline operand:
     /// `id u64 | n u32 | algo u8 | a n² f32`.
     pub fn encode_put_a(id: u64, n: usize, a: &[f32], algo: Option<Algo>) -> Vec<u8> {
@@ -700,6 +884,22 @@ pub mod frame {
         w.u64(id);
         w.u32(n as u32);
         w.u8(algo_to_byte(algo));
+        w.f32s(a);
+        w.finish()
+    }
+
+    /// Tenant-tagged `put_a` ([`FT_PUT_A_T`]):
+    /// `id u64 | n u32 | algo u8 | tlen u8 | tenant utf8 | a n² f32`.
+    /// An empty tenant delegates to the untenanted [`FT_PUT_A`] frame.
+    pub fn encode_put_a_t(id: u64, n: usize, a: &[f32], algo: Option<Algo>, tenant: &str) -> Vec<u8> {
+        if tenant.is_empty() {
+            return encode_put_a(id, n, a, algo);
+        }
+        let mut w = Builder::new(FT_PUT_A_T, 14 + tenant.len() + a.len() * 4);
+        w.u64(id);
+        w.u32(n as u32);
+        w.u8(algo_to_byte(algo));
+        put_tenant(&mut w, tenant);
         w.f32s(a);
         w.finish()
     }
@@ -759,6 +959,11 @@ pub mod frame {
                 let n = c.u32()? as usize;
                 let fl = c.u8()?;
                 let algo = algo_from_byte(c.u8()?)?;
+                let tenant = if fl & FLAG_TENANT != 0 {
+                    read_tenant(&mut c)?
+                } else {
+                    DEFAULT_TENANT.to_string()
+                };
                 if n == 0 {
                     return Err("n must be positive".into());
                 }
@@ -773,6 +978,7 @@ pub mod frame {
                         payload: Payload::Inline { a, b },
                         algo,
                         verify: fl & FLAG_VERIFY != 0,
+                        tenant,
                     },
                     fl & FLAG_WANT_C != 0,
                 ))
@@ -783,6 +989,11 @@ pub mod frame {
                 let n = c.u32()? as usize;
                 let fl = c.u8()?;
                 let algo = algo_from_byte(c.u8()?)?;
+                let tenant = if fl & FLAG_TENANT != 0 {
+                    read_tenant(&mut c)?
+                } else {
+                    DEFAULT_TENANT.to_string()
+                };
                 if n == 0 {
                     return Err("n must be positive".into());
                 }
@@ -796,6 +1007,7 @@ pub mod frame {
                         payload: Payload::Handle { a_handle, b: BPayload::Inline(b) },
                         algo,
                         verify: fl & FLAG_VERIFY != 0,
+                        tenant,
                     },
                     fl & FLAG_WANT_C != 0,
                 ))
@@ -806,6 +1018,11 @@ pub mod frame {
                 let seed = c.u64()?;
                 let fl = c.u8()?;
                 let algo = algo_from_byte(c.u8()?)?;
+                let tenant = if fl & FLAG_TENANT != 0 {
+                    read_tenant(&mut c)?
+                } else {
+                    DEFAULT_TENANT.to_string()
+                };
                 c.done("spdm_handle_seed")?;
                 Ok((
                     Request::Spdm {
@@ -814,6 +1031,7 @@ pub mod frame {
                         payload: Payload::Handle { a_handle, b: BPayload::Synthetic { seed } },
                         algo,
                         verify: fl & FLAG_VERIFY != 0,
+                        tenant,
                     },
                     fl & FLAG_WANT_C != 0,
                 ))
@@ -834,6 +1052,29 @@ pub mod frame {
                         n,
                         payload: super::APayload::Inline { a },
                         algo,
+                        tenant: DEFAULT_TENANT.to_string(),
+                    },
+                    false,
+                ))
+            }
+            FT_PUT_A_T => {
+                let id = c.u64()?;
+                let n = c.u32()? as usize;
+                let algo = algo_from_byte(c.u8()?)?;
+                let tenant = read_tenant(&mut c)?;
+                if n == 0 {
+                    return Err("n must be positive".into());
+                }
+                let floats = checked_operand_floats(n, 1, c.remaining(), "put_a")?;
+                let a = c.f32s(floats, "a")?;
+                c.done("put_a")?;
+                Ok((
+                    Request::PutA {
+                        id,
+                        n,
+                        payload: super::APayload::Inline { a },
+                        algo,
+                        tenant,
                     },
                     false,
                 ))
@@ -1037,9 +1278,10 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Spdm { id, n, payload, algo, verify } => {
+            Request::Spdm { id, n, payload, algo, verify, tenant } => {
                 assert_eq!((id, n, verify), (1, 256, true));
                 assert_eq!(algo, Some(Algo::Gcoo));
+                assert_eq!(tenant, "default", "absent tenant resolves to default");
                 assert_eq!(
                     payload,
                     Payload::Synthetic { sparsity: 0.99, pattern: "banded".into(), seed: 7 }
@@ -1109,7 +1351,7 @@ mod tests {
         let r = parse_request(r#"{"id":8,"type":"spdm","a_handle":3,"b":[1,2,3,4],"verify":true}"#)
             .unwrap();
         match r {
-            Request::Spdm { id, n, payload, algo, verify } => {
+            Request::Spdm { id, n, payload, algo, verify, .. } => {
                 assert_eq!((id, n, verify), (8, 0, true));
                 assert_eq!(algo, None);
                 assert_eq!(
@@ -1131,6 +1373,7 @@ mod tests {
                 payload: Payload::Handle { a_handle: 3, b: BPayload::Synthetic { seed: 7 } },
                 algo: Some(Algo::Gcoo),
                 verify: false,
+                tenant: "default".into(),
             }
         );
         // Explicit n with a mismatched inline B fails at parse.
@@ -1163,6 +1406,7 @@ mod tests {
                 n: 64,
                 payload: APayload::Synthetic { sparsity: 0.99, pattern: "banded".into(), seed: 5 },
                 algo: Some(Algo::Csr),
+                tenant: "default".into(),
             }
         );
         let r = parse_request(r#"{"id":7,"type":"put_a","n":2,"payload":"inline","a":[1,0,0,1]}"#)
@@ -1174,6 +1418,7 @@ mod tests {
                 n: 2,
                 payload: APayload::Inline { a: vec![1.0, 0.0, 0.0, 1.0] },
                 algo: None,
+                tenant: "default".into(),
             }
         );
         // Size and positivity checks mirror v1 spdm.
@@ -1269,6 +1514,8 @@ mod tests {
                     algo: "gcoo".into(),
                     artifact: "gcoo_n256_cap512".into(),
                     bytes: 270336,
+                    tier: "ram".into(),
+                    last_used_seq: 12,
                 },
                 HandleInfo {
                     a_handle: 4,
@@ -1277,6 +1524,8 @@ mod tests {
                     algo: "csr".into(),
                     artifact: "csr_n64_rowcap64".into(),
                     bytes: 18432,
+                    tier: "spilled".into(),
+                    last_used_seq: 7,
                 },
             ]),
             ..Default::default()
@@ -1341,6 +1590,7 @@ mod tests {
                 payload: Payload::Inline { a: a.clone(), b: b.clone() },
                 algo: Some(Algo::Gcoo),
                 verify: true,
+                tenant: "default".into(),
             }
         );
 
@@ -1355,6 +1605,7 @@ mod tests {
                 payload: Payload::Handle { a_handle: 3, b: BPayload::Inline(b.clone()) },
                 algo: None,
                 verify: false,
+                tenant: "default".into(),
             }
         );
 
@@ -1368,6 +1619,7 @@ mod tests {
                 payload: Payload::Handle { a_handle: 3, b: BPayload::Synthetic { seed: 42 } },
                 algo: Some(Algo::Csr),
                 verify: true,
+                tenant: "default".into(),
             }
         );
 
@@ -1375,7 +1627,13 @@ mod tests {
         let (req, _) = frame::decode_request(h.ftype, p).unwrap();
         assert_eq!(
             req,
-            Request::PutA { id: 10, n: 2, payload: APayload::Inline { a: a.clone() }, algo: None }
+            Request::PutA {
+                id: 10,
+                n: 2,
+                payload: APayload::Inline { a: a.clone() },
+                algo: None,
+                tenant: "default".into(),
+            }
         );
 
         let (h, p) = split(&frame::encode_ping(11));
@@ -1503,6 +1761,10 @@ mod tests {
             frame::encode_spdm_handle_seed(3, 1, 9, None, false, false),
             frame::encode_put_a(4, 2, &a, Some(Algo::Gcoo)),
             frame::encode_ping(5),
+            frame::encode_spdm_inline_t(1, 2, &a, &b, None, false, false, "alpha"),
+            frame::encode_spdm_handle_b_t(2, 1, 2, &b, None, true, true, "alpha"),
+            frame::encode_spdm_handle_seed_t(3, 1, 9, None, false, false, "alpha"),
+            frame::encode_put_a_t(4, 2, &a, Some(Algo::Gcoo), "alpha"),
         ] {
             let (h, payload) = split(&full);
             for cut in 0..payload.len() {
@@ -1624,5 +1886,150 @@ mod tests {
         let payload = &bytes[frame::HEADER_LEN..];
         assert_eq!(frame::request_id_hint(payload), 0xDEAD_BEEF);
         assert_eq!(frame::request_id_hint(&payload[..7]), 0, "short payload → id 0");
+    }
+
+    // ---- ISSUE 9: tenant id plumbing + JSON inline operand cap ---------
+
+    /// JSON plane: absent tenant ⇒ `default` (pinned above in the v1
+    /// parses); present, it is carried verbatim and validated.
+    #[test]
+    fn json_tenant_field_parses_and_validates() {
+        let r = parse_request(
+            r#"{"id":1,"type":"spdm","n":2,"payload":"inline","a":[1,0,0,1],"b":[1,2,3,4],"tenant":"alpha"}"#,
+        )
+        .unwrap();
+        assert!(matches!(r, Request::Spdm { ref tenant, .. } if tenant == "alpha"));
+        let r = parse_request(
+            r#"{"id":2,"type":"put_a","n":2,"payload":"inline","a":[1,0,0,1],"tenant":"beta"}"#,
+        )
+        .unwrap();
+        assert!(matches!(r, Request::PutA { ref tenant, .. } if tenant == "beta"));
+        let r = parse_request(r#"{"id":3,"type":"spdm","a_handle":4,"seed":7,"tenant":"gamma"}"#)
+            .unwrap();
+        assert!(matches!(r, Request::Spdm { ref tenant, .. } if tenant == "gamma"));
+        // Invalid tenants are typed parse errors, not silent defaults.
+        for bad in [
+            r#"{"id":4,"type":"spdm","n":8,"tenant":""}"#,
+            r#"{"id":4,"type":"spdm","n":8,"tenant":42}"#,
+        ] {
+            let err = parse_request(bad).unwrap_err();
+            assert!(err.contains("tenant"), "{bad} → {err}");
+        }
+        let long = format!(r#"{{"id":4,"type":"spdm","n":8,"tenant":"{}"}}"#, "x".repeat(256));
+        assert!(parse_request(&long).unwrap_err().contains("tenant"));
+        // 255 bytes — the u8-length-prefix bound — is still valid.
+        let edge = format!(r#"{{"id":4,"type":"spdm","n":8,"tenant":"{}"}}"#, "x".repeat(255));
+        assert!(parse_request(&edge).is_ok());
+    }
+
+    /// Satellite (ISSUE 9): the JSON plane enforces the binary plane's
+    /// 256 MiB operand ceiling on inline payloads — a declared n whose
+    /// operands cannot fit gets a typed error before any operand work.
+    #[test]
+    fn json_inline_operand_cap_enforced() {
+        // 2·16384²·4 = 2 GiB of declared inline operands.
+        let err = parse_request(
+            r#"{"id":1,"type":"spdm","n":16384,"payload":"inline","a":[],"b":[]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("exceed"), "typed cap error: {err}");
+        assert!(err.contains("16384x16384"), "error names the declared dims: {err}");
+        // put_a: 1·16384²·4 = 1 GiB.
+        let err = parse_request(r#"{"id":2,"type":"put_a","n":16384,"payload":"inline","a":[]}"#)
+            .unwrap_err();
+        assert!(err.contains("exceed"), "{err}");
+        // Handle request with declared n and inline B.
+        let err = parse_request(r#"{"id":3,"type":"spdm","a_handle":1,"n":16384,"b":[]}"#)
+            .unwrap_err();
+        assert!(err.contains("exceed"), "{err}");
+        // The edge stays valid: 1·8192²·4 = 256 MiB exactly passes the cap
+        // (and then fails the ordinary size check, proving the cap screen
+        // ran first and let it through).
+        let err = parse_request(r#"{"id":4,"type":"put_a","n":8192,"payload":"inline","a":[]}"#)
+            .unwrap_err();
+        assert!(err.contains("inline a size"), "cap admits the 256 MiB edge: {err}");
+        // Synthetic payloads are untouched — no inline bytes to cap.
+        assert!(parse_request(r#"{"id":5,"type":"spdm","n":16384,"payload":"synthetic"}"#).is_ok());
+    }
+
+    /// Binary plane: the tenant slot round-trips on all four operand
+    /// frames, and an absent tenant stays byte-identical to the
+    /// pre-tenancy encoding (the compatibility contract).
+    #[test]
+    fn frame_tenant_slots_round_trip_and_default_stays_byte_identical() {
+        let a = vec![1.0f32, -0.0, 2.0, 3.0];
+        let b = vec![4.0f32, 5.0, 6.0, 7.0];
+        // Empty tenant delegates to the untenanted encoders byte-for-byte.
+        assert_eq!(
+            frame::encode_spdm_inline_t(7, 2, &a, &b, Some(Algo::Gcoo), true, true, ""),
+            frame::encode_spdm_inline(7, 2, &a, &b, Some(Algo::Gcoo), true, true),
+        );
+        assert_eq!(
+            frame::encode_spdm_handle_b_t(8, 3, 2, &b, None, false, false, ""),
+            frame::encode_spdm_handle_b(8, 3, 2, &b, None, false, false),
+        );
+        assert_eq!(
+            frame::encode_spdm_handle_seed_t(9, 3, 42, None, false, false, ""),
+            frame::encode_spdm_handle_seed(9, 3, 42, None, false, false),
+        );
+        assert_eq!(
+            frame::encode_put_a_t(10, 2, &a, None, ""),
+            frame::encode_put_a(10, 2, &a, None),
+        );
+        // Tagged frames decode with the tenant; everything else matches
+        // the untenanted decode.
+        let (h, p) = split(&frame::encode_spdm_inline_t(7, 2, &a, &b, None, true, false, "alpha"));
+        let (req, want_c) = frame::decode_request(h.ftype, p).unwrap();
+        assert!(!want_c);
+        assert_eq!(
+            req,
+            Request::Spdm {
+                id: 7,
+                n: 2,
+                payload: Payload::Inline { a: a.clone(), b: b.clone() },
+                algo: None,
+                verify: true,
+                tenant: "alpha".into(),
+            }
+        );
+        let (h, p) = split(&frame::encode_spdm_handle_b_t(8, 3, 2, &b, None, false, true, "beta"));
+        let (req, want_c) = frame::decode_request(h.ftype, p).unwrap();
+        assert!(want_c, "want_c must survive alongside the tenant flag");
+        assert!(matches!(req, Request::Spdm { ref tenant, .. } if tenant == "beta"));
+        let (h, p) =
+            split(&frame::encode_spdm_handle_seed_t(9, 3, 42, Some(Algo::Csr), false, false, "gamma"));
+        let (req, _) = frame::decode_request(h.ftype, p).unwrap();
+        assert!(matches!(req, Request::Spdm { ref tenant, .. } if tenant == "gamma"));
+        let bytes = frame::encode_put_a_t(10, 2, &a, Some(Algo::Gcoo), "delta");
+        let (h, p) = split(&bytes);
+        assert_eq!(h.ftype, frame::FT_PUT_A_T);
+        let (req, _) = frame::decode_request(h.ftype, p).unwrap();
+        assert_eq!(
+            req,
+            Request::PutA {
+                id: 10,
+                n: 2,
+                payload: APayload::Inline { a: a.clone() },
+                algo: Some(Algo::Gcoo),
+                tenant: "delta".into(),
+            }
+        );
+        // A zero-length tenant slot in a tagged frame is malformed.
+        let mut zt = Vec::new();
+        zt.extend_from_slice(&10u64.to_le_bytes()); // id
+        zt.extend_from_slice(&2u32.to_le_bytes()); // n
+        zt.push(0); // algo auto
+        zt.push(0); // tlen 0
+        let err = frame::decode_request(frame::FT_PUT_A_T, &zt).unwrap_err();
+        assert!(err.contains("tenant"), "{err}");
+        // Non-utf8 tenant bytes are typed errors too.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&10u64.to_le_bytes());
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.push(0);
+        bad.push(2); // tlen 2
+        bad.extend_from_slice(&[0xFF, 0xFE]);
+        let err = frame::decode_request(frame::FT_PUT_A_T, &bad).unwrap_err();
+        assert!(err.contains("tenant"), "{err}");
     }
 }

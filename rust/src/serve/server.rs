@@ -332,7 +332,11 @@ fn dispatch_request(
         // resolved routing (algo/artifact/n_exec/reason) and the
         // registration EO, so clients can introspect what handle traffic
         // will run.
-        Request::PutA { id, n, payload, algo } => {
+        // The tenant rides the registration: its token bucket gates
+        // admission (`RATE_LIMITED: …`) and its store slice bounds
+        // residency (`QUOTA_EXCEEDED: …`) — both come back as ordinary
+        // error replies and the connection stays open.
+        Request::PutA { id, n, payload, algo, tenant } => {
             let a = match materialize_a(n, payload) {
                 Ok(a) => a,
                 Err(e) => {
@@ -342,7 +346,7 @@ fn dispatch_request(
                     )
                 }
             };
-            let resp = match coord.put_a(a, algo) {
+            let resp = match coord.put_a_for(&tenant, a, algo) {
                 Ok(entry) => Response {
                     id,
                     ok: true,
@@ -382,11 +386,13 @@ fn dispatch_request(
                     algo: s.algo.as_str().to_string(),
                     artifact: s.artifact,
                     bytes: s.bytes,
+                    tier: s.tier.to_string(),
+                    last_used_seq: s.last_used_seq,
                 })
                 .collect();
             (Response { id, ok: true, handles: Some(handles), ..Default::default() }, None)
         }
-        Request::Spdm { id, n, payload, algo, verify } => {
+        Request::Spdm { id, n, payload, algo, verify, tenant } => {
             let mut sreq = match build_spdm(coord, id, n, payload) {
                 Ok(r) => r,
                 Err(e) => {
@@ -398,6 +404,11 @@ fn dispatch_request(
             };
             sreq.algo_hint = algo;
             sreq.verify = verify;
+            // Tenant tag drives lane/bucket/slice selection in the
+            // coordinator; a rate-limited submit comes back through
+            // `run_sync` as a failed response → typed error reply, the
+            // connection survives.
+            sreq.tenant = tenant;
             let a_handle = sreq.a.handle().map(|h| h.0);
             let mut resp = coord.run_sync(sreq);
             if let Some(err) = resp.error {

@@ -1,0 +1,541 @@
+//! Tenancy + spill differential (ISSUE 9 acceptance): admission control,
+//! weighted-fair lanes, store slices, and the disk spill tier may change
+//! *scheduling order and residency* — never *result bits*.
+//!
+//! * (a) a 3-tenant mixed workload (quotas + over-subscribed slices with
+//!   spilling) produces bitwise-identical checksums to the same requests
+//!   run untenanted and unspilled — on the JSON plane, the binary plane,
+//!   and through a 3-node cluster whose router forwards tenant ids
+//!   verbatim;
+//! * (b) a hot tenant flooding `put_a` cannot evict another tenant's
+//!   resident operands (slice isolation asserted on store gauges) and
+//!   gets typed `RATE_LIMITED` / `QUOTA_EXCEEDED` errors — never a hang,
+//!   a silent drop, or a closed connection;
+//! * (c) a demoted-then-promoted handle serves with **zero**
+//!   reconversions: `conversions_total` is constant across the
+//!   demote/promote cycle;
+//! * spill round-trip across all 6 corpus patterns: demote → promote
+//!   yields a bitwise-identical `DeviceOperand` and bitwise-identical C.
+//!
+//! The scripted-clock DRR no-starvation property test lives next to the
+//! lane implementation in `src/coordinator/queue.rs`; the token-bucket
+//! unit tests next to the registry in `src/coordinator/tenant.rs`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use gcoospdm::coordinator::{
+    Coordinator, CoordinatorConfig, SpdmRequest, TenantSpec, QUOTA_EXCEEDED, RATE_LIMITED,
+};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{DeviceOperand, Registry};
+use gcoospdm::serve::{Client, Cluster, ClusterConfig, Server, ServerConfig};
+
+/// Stub registry at n=64 (distinct target dir so parallel test binaries
+/// never race on the files).
+fn runnable_registry() -> Registry {
+    let dir = PathBuf::from("target/tenant_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap64", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+fn boot(cfg: CoordinatorConfig) -> (Arc<Coordinator>, String, std::thread::JoinHandle<()>) {
+    let coord = Arc::new(Coordinator::new(Arc::new(runnable_registry()), cfg));
+    let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    (coord, addr, handle)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gcoospdm_tenantdiff_{}_{name}", std::process::id()))
+}
+
+fn spec(name: &str, weight: u32, rate: f64, burst: f64, slice: u64) -> TenantSpec {
+    TenantSpec { name: name.to_string(), weight, rate_per_s: rate, burst, store_slice_bytes: slice }
+}
+
+const N: usize = 64;
+const TENANTS: [&str; 3] = ["alpha", "beta", "gamma"];
+
+/// Deterministic 3-tenant workload: two registered operands per tenant
+/// (each multiplied by its own B) plus one inline pair per tenant.
+fn make_work() -> (Vec<Vec<(Mat, Mat)>>, Vec<(Mat, Mat)>) {
+    let mut per = Vec::new();
+    for ti in 0..TENANTS.len() as u64 {
+        let mut ops = Vec::new();
+        for k in 0..2u64 {
+            let mut rng = Rng::new(100 + ti * 10 + k);
+            let a = gen::generate(gen::Pattern::Uniform, N, 0.9, &mut rng);
+            let b = Mat::randn(N, N, &mut rng);
+            ops.push((a, b));
+        }
+        per.push(ops);
+    }
+    let inline = (0..TENANTS.len() as u64)
+        .map(|ti| {
+            let mut rng = Rng::new(900 + ti);
+            let a = gen::generate(gen::Pattern::Uniform, N, 0.9, &mut rng);
+            let b = Mat::randn(N, N, &mut rng);
+            (a, b)
+        })
+        .collect();
+    (per, inline)
+}
+
+/// A store-slice size that fits any single workload operand but never two
+/// of one tenant's — measured, not guessed, so routing/cap choices can't
+/// silently defeat the over-subscription the test depends on.
+fn measure_slice(per: &[Vec<(Mat, Mat)>]) -> u64 {
+    let coord =
+        Coordinator::new(Arc::new(runnable_registry()), CoordinatorConfig { workers: 1, ..Default::default() });
+    let mut max_one = 0u64;
+    let mut min_sum = u64::MAX;
+    for ops in per {
+        let mut sum = 0u64;
+        for (a, _) in ops {
+            let e = coord.put_a(a.clone(), None).unwrap();
+            max_one = max_one.max(e.bytes);
+            sum += e.bytes;
+        }
+        min_sum = min_sum.min(sum);
+    }
+    coord.shutdown();
+    assert!(
+        max_one < min_sum,
+        "workload must admit a slice fitting one operand but not two ({max_one} vs {min_sum})"
+    );
+    (max_one + min_sum) / 2
+}
+
+/// Run the workload through one client, optionally tagging each request
+/// with its tenant, and return every checksum's bits in request order.
+/// Revisiting operand 0 after operand 1 displaced it (and vice versa) is
+/// what forces demote → promote cycles in the over-subscribed config.
+fn run_workload(
+    client: &mut Client,
+    tag: bool,
+    per: &[Vec<(Mat, Mat)>],
+    inline: &[(Mat, Mat)],
+    id_base: u64,
+) -> Vec<u64> {
+    let mut sums = Vec::new();
+    let mut id = id_base;
+    for (ti, tenant) in TENANTS.iter().enumerate() {
+        client.set_tenant(if tag { Some(*tenant) } else { None });
+        let mut handles = Vec::new();
+        for (a, b) in &per[ti] {
+            let r = client.put_a_inline(id, N, &a.data, "auto").unwrap();
+            assert!(r.ok, "put_a for {tenant}: {:?}", r.error);
+            let h = r.a_handle.unwrap();
+            let r = client.spdm_handle(id + 1, h, &b.data, false).unwrap();
+            assert!(r.ok, "spdm_handle for {tenant}: {:?}", r.error);
+            sums.push(r.checksum.unwrap().to_bits());
+            handles.push(h);
+            id += 2;
+        }
+        // Revisit both operands on the binary plane: in the sliced config
+        // each revisit promotes a spilled entry (displacing the other).
+        for (k, h) in handles.iter().enumerate() {
+            let b = &per[ti][k].1;
+            let (r, _) = client.spdm_handle_bin(id, *h, N, &b.data, None, false, false).unwrap();
+            assert!(r.ok, "revisit a#{h} for {tenant}: {:?}", r.error);
+            sums.push(r.checksum.unwrap().to_bits());
+            id += 1;
+        }
+        // One inline request per tenant on each plane.
+        let (a, b) = &inline[ti];
+        let (r, _) = client.spdm_inline_bin(id, N, &a.data, &b.data, None, false, false).unwrap();
+        assert!(r.ok, "inline bin for {tenant}: {:?}", r.error);
+        sums.push(r.checksum.unwrap().to_bits());
+        let r = client.spdm_inline(id + 1, N, &a.data, &b.data, false).unwrap();
+        assert!(r.ok, "inline json for {tenant}: {:?}", r.error);
+        sums.push(r.checksum.unwrap().to_bits());
+        id += 2;
+    }
+    sums
+}
+
+fn tenanted_cfg(slice: u64, spill_dir: PathBuf) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: 1,
+        tenants: vec![
+            spec("alpha", 1, 0.0, 0.0, slice),
+            spec("beta", 2, 0.0, 0.0, slice),
+            spec("gamma", 4, 0.0, 0.0, slice),
+        ],
+        spill_dir: Some(spill_dir),
+        ..Default::default()
+    }
+}
+
+/// Acceptance (a), single node: the tenanted, slice-over-subscribed,
+/// spilling deployment answers bitwise identically to the untenanted,
+/// unspilled one — on both wire planes.
+#[test]
+fn tenanted_spilling_workload_bitwise_matches_untenanted_on_both_planes() {
+    let (per, inline) = make_work();
+    let slice = measure_slice(&per);
+
+    // Baseline: untenanted, ample budget, no spill tier.
+    let (_c0, addr0, s0) = boot(CoordinatorConfig { workers: 1, ..Default::default() });
+    let mut base = Client::connect(&addr0).unwrap();
+    let baseline = run_workload(&mut base, false, &per, &inline, 1_000);
+    base.shutdown(9_998).unwrap();
+    s0.join().unwrap();
+
+    // Tenanted: per-tenant slices force demote/promote churn.
+    let dir = tmp_dir("planes");
+    let (c1, addr1, s1) = boot(tenanted_cfg(slice, dir.clone()));
+    let mut tcl = Client::connect(&addr1).unwrap();
+    let tenanted = run_workload(&mut tcl, true, &per, &inline, 1_000);
+    assert_eq!(baseline, tenanted, "tenancy + spilling must never change result bits");
+
+    // The over-subscription actually happened: every tenant demoted at
+    // least once and every revisit promoted from disk.
+    let snap = c1.snapshot();
+    assert!(snap.spill_writes >= 3, "expected spill writes, got {}", snap.spill_writes);
+    assert!(snap.spill_promotes >= 3, "expected spill promotes, got {}", snap.spill_promotes);
+
+    tcl.shutdown(9_999).unwrap();
+    s1.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (a), cluster: the same tenanted workload through a 3-node
+/// cluster (router forwards tenant ids verbatim on both planes) is
+/// bitwise identical to the untenanted single-node baseline.
+#[test]
+fn tenanted_workload_through_three_node_cluster_bitwise_matches_single_node() {
+    let (per, inline) = make_work();
+    let slice = measure_slice(&per);
+
+    let (_c0, addr0, s0) = boot(CoordinatorConfig { workers: 1, ..Default::default() });
+    let mut base = Client::connect(&addr0).unwrap();
+    let baseline = run_workload(&mut base, false, &per, &inline, 3_000);
+    base.shutdown(9_998).unwrap();
+    s0.join().unwrap();
+
+    let dir = tmp_dir("cluster");
+    let ccfg = ClusterConfig {
+        nodes: 3,
+        replicate_after: 10_000, // keep replication out of this differential
+        node_cfg: tenanted_cfg(slice, dir.clone()),
+        ..ClusterConfig::default()
+    };
+    let mut cluster = Cluster::start(&ccfg, Arc::new(runnable_registry())).unwrap();
+    let mut tcl = Client::connect(cluster.router_addr()).unwrap();
+    let clustered = run_workload(&mut tcl, true, &per, &inline, 3_000);
+    assert_eq!(baseline, clustered, "a tenanted cluster answers bitwise like a single node");
+
+    // Tenant rows merge across nodes: every registered operand appears
+    // exactly once in cluster list_a, with tier and recency columns.
+    tcl.set_tenant(None);
+    let r = tcl.list_a(8_000).unwrap();
+    assert!(r.ok);
+    let rows = r.handles.unwrap();
+    assert_eq!(rows.len(), 6, "six registered operands across the cluster");
+    for row in &rows {
+        assert!(row.tier == "ram" || row.tier == "spilled", "tier column: {}", row.tier);
+        assert!(row.bytes > 0);
+    }
+
+    cluster.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (b): a hot tenant flooding `put_a` churns only its own
+/// slice; the victim's operand stays resident (gauge-asserted), quota and
+/// rate rejections are typed errors, and the connection always survives.
+#[test]
+fn hot_tenant_flood_cannot_evict_victim_and_gets_typed_backpressure() {
+    let (per, _) = make_work();
+    let slice = measure_slice(&per);
+
+    let dir = tmp_dir("flood");
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        tenants: vec![
+            spec("hog", 1, 0.0, 0.0, slice),
+            spec("victim", 1, 0.0, 0.0, slice),
+            // Slice smaller than any operand: every registration is over
+            // quota.
+            spec("tiny", 1, 0.0, 0.0, 1024),
+            // Burst of one token, refill slow enough to be negligible for
+            // the test's lifetime: request #2 is deterministically limited.
+            spec("ratey", 1, 1e-6, 1.0, 0),
+        ],
+        spill_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let (coord, addr, server) = boot(cfg);
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Victim registers one operand and keeps it resident.
+    client.set_tenant(Some("victim"));
+    let (va, vb) = &per[0][0];
+    let r = client.put_a_inline(1, N, &va.data, "auto").unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    let vh = r.a_handle.unwrap();
+    let victim_bytes = coord.store().tenant_bytes_of("victim");
+    assert!(victim_bytes > 0);
+
+    // Hog floods distinct operands; its slice holds one at a time, so
+    // every extra registration demotes its own previous entry — never
+    // the victim's.
+    client.set_tenant(Some("hog"));
+    let mut id = 10u64;
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(7_000 + seed);
+        let a = gen::generate(gen::Pattern::Uniform, N, 0.9, &mut rng);
+        let r = client.put_a_inline(id, N, &a.data, "auto").unwrap();
+        assert!(r.ok, "hog put_a #{seed}: {:?}", r.error);
+        id += 1;
+    }
+    let st = coord.store().stats();
+    assert!(st.spill_writes >= 3, "hog churn demotes its own entries: {}", st.spill_writes);
+    assert_eq!(
+        coord.store().tenant_bytes_of("victim"),
+        victim_bytes,
+        "slice isolation: hog pressure never touches the victim's resident bytes"
+    );
+    assert!(
+        coord.store().peek_entry(gcoospdm::coordinator::OperandId(vh)).is_some(),
+        "victim operand stays RAM-resident through the flood"
+    );
+
+    // And the victim still serves from cache.
+    client.set_tenant(Some("victim"));
+    let r = client.spdm_handle(100, vh, &vb.data, false).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+
+    // QUOTA_EXCEEDED: a tenant whose slice can't fit the operand gets a
+    // typed error; the connection survives.
+    client.set_tenant(Some("tiny"));
+    let r = client.put_a_inline(200, N, &va.data, "auto").unwrap();
+    assert!(!r.ok, "over-quota put_a must be rejected");
+    let err = r.error.unwrap();
+    assert!(err.contains(QUOTA_EXCEEDED), "typed quota error: {err}");
+    assert!(client.ping(201).unwrap().ok, "connection survives QUOTA_EXCEEDED");
+
+    // RATE_LIMITED on both planes: token #1 admits, #2 is rejected with
+    // the typed error — never a hang or a silent drop — and the same
+    // socket keeps serving.
+    client.set_tenant(Some("ratey"));
+    let (ia, ib) = &per[1][0];
+    let r = client.spdm_inline(300, N, &ia.data, &ib.data, false).unwrap();
+    assert!(r.ok, "first ratey request rides the burst: {:?}", r.error);
+    let r = client.spdm_inline(301, N, &ia.data, &ib.data, false).unwrap();
+    assert!(!r.ok, "second ratey request must be limited");
+    let err = r.error.unwrap();
+    assert!(err.contains(RATE_LIMITED), "typed rate error: {err}");
+    let (r, _) = client.spdm_inline_bin(302, N, &ia.data, &ib.data, None, false, false).unwrap();
+    assert!(!r.ok, "binary plane is limited identically");
+    assert!(r.error.unwrap().contains(RATE_LIMITED));
+    let r = client.put_a_inline(303, N, &ia.data, "auto").unwrap();
+    assert!(!r.ok, "put_a shares the tenant's bucket");
+    assert!(r.error.unwrap().contains(RATE_LIMITED));
+    assert!(client.ping_bin(304).unwrap().ok, "connection survives RATE_LIMITED");
+
+    client.shutdown(9_999).unwrap();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (c): a demote/promote cycle performs **zero** reconversions
+/// — the spilled device form is the one registration built, and
+/// `conversions_total` stays constant while the promoted handle serves.
+#[test]
+fn demote_promote_cycle_never_reconverts() {
+    let (per, _) = make_work();
+    let slice = measure_slice(&per);
+    let (a1, b1) = per[0][0].clone();
+    let (a2, _) = per[0][1].clone();
+
+    // Untenanted baseline C for the same request.
+    let base = Coordinator::new(
+        Arc::new(runnable_registry()),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    );
+    let be = base.put_a(a1.clone(), None).unwrap();
+    let bresp = base.run_sync(SpdmRequest::for_handle(1, be.handle, b1.clone()));
+    assert!(bresp.error.is_none(), "{:?}", bresp.error);
+    let base_c = bresp.c.expect("baseline C");
+    base.shutdown();
+
+    let dir = tmp_dir("noreconvert");
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        tenants: vec![spec("solo", 1, 0.0, 0.0, slice)],
+        spill_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let coord = Coordinator::new(Arc::new(runnable_registry()), cfg);
+    let e1 = coord.put_a_for("solo", a1, None).unwrap();
+    let h1 = e1.handle;
+    let _e2 = coord.put_a_for("solo", a2, None).unwrap();
+    let converted = coord.snapshot().conversions_total;
+    assert_eq!(converted, 2, "both registrations converted once");
+    let st = coord.store().stats();
+    assert!(st.spill_writes >= 1, "registration #2 demoted #1");
+    let spilled_row = coord.list_a().into_iter().find(|s| s.handle == h1).unwrap();
+    assert_eq!(spilled_row.tier, "spilled", "h1 lives in the disk tier");
+
+    // Serve the spilled handle: promoted, verified, executed — and the
+    // conversion counter does not move.
+    let resp = coord.run_sync(SpdmRequest::for_handle(2, h1, b1).with_tenant("solo"));
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.conversions, 0, "a promoted handle pays no conversion");
+    assert_eq!(
+        coord.snapshot().conversions_total,
+        converted,
+        "conversions_total is constant across the demote/promote cycle"
+    );
+    assert_eq!(coord.store().stats().spill_promotes, 1);
+    let ram_row = coord.list_a().into_iter().find(|s| s.handle == h1).unwrap();
+    assert_eq!(ram_row.tier, "ram", "promotion restored RAM residency");
+
+    let c = resp.c.expect("tenanted C");
+    assert_eq!(c.rows, base_c.rows);
+    for (got, want) in c.data.iter().zip(base_c.data.iter()) {
+        assert_eq!(got.to_bits(), want.to_bits(), "promoted C is bitwise the baseline C");
+    }
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn operand_bitwise_eq(x: &DeviceOperand, y: &DeviceOperand) -> bool {
+    match (x, y) {
+        (DeviceOperand::Gcoo(a), DeviceOperand::Gcoo(b)) => {
+            (a.g, a.cap, a.p, a.n) == (b.g, b.cap, b.p, b.n)
+                && bits(&a.vals) == bits(&b.vals)
+                && a.rows == b.rows
+                && a.cols == b.cols
+        }
+        (DeviceOperand::Ell(a), DeviceOperand::Ell(b)) => {
+            (a.n, a.rowcap) == (b.n, b.rowcap) && bits(&a.vals) == bits(&b.vals) && a.cols == b.cols
+        }
+        (DeviceOperand::Dense(a), DeviceOperand::Dense(b)) => {
+            (a.rows, a.cols) == (b.rows, b.cols) && bits(&a.data) == bits(&b.data)
+        }
+        _ => false,
+    }
+}
+
+/// Satellite: across **all 6 corpus patterns**, demote → promote restores
+/// a bitwise-identical `DeviceOperand` and serves a bitwise-identical C.
+#[test]
+fn spill_round_trip_is_bitwise_across_all_corpus_patterns() {
+    let registry = Arc::new(runnable_registry());
+    for (pi, pat) in gen::Pattern::ALL.iter().enumerate() {
+        let mut rng = Rng::new(4_000 + pi as u64);
+        let a = gen::generate(*pat, N, 0.9, &mut rng);
+        let b = Mat::randn(N, N, &mut rng);
+        let mut rng2 = Rng::new(5_000 + pi as u64);
+        let filler = gen::generate(gen::Pattern::Uniform, N, 0.9, &mut rng2);
+
+        // Measure this pattern's pair so the slice fits either operand
+        // alone but not both.
+        let meter = Coordinator::new(
+            Arc::clone(&registry),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        );
+        let ea = meter.put_a(a.clone(), None).unwrap();
+        let ef = meter.put_a(filler.clone(), None).unwrap();
+        let slice = (ea.bytes.max(ef.bytes) + ea.bytes + ef.bytes) / 2;
+        let bresp = meter.run_sync(SpdmRequest::for_handle(1, ea.handle, b.clone()));
+        assert!(bresp.error.is_none(), "{}: {:?}", pat.name(), bresp.error);
+        let base_c = bresp.c.expect("baseline C");
+        meter.shutdown();
+
+        let dir = tmp_dir(pat.name());
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            tenants: vec![spec("solo", 1, 0.0, 0.0, slice)],
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(Arc::clone(&registry), cfg);
+        let e1 = coord.put_a_for("solo", a, None).unwrap();
+        let h = e1.handle;
+        let _e2 = coord.put_a_for("solo", filler, None).unwrap();
+        assert!(
+            coord.store().stats().spill_writes >= 1,
+            "{}: filler registration demotes the pattern operand",
+            pat.name()
+        );
+
+        // Promote via checkout and compare the restored entry bit-for-bit
+        // against the pre-demotion entry we still hold.
+        let pin = coord.store().checkout(h).expect("spilled handle promotes on checkout");
+        let restored = pin.entry();
+        assert_eq!(restored.sig, e1.sig, "{}: signature survives", pat.name());
+        assert_eq!(bits(&restored.a.data), bits(&e1.a.data), "{}: dense A bits", pat.name());
+        assert!(
+            operand_bitwise_eq(&restored.operand, &e1.operand),
+            "{}: device operand must round-trip bitwise",
+            pat.name()
+        );
+        assert_eq!(restored.plan, e1.plan, "{}: plan survives", pat.name());
+        drop(pin);
+
+        let resp = coord.run_sync(SpdmRequest::for_handle(2, h, b).with_tenant("solo"));
+        assert!(resp.error.is_none(), "{}: {:?}", pat.name(), resp.error);
+        assert_eq!(resp.conversions, 0, "{}: no reconversion", pat.name());
+        let c = resp.c.expect("promoted C");
+        for (i, (got, want)) in c.data.iter().zip(base_c.data.iter()).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{}: C[{i}] must be bitwise identical after the spill round trip",
+                pat.name()
+            );
+        }
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Weighted lanes are work-conserving and starvation-free end-to-end: an
+/// 8:1 weight split still completes every light-tenant request.
+#[test]
+fn weighted_lanes_serve_every_tenant() {
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        tenants: vec![spec("heavy", 8, 0.0, 0.0, 0), spec("light", 1, 0.0, 0.0, 0)],
+        ..Default::default()
+    };
+    let coord = Coordinator::new(Arc::new(runnable_registry()), cfg);
+    let mut rxs = Vec::new();
+    for i in 0..16u64 {
+        let tenant = if i % 2 == 0 { "heavy" } else { "light" };
+        let mut rng = Rng::new(6_000 + i);
+        let a = gen::generate(gen::Pattern::Uniform, N, 0.9, &mut rng);
+        let b = Mat::randn(N, N, &mut rng);
+        rxs.push(coord.submit(SpdmRequest::new(i, a, b).with_tenant(tenant)).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("every submitted request completes");
+        assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+    }
+    coord.shutdown();
+}

@@ -433,3 +433,45 @@ fn admission_window_changes_batching_never_results() {
     );
     assert_eq!(snap_w.batched_jobs(), 6, "all jobs accounted in the width histogram");
 }
+
+/// JSON-plane operand pre-allocation cap (ISSUE 9 satellite): the binary
+/// plane's 256 MiB cap applies to huge inline `a`/`b` declarations on the
+/// JSON plane too. The rejection fires on the *declared* dims — the tiny
+/// inline arrays these requests actually carry prove no n²-sized buffer
+/// was needed to say no — the error is typed, and the connection
+/// survives to serve the next request.
+#[test]
+fn json_inline_operand_cap_rejects_huge_declarations_connection_survives() {
+    let (_coord, addr, server) = boot(one_worker());
+    let mut client = Client::connect(&addr).unwrap();
+
+    // spdm inline: 2·n²·4 bytes at n=16384 is 2 GiB, far over the cap.
+    let r = client.spdm_inline(61, 16384, &[1.0], &[1.0], false).unwrap();
+    assert!(!r.ok, "over-cap spdm must be rejected");
+    assert_eq!(r.id, 61, "error reply carries the request id");
+    let err = r.error.unwrap();
+    assert!(
+        err.contains("exceed") && err.contains("16384x16384"),
+        "typed cap error names the declared dims: {err}"
+    );
+
+    // put_a inline: 1·n²·4 bytes at n=16384 is 1 GiB.
+    let r = client.put_a_inline(62, 16384, &[1.0], "auto").unwrap();
+    assert!(!r.ok, "over-cap put_a must be rejected");
+    assert_eq!(r.id, 62);
+    let err = r.error.unwrap();
+    assert!(err.contains("exceed") && err.contains("put_a"), "{err}");
+
+    // The cap is a payload-level rejection: the same socket still serves,
+    // and an under-cap request of the usual size goes through.
+    assert!(client.ping(63).unwrap().ok, "connection survives cap rejections");
+    let n = 64usize;
+    let mut rng = Rng::new(77);
+    let a = gen::generate(gen::Pattern::Uniform, n, 0.9, &mut rng);
+    let b = Mat::randn(n, n, &mut rng);
+    let r = client.spdm_inline(64, n, &a.data, &b.data, false).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+
+    client.shutdown(99).unwrap();
+    server.join().unwrap();
+}
