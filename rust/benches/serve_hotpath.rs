@@ -18,15 +18,19 @@
 //! time-to-drain both sides), and a spill-promote-vs-reconvert A/B (a
 //! demoted handle served by one sequential slab read vs re-shipping A
 //! inline and reconverting per request — bitwise-checked checksums and
-//! a conversion counter pinned across the promote cycles).
+//! a conversion counter pinned across the promote cycles), and a kernel
+//! family A/B (GCOO vs CMRS vs row-split hinted over the same extreme-skew
+//! fixed-seed workload, bitwise-checked, req/s per family).
 //!
 //! The engine only needs artifact files to *exist*, so the bench fabricates
 //! a runnable registry under `target/` — no `make artifacts` required.
 //!
 //! Besides the printed lines, every run emits a machine-readable summary
-//! (`BENCH_9.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
+//! (`BENCH_10.json` at the repo root, or `$BENCH_JSON`): req/s per phase,
 //! latency percentiles, wire bytes per request, and the
-//! copy/conversion/flip/window counters.
+//! copy/conversion/flip/window counters. The document is stamped
+//! `"provenance": "measured"` — the checked-in placeholder lacks that
+//! stamp, which is how `ci.sh --quick` tells the two apart.
 //!
 //!   cargo bench --bench serve_hotpath            # full run
 //!   cargo bench --bench serve_hotpath -- --quick # CI quick mode (ci.sh)
@@ -38,7 +42,7 @@ use std::time::Instant;
 use gcoospdm::convert;
 use gcoospdm::json::{self, Value};
 use gcoospdm::coordinator::{
-    process_batch_ws, process_one_ws, BatchJob, Coordinator, CoordinatorConfig, Selector,
+    process_batch_ws, process_one_ws, Algo, BatchJob, Coordinator, CoordinatorConfig, Selector,
     SpdmRequest, TenantSpec, TunerConfig, Workspace,
 };
 use gcoospdm::gen;
@@ -62,7 +66,11 @@ fn registry() -> Registry {
         {"name": "csr_n256_rowcap128", "algo": "csr", "n": 256,
          "params": {"rp": 8, "rowcap": 128}, "inputs": [], "file": "stub.hlo.txt"},
         {"name": "dense_xla_n256", "algo": "dense_xla", "n": 256,
-         "params": {}, "inputs": [], "file": "stub.hlo.txt"}
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "cmrs_n256_cap1024", "algo": "cmrs", "n": 256,
+         "params": {"p": 8, "cap": 1024}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "rowsplit_n256_cap128", "algo": "rowsplit", "n": 256,
+         "params": {"cap": 128}, "inputs": [], "file": "stub.hlo.txt"}
     ]}"#;
     Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
 }
@@ -988,14 +996,84 @@ fn main() {
         );
     }
 
-    // --- Emit BENCH_9.json ---------------------------------------------
+    // --- Phase 11: kernel family A/B (GCOO vs CMRS vs row-split) -------
+    // The two new families on their motivating workload: an extreme-skew
+    // Zipf-row matrix (one near-dense head row over a long uniform tail).
+    // Every family is hinted over the same fixed-seed requests and must
+    // produce bitwise-identical C — the timing difference is the whole
+    // point; the numbers are what the measured router learns from.
+    {
+        let count = if quick { 12 } else { 60 };
+        let n = 256usize;
+        let engine = Engine::new().unwrap();
+        let mut rng = Rng::new(11_000);
+        let a = gen::generate(gen::Pattern::ZipfRows, n, 0.99, &mut rng);
+        let bs: Vec<Mat> = (0..count).map(|_| Mat::randn(n, n, &mut rng)).collect();
+        let families = [Algo::Gcoo, Algo::Cmrs, Algo::RowSplit];
+        let mut rps = Vec::new();
+        let mut reference: Option<Vec<Option<Mat>>> = None;
+        for family in families {
+            let reqs: Vec<SpdmRequest> = bs
+                .iter()
+                .enumerate()
+                .map(|(i, b)| {
+                    let mut r = SpdmRequest::new(i as u64, a.clone(), b.clone());
+                    r.algo_hint = Some(family);
+                    r
+                })
+                .collect();
+            let mut ws = Workspace::new();
+            for r in reqs.iter().take(2) {
+                let _ = process_one_ws(&engine, &mut ws, &reg, &cfg, r, None, Instant::now());
+            }
+            let t0 = Instant::now();
+            let resps: Vec<_> = reqs
+                .iter()
+                .map(|r| process_one_ws(&engine, &mut ws, &reg, &cfg, r, None, Instant::now()))
+                .collect();
+            let secs = t0.elapsed().as_secs_f64();
+            for resp in &resps {
+                assert!(resp.ok(), "{:?}", resp.error);
+                assert_eq!(resp.algo, family, "the family hint must win");
+            }
+            let cs: Vec<Option<Mat>> = resps.into_iter().map(|r| r.c).collect();
+            match &reference {
+                None => reference = Some(cs),
+                Some(base) => assert!(
+                    *base == cs,
+                    "{} C must be bitwise identical to GCOO",
+                    family.as_str()
+                ),
+            }
+            rps.push(count as f64 / secs);
+        }
+        println!(
+            "family A/B (zipf_rows n={n}): gcoo {:.1} req/s | cmrs {:.1} req/s | \
+             row-split {:.1} req/s (bitwise identical)",
+            rps[0], rps[1], rps[2]
+        );
+        phases.push(
+            Value::obj()
+                .field("phase", "family_ab")
+                .field("pattern", "zipf_rows")
+                .field("gcoo_req_s", rps[0])
+                .field("cmrs_req_s", rps[1])
+                .field("rowsplit_req_s", rps[2])
+                .field("bitwise_identical", true)
+                .build(),
+        );
+    }
+
+    // --- Emit BENCH_10.json --------------------------------------------
     // cwd under `cargo bench` (and ci.sh) is the crate root `rust/`, so the
     // default lands next to the repo-level BENCH files. Override with
-    // BENCH_JSON=/path to redirect.
-    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_9.json".to_string());
+    // BENCH_JSON=/path to redirect. The "provenance" stamp is what
+    // separates a measured document from the checked-in placeholder.
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "../BENCH_10.json".to_string());
     let doc = Value::obj()
         .field("bench", "serve_hotpath")
         .field("generated", true)
+        .field("provenance", "measured")
         .field("quick", quick)
         .field("requests", iters)
         .field("phases", Value::Arr(phases))

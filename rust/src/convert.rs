@@ -233,6 +233,138 @@ pub fn dense_to_ell_into(
     Ok(())
 }
 
+/// Dense → CMRS slabs in place (the CMRS-path analog of
+/// [`dense_to_slabs_into`]): strips of `stats.p` consecutive rows are
+/// round-robin interleaved directly into `(g = n_exec/p, cap)` slabs.
+/// Strip height equals the band height, so [`scan_stats`]' per-band
+/// counts are reused verbatim for the capacity check — no second stats
+/// pass. Rows past `a.rows` are implicit zeros.
+pub fn dense_to_cmrs_into(
+    a: &Mat,
+    stats: &AStats,
+    n_exec: usize,
+    cap: usize,
+    vals: &mut Vec<f32>,
+    rows: &mut Vec<i32>,
+    cols: &mut Vec<i32>,
+) -> Result<(), FormatError> {
+    let p = stats.p;
+    debug_assert_eq!(stats.rows, a.rows);
+    let need = stats.max_band_nnz();
+    if need > cap {
+        return Err(FormatError::CapacityExceeded {
+            which: "cmrs strip".into(),
+            needed: need,
+            cap,
+        });
+    }
+    if n_exec < a.rows {
+        return Err(FormatError::Invalid(format!(
+            "n_exec {n_exec} smaller than matrix rows {}",
+            a.rows
+        )));
+    }
+    let g = n_exec.div_ceil(p);
+    vals.clear();
+    vals.resize(g * cap, 0.0);
+    rows.clear();
+    rows.resize(g * cap, 0);
+    cols.clear();
+    cols.resize(g * cap, 0);
+    if cap == 0 || g == 0 {
+        return Ok(());
+    }
+    let live_strips = a.rows.div_ceil(p).min(g);
+    let mut lists: Vec<Vec<(u32, f32)>> = Vec::with_capacity(p);
+    for si in 0..live_strips {
+        let lo = si * p;
+        let hi = ((si + 1) * p).min(a.rows);
+        lists.clear();
+        // Per-row (col, val) lists; a row-major walk gives ascending cols.
+        for i in lo..hi {
+            lists.push(
+                a.row(i)
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, v)| **v != 0.0)
+                    .map(|(j, &v)| (j as u32, v))
+                    .collect(),
+            );
+        }
+        let deepest = lists.iter().map(|l| l.len()).max().unwrap_or(0);
+        let mut k = si * cap;
+        for idx in 0..deepest {
+            for (r, list) in lists.iter().enumerate() {
+                if let Some(&(c, v)) = list.get(idx) {
+                    vals[k] = v;
+                    rows[k] = r as i32;
+                    cols[k] = c as i32;
+                    k += 1;
+                }
+            }
+        }
+        debug_assert_eq!(k - si * cap, stats.nnz_per_band[si] as usize);
+    }
+    Ok(())
+}
+
+/// Dense → row-split slabs in place. Each row's entries (ascending
+/// column) are cut into `cap`-sized segments emitted in row order;
+/// returns the segment count (the slab geometry is content-dependent).
+/// Any `cap ≥ 1` fits any matrix, so there is no capacity failure mode.
+/// Rows past `a.rows` are implicit zeros and produce no segments.
+pub fn dense_to_rowsplit_into(
+    a: &Mat,
+    n_exec: usize,
+    cap: usize,
+    vals: &mut Vec<f32>,
+    seg_rows: &mut Vec<i32>,
+    cols: &mut Vec<i32>,
+) -> Result<usize, FormatError> {
+    if cap == 0 {
+        return Err(FormatError::Invalid("rowsplit: segment capacity 0".into()));
+    }
+    if n_exec < a.rows {
+        return Err(FormatError::Invalid(format!(
+            "n_exec {n_exec} smaller than matrix rows {}",
+            a.rows
+        )));
+    }
+    // Pass 1: per-row nnz → total segment count (mirrors scan_stats' row
+    // walk; row-split keys on per-row rather than per-band counts).
+    let segs: usize = (0..a.rows)
+        .map(|i| a.row(i).iter().filter(|v| **v != 0.0).count().div_ceil(cap))
+        .sum();
+    vals.clear();
+    vals.resize(segs * cap, 0.0);
+    cols.clear();
+    cols.resize(segs * cap, 0);
+    seg_rows.clear();
+    seg_rows.resize(segs, 0);
+    // Pass 2: scatter.
+    let mut s = 0usize;
+    for i in 0..a.rows {
+        let mut in_seg = 0usize;
+        for (j, &v) in a.row(i).iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            if in_seg == 0 {
+                seg_rows[s] = i as i32;
+                s += 1;
+            }
+            vals[(s - 1) * cap + in_seg] = v;
+            cols[(s - 1) * cap + in_seg] = j as i32;
+            in_seg += 1;
+            if in_seg == cap {
+                in_seg = 0;
+            }
+        }
+    }
+    debug_assert_eq!(s, segs);
+    Ok(segs)
+}
+
 /// Parallel Algorithm 1: dense → GCOO with `threads` workers.
 pub fn dense_to_gcoo_parallel(a: &Mat, p: usize, threads: usize) -> (Gcoo, ConvertTiming) {
     assert!(p > 0);
@@ -498,6 +630,55 @@ mod tests {
         ));
         // n_exec below the matrix size is rejected.
         assert!(dense_to_slabs_into(&a, &stats, 16, cap, 1, &mut v, &mut r, &mut c).is_err());
+    }
+
+    #[test]
+    fn cmrs_into_equals_convert_then_pad() {
+        use crate::sparse::Cmrs;
+        let mut rng = Rng::new(12);
+        let a = gen::power_law_rows(64, 0.9, &mut rng);
+        let stats = scan_stats(&a, 8, 2);
+        let cap = stats.max_band_nnz() + 3;
+        let (mut v, mut r, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        dense_to_cmrs_into(&a, &stats, 64, cap, &mut v, &mut r, &mut c).unwrap();
+        let reference = Cmrs::from_dense(&a, 8).pad(cap).unwrap();
+        assert_eq!(v, reference.vals);
+        assert_eq!(r, reference.rows);
+        assert_eq!(c, reference.cols);
+        // Padded execution size: trailing strips are all-zero slots.
+        dense_to_cmrs_into(&a, &stats, 80, cap, &mut v, &mut r, &mut c).unwrap();
+        assert_eq!(v.len(), 10 * cap);
+        assert_eq!(&v[..8 * cap], &reference.vals[..]);
+        assert!(v[8 * cap..].iter().all(|&x| x == 0.0));
+        // Capacity overflow is a typed error; undersized n_exec rejected.
+        assert!(matches!(
+            dense_to_cmrs_into(&a, &stats, 64, stats.max_band_nnz() - 1, &mut v, &mut r, &mut c),
+            Err(FormatError::CapacityExceeded { .. })
+        ));
+        assert!(dense_to_cmrs_into(&a, &stats, 32, cap, &mut v, &mut r, &mut c).is_err());
+    }
+
+    #[test]
+    fn rowsplit_into_equals_convert_then_pad() {
+        use crate::sparse::RowSplit;
+        let mut rng = Rng::new(13);
+        let a = gen::power_law_rows(64, 0.9, &mut rng);
+        let (mut v, mut sr, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        for cap in [1usize, 4, 64] {
+            let segs = dense_to_rowsplit_into(&a, 64, cap, &mut v, &mut sr, &mut c).unwrap();
+            let reference = RowSplit::from_dense(&a, cap).unwrap().pad();
+            assert_eq!(segs, reference.segs, "cap {cap}");
+            assert_eq!(v, reference.vals);
+            assert_eq!(sr, reference.seg_rows);
+            assert_eq!(c, reference.cols);
+        }
+        // Padded execution size adds no segments (implicit zero rows).
+        let segs_64 = dense_to_rowsplit_into(&a, 64, 4, &mut v, &mut sr, &mut c).unwrap();
+        let segs_80 = dense_to_rowsplit_into(&a, 80, 4, &mut v, &mut sr, &mut c).unwrap();
+        assert_eq!(segs_64, segs_80);
+        // Zero capacity and undersized n_exec are typed errors.
+        assert!(dense_to_rowsplit_into(&a, 64, 0, &mut v, &mut sr, &mut c).is_err());
+        assert!(dense_to_rowsplit_into(&a, 32, 4, &mut v, &mut sr, &mut c).is_err());
     }
 
     #[test]

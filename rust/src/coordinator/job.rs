@@ -213,7 +213,15 @@ mod tests {
 
     #[test]
     fn algo_round_trip() {
-        for a in [Algo::Gcoo, Algo::GcooNoreuse, Algo::Csr, Algo::DenseXla, Algo::DensePallas] {
+        for a in [
+            Algo::Gcoo,
+            Algo::GcooNoreuse,
+            Algo::Csr,
+            Algo::DenseXla,
+            Algo::DensePallas,
+            Algo::Cmrs,
+            Algo::RowSplit,
+        ] {
             assert_eq!(Algo::from_str(a.as_str()), Some(a));
         }
         assert_eq!(Algo::from_str("dense"), Some(Algo::DenseXla));

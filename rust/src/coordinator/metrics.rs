@@ -51,6 +51,11 @@ pub struct Metrics {
     convert_s: Mutex<Vec<f64>>,
     started: Instant,
     per_algo: Mutex<std::collections::HashMap<&'static str, u64>>,
+    /// Per-tenant admission rejections: tenant → (rate_limited,
+    /// quota_exceeded). The aggregate error counter never distinguished
+    /// which tenant was being throttled — the tenant-blind `/stats` bug
+    /// this splits open.
+    tenant_rejections: Mutex<std::collections::HashMap<String, (u64, u64)>>,
 }
 
 impl Default for Metrics {
@@ -78,7 +83,35 @@ impl Metrics {
             convert_s: Mutex::new(Vec::new()),
             started: Instant::now(),
             per_algo: Mutex::new(std::collections::HashMap::new()),
+            tenant_rejections: Mutex::new(std::collections::HashMap::new()),
         }
+    }
+
+    /// Count one token-bucket rejection against `tenant`.
+    pub fn record_rate_limited(&self, tenant: &str) {
+        self.tenant_rejections
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_insert((0, 0))
+            .0 += 1;
+    }
+
+    /// Count one store-slice rejection against `tenant`.
+    pub fn record_quota_exceeded(&self, tenant: &str) {
+        self.tenant_rejections
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_insert((0, 0))
+            .1 += 1;
+    }
+
+    /// Per-tenant rejection counters (tenant → (rate_limited,
+    /// quota_exceeded)); `Coordinator::snapshot` merges these with the
+    /// store/queue gauges into full [`TenantStat`] rows.
+    pub fn tenant_rejections(&self) -> std::collections::HashMap<String, (u64, u64)> {
+        self.tenant_rejections.lock().unwrap().clone()
     }
 
     pub fn record_completion(&self, algo: &'static str, total_s: f64, kernel_s: f64, convert_s: f64) {
@@ -186,6 +219,25 @@ impl Metrics {
             mean_kernel_s: mean(&ker),
             mean_convert_s: mean(&conv),
             per_algo: self.per_algo.lock().unwrap().clone(),
+            tenants: {
+                // Counter-only rows (bytes/lane gauges need the store and
+                // queue, which a bare Metrics cannot see) — the
+                // coordinator snapshot replaces these with full rows.
+                let mut rows: Vec<TenantStat> = self
+                    .tenant_rejections
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(name, &(rl, qe))| TenantStat {
+                        name: name.clone(),
+                        rate_limited: rl,
+                        quota_exceeded: qe,
+                        ..TenantStat::default()
+                    })
+                    .collect();
+                rows.sort_by(|a, b| a.name.cmp(&b.name));
+                rows
+            },
         }
     }
 }
@@ -204,6 +256,28 @@ fn mean(xs: &[f64]) -> f64 {
     } else {
         xs.iter().sum::<f64>() / xs.len() as f64
     }
+}
+
+/// One tenant's split of the serving gauges (ISSUE 10): resident store
+/// bytes against the configured slice, admission rejections by kind, and
+/// the DRR lane's live depth/deficit. Built by `Coordinator::snapshot`;
+/// a bare `Metrics::snapshot` carries rejection counters only.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantStat {
+    pub name: String,
+    /// Store bytes currently charged to this tenant.
+    pub bytes: u64,
+    /// Configured store slice (0 = whole budget).
+    pub slice_budget_bytes: u64,
+    /// Requests/registrations refused by the token bucket.
+    pub rate_limited: u64,
+    /// Registrations refused by the store slice.
+    pub quota_exceeded: u64,
+    /// Jobs queued in this tenant's DRR lane right now.
+    pub lane_depth: u64,
+    /// The lane's signed DRR deficit (negative: owes rotation credit
+    /// after a wide batch).
+    pub lane_deficit: i64,
 }
 
 /// Point-in-time view for reporting.
@@ -254,6 +328,9 @@ pub struct MetricsSnapshot {
     pub mean_kernel_s: f64,
     pub mean_convert_s: f64,
     pub per_algo: std::collections::HashMap<&'static str, u64>,
+    /// Per-tenant splits, sorted by tenant name (empty on untenanted
+    /// coordinators with no recorded rejections).
+    pub tenants: Vec<TenantStat>,
 }
 
 impl MetricsSnapshot {
@@ -279,6 +356,19 @@ impl MetricsSnapshot {
     }
 
     pub fn render(&self) -> String {
+        let mut tenants = String::new();
+        for t in &self.tenants {
+            tenants.push_str(&format!(
+                "\ntenant:   {}: {} B of {} B slice / {} rate-limited / {} quota-exceeded / lane {} deep (deficit {})",
+                t.name,
+                t.bytes,
+                t.slice_budget_bytes,
+                t.rate_limited,
+                t.quota_exceeded,
+                t.lane_depth,
+                t.lane_deficit,
+            ));
+        }
         format!(
             "requests: {} submitted / {} completed / {} errors / {} verify failures\n\
              latency:  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms\n\
@@ -289,7 +379,7 @@ impl MetricsSnapshot {
              store:    {} operands / {} B of {} B budget / {} hits / {} misses / {} evictions / {} conversions total\n\
              spill:    {} writes / {} promotes / {} B on disk\n\
              routing:  {} route flips / {} explorations\n\
-             rate:     {:.1} req/s   per-algo: {:?}",
+             rate:     {:.1} req/s   per-algo: {:?}{tenants}",
             self.submitted,
             self.completed,
             self.errors,
@@ -334,6 +424,22 @@ impl MetricsSnapshot {
                 .map(|(k, v)| (k.to_string(), Value::from(*v)))
                 .collect(),
         );
+        let tenants = Value::Arr(
+            self.tenants
+                .iter()
+                .map(|t| {
+                    Value::obj()
+                        .field("name", t.name.as_str())
+                        .field("bytes", t.bytes)
+                        .field("slice_budget_bytes", t.slice_budget_bytes)
+                        .field("rate_limited", t.rate_limited)
+                        .field("quota_exceeded", t.quota_exceeded)
+                        .field("lane_depth", t.lane_depth)
+                        .field("lane_deficit", t.lane_deficit)
+                        .build()
+                })
+                .collect(),
+        );
         json::write(
             &Value::obj()
                 .field("submitted", self.submitted)
@@ -366,6 +472,7 @@ impl MetricsSnapshot {
                 .field("mean_kernel_ms", self.mean_kernel_s * 1e3)
                 .field("mean_convert_ms", self.mean_convert_s * 1e3)
                 .field("per_algo", per_algo)
+                .field("tenants", tenants)
                 .build(),
         )
     }
@@ -463,6 +570,39 @@ mod tests {
         assert_eq!(v.get("window_hits").unwrap().as_u64(), Some(2));
         assert_eq!(v.get("window_timeouts").unwrap().as_u64(), Some(1));
         assert_eq!(v.get("mean_batch_width").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn tenant_rejections_split_and_surface() {
+        let m = Metrics::new();
+        m.record_rate_limited("alpha");
+        m.record_rate_limited("alpha");
+        m.record_quota_exceeded("beta");
+        let mut s = m.snapshot();
+        assert_eq!(s.tenants.len(), 2, "one row per tenant, sorted");
+        assert_eq!(s.tenants[0].name, "alpha");
+        assert_eq!((s.tenants[0].rate_limited, s.tenants[0].quota_exceeded), (2, 0));
+        assert_eq!(s.tenants[1].name, "beta");
+        assert_eq!((s.tenants[1].rate_limited, s.tenants[1].quota_exceeded), (0, 1));
+        // Fill the gauges Coordinator::snapshot merges in; render and JSON
+        // must carry every field.
+        s.tenants[0].bytes = 2048;
+        s.tenants[0].slice_budget_bytes = 4096;
+        s.tenants[0].lane_depth = 3;
+        s.tenants[0].lane_deficit = -2;
+        assert!(s.render().contains(
+            "alpha: 2048 B of 4096 B slice / 2 rate-limited / 0 quota-exceeded / lane 3 deep (deficit -2)"
+        ));
+        let v = crate::json::parse(&s.to_json()).unwrap();
+        let ts = v.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].get("name").unwrap().as_str(), Some("alpha"));
+        assert_eq!(ts[0].get("bytes").unwrap().as_u64(), Some(2048));
+        assert_eq!(ts[0].get("slice_budget_bytes").unwrap().as_u64(), Some(4096));
+        assert_eq!(ts[0].get("rate_limited").unwrap().as_u64(), Some(2));
+        assert_eq!(ts[0].get("lane_depth").unwrap().as_u64(), Some(3));
+        assert_eq!(ts[0].get("lane_deficit").unwrap().as_f64(), Some(-2.0));
+        assert_eq!(ts[1].get("quota_exceeded").unwrap().as_u64(), Some(1));
     }
 
     #[test]

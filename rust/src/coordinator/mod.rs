@@ -34,7 +34,7 @@ mod workspace;
 pub use job::{AOperand, ASig, Algo, SpdmRequest, SpdmResponse};
 pub use queue::{BoundedQueue, WindowOutcome};
 pub use selector::{Selector, SelectorPolicy};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, TenantStat};
 pub use pool::{
     batch_affine, process_batch_tuned, process_batch_ws, process_one, process_one_tuned,
     process_one_ws, BatchJob, Coordinator, CoordinatorConfig, SubmitError, TuneCtx,

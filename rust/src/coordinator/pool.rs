@@ -38,7 +38,7 @@ use crate::convert::{self, AStats};
 use crate::json::{self, Value};
 use crate::ndarray::Mat;
 use crate::runtime::{Engine, ExecPlan, Registry, SpdmOutput};
-use crate::sparse::{EllSlabs, GcooSlabs};
+use crate::sparse::{CmrsSlabs, EllSlabs, GcooSlabs, RowSplitSlabs};
 
 /// Coordinator tuning knobs.
 #[derive(Clone, Debug)]
@@ -368,7 +368,10 @@ impl Coordinator {
         // must not touch the store (no checkout, no promotion, no gauge
         // drift) — the refusal is pure backpressure. Unlimited tenants
         // (and the untenanted default) admit with zero clock reads.
-        self.tenants.admit(&req.tenant).map_err(SubmitError::RateLimited)?;
+        if let Err(e) = self.tenants.admit(&req.tenant) {
+            self.metrics.record_rate_limited(&self.tenants.resolve_owned(&req.tenant));
+            return Err(SubmitError::RateLimited(e));
+        }
         let pin = match &req.a {
             AOperand::Handle(h) => match self.store.checkout(*h) {
                 Some(p) => {
@@ -425,6 +428,36 @@ impl Coordinator {
         snap.spill_bytes = st.spill_bytes;
         snap.route_flips = self.tuner.route_flips();
         snap.explorations = self.tuner.explorations_total();
+        // Per-tenant splits (ISSUE 10): one full row per configured lane —
+        // store bytes vs slice, both rejection counters, live DRR lane
+        // depth/deficit. Untenanted coordinators keep the counter-only rows
+        // the bare metrics snapshot produced (usually none).
+        if self.tenants.is_multi() {
+            let rejections = self.metrics.tenant_rejections();
+            let lanes = self.queue.lane_stats();
+            snap.tenants = self
+                .tenants
+                .lanes()
+                .into_iter()
+                .map(|(name, _w)| {
+                    let (rl, qe) = rejections.get(&name).copied().unwrap_or((0, 0));
+                    let (depth, deficit) = lanes
+                        .iter()
+                        .find(|(n, _, _)| *n == name)
+                        .map(|&(_, d, def)| (d as u64, def))
+                        .unwrap_or((0, 0));
+                    super::metrics::TenantStat {
+                        name: name.clone(),
+                        bytes: self.store.tenant_bytes_of(&name),
+                        slice_budget_bytes: self.tenants.slice_of(&name),
+                        rate_limited: rl,
+                        quota_exceeded: qe,
+                        lane_depth: depth,
+                        lane_deficit: deficit,
+                    }
+                })
+                .collect();
+        }
         snap
     }
 
@@ -525,9 +558,21 @@ impl Coordinator {
         a: Mat,
         hint: Option<Algo>,
     ) -> Result<Arc<OperandEntry>, String> {
-        self.tenants.admit(tenant)?;
+        let owner = self.tenants.resolve_owned(tenant);
+        if let Err(e) = self.tenants.admit(tenant) {
+            self.metrics.record_rate_limited(&owner);
+            return Err(e);
+        }
         let (entry, converted) =
-            self.store.register_for(tenant, a, hint, &self.registry, &self.cfg)?;
+            match self.store.register_for(tenant, a, hint, &self.registry, &self.cfg) {
+                Ok(v) => v,
+                Err(e) => {
+                    if e.starts_with(super::tenant::QUOTA_EXCEEDED) {
+                        self.metrics.record_quota_exceeded(&owner);
+                    }
+                    return Err(e);
+                }
+            };
         if converted {
             self.metrics.record_conversions(1);
         }
@@ -595,6 +640,13 @@ impl Drop for Coordinator {
         self.queue.close();
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+        // Deterministic spill hygiene: the tier's files die with the
+        // coordinator (shutdown consumes self, so this covers both
+        // paths), not at whatever later point the last store Arc —
+        // possibly held by a test or a detached server thread — drops.
+        if let Some(spill) = self.store.spill() {
+            spill.sweep();
         }
     }
 }
@@ -885,6 +937,57 @@ fn exec_planned(
                 cols: &ws.ell_cols,
             };
             engine.run_ell_slabs(registry, slabs, b_exec)
+        }
+        Algo::Cmrs => {
+            let t0 = Instant::now();
+            if let Err(e) = convert::dense_to_cmrs_into(
+                a,
+                stats,
+                plan.n_exec,
+                plan.cap,
+                &mut ws.cmrs_vals,
+                &mut ws.cmrs_rows,
+                &mut ws.cmrs_cols,
+            ) {
+                return SpdmResponse::failed(req.id, plan.algo, e.to_string());
+            }
+            convert_s += stats_s + t0.elapsed().as_secs_f64();
+            conversions += 1;
+            let slabs = CmrsSlabs {
+                g: plan.n_exec.div_ceil(cfg.gcoo_p),
+                cap: plan.cap,
+                p: cfg.gcoo_p,
+                n: plan.n_exec,
+                vals: &ws.cmrs_vals,
+                rows: &ws.cmrs_rows,
+                cols: &ws.cmrs_cols,
+            };
+            engine.run_cmrs_slabs(registry, slabs, b_exec)
+        }
+        Algo::RowSplit => {
+            let t0 = Instant::now();
+            let segs = match convert::dense_to_rowsplit_into(
+                a,
+                plan.n_exec,
+                plan.cap,
+                &mut ws.rowsplit_vals,
+                &mut ws.rowsplit_rows,
+                &mut ws.rowsplit_cols,
+            ) {
+                Ok(s) => s,
+                Err(e) => return SpdmResponse::failed(req.id, plan.algo, e.to_string()),
+            };
+            convert_s += stats_s + t0.elapsed().as_secs_f64();
+            conversions += 1;
+            let slabs = RowSplitSlabs {
+                segs,
+                cap: plan.cap,
+                n: plan.n_exec,
+                vals: &ws.rowsplit_vals,
+                seg_rows: &ws.rowsplit_rows,
+                cols: &ws.rowsplit_cols,
+            };
+            engine.run_rowsplit_slabs(registry, slabs, b_exec)
         }
         Algo::DenseXla | Algo::DensePallas => {
             let t0 = Instant::now();
@@ -1418,6 +1521,64 @@ fn process_fused(
                     cols: &ws.ell_cols,
                 };
                 match engine.run_ell_slabs_into(registry, slabs, &ws.b_stack, &mut ws.c_stack) {
+                    Ok(s) => (s.kernel_s, s.artifact, s.copy),
+                    Err(e) => return fail_all(plan.algo, e.to_string(), conversions),
+                }
+            }
+            Algo::Cmrs => {
+                let t0 = Instant::now();
+                if let Err(e) = convert::dense_to_cmrs_into(
+                    a,
+                    stats,
+                    ne,
+                    plan.cap,
+                    &mut ws.cmrs_vals,
+                    &mut ws.cmrs_rows,
+                    &mut ws.cmrs_cols,
+                ) {
+                    return fail_all(plan.algo, e.to_string(), 0);
+                }
+                convert_s += stats_s + t0.elapsed().as_secs_f64();
+                conversions += 1;
+                let slabs = CmrsSlabs {
+                    g: ne.div_ceil(cfg.gcoo_p),
+                    cap: plan.cap,
+                    p: cfg.gcoo_p,
+                    n: ne,
+                    vals: &ws.cmrs_vals,
+                    rows: &ws.cmrs_rows,
+                    cols: &ws.cmrs_cols,
+                };
+                match engine.run_cmrs_slabs_into(registry, slabs, &ws.b_stack, &mut ws.c_stack) {
+                    Ok(s) => (s.kernel_s, s.artifact, s.copy),
+                    Err(e) => return fail_all(plan.algo, e.to_string(), conversions),
+                }
+            }
+            Algo::RowSplit => {
+                let t0 = Instant::now();
+                let segs = match convert::dense_to_rowsplit_into(
+                    a,
+                    ne,
+                    plan.cap,
+                    &mut ws.rowsplit_vals,
+                    &mut ws.rowsplit_rows,
+                    &mut ws.rowsplit_cols,
+                ) {
+                    Ok(s) => s,
+                    Err(e) => return fail_all(plan.algo, e.to_string(), 0),
+                };
+                convert_s += stats_s + t0.elapsed().as_secs_f64();
+                conversions += 1;
+                let slabs = RowSplitSlabs {
+                    segs,
+                    cap: plan.cap,
+                    n: ne,
+                    vals: &ws.rowsplit_vals,
+                    seg_rows: &ws.rowsplit_rows,
+                    cols: &ws.rowsplit_cols,
+                };
+                match engine.run_rowsplit_slabs_into(registry, slabs, &ws.b_stack, &mut ws.c_stack)
+                {
                     Ok(s) => (s.kernel_s, s.artifact, s.copy),
                     Err(e) => return fail_all(plan.algo, e.to_string(), conversions),
                 }

@@ -206,6 +206,25 @@ impl<T> BoundedQueue<T> {
         !self.names.is_empty()
     }
 
+    /// Point-in-time per-lane gauges `(name, depth, deficit)`, sorted by
+    /// name; empty in laneless mode. The DRR deficit is scheduling state
+    /// — surfacing it lets `/stats` show *why* a backlogged tenant is or
+    /// is not served next (a negative deficit means the lane recently
+    /// drew a wide batch and owes the rotation credit).
+    pub fn lane_stats(&self) -> Vec<(String, usize, i64)> {
+        if self.names.is_empty() {
+            return Vec::new();
+        }
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<(String, usize, i64)> = self
+            .names
+            .iter()
+            .map(|(name, &i)| (name.clone(), g.lanes[i].items.len(), g.lanes[i].deficit))
+            .collect();
+        out.sort();
+        out
+    }
+
     fn lane_index(&self, lane: &str) -> usize {
         *self.names.get(lane).unwrap_or(&self.default_lane)
     }

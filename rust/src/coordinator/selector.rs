@@ -50,10 +50,17 @@ pub struct Selector {
 /// Device-capacity requirement of `algo` for a matrix with these scan
 /// stats (band cap for GCOO, row cap for CSR/ELL, none for dense) — the
 /// one definition every planning path resolves artifacts against.
+///
+/// CMRS strips are bands of `p` rows, so its strip capacity requirement is
+/// exactly the GCOO band requirement. Row-split re-segments rows at the
+/// artifact's capacity and so fits *any* matrix — its need is 1 (the
+/// smallest compiled segment capacity always works; smaller caps just mean
+/// more segments).
 fn capacity_need(algo: Algo, max_band_nnz: usize, max_row_nnz: usize) -> usize {
     match algo {
-        Algo::Gcoo | Algo::GcooNoreuse => max_band_nnz,
+        Algo::Gcoo | Algo::GcooNoreuse | Algo::Cmrs => max_band_nnz,
         Algo::Csr => max_row_nnz,
+        Algo::RowSplit => 1,
         Algo::DenseXla | Algo::DensePallas => 0,
     }
 }
@@ -136,10 +143,14 @@ impl Selector {
                 .policy
                 .min_sparse_n
                 .min(reg.sizes("gcoo").first().copied().unwrap_or(usize::MAX));
-        let order: [Algo; 3] = if sparsity >= self.policy.gcoo_crossover && sparse_ok {
-            [Algo::Gcoo, Algo::Csr, Algo::DenseXla]
+        // The paper prior ranks only the original three families; CMRS and
+        // row-split enter as trailing exploration candidates — the measured
+        // router promotes them when their estimates win, the static prior
+        // never picks them head-of-list.
+        let order: [Algo; 5] = if sparsity >= self.policy.gcoo_crossover && sparse_ok {
+            [Algo::Gcoo, Algo::Csr, Algo::DenseXla, Algo::Cmrs, Algo::RowSplit]
         } else {
-            [Algo::DenseXla, Algo::Gcoo, Algo::Csr]
+            [Algo::DenseXla, Algo::Gcoo, Algo::Csr, Algo::Cmrs, Algo::RowSplit]
         };
         order
             .iter()
@@ -218,7 +229,11 @@ mod tests {
             {"name": "dense_xla_n256", "algo": "dense_xla", "n": 256,
              "params": {}, "inputs": [], "file": "d.hlo.txt"},
             {"name": "dense_xla_n512", "algo": "dense_xla", "n": 512,
-             "params": {}, "inputs": [], "file": "e.hlo.txt"}
+             "params": {}, "inputs": [], "file": "e.hlo.txt"},
+            {"name": "cmrs_n256_cap512", "algo": "cmrs", "n": 256,
+             "params": {"p": 8, "cap": 512}, "inputs": [], "file": "f.hlo.txt"},
+            {"name": "rowsplit_n256_cap64", "algo": "rowsplit", "n": 256,
+             "params": {"cap": 64}, "inputs": [], "file": "g.hlo.txt"}
           ]
         }"#;
         Registry::from_manifest_json(manifest, PathBuf::from("/nope")).unwrap()
@@ -344,10 +359,14 @@ mod tests {
     #[test]
     fn candidates_head_matches_plan_and_tail_ranks_alternatives() {
         let r = reg();
-        // Above the crossover: sparse-first order, all three resolvable.
+        // Above the crossover: sparse-first order, all five resolvable —
+        // the new families trail as exploration candidates, never the head.
         let cands = sel().plan_candidates(&r, 256, 0.99, 100, 50);
         let algos: Vec<Algo> = cands.iter().map(|c| c.algo).collect();
-        assert_eq!(algos, vec![Algo::Gcoo, Algo::Csr, Algo::DenseXla]);
+        assert_eq!(
+            algos,
+            vec![Algo::Gcoo, Algo::Csr, Algo::DenseXla, Algo::Cmrs, Algo::RowSplit]
+        );
         let plan = sel().plan(&r, 256, 0.99, 100, 50, None).unwrap();
         assert_eq!(cands[0].algo, plan.algo);
         assert_eq!(cands[0].artifact, plan.artifact, "head is exactly the prior's choice");
@@ -355,10 +374,47 @@ mod tests {
         let cands = sel().plan_candidates(&r, 256, 0.5, 100, 50);
         assert_eq!(cands[0].algo, Algo::DenseXla);
         assert_eq!(cands[0].algo, sel().plan(&r, 256, 0.5, 100, 50, None).unwrap().algo);
-        // Capacity infeasibility filters a family out of the list.
+        // Capacity infeasibility filters a family out of the list. CMRS
+        // shares the band-skew requirement so 600 drops it with gcoo;
+        // row-split re-segments and survives any skew.
         let cands = sel().plan_candidates(&r, 256, 0.99, 600, 100);
         let algos: Vec<Algo> = cands.iter().map(|c| c.algo).collect();
-        assert_eq!(algos, vec![Algo::Csr, Algo::DenseXla], "gcoo cap 600 > 512 drops it");
+        assert_eq!(
+            algos,
+            vec![Algo::Csr, Algo::DenseXla, Algo::RowSplit],
+            "gcoo+cmrs band skew 600 > 512 drops both"
+        );
+    }
+
+    /// Tentpole: the measured router can promote the new families even
+    /// though the static prior never ranks them first — exactly the flip
+    /// path `routing_differential` drives end-to-end.
+    #[test]
+    fn measured_estimates_promote_cmrs_and_rowsplit() {
+        let r = reg();
+        let measured = [(Algo::Cmrs, 1e-6), (Algo::Gcoo, 5e-6)];
+        let plan = sel()
+            .plan_with_model(&r, 256, 0.99, 100, 50, None, &measured)
+            .unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::Cmrs, "measured"));
+        assert_eq!(plan.cap, 512);
+        assert_eq!(plan.artifact, "cmrs_n256_cap512");
+        // Row-split's need is 1: it resolves even under band skew that
+        // exhausts every gcoo/cmrs capacity.
+        let measured = [(Algo::RowSplit, 1e-6), (Algo::Gcoo, 5e-6)];
+        let plan = sel()
+            .plan_with_model(&r, 256, 0.99, 600, 200, None, &measured)
+            .unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::RowSplit, "measured"));
+        assert_eq!(plan.cap, 64);
+        assert_eq!(plan.artifact, "rowsplit_n256_cap64");
+        // A measured cmrs favorite whose strip skew fits no compiled cap
+        // falls through the chain instead of erroring.
+        let measured = [(Algo::Cmrs, 1e-6), (Algo::Csr, 2e-6)];
+        let plan = sel()
+            .plan_with_model(&r, 256, 0.99, 600, 100, None, &measured)
+            .unwrap();
+        assert_eq!((plan.algo, plan.reason), (Algo::Csr, "measured"));
     }
 
     /// Satellite: `plan_with_model` defers to gated measured estimates —

@@ -27,7 +27,7 @@
 //! | stats      | rows u64 · cols u64 · p u64 · nnz u64 · max_row_nnz u64 · u32 count · u32 … |
 //! | convert_s  | f64                                                      |
 //! | dense A    | rows u64 · cols u64 · f32 slab                           |
-//! | operand    | tag u8 (0 gcoo · 1 ell · 2 dense) · geometry · slabs     |
+//! | operand    | tag u8 (0 gcoo · 1 ell · 2 dense · 3 cmrs · 4 rowsplit) · geometry · slabs |
 //! | footer     | entry bytes u64                                          |
 //!
 //! The dense A is serialized outright rather than reconstructed from the
@@ -55,7 +55,7 @@ use super::store::{OperandEntry, OperandId};
 use crate::convert::AStats;
 use crate::ndarray::Mat;
 use crate::runtime::{DeviceOperand, ExecPlan};
-use crate::sparse::{Ell, GcooPadded};
+use crate::sparse::{CmrsPadded, Ell, GcooPadded, RowSplitPadded};
 
 const MAGIC: &[u8; 4] = b"GSPL";
 const VERSION: u8 = 1;
@@ -91,6 +91,8 @@ fn algo_byte(a: Algo) -> u8 {
         Algo::Csr => 3,
         Algo::DenseXla => 4,
         Algo::DensePallas => 5,
+        Algo::Cmrs => 6,
+        Algo::RowSplit => 7,
     }
 }
 
@@ -101,6 +103,8 @@ fn algo_from(b: u8) -> Result<Algo, String> {
         3 => Algo::Csr,
         4 => Algo::DenseXla,
         5 => Algo::DensePallas,
+        6 => Algo::Cmrs,
+        7 => Algo::RowSplit,
         other => return Err(format!("spill: unknown algo byte {other}")),
     })
 }
@@ -290,6 +294,25 @@ fn encode_entry(entry: &OperandEntry, tenant: &str) -> Vec<u8> {
             w.u64(m.cols as u64);
             w.f32_slab(&m.data);
         }
+        DeviceOperand::Cmrs(c) => {
+            w.u8(3);
+            w.u64(c.g as u64);
+            w.u64(c.cap as u64);
+            w.u64(c.p as u64);
+            w.u64(c.n as u64);
+            w.f32_slab(&c.vals);
+            w.i32_slab(&c.rows);
+            w.i32_slab(&c.cols);
+        }
+        DeviceOperand::RowSplit(r) => {
+            w.u8(4);
+            w.u64(r.segs as u64);
+            w.u64(r.cap as u64);
+            w.u64(r.n as u64);
+            w.f32_slab(&r.vals);
+            w.i32_slab(&r.seg_rows);
+            w.i32_slab(&r.cols);
+        }
     }
     w.u64(entry.bytes);
     w.out
@@ -393,6 +416,23 @@ fn decode_entry(buf: &[u8]) -> Result<RestoredEntry, String> {
             }
             DeviceOperand::Dense(Mat { rows, cols, data })
         }
+        3 => DeviceOperand::Cmrs(CmrsPadded {
+            g: r.usize()?,
+            cap: r.usize()?,
+            p: r.usize()?,
+            n: r.usize()?,
+            vals: r.f32_slab()?,
+            rows: r.i32_slab()?,
+            cols: r.i32_slab()?,
+        }),
+        4 => DeviceOperand::RowSplit(RowSplitPadded {
+            segs: r.usize()?,
+            cap: r.usize()?,
+            n: r.usize()?,
+            vals: r.f32_slab()?,
+            seg_rows: r.i32_slab()?,
+            cols: r.i32_slab()?,
+        }),
         other => return Err(format!("spill: unknown operand tag {other}")),
     };
     let bytes = r.u64()?;
@@ -455,7 +495,11 @@ pub struct SpillStats {
 
 /// The disk spill tier: an in-memory index over length-prefixed slab
 /// files in `dir`. Files not recorded in the index (stale runs sharing
-/// the directory) are never read — the index is authoritative.
+/// the directory) are never read — the index is authoritative, so
+/// startup deletes any pre-existing `.spill` files in `dir` outright
+/// (they are unreachable orphans from a run that did not shut down
+/// cleanly) and garbage-collects stale sibling `gcoospdm_spill_*`
+/// directories whose owning pid is gone.
 pub struct SpillStore {
     dir: PathBuf,
     /// File-byte budget; 0 = unbounded.
@@ -465,10 +509,53 @@ pub struct SpillStore {
     inner: Mutex<SpillInner>,
 }
 
+/// Startup GC half 1: `.spill` files already in `dir` are unreachable
+/// (the in-memory index starts empty and is the only read path), so a
+/// crashed predecessor's files would otherwise accumulate forever.
+fn gc_orphan_files(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for ent in entries.flatten() {
+        let path = ent.path();
+        if path.extension().is_some_and(|e| e == "spill") && path.is_file() {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// Startup GC half 2: spill directories are pid-keyed
+/// (`gcoospdm_spill_<pid>…`), so a crashed run strands its whole
+/// directory with a name no later run reuses. Remove any sibling whose
+/// embedded pid no longer exists. Live pids — including ours — are never
+/// touched; without `/proc` (non-Linux) the sweep is a no-op.
+fn gc_stale_siblings(dir: &Path) {
+    if !Path::new("/proc").is_dir() {
+        return;
+    }
+    let Some(parent) = dir.parent() else { return };
+    let me = std::process::id();
+    let Ok(entries) = std::fs::read_dir(parent) else { return };
+    for ent in entries.flatten() {
+        let path = ent.path();
+        if !path.is_dir() {
+            continue;
+        }
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(rest) = name.strip_prefix("gcoospdm_spill_") else { continue };
+        let pid_digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        let Ok(pid) = pid_digits.parse::<u32>() else { continue };
+        if pid == me || Path::new("/proc").join(pid_digits).exists() {
+            continue;
+        }
+        let _ = std::fs::remove_dir_all(&path);
+    }
+}
+
 impl SpillStore {
     pub fn new(dir: &Path, budget_bytes: u64) -> Result<SpillStore, String> {
         std::fs::create_dir_all(dir)
             .map_err(|e| format!("spill: cannot create {}: {e}", dir.display()))?;
+        gc_orphan_files(dir);
+        gc_stale_siblings(dir);
         Ok(SpillStore {
             dir: dir.to_path_buf(),
             budget: budget_bytes,
@@ -628,6 +715,28 @@ impl SpillStore {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Delete every spilled file and clear the index. Called from
+    /// coordinator shutdown and from `Drop`, so a clean exit leaves no
+    /// `.spill` files behind; the directory itself is removed once empty
+    /// (`remove_dir` refuses a non-empty directory, so unrelated files
+    /// sharing it survive).
+    pub fn sweep(&self) {
+        let mut g = self.inner.lock().unwrap();
+        for (_, meta) in g.index.drain() {
+            let _ = std::fs::remove_file(&meta.path);
+        }
+        g.order.clear();
+        g.bytes = 0;
+        drop(g);
+        let _ = std::fs::remove_dir(&self.dir);
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        self.sweep();
+    }
 }
 
 #[cfg(test)]
@@ -681,6 +790,18 @@ mod tests {
             }
             (DeviceOperand::Dense(a), DeviceOperand::Dense(b)) => {
                 (a.rows, a.cols) == (b.rows, b.cols) && bits(&a.data) == bits(&b.data)
+            }
+            (DeviceOperand::Cmrs(a), DeviceOperand::Cmrs(b)) => {
+                (a.g, a.cap, a.p, a.n) == (b.g, b.cap, b.p, b.n)
+                    && bits(&a.vals) == bits(&b.vals)
+                    && a.rows == b.rows
+                    && a.cols == b.cols
+            }
+            (DeviceOperand::RowSplit(a), DeviceOperand::RowSplit(b)) => {
+                (a.segs, a.cap, a.n) == (b.segs, b.cap, b.n)
+                    && bits(&a.vals) == bits(&b.vals)
+                    && a.seg_rows == b.seg_rows
+                    && a.cols == b.cols
             }
             _ => false,
         }
@@ -784,6 +905,98 @@ mod tests {
         let mut extended = buf.clone();
         extended.push(0);
         assert!(decode_entry(&extended).is_err(), "trailing byte must error");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cmrs_and_rowsplit_operands_round_trip_bitwise() {
+        use crate::sparse::{Cmrs, RowSplit};
+        let dir = tmp("family_round_trip");
+        let spill = SpillStore::new(&dir, 0).unwrap();
+        let store = OperandStore::new(64 << 20);
+        let cfg = CoordinatorConfig::default();
+
+        let (mut e, _) = store.register(sparse_a(11), None, &reg(), &cfg).unwrap();
+        let cm = Cmrs::from_dense(&e.a, 8);
+        e.operand = DeviceOperand::Cmrs(cm.pad(cm.max_strip_nnz().max(1)).unwrap());
+        e.plan.algo = Algo::Cmrs;
+        spill.demote(&e, "alpha", 1).unwrap();
+        let r = spill.promote(e.handle).unwrap();
+        assert!(operand_bitwise_eq(&r.operand, &e.operand), "cmrs slabs survive bit-for-bit");
+        assert_eq!(r.plan.algo, Algo::Cmrs, "algo byte 6 round-trips");
+
+        let (mut e2, _) = store.register(sparse_a(12), None, &reg(), &cfg).unwrap();
+        let rs = RowSplit::from_dense(&e2.a, 4).unwrap();
+        e2.operand = DeviceOperand::RowSplit(rs.pad());
+        e2.plan.algo = Algo::RowSplit;
+        spill.demote(&e2, "beta", 2).unwrap();
+        let r2 = spill.promote(e2.handle).unwrap();
+        assert!(operand_bitwise_eq(&r2.operand, &e2.operand), "rowsplit slabs survive bit-for-bit");
+        assert_eq!(r2.plan.algo, Algo::RowSplit, "algo byte 7 round-trips");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn spill_files(dir: &Path) -> usize {
+        std::fs::read_dir(dir)
+            .map(|it| {
+                it.flatten()
+                    .filter(|e| e.path().extension().is_some_and(|x| x == "spill"))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    #[test]
+    fn no_spill_files_leak_across_drop_shutdown_and_restart() {
+        let dir = tmp("lifecycle");
+        let store = OperandStore::new(64 << 20);
+        let cfg = CoordinatorConfig::default();
+        let (e1, _) = store.register(sparse_a(21), None, &reg(), &cfg).unwrap();
+        let (e2, _) = store.register(sparse_a(22), None, &reg(), &cfg).unwrap();
+        {
+            let spill = SpillStore::new(&dir, 0).unwrap();
+            spill.demote(&e1, "default", 1).unwrap();
+            spill.demote(&e2, "default", 2).unwrap();
+            assert_eq!(spill_files(&dir), 2);
+            // drop_a path: the file goes with the handle.
+            assert!(spill.discard(e1.handle));
+            assert_eq!(spill_files(&dir), 1, "drop_a deletes the slab file");
+            // A crashed predecessor's file the index never knew about.
+            std::fs::write(dir.join("a999999.spill"), b"GSPLjunk").unwrap();
+            assert_eq!(spill_files(&dir), 2);
+            spill.sweep();
+            assert_eq!(spill_files(&dir), 1, "shutdown sweep removes every indexed file");
+            // `spill` drops here; Drop re-sweeps without touching the orphan.
+        }
+        assert_eq!(spill_files(&dir), 1);
+        // Restart over the same directory: startup GC clears the orphan.
+        let spill = SpillStore::new(&dir, 0).unwrap();
+        assert_eq!(spill_files(&dir), 0, "startup GC deletes unreachable .spill files");
+        drop(spill);
+        assert!(
+            !dir.exists(),
+            "empty spill dir is removed on drop"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn startup_gc_removes_dead_pid_sibling_dirs() {
+        if !Path::new("/proc").is_dir() {
+            return; // pid-liveness probe needs procfs
+        }
+        // 4291234567 is a valid u32 far above any real pid_max.
+        let stale = std::env::temp_dir().join("gcoospdm_spill_4291234567_stale");
+        std::fs::create_dir_all(&stale).unwrap();
+        std::fs::write(stale.join("a1.spill"), b"junk").unwrap();
+        let live = tmp("gc_live"); // embeds our (live) pid — must survive
+        std::fs::create_dir_all(&live).unwrap();
+        let dir = tmp("gc_self");
+        let spill = SpillStore::new(&dir, 0).unwrap();
+        assert!(!stale.exists(), "dead-pid sibling dir GCed at startup");
+        assert!(live.exists(), "live-pid sibling untouched");
+        drop(spill);
+        let _ = std::fs::remove_dir_all(&live);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

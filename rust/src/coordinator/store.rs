@@ -52,7 +52,7 @@ use crate::convert::{self, AStats};
 use crate::ndarray::Mat;
 use crate::runtime::{DeviceOperand, ExecPlan, Registry};
 use crate::simgpu::{self, GcooStructure, WalkConfig};
-use crate::sparse::{Ell, Gcoo, GcooPadded};
+use crate::sparse::{CmrsPadded, Ell, Gcoo, GcooPadded, RowSplitPadded};
 
 /// Opaque handle naming a registered A operand (the wire `a_handle`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -1015,6 +1015,40 @@ fn device_operand_for(
                 .map_err(|e| e.to_string())?;
             Ok(DeviceOperand::Ell(Ell { n: plan.n_exec, rowcap: plan.cap, vals, cols }))
         }
+        Algo::Cmrs => {
+            let (mut vals, mut rows, mut cols) = (Vec::new(), Vec::new(), Vec::new());
+            convert::dense_to_cmrs_into(a, stats, plan.n_exec, plan.cap, &mut vals, &mut rows, &mut cols)
+                .map_err(|e| e.to_string())?;
+            Ok(DeviceOperand::Cmrs(CmrsPadded {
+                g: plan.n_exec.div_ceil(stats.p),
+                cap: plan.cap,
+                p: stats.p,
+                n: plan.n_exec,
+                vals,
+                rows,
+                cols,
+            }))
+        }
+        Algo::RowSplit => {
+            let (mut vals, mut seg_rows, mut cols) = (Vec::new(), Vec::new(), Vec::new());
+            let segs = convert::dense_to_rowsplit_into(
+                a,
+                plan.n_exec,
+                plan.cap,
+                &mut vals,
+                &mut seg_rows,
+                &mut cols,
+            )
+            .map_err(|e| e.to_string())?;
+            Ok(DeviceOperand::RowSplit(RowSplitPadded {
+                segs,
+                cap: plan.cap,
+                n: plan.n_exec,
+                vals,
+                seg_rows,
+                cols,
+            }))
+        }
         Algo::DenseXla | Algo::DensePallas => {
             // "Conversion" here is the pad to execution size, done once at
             // registration like the sparse forms. A dense-routed entry
@@ -1055,6 +1089,8 @@ fn refine_candidates(a: &Mat, p: usize, candidates: &mut [ExecPlan], budget: usi
                 Algo::Gcoo => oracle.gcoo_time(&structure, true),
                 Algo::GcooNoreuse => oracle.gcoo_time(&structure, false),
                 Algo::Csr => oracle.csr_time(&structure),
+                Algo::Cmrs => oracle.cmrs_time(&structure),
+                Algo::RowSplit => oracle.rowsplit_time(&structure, c.cap.max(1)),
                 Algo::DenseXla | Algo::DensePallas => oracle.dense_time(c.n_exec),
             };
             (t, c.clone())
@@ -1484,6 +1520,8 @@ mod tests {
                             (DeviceOperand::Gcoo(_), Algo::Gcoo | Algo::GcooNoreuse) => true,
                             (DeviceOperand::Ell(_), Algo::Csr) => true,
                             (DeviceOperand::Dense(_), Algo::DenseXla | Algo::DensePallas) => true,
+                            (DeviceOperand::Cmrs(_), Algo::Cmrs) => true,
+                            (DeviceOperand::RowSplit(_), Algo::RowSplit) => true,
                             _ => false,
                         };
                         if !family_ok {

@@ -215,12 +215,14 @@ struct Estimate {
 
 /// Fixed, deterministic order estimates are reported in (ties in measured
 /// cost must not depend on hash-map iteration order).
-const ALGO_ORDER: [Algo; 5] = [
+const ALGO_ORDER: [Algo; 7] = [
     Algo::Gcoo,
     Algo::Csr,
     Algo::DenseXla,
     Algo::GcooNoreuse,
     Algo::DensePallas,
+    Algo::Cmrs,
+    Algo::RowSplit,
 ];
 
 /// Per-key, per-algo EWMA latency model (seconds per executed column).

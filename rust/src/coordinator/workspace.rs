@@ -39,6 +39,16 @@ pub struct Workspace {
     /// Device ELL slab buffers, `n·rowcap` each (vals/cols).
     pub ell_vals: Vec<f32>,
     pub ell_cols: Vec<i32>,
+    /// Device CMRS slab buffers, `g·cap` each (vals/rows/cols), strip
+    /// entries round-robin interleaved.
+    pub cmrs_vals: Vec<f32>,
+    pub cmrs_rows: Vec<i32>,
+    pub cmrs_cols: Vec<i32>,
+    /// Device row-split slab buffers: `segs·cap` entry arrays (vals/cols)
+    /// plus the per-segment row ids (`rowsplit_rows`, length `segs`).
+    pub rowsplit_vals: Vec<f32>,
+    pub rowsplit_rows: Vec<i32>,
+    pub rowsplit_cols: Vec<i32>,
     /// Fused-batch wide-B operand: the batch's B matrices stacked
     /// column-wise into one `n_exec × width·n_exec` matrix (each block
     /// zero-padded from its request's n). Reused across batches.
@@ -60,6 +70,12 @@ impl Workspace {
             gcoo_cols: Vec::new(),
             ell_vals: Vec::new(),
             ell_cols: Vec::new(),
+            cmrs_vals: Vec::new(),
+            cmrs_rows: Vec::new(),
+            cmrs_cols: Vec::new(),
+            rowsplit_vals: Vec::new(),
+            rowsplit_rows: Vec::new(),
+            rowsplit_cols: Vec::new(),
             b_stack: Mat::zeros(0, 0),
             c_stack: Mat::zeros(0, 0),
         }

@@ -53,14 +53,18 @@ impl CorpusEntry {
 }
 
 /// SuiteSparse-like family mixture: applications skew toward banded/FEM and
-/// diagonal-ish structure, with a graph tail. Weights sum to 100.
-const MIXTURE: [(Pattern, u64); 6] = [
-    (Pattern::Banded, 30),
-    (Pattern::Diagonal, 20),
-    (Pattern::BlockDiagonal, 15),
-    (Pattern::PowerLawRows, 15),
-    (Pattern::Uniform, 15),
+/// diagonal-ish structure, with a graph tail plus a thin slice of the
+/// adversarial families (extreme skew / ragged bands). Weights sum to 100.
+const MIXTURE: [(Pattern, u64); 9] = [
+    (Pattern::Banded, 28),
+    (Pattern::Diagonal, 19),
+    (Pattern::BlockDiagonal, 14),
+    (Pattern::PowerLawRows, 14),
+    (Pattern::Uniform, 14),
     (Pattern::DenseColumns, 5),
+    (Pattern::ZipfRows, 2),
+    (Pattern::HeavyRows, 2),
+    (Pattern::RaggedBands, 2),
 ];
 
 /// Generate corpus *metadata* (cheap); materialize entries lazily.

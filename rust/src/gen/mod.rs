@@ -10,8 +10,8 @@ mod corpus;
 mod selected;
 
 pub use patterns::{
-    uniform, diagonal, banded, block_diagonal, power_law_rows, dense_columns, Pattern,
-    generate,
+    uniform, diagonal, banded, block_diagonal, power_law_rows, dense_columns, zipf_rows,
+    heavy_rows, ragged_bands, Pattern, generate,
 };
 pub use corpus::{corpus, CorpusSpec, CorpusEntry};
 pub use selected::{selected_matrices, SelectedSpec, SELECTED};

@@ -21,16 +21,28 @@ pub enum Pattern {
     PowerLawRows,
     /// a few fully-dense columns — maximal bv reuse.
     DenseColumns,
+    /// extreme Zipf row lengths (exponent 2) — nnz concentrated in a
+    /// handful of rows, the nnz-split family's target case.
+    ZipfRows,
+    /// strictly bimodal rows: a few fully-dense rows over a single-entry
+    /// background — maximal row-length variance (CMRS's target case).
+    HeavyRows,
+    /// alternating dense / near-empty row strips — per-band nnz varies by
+    /// an order of magnitude, stressing GCOO's uniform band cap.
+    RaggedBands,
 }
 
 impl Pattern {
-    pub const ALL: [Pattern; 6] = [
+    pub const ALL: [Pattern; 9] = [
         Pattern::Uniform,
         Pattern::Diagonal,
         Pattern::Banded,
         Pattern::BlockDiagonal,
         Pattern::PowerLawRows,
         Pattern::DenseColumns,
+        Pattern::ZipfRows,
+        Pattern::HeavyRows,
+        Pattern::RaggedBands,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -41,6 +53,9 @@ impl Pattern {
             Pattern::BlockDiagonal => "block_diagonal",
             Pattern::PowerLawRows => "power_law_rows",
             Pattern::DenseColumns => "dense_columns",
+            Pattern::ZipfRows => "zipf_rows",
+            Pattern::HeavyRows => "heavy_rows",
+            Pattern::RaggedBands => "ragged_bands",
         }
     }
 
@@ -58,6 +73,9 @@ pub fn generate(pattern: Pattern, n: usize, sparsity: f64, rng: &mut Rng) -> Mat
         Pattern::BlockDiagonal => block_diagonal(n, sparsity, rng),
         Pattern::PowerLawRows => power_law_rows(n, sparsity, rng),
         Pattern::DenseColumns => dense_columns(n, sparsity, rng),
+        Pattern::ZipfRows => zipf_rows(n, sparsity, rng),
+        Pattern::HeavyRows => heavy_rows(n, sparsity, rng),
+        Pattern::RaggedBands => ragged_bands(n, sparsity, rng),
     }
 }
 
@@ -179,6 +197,70 @@ pub fn dense_columns(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
     m
 }
 
+/// Extreme Zipf row lengths (weights ∝ 1/rank², vs the plain power-law
+/// family's 1/rank): the head rows absorb almost the whole nnz budget
+/// while the tail collapses to one entry per row.
+pub fn zipf_rows(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let budget = (((1.0 - sparsity) * (n * n) as f64).round() as usize).max(n);
+    let weights: Vec<f64> = (0..n).map(|i| 1.0 / (((i + 1) * (i + 1)) as f64)).collect();
+    let wsum: f64 = weights.iter().sum();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut m = Mat::zeros(n, n);
+    for (rank, &row) in order.iter().enumerate() {
+        let k = (((budget as f64) * weights[rank] / wsum).round() as usize).clamp(1, n);
+        for j in rng.sample_indices(n, k) {
+            m[(row, j)] = rng.nonzero_value();
+        }
+    }
+    m
+}
+
+/// Strictly bimodal rows: `k` fully-dense rows (k from the nnz budget)
+/// over a background of exactly one entry per remaining row — maximal
+/// row-length variance with no middle ground.
+pub fn heavy_rows(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let budget = (((1.0 - sparsity) * (n * n) as f64).round() as usize).max(n);
+    // heavy·n + (n − heavy) ≈ budget ⇒ heavy ≈ (budget − n) / (n − 1).
+    let heavy = (budget.saturating_sub(n) / n.saturating_sub(1).max(1)).clamp(1, n);
+    let mut m = Mat::zeros(n, n);
+    for i in rng.sample_indices(n, heavy) {
+        for j in 0..n {
+            m[(i, j)] = rng.nonzero_value();
+        }
+    }
+    for i in 0..n {
+        if m.row(i).iter().all(|v| *v == 0.0) {
+            let j = rng.sample_indices(n, 1)[0];
+            m[(i, j)] = rng.nonzero_value();
+        }
+    }
+    m
+}
+
+/// Alternating dense / near-empty row strips of height 8: even strips
+/// absorb ~9/10 of the nnz budget, so per-band nnz swings by roughly an
+/// order of magnitude while total sparsity stays on target.
+pub fn ragged_bands(n: usize, sparsity: f64, rng: &mut Rng) -> Mat {
+    let budget = (1.0 - sparsity) * (n * n) as f64;
+    let strip = 8usize.min(n.max(1));
+    let strips = n.div_ceil(strip);
+    let heavy_fill = (0.9 * budget / ((strips.div_ceil(2) * strip * n) as f64)).min(1.0);
+    let light_fill = (0.1 * budget / (((strips / 2).max(1) * strip * n) as f64)).min(1.0);
+    let mut m = Mat::zeros(n, n);
+    for s in 0..strips {
+        let fill = if s % 2 == 0 { heavy_fill } else { light_fill };
+        for i in s * strip..((s + 1) * strip).min(n) {
+            for j in 0..n {
+                if rng.coin(fill) {
+                    m[(i, j)] = rng.nonzero_value();
+                }
+            }
+        }
+    }
+    m
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +344,49 @@ mod tests {
         let k = (0..64).filter(|&j| (0..64).all(|i| m[(i, j)] != 0.0)).count();
         assert!(k >= 1);
         assert_eq!(m.nnz(), k * 64, "all nonzeros must sit in full columns");
+    }
+
+    #[test]
+    fn zipf_rows_head_dominates_p90() {
+        let mut rng = Rng::new(8);
+        let m = zipf_rows(128, 0.95, &mut rng);
+        let mut lens: Vec<usize> =
+            (0..128).map(|i| m.row(i).iter().filter(|v| **v != 0.0).count()).collect();
+        assert!(lens.iter().all(|&l| l >= 1), "every row has >= 1 entry");
+        lens.sort_unstable();
+        // Steeper than power_law_rows: the head dominates even the 90th
+        // percentile, not just the median.
+        assert!(lens[127] >= 8 * lens[115].max(1), "head must dominate p90: {:?}", &lens[110..]);
+    }
+
+    #[test]
+    fn heavy_rows_strictly_bimodal() {
+        let mut rng = Rng::new(9);
+        let m = heavy_rows(64, 0.9, &mut rng);
+        let lens: Vec<usize> =
+            (0..64).map(|i| m.row(i).iter().filter(|v| **v != 0.0).count()).collect();
+        let dense = lens.iter().filter(|&&l| l == 64).count();
+        let single = lens.iter().filter(|&&l| l == 1).count();
+        assert!(dense >= 1, "at least one fully-dense row");
+        assert_eq!(dense + single, 64, "every row is full or single-entry: {lens:?}");
+        sparsity_close(&m, 0.9, 0.05);
+    }
+
+    #[test]
+    fn ragged_bands_band_nnz_swings() {
+        let mut rng = Rng::new(10);
+        let m = ragged_bands(64, 0.9, &mut rng);
+        let counts: Vec<usize> = (0..8)
+            .map(|s| {
+                (s * 8..(s + 1) * 8)
+                    .map(|i| m.row(i).iter().filter(|v| **v != 0.0).count())
+                    .sum()
+            })
+            .collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max >= 4 * min.max(1), "strips must be ragged: {counts:?}");
+        sparsity_close(&m, 0.9, 0.05);
     }
 
     #[test]

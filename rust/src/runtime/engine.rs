@@ -41,7 +41,9 @@ use super::plan::{Algo, ExecPlan};
 use super::{ArtifactMeta, Registry, RuntimeError};
 use crate::ndarray::Mat;
 use crate::simgpu::trace::{self, NullSink, TraceSink, TRACE_BLOCK_THREADS};
-use crate::sparse::{Ell, EllSlabs, GcooPadded, GcooSlabs};
+use crate::sparse::{
+    CmrsPadded, CmrsSlabs, Ell, EllSlabs, GcooPadded, GcooSlabs, RowSplitPadded, RowSplitSlabs,
+};
 
 /// An operand's converted device form — what the coordinator's operand
 /// store caches at registration so handle traffic executes straight from
@@ -53,6 +55,12 @@ pub enum DeviceOperand {
     Gcoo(GcooPadded),
     /// ELL slabs at the plan's `(n, rowcap)` geometry.
     Ell(Ell),
+    /// CMRS strip slabs at the plan's `(g, cap)` geometry (a GcooPadded
+    /// layout twin; in-slab order is the round-robin interleave).
+    Cmrs(CmrsPadded),
+    /// Row-split segment slabs at the plan's segment `cap` (the segment
+    /// count is content-derived, carried by the padded form).
+    RowSplit(RowSplitPadded),
     /// Dense A padded to the plan's execution size.
     Dense(Mat),
 }
@@ -63,6 +71,8 @@ impl DeviceOperand {
         match self {
             DeviceOperand::Gcoo(p) => p.as_slabs().bytes(),
             DeviceOperand::Ell(e) => e.as_slabs().bytes(),
+            DeviceOperand::Cmrs(p) => p.as_slabs().bytes(),
+            DeviceOperand::RowSplit(p) => p.as_slabs().bytes(),
             DeviceOperand::Dense(m) => m.data.len() * 4,
         }
     }
@@ -324,6 +334,182 @@ impl Engine {
         Ok(ExecStats { kernel_s, artifact: meta.name.clone(), copy })
     }
 
+    /// Run CMRS SpDM from an owned padded form (borrows it — no copy).
+    pub fn run_cmrs(
+        &self,
+        reg: &Registry,
+        padded: &CmrsPadded,
+        b: &Mat,
+    ) -> Result<SpdmOutput, RuntimeError> {
+        self.run_cmrs_slabs(reg, padded.as_slabs(), b)
+    }
+
+    /// Run CMRS SpDM over borrowed strip slabs; same contract as
+    /// [`Engine::run_gcoo_slabs`] — checks first, borrow when the strip
+    /// capacity matches, re-pad otherwise (order-preserving, so repad
+    /// never perturbs the accumulation order).
+    pub fn run_cmrs_slabs(
+        &self,
+        reg: &Registry,
+        slabs: CmrsSlabs<'_>,
+        b: &Mat,
+    ) -> Result<SpdmOutput, RuntimeError> {
+        let mut c = Mat::zeros(0, 0);
+        let s = self.run_cmrs_slabs_into(reg, slabs, b, &mut c)?;
+        Ok(SpdmOutput { c, kernel_s: s.kernel_s, artifact: s.artifact, copy: s.copy })
+    }
+
+    /// [`Engine::run_cmrs_slabs`] into a caller-owned C buffer; `b` may be
+    /// wide (`meta.n × w·meta.n`), like the GCOO variant.
+    pub fn run_cmrs_slabs_into(
+        &self,
+        reg: &Registry,
+        slabs: CmrsSlabs<'_>,
+        b: &Mat,
+        c: &mut Mat,
+    ) -> Result<ExecStats, RuntimeError> {
+        self.run_cmrs_slabs_into_sink(reg, slabs, b, c, &mut NullSink)
+    }
+
+    /// [`Engine::run_cmrs_slabs_into`] under a [`TraceSink`]: emits the
+    /// CMRS kernel's event stream (the GCOO block walk over the
+    /// round-robin interleaved entry order, where column runs — and hence
+    /// B-load reuse — are naturally rare) when the sink is active.
+    pub fn run_cmrs_slabs_into_sink<S: TraceSink>(
+        &self,
+        reg: &Registry,
+        slabs: CmrsSlabs<'_>,
+        b: &Mat,
+        c: &mut Mat,
+        sink: &mut S,
+    ) -> Result<ExecStats, RuntimeError> {
+        let n = b.rows;
+        let meta = reg.select("cmrs", n, slabs.cap)?;
+        let cap = meta.param("cap").expect("cmrs artifact has cap");
+        check_cmrs_slabs(&slabs)?;
+        check(b.rows == meta.n && b.cols > 0 && b.cols % meta.n == 0, || {
+            format!(
+                "B is {}x{}, artifact n={} (cols must be a positive multiple)",
+                b.rows, b.cols, meta.n
+            )
+        })?;
+        check(slabs.g * slabs.p == meta.n, || {
+            format!("A strips {}x{} != n={}", slabs.g, slabs.p, meta.n)
+        })?;
+        self.load(meta)?;
+        let mut copy = CopyStats::default();
+        let owned;
+        let (vals, rows, cols): (&[f32], &[i32], &[i32]) = if cap == slabs.cap {
+            copy.copies_avoided = 1;
+            (slabs.vals, slabs.rows, slabs.cols)
+        } else {
+            owned = slabs.repad(cap);
+            copy.bytes_copied = (slabs.g * slabs.cap.min(cap) * 12) as u64;
+            (owned.vals.as_slice(), owned.rows.as_slice(), owned.cols.as_slice())
+        };
+        if sink.active() {
+            emit_cmrs_trace(sink, vals, cols, slabs.g, cap, slabs.p, meta.n, b.cols);
+        }
+        let t0 = Instant::now();
+        cmrs_spdm_cpu(vals, rows, cols, slabs.g, cap, slabs.p, b, c);
+        let kernel_s = t0.elapsed().as_secs_f64();
+        Ok(ExecStats { kernel_s, artifact: meta.name.clone(), copy })
+    }
+
+    /// Run row-split SpDM from an owned padded form (borrows it — no copy).
+    pub fn run_rowsplit(
+        &self,
+        reg: &Registry,
+        padded: &RowSplitPadded,
+        b: &Mat,
+    ) -> Result<SpdmOutput, RuntimeError> {
+        self.run_rowsplit_slabs(reg, padded.as_slabs(), b)
+    }
+
+    /// Run row-split SpDM over borrowed segment slabs. Row-split has no
+    /// capacity failure mode — any segment cap fits any matrix — so
+    /// artifact selection prefers the slabs' own capacity (borrow path)
+    /// and otherwise falls back to the smallest compiled capacity,
+    /// re-segmenting into it (order-preserving, bitwise-safe).
+    pub fn run_rowsplit_slabs(
+        &self,
+        reg: &Registry,
+        slabs: RowSplitSlabs<'_>,
+        b: &Mat,
+    ) -> Result<SpdmOutput, RuntimeError> {
+        let mut c = Mat::zeros(0, 0);
+        let s = self.run_rowsplit_slabs_into(reg, slabs, b, &mut c)?;
+        Ok(SpdmOutput { c, kernel_s: s.kernel_s, artifact: s.artifact, copy: s.copy })
+    }
+
+    /// [`Engine::run_rowsplit_slabs`] into a caller-owned C buffer; `b`
+    /// may be wide (`meta.n × w·meta.n`), like the GCOO variant.
+    pub fn run_rowsplit_slabs_into(
+        &self,
+        reg: &Registry,
+        slabs: RowSplitSlabs<'_>,
+        b: &Mat,
+        c: &mut Mat,
+    ) -> Result<ExecStats, RuntimeError> {
+        self.run_rowsplit_slabs_into_sink(reg, slabs, b, c, &mut NullSink)
+    }
+
+    /// [`Engine::run_rowsplit_slabs_into`] under a [`TraceSink`]: emits
+    /// the warp-per-segment kernel's event stream (contiguous A streams,
+    /// per-entry broadcasts, texture-path B tiles) when the sink is
+    /// active.
+    pub fn run_rowsplit_slabs_into_sink<S: TraceSink>(
+        &self,
+        reg: &Registry,
+        slabs: RowSplitSlabs<'_>,
+        b: &Mat,
+        c: &mut Mat,
+        sink: &mut S,
+    ) -> Result<ExecStats, RuntimeError> {
+        let n = b.rows;
+        let meta = reg
+            .select("rowsplit", n, slabs.cap)
+            .or_else(|_| reg.select("rowsplit", n, 1))?;
+        let cap = meta.param("cap").expect("rowsplit artifact has cap");
+        check_rowsplit_slabs(&slabs)?;
+        check(b.rows == meta.n && b.cols > 0 && b.cols % meta.n == 0, || {
+            format!(
+                "B is {}x{}, artifact n={} (cols must be a positive multiple)",
+                b.rows, b.cols, meta.n
+            )
+        })?;
+        check(slabs.n == meta.n, || format!("A rows {} != n={}", slabs.n, meta.n))?;
+        check(slabs.seg_rows.iter().all(|&r| (r as usize) < meta.n), || {
+            format!("rowsplit segment row out of range (n={})", meta.n)
+        })?;
+        self.load(meta)?;
+        let mut copy = CopyStats::default();
+        let owned;
+        let (vals, seg_rows, cols, segs): (&[f32], &[i32], &[i32], usize) = if cap == slabs.cap {
+            copy.copies_avoided = 1;
+            (slabs.vals, slabs.seg_rows, slabs.cols, slabs.segs)
+        } else {
+            owned = slabs.repad(cap);
+            // Re-segmentation moves exactly the stored entries (vals +
+            // cols, 8 B each); padding is written fresh, not copied.
+            let nnz = slabs.vals.iter().filter(|v| **v != 0.0).count();
+            copy.bytes_copied = (nnz * 8) as u64;
+            (
+                owned.vals.as_slice(),
+                owned.seg_rows.as_slice(),
+                owned.cols.as_slice(),
+                owned.segs,
+            )
+        };
+        if sink.active() {
+            emit_rowsplit_trace(sink, vals, seg_rows, cols, segs, cap, b.cols);
+        }
+        let t0 = Instant::now();
+        rowsplit_spdm_cpu(vals, seg_rows, cols, segs, cap, meta.n, b, c);
+        let kernel_s = t0.elapsed().as_secs_f64();
+        Ok(ExecStats { kernel_s, artifact: meta.name.clone(), copy })
+    }
+
     /// Run the GCOO SpMV extension kernel: y = A·x (paper future work).
     pub fn run_gcoo_spmv(
         &self,
@@ -387,6 +573,12 @@ impl Engine {
                 .run_gcoo_slabs_into_sink(reg, p.as_slabs(), b, plan.algo == Algo::Gcoo, c, sink),
             (Algo::Csr, DeviceOperand::Ell(e)) => {
                 self.run_ell_slabs_into_sink(reg, e.as_slabs(), b, c, sink)
+            }
+            (Algo::Cmrs, DeviceOperand::Cmrs(p)) => {
+                self.run_cmrs_slabs_into_sink(reg, p.as_slabs(), b, c, sink)
+            }
+            (Algo::RowSplit, DeviceOperand::RowSplit(p)) => {
+                self.run_rowsplit_slabs_into_sink(reg, p.as_slabs(), b, c, sink)
             }
             (Algo::DenseXla | Algo::DensePallas, DeviceOperand::Dense(a)) => {
                 let out = self.run_dense_sink(reg, plan.algo.as_str(), a, b, sink)?;
@@ -480,6 +672,42 @@ fn check_gcoo_slabs(p: &GcooSlabs<'_>) -> Result<(), RuntimeError> {
     )
 }
 
+/// CMRS slab geometry check — a [`check_gcoo_slabs`] layout twin.
+fn check_cmrs_slabs(p: &CmrsSlabs<'_>) -> Result<(), RuntimeError> {
+    let want = p.g * p.cap;
+    check(
+        p.vals.len() == want && p.rows.len() == want && p.cols.len() == want,
+        || {
+            format!(
+                "cmrs slabs: lengths {}/{}/{} != g*cap {}",
+                p.vals.len(),
+                p.rows.len(),
+                p.cols.len(),
+                want
+            )
+        },
+    )
+}
+
+/// Row-split slab geometry check: entry arrays span segs·cap slots and the
+/// per-segment row array spans segs.
+fn check_rowsplit_slabs(p: &RowSplitSlabs<'_>) -> Result<(), RuntimeError> {
+    let want = p.segs * p.cap;
+    check(
+        p.vals.len() == want && p.cols.len() == want && p.seg_rows.len() == p.segs,
+        || {
+            format!(
+                "rowsplit slabs: lengths {}/{}/{} != segs*cap {} / segs {}",
+                p.vals.len(),
+                p.cols.len(),
+                p.seg_rows.len(),
+                want,
+                p.segs
+            )
+        },
+    )
+}
+
 /// Emit the GCOOSpDM kernel's full-grid event stream from the post-repad
 /// device slabs: g bands × ⌈m/b⌉ column tiles in launch order (band index
 /// fastest), each block's stream produced by the shared
@@ -525,6 +753,90 @@ fn emit_gcoo_trace<S: TraceSink>(
         );
     }
     let nnz: u64 = band_cols.iter().map(|c| c.len() as u64).sum();
+    sink.flops(2 * nnz * m as u64);
+}
+
+/// Emit the CMRS kernel's full-grid event stream from the post-repad strip
+/// slabs: g strips × ⌈m/b⌉ column tiles in launch order (strip index
+/// fastest), each block streamed through [`trace::emit_cmrs_block`] over
+/// the strip's stored *interleaved* entry columns — the order difference
+/// (vs. GCOO's (col,row) sort) is exactly what makes CMRS's cost profile
+/// distinct: column runs, and hence B-load reuse, rarely survive the
+/// round-robin interleave, but no warp stalls on one heavy row.
+#[allow(clippy::too_many_arguments)]
+fn emit_cmrs_trace<S: TraceSink>(
+    sink: &mut S,
+    vals: &[f32],
+    cols: &[i32],
+    g: usize,
+    cap: usize,
+    p: usize,
+    n_rows: usize,
+    m: usize,
+) {
+    let strip_cols: Vec<Vec<u32>> = (0..g)
+        .map(|si| {
+            (0..cap)
+                .filter(|&k| vals[si * cap + k] != 0.0)
+                .map(|k| cols[si * cap + k] as u32)
+                .collect()
+        })
+        .collect();
+    let bt = TRACE_BLOCK_THREADS;
+    let total = g * m.div_ceil(bt);
+    sink.grid(total, total);
+    for blk in 0..total {
+        trace::emit_cmrs_block(
+            sink,
+            blk,
+            &strip_cols[blk % g],
+            blk % g,
+            blk / g,
+            p,
+            bt,
+            n_rows,
+            m,
+        );
+    }
+    let nnz: u64 = strip_cols.iter().map(|c| c.len() as u64).sum();
+    sink.flops(2 * nnz * m as u64);
+}
+
+/// Emit the row-split kernel's full-grid event stream from the post-repad
+/// segment slabs: ⌈segs/warps⌉ segment blocks × ⌈m/b⌉ column tiles in
+/// launch order (segment block fastest), each block streamed through
+/// [`trace::emit_rowsplit_block`] with one warp per segment.
+fn emit_rowsplit_trace<S: TraceSink>(
+    sink: &mut S,
+    vals: &[f32],
+    seg_rows: &[i32],
+    cols: &[i32],
+    segs: usize,
+    cap: usize,
+    m: usize,
+) {
+    let seg_entries: Vec<(u32, Vec<u32>)> = (0..segs)
+        .map(|s| {
+            let entry_cols = (0..cap)
+                .filter(|&k| vals[s * cap + k] != 0.0)
+                .map(|k| cols[s * cap + k] as u32)
+                .collect();
+            (seg_rows[s] as u32, entry_cols)
+        })
+        .collect();
+    let bt = TRACE_BLOCK_THREADS;
+    let warps = bt / trace::WARP;
+    let seg_blocks = segs.div_ceil(warps).max(1);
+    let total = seg_blocks * m.div_ceil(bt);
+    sink.grid(total, total);
+    for blk in 0..total {
+        let sb = blk % seg_blocks;
+        let jb = blk / seg_blocks;
+        let lo = (sb * warps).min(segs);
+        let hi = (lo + warps).min(segs);
+        trace::emit_rowsplit_block(sink, blk, &seg_entries[lo..hi], lo, cap, jb, bt, m);
+    }
+    let nnz: u64 = seg_entries.iter().map(|(_, c)| c.len() as u64).sum();
     sink.flops(2 * nnz * m as u64);
 }
 
@@ -657,12 +969,65 @@ fn ell_spdm_cpu(vals: &[f32], cols: &[i32], n: usize, rowcap: usize, b: &Mat, c:
     }
 }
 
+/// Reference CMRS SpDM. The padded slab layout is a GcooPadded twin
+/// (g strips × cap slots, strip-local rows), so the scatter loop is shared
+/// verbatim; only the in-slab entry *order* differs (round-robin
+/// interleave). Each C row still receives its entries in ascending column
+/// order — the interleave preserves per-row order — so every output
+/// element accumulates the identical ordered f32 sum as the GCOO/dense
+/// reference (the bitwise identity the family differential asserts).
+#[allow(clippy::too_many_arguments)]
+fn cmrs_spdm_cpu(
+    vals: &[f32],
+    rows: &[i32],
+    cols: &[i32],
+    g: usize,
+    cap: usize,
+    p: usize,
+    b: &Mat,
+    c: &mut Mat,
+) {
+    gcoo_spdm_cpu(vals, rows, cols, g, cap, p, b, c);
+}
+
+/// Reference row-split SpDM: segments stream in row order, each scattering
+/// its scaled B rows into the owning row of C. A row's segments are
+/// contiguous and its entries ascend by column across them, so every
+/// output element accumulates over ascending k — bitwise identical to the
+/// other families. Wide-B capable like the GCOO kernel.
+fn rowsplit_spdm_cpu(
+    vals: &[f32],
+    seg_rows: &[i32],
+    cols: &[i32],
+    segs: usize,
+    cap: usize,
+    n: usize,
+    b: &Mat,
+    c: &mut Mat,
+) {
+    c.zero_into(n, b.cols);
+    for s in 0..segs {
+        let row = seg_rows[s] as usize;
+        for k in 0..cap {
+            let v = vals[s * cap + k];
+            if v == 0.0 {
+                continue;
+            }
+            let brow = b.row(cols[s * cap + k] as usize);
+            let crow = c.row_mut(row);
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += v * bv;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gen;
     use crate::rng::Rng;
-    use crate::sparse::{Csr, Gcoo};
+    use crate::sparse::{Cmrs, Csr, Gcoo, RowSplit};
     use std::path::PathBuf;
 
     // Slab re-pad unit tests live next to the format (sparse/gcoo.rs);
@@ -769,6 +1134,47 @@ mod tests {
         assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4));
     }
 
+    /// Tentpole bitwise discipline: the CMRS kernel's output must be
+    /// *bit-identical* to the GCOO kernel's (and the dense oracle's
+    /// neighborhood) — the interleave reorders the stream but never any
+    /// single row's accumulation order.
+    #[test]
+    fn cmrs_cpu_kernel_bitwise_matches_gcoo() {
+        let mut rng = Rng::new(61);
+        let a = gen::power_law_rows(64, 0.92, &mut rng);
+        let b = Mat::randn(64, 48, &mut rng);
+        let cmrs = Cmrs::from_dense(&a, 8);
+        let cp = cmrs.pad(cmrs.max_strip_nnz().max(1)).unwrap();
+        let mut c_cmrs = Mat::zeros(0, 0);
+        cmrs_spdm_cpu(&cp.vals, &cp.rows, &cp.cols, cp.g, cp.cap, cp.p, &b, &mut c_cmrs);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let gp = gcoo.pad(gcoo.max_group_nnz().max(1)).unwrap();
+        let mut c_gcoo = Mat::zeros(0, 0);
+        gcoo_spdm_cpu(&gp.vals, &gp.rows, &gp.cols, gp.g, gp.cap, gp.p, &b, &mut c_gcoo);
+        assert_eq!(c_cmrs.data, c_gcoo.data, "CMRS must be bitwise identical to GCOO");
+        assert!(c_cmrs.allclose(&a.matmul(&b), 1e-4, 1e-4));
+    }
+
+    /// Same discipline for row-split, across segment capacities: cutting a
+    /// row into segments never reorders its entries, so every capacity
+    /// yields the same bits.
+    #[test]
+    fn rowsplit_cpu_kernel_bitwise_matches_gcoo_across_caps() {
+        let mut rng = Rng::new(62);
+        let a = gen::power_law_rows(64, 0.92, &mut rng);
+        let b = Mat::randn(64, 64, &mut rng);
+        let gcoo = Gcoo::from_dense(&a, 8);
+        let gp = gcoo.pad(gcoo.max_group_nnz().max(1)).unwrap();
+        let mut c_gcoo = Mat::zeros(0, 0);
+        gcoo_spdm_cpu(&gp.vals, &gp.rows, &gp.cols, gp.g, gp.cap, gp.p, &b, &mut c_gcoo);
+        for cap in [1, 3, 16, 64] {
+            let rp = RowSplit::from_dense(&a, cap).unwrap().pad();
+            let mut c_rs = Mat::zeros(0, 0);
+            rowsplit_spdm_cpu(&rp.vals, &rp.seg_rows, &rp.cols, rp.segs, rp.cap, rp.n, &b, &mut c_rs);
+            assert_eq!(c_rs.data, c_gcoo.data, "row-split cap {cap} not bitwise identical");
+        }
+    }
+
     /// Registry whose one gcoo artifact (n=16, cap=16) has no backing file.
     fn missing_file_registry() -> Registry {
         let manifest = r#"{"artifacts": [
@@ -868,6 +1274,63 @@ mod tests {
         assert!(out.c.allclose(&a.matmul(&b), 1e-4, 1e-4));
     }
 
+    /// Handle-path dispatch for the new families: cached CMRS/row-split
+    /// device forms at the plan's capacity execute on the borrow path and
+    /// cross-family mismatches stay shape errors.
+    #[test]
+    fn run_operand_dispatches_cmrs_and_rowsplit() {
+        let dir = std::path::PathBuf::from("target/engine_family_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("stub.hlo.txt"), b"stub").unwrap();
+        let manifest = r#"{"artifacts": [
+            {"name": "cmrs_n16_cap32", "algo": "cmrs", "n": 16,
+             "params": {"p": 8, "cap": 32}, "inputs": [], "file": "stub.hlo.txt"},
+            {"name": "rowsplit_n16_cap4", "algo": "rowsplit", "n": 16,
+             "params": {"cap": 4}, "inputs": [], "file": "stub.hlo.txt"}
+        ]}"#;
+        let reg = Registry::from_manifest_json(manifest, dir).unwrap();
+        let engine = Engine::new().unwrap();
+        let mut rng = Rng::new(63);
+        let a = gen::uniform(16, 0.9, &mut rng);
+        let b = Mat::randn(16, 16, &mut rng);
+        let oracle = a.matmul(&b);
+
+        let cmrs = Cmrs::from_dense(&a, 8);
+        let plan = ExecPlan {
+            algo: Algo::Cmrs,
+            n_exec: 16,
+            cap: 32,
+            artifact: "cmrs_n16_cap32".into(),
+            reason: "test",
+            width: 1,
+        };
+        let op = DeviceOperand::Cmrs(cmrs.pad(32).unwrap());
+        assert_eq!(op.bytes(), 2 * 32 * 12, "g·cap strip slabs at 12 B/slot");
+        let out = engine.run_operand(&reg, &plan, &op, &b).unwrap();
+        assert!(out.c.allclose(&oracle, 1e-4, 1e-4));
+        assert_eq!(out.copy.copies_avoided, 1, "cached strips at plan cap must borrow");
+
+        let rs = RowSplit::from_dense(&a, 4).unwrap().pad();
+        let rs_plan = ExecPlan {
+            algo: Algo::RowSplit,
+            n_exec: 16,
+            cap: 4,
+            artifact: "rowsplit_n16_cap4".into(),
+            reason: "test",
+            width: 1,
+        };
+        let segs = rs.segs;
+        let rop = DeviceOperand::RowSplit(rs);
+        assert_eq!(rop.bytes(), segs * 4 * 8 + segs * 4);
+        let out = engine.run_operand(&reg, &rs_plan, &rop, &b).unwrap();
+        assert!(out.c.allclose(&oracle, 1e-4, 1e-4));
+        assert_eq!(out.copy.copies_avoided, 1, "cached segments at plan cap must borrow");
+
+        // Cross-family mismatch is a shape error, nothing executed.
+        let err = engine.run_operand(&reg, &plan, &rop, &b);
+        assert!(matches!(err, Err(RuntimeError::Shape(_))), "{err:?}");
+    }
+
     /// Instrumented execution emits the same trace the simgpu walker
     /// records for the same problem — the kernel↔model unification in
     /// miniature (the corpus-wide sweep lives in
@@ -905,6 +1368,52 @@ mod tests {
         let mut rec = TraceRecorder::new();
         engine.run_dense_sink(&reg, "dense_xla", &a, &b, &mut rec).unwrap();
         assert_eq!(rec.finish(), record_gemm(16, &cfg), "engine dense trace != walker trace");
+    }
+
+    /// The new families' instrumented kernels emit the exact traces their
+    /// walkers record — the same kernel↔model unification the GCOO/dense
+    /// paths pin above.
+    #[test]
+    fn traced_family_execution_matches_recorded_walker_traces() {
+        use crate::simgpu::{record_cmrs, record_rowsplit, GcooStructure, TraceRecorder, WalkConfig};
+        let dir = std::path::PathBuf::from("target/engine_family_trace_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("stub.hlo.txt"), b"stub").unwrap();
+        let manifest = r#"{"artifacts": [
+            {"name": "cmrs_n16_cap32", "algo": "cmrs", "n": 16,
+             "params": {"p": 8, "cap": 32}, "inputs": [], "file": "stub.hlo.txt"},
+            {"name": "rowsplit_n16_cap4", "algo": "rowsplit", "n": 16,
+             "params": {"cap": 4}, "inputs": [], "file": "stub.hlo.txt"}
+        ]}"#;
+        let reg = Registry::from_manifest_json(manifest, dir).unwrap();
+        let engine = Engine::new().unwrap();
+        let mut rng = Rng::new(53);
+        let a = gen::uniform(16, 0.85, &mut rng);
+        let b = Mat::randn(16, 16, &mut rng);
+        let cfg = WalkConfig::default(); // window covers the whole 16-size grid
+        let st = GcooStructure::new(&Gcoo::from_dense(&a, 8));
+
+        let cmrs = Cmrs::from_dense(&a, 8);
+        let padded = cmrs.pad(32).unwrap();
+        let mut rec = TraceRecorder::new();
+        let mut c = Mat::zeros(0, 0);
+        engine
+            .run_cmrs_slabs_into_sink(&reg, padded.as_slabs(), &b, &mut c, &mut rec)
+            .unwrap();
+        assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4), "tracing must not perturb the product");
+        assert_eq!(rec.finish(), record_cmrs(&st, &cfg), "engine cmrs trace != walker trace");
+
+        let rs = RowSplit::from_dense(&a, 4).unwrap().pad();
+        let mut rec = TraceRecorder::new();
+        engine
+            .run_rowsplit_slabs_into_sink(&reg, rs.as_slabs(), &b, &mut c, &mut rec)
+            .unwrap();
+        assert!(c.allclose(&a.matmul(&b), 1e-4, 1e-4));
+        assert_eq!(
+            rec.finish(),
+            record_rowsplit(&st, 4, &cfg),
+            "engine rowsplit trace != walker trace"
+        );
     }
 
     // Engine runs against a real artifacts directory live in

@@ -18,6 +18,11 @@ pub enum Algo {
     Csr,
     DenseXla,
     DensePallas,
+    /// CMRS strips (Koza et al., arXiv:1203.2946) — high-variance rows.
+    Cmrs,
+    /// Row-split nnz segments (Yang, Buluç & Owens, arXiv:1803.08601) —
+    /// power-law rows where banded GCOO degrades.
+    RowSplit,
 }
 
 impl Algo {
@@ -28,6 +33,8 @@ impl Algo {
             Algo::Csr => "csr",
             Algo::DenseXla => "dense_xla",
             Algo::DensePallas => "dense_pallas",
+            Algo::Cmrs => "cmrs",
+            Algo::RowSplit => "rowsplit",
         }
     }
 
@@ -38,13 +45,18 @@ impl Algo {
             "csr" => Some(Algo::Csr),
             "dense_xla" | "dense" => Some(Algo::DenseXla),
             "dense_pallas" => Some(Algo::DensePallas),
+            "cmrs" => Some(Algo::Cmrs),
+            "rowsplit" => Some(Algo::RowSplit),
             _ => None,
         }
     }
 
     /// Whether this family consumes a sparse device form of A.
     pub fn is_sparse(&self) -> bool {
-        matches!(self, Algo::Gcoo | Algo::GcooNoreuse | Algo::Csr)
+        matches!(
+            self,
+            Algo::Gcoo | Algo::GcooNoreuse | Algo::Csr | Algo::Cmrs | Algo::RowSplit
+        )
     }
 }
 
@@ -118,13 +130,23 @@ mod tests {
 
     #[test]
     fn algo_round_trip() {
-        for a in [Algo::Gcoo, Algo::GcooNoreuse, Algo::Csr, Algo::DenseXla, Algo::DensePallas] {
+        for a in [
+            Algo::Gcoo,
+            Algo::GcooNoreuse,
+            Algo::Csr,
+            Algo::DenseXla,
+            Algo::DensePallas,
+            Algo::Cmrs,
+            Algo::RowSplit,
+        ] {
             assert_eq!(Algo::from_str(a.as_str()), Some(a));
         }
         assert_eq!(Algo::from_str("dense"), Some(Algo::DenseXla));
         assert_eq!(Algo::from_str("bogus"), None);
         assert!(Algo::Gcoo.is_sparse());
         assert!(Algo::Csr.is_sparse());
+        assert!(Algo::Cmrs.is_sparse());
+        assert!(Algo::RowSplit.is_sparse());
         assert!(!Algo::DenseXla.is_sparse());
     }
 

@@ -40,7 +40,7 @@ use super::server::{
     is_timeout, materialize_a, peek_byte, read_exact_interruptible, Server, ServerConfig,
 };
 use crate::coordinator::{
-    ASig, Coordinator, CoordinatorConfig, MetricsSnapshot, OperandId, Ring, ShardSpec,
+    ASig, Coordinator, CoordinatorConfig, MetricsSnapshot, OperandId, Ring, ShardSpec, TenantStat,
     DEFAULT_RING_SEED, DEFAULT_TENANT, DEFAULT_VNODES,
 };
 use crate::json::{self, Value};
@@ -1000,6 +1000,7 @@ pub fn aggregate_snapshots(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         mean_kernel_s: 0.0,
         mean_convert_s: 0.0,
         per_algo: HashMap::new(),
+        tenants: Vec::new(),
     };
     let (mut kernel_w, mut convert_w, mut weight) = (0.0f64, 0.0f64, 0u64);
     for s in snaps {
@@ -1040,7 +1041,24 @@ pub fn aggregate_snapshots(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         for (k, v) in &s.per_algo {
             *out.per_algo.entry(*k).or_insert(0) += v;
         }
+        // Tenant rows merge by name: bytes, slice budgets, rejection
+        // counters and lane gauges all sum (each node holds its own shard
+        // of a tenant's operands and its own DRR lane for the tenant).
+        for t in &s.tenants {
+            match out.tenants.iter_mut().find(|o| o.name == t.name) {
+                Some(o) => {
+                    o.bytes += t.bytes;
+                    o.slice_budget_bytes += t.slice_budget_bytes;
+                    o.rate_limited += t.rate_limited;
+                    o.quota_exceeded += t.quota_exceeded;
+                    o.lane_depth += t.lane_depth;
+                    o.lane_deficit += t.lane_deficit;
+                }
+                None => out.tenants.push(t.clone()),
+            }
+        }
     }
+    out.tenants.sort_by(|a, b| a.name.cmp(&b.name));
     if weight > 0 {
         out.mean_kernel_s = kernel_w / weight as f64;
         out.mean_convert_s = convert_w / weight as f64;
@@ -1162,6 +1180,27 @@ mod tests {
         b.mean_kernel_s = 5.0;
         b.per_algo.insert("gcoo", 1);
         b.per_algo.insert("dense", 3);
+        a.tenants = vec![
+            TenantStat {
+                name: "alpha".into(),
+                bytes: 100,
+                slice_budget_bytes: 1000,
+                rate_limited: 2,
+                quota_exceeded: 0,
+                lane_depth: 1,
+                lane_deficit: -3,
+            },
+            TenantStat { name: "beta".into(), bytes: 50, ..TenantStat::default() },
+        ];
+        b.tenants = vec![TenantStat {
+            name: "alpha".into(),
+            bytes: 30,
+            slice_budget_bytes: 1000,
+            rate_limited: 1,
+            quota_exceeded: 4,
+            lane_depth: 2,
+            lane_deficit: 1,
+        }];
         let sum = aggregate_snapshots(&[a, b]);
         assert_eq!(sum.submitted, 7);
         assert_eq!(sum.completed, 6);
@@ -1176,6 +1215,23 @@ mod tests {
         assert_eq!(sum.per_algo["dense"], 3);
         // completed-weighted phase mean: (2·2 + 5·4) / 6
         assert!((sum.mean_kernel_s - 4.0).abs() < 1e-12);
+        // Tenant rows merge by name, every field summing across nodes.
+        assert_eq!(
+            sum.tenants,
+            vec![
+                TenantStat {
+                    name: "alpha".into(),
+                    bytes: 130,
+                    slice_budget_bytes: 2000,
+                    rate_limited: 3,
+                    quota_exceeded: 4,
+                    lane_depth: 3,
+                    lane_deficit: -2,
+                },
+                TenantStat { name: "beta".into(), bytes: 50, ..TenantStat::default() },
+            ],
+            "per-tenant splits aggregate by name across the cluster"
+        );
     }
 
     #[test]

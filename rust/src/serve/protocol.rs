@@ -573,6 +573,8 @@ pub mod frame {
             Some(Algo::Csr) => 3,
             Some(Algo::DenseXla) => 4,
             Some(Algo::DensePallas) => 5,
+            Some(Algo::Cmrs) => 6,
+            Some(Algo::RowSplit) => 7,
         }
     }
 
@@ -584,6 +586,8 @@ pub mod frame {
             3 => Ok(Some(Algo::Csr)),
             4 => Ok(Some(Algo::DenseXla)),
             5 => Ok(Some(Algo::DensePallas)),
+            6 => Ok(Some(Algo::Cmrs)),
+            7 => Ok(Some(Algo::RowSplit)),
             other => Err(format!("unknown algo byte 0x{other:02x}")),
         }
     }

@@ -41,8 +41,9 @@ pub use cache::Cache;
 pub use mem::{MemorySystem, Counters, Space};
 pub use structure::{SparseStructure, GcooStructure, SyntheticUniform, BandEntries};
 pub use walkers::{
-    gcoo_walk, csr_walk, gemm_walk, hand_gcoo_walk, hand_csr_walk, hand_gemm_walk,
-    record_gcoo, record_csr, record_gemm, WalkConfig,
+    gcoo_walk, csr_walk, gemm_walk, cmrs_walk, rowsplit_walk, hand_gcoo_walk, hand_csr_walk,
+    hand_gemm_walk, record_gcoo, record_csr, record_gemm, record_cmrs, record_rowsplit,
+    WalkConfig,
 };
 pub use cost::{KernelEstimate, estimate_time, operational_intensity};
 pub use trace::{
@@ -105,6 +106,26 @@ pub fn simulate_dense(n: usize, dev: &DeviceConfig, cfg: &WalkConfig) -> KernelR
     let (counters, flops) = gemm_walk(n, dev, cfg);
     let estimate = estimate_time(&counters, flops, dev);
     KernelReport { algo: "dense", device: dev.name, counters, flops, estimate }
+}
+
+/// Simulate CMRS (round-robin interleaved strips) for structure `s`.
+pub fn simulate_cmrs(s: &dyn SparseStructure, dev: &DeviceConfig, cfg: &WalkConfig) -> KernelReport {
+    let (counters, flops) = cmrs_walk(s, dev, cfg);
+    let estimate = estimate_time(&counters, flops, dev);
+    KernelReport { algo: "cmrs", device: dev.name, counters, flops, estimate }
+}
+
+/// Simulate row-split (warp-per-segment nnz split) for structure `s` at
+/// segment capacity `cap`.
+pub fn simulate_rowsplit(
+    s: &dyn SparseStructure,
+    cap: usize,
+    dev: &DeviceConfig,
+    cfg: &WalkConfig,
+) -> KernelReport {
+    let (counters, flops) = rowsplit_walk(s, cap, dev, cfg);
+    let estimate = estimate_time(&counters, flops, dev);
+    KernelReport { algo: "rowsplit", device: dev.name, counters, flops, estimate }
 }
 
 /// Convenience: simulate all three algorithms on a real GCOO matrix.

@@ -42,7 +42,8 @@
 //! sampled; [`TraceOracle`] packages the pipeline as the cost oracle the
 //! autotuner and `put_a`'s registration refinement consult.
 
-use super::device::{DeviceConfig, WARP};
+use super::device::DeviceConfig;
+pub use super::device::WARP;
 use super::mem::{Counters, MemorySystem, Space};
 use super::structure::SparseStructure;
 use super::walkers::WalkConfig;
@@ -357,6 +358,91 @@ pub fn emit_gcoo_block<S: TraceSink>(
     }
 }
 
+/// One CMRS thread block: the same staged-scan hardware walk as
+/// [`emit_gcoo_block`] with run detection on — the *stored entry order* is
+/// what differs. `cols` are the strip's entry columns in round-robin
+/// interleaved order, so same-column runs (and hence B-load reuse) rarely
+/// survive the interleave: CMRS trades GCOO's reuse for never letting one
+/// heavy row serialize a strip's scan. Delegating keeps one source of
+/// truth for the block walk; the cost divergence comes entirely from the
+/// order of `cols`.
+#[allow(clippy::too_many_arguments)]
+pub fn emit_cmrs_block<S: TraceSink>(
+    sink: &mut S,
+    blk: usize,
+    cols: &[u32],
+    si: usize,
+    jb: usize,
+    p: usize,
+    bt: usize,
+    n_rows: usize,
+    m: usize,
+) {
+    emit_gcoo_block(sink, blk, cols, si, jb, p, bt, true, n_rows, m);
+}
+
+/// One row-split thread block (nnz-split SpMM, Yang/Buluç/Owens): one
+/// *warp* per segment, `bt / WARP` segments per block, the block covering
+/// a `bt`-wide C column tile. Per segment: the owning-row load, the
+/// segment's entries streamed with coalesced A loads in WARP-chunks
+/// (row-split's layout win over scattered csrmm), then per entry 2 shared
+/// broadcasts (val + col fan-out to the lanes) and a texture-path B row
+/// tile, and finally one coalesced C stripe write for the segment's row.
+///
+/// `segs` holds this block's segments as (owning row, stored entry
+/// columns); `seg0` is the global slab index of `segs[0]` (A addresses);
+/// `m` is the B/C column count and row stride.
+#[allow(clippy::too_many_arguments)]
+pub fn emit_rowsplit_block<S: TraceSink>(
+    sink: &mut S,
+    blk: usize,
+    segs: &[(u32, Vec<u32>)],
+    seg0: usize,
+    cap: usize,
+    jb: usize,
+    bt: usize,
+    m: usize,
+) {
+    let col_chunks = bt / WARP;
+    let col_base = jb * bt;
+    for (w, (row, cols)) in segs.iter().enumerate() {
+        let seg_base = ((seg0 + w) * cap) as u64;
+        // Owning-row load (the seg_rows array, one lane).
+        sink.contig(Space::GlobalL2, blk, A_ROWS + 4 * (seg0 + w) as u64, 1);
+        // Stream the segment's entries: coalesced val + col loads.
+        let len = cols.len();
+        let mut off = 0usize;
+        while off < len.max(1) {
+            let lanes = len.saturating_sub(off).min(WARP).max(1);
+            sink.contig(Space::GlobalL2, blk, A_VALS + 4 * (seg_base + off as u64), lanes);
+            sink.contig(Space::GlobalL2, blk, A_COLS + 4 * (seg_base + off as u64), lanes);
+            off += WARP;
+        }
+        // Scan: each entry fans (val, col) out to the lanes, then loads
+        // the B row's column tile through the texture path.
+        for &col in cols {
+            sink.broadcasts(2);
+            for cc in 0..col_chunks {
+                let lanes = m.saturating_sub(col_base + cc * WARP).min(WARP);
+                if lanes > 0 {
+                    let base =
+                        B_BASE + ((col as u64) * m as u64 + (col_base + cc * WARP) as u64) * 4;
+                    sink.contig(Space::GlobalTex, blk, base, lanes);
+                }
+            }
+        }
+        // One coalesced C stripe write for the segment's row.
+        for cc in 0..col_chunks {
+            let lanes = m.saturating_sub(col_base + cc * WARP).min(WARP);
+            if lanes > 0 {
+                let base =
+                    C_BASE + ((*row as u64) * m as u64 + (col_base + cc * WARP) as u64) * 4;
+                sink.contig(Space::GlobalL2, blk, base, lanes);
+            }
+        }
+    }
+}
+
 /// One cuSPARSE-like scalar-row csrmm thread block. One *thread* per row:
 /// at step (j, k) the 32 lanes touch 32 different A entries and 32
 /// different B addresses (stride-m apart) — every load scattered through
@@ -522,6 +608,18 @@ impl TraceOracle {
     pub fn dense_time(&self, n: usize) -> f64 {
         super::simulate_dense(n, self.dev, &self.cfg).time_s()
     }
+
+    /// Estimated CMRS kernel time for structure `s` (strip height = the
+    /// structure's band height p).
+    pub fn cmrs_time(&self, s: &dyn SparseStructure) -> f64 {
+        super::simulate_cmrs(s, self.dev, &self.cfg).time_s()
+    }
+
+    /// Estimated row-split kernel time for structure `s` at segment
+    /// capacity `cap`.
+    pub fn rowsplit_time(&self, s: &dyn SparseStructure, cap: usize) -> f64 {
+        super::simulate_rowsplit(s, cap, self.dev, &self.cfg).time_s()
+    }
 }
 
 #[cfg(test)]
@@ -529,7 +627,9 @@ mod tests {
     use super::*;
     use crate::simgpu::device::TITANX;
     use crate::simgpu::structure::SyntheticUniform;
-    use crate::simgpu::{simulate_csr, simulate_dense, simulate_gcoo};
+    use crate::simgpu::{
+        simulate_cmrs, simulate_csr, simulate_dense, simulate_gcoo, simulate_rowsplit,
+    };
 
     /// A fixed little event script exercising every sink method.
     fn sample_events(sink: &mut impl TraceSink) {
@@ -613,6 +713,11 @@ mod tests {
         assert_eq!(oracle.gcoo_time(&s, false), simulate_gcoo(&s, &TITANX, &cfg, false).time_s());
         assert_eq!(oracle.csr_time(&s), simulate_csr(&s, &TITANX, &cfg).time_s());
         assert_eq!(oracle.dense_time(256), simulate_dense(256, &TITANX, &cfg).time_s());
+        assert_eq!(oracle.cmrs_time(&s), simulate_cmrs(&s, &TITANX, &cfg).time_s());
+        assert_eq!(
+            oracle.rowsplit_time(&s, 16),
+            simulate_rowsplit(&s, 16, &TITANX, &cfg).time_s()
+        );
     }
 
     #[test]

@@ -21,8 +21,9 @@ use super::device::{DeviceConfig, WARP};
 use super::mem::{Counters, MemorySystem, Space};
 use super::structure::SparseStructure;
 use super::trace::{
-    emit_csr_block, emit_gcoo_block, emit_gemm_block, ReplaySink, Trace, TraceRecorder,
-    TraceSink, A_COLS, A_ROWS, A_VALS, B_BASE, C_BASE, GEMM_TILE, GEMM_TK, ILP_COLS, ROWPTR,
+    emit_cmrs_block, emit_csr_block, emit_gcoo_block, emit_gemm_block, emit_rowsplit_block,
+    ReplaySink, Trace, TraceRecorder, TraceSink, A_COLS, A_ROWS, A_VALS, B_BASE, C_BASE,
+    GEMM_TILE, GEMM_TK, ILP_COLS, ROWPTR,
 };
 
 /// Walker parameters.
@@ -114,6 +115,94 @@ pub fn csr_walk(s: &dyn SparseStructure, dev: &DeviceConfig, cfg: &WalkConfig) -
     (ms.counters.scale(scale), flops)
 }
 
+/// Strip `si`'s entry columns in CMRS round-robin interleaved order,
+/// derived from the band's (col,row)-sorted entries: collecting per
+/// band-local row preserves each row's ascending columns, then the
+/// occurrence-index sweep interleaves across rows — the same order
+/// `Cmrs::from_dense` stores, so walker and engine traces agree.
+fn cmrs_strip_cols(s: &dyn SparseStructure, si: usize) -> Vec<u32> {
+    let band = s.band(si);
+    let mut per_row: Vec<Vec<u32>> = vec![Vec::new(); s.p()];
+    for (r, c) in band.rows.iter().zip(&band.cols) {
+        per_row[*r as usize].push(*c);
+    }
+    let deepest = per_row.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = Vec::with_capacity(band.len());
+    for idx in 0..deepest {
+        for list in &per_row {
+            if let Some(&c) = list.get(idx) {
+                out.push(c);
+            }
+        }
+    }
+    out
+}
+
+/// CMRS (strips = bands of p rows, round-robin interleaved). Grid matches
+/// GCOO's: g strips × ⌈n/b⌉ column tiles, strip index fastest. Per-block
+/// stream emitted by [`emit_cmrs_block`] over the interleaved entry order.
+pub fn cmrs_walk(s: &dyn SparseStructure, dev: &DeviceConfig, cfg: &WalkConfig) -> (Counters, u64) {
+    let n = s.n();
+    let g = s.num_bands();
+    let total_blocks = g * n.div_ceil(cfg.b);
+    let (start, len) = window(total_blocks, cfg);
+    let mut ms = MemorySystem::new(dev, dev.sms.min(len.max(1)));
+    {
+        let mut sink = ReplaySink::new(&mut ms, dev.sms);
+        for blk in start..start + len {
+            let cols = cmrs_strip_cols(s, blk % g);
+            emit_cmrs_block(&mut sink, blk, &cols, blk % g, blk / g, s.p(), cfg.b, n, n);
+        }
+    }
+    let scale = total_blocks as f64 / len as f64;
+    let flops = 2 * s.nnz() * n as u64;
+    (ms.counters.scale(scale), flops)
+}
+
+/// The structure's rows cut into `cap`-entry segments in row order —
+/// the same segmentation `RowSplit::from_dense` produces.
+fn rowsplit_segments(s: &dyn SparseStructure, cap: usize) -> Vec<(u32, Vec<u32>)> {
+    let cap = cap.max(1);
+    let mut out = Vec::new();
+    for i in 0..s.n() {
+        for chunk in s.row_cols(i).chunks(cap) {
+            out.push((i as u32, chunk.to_vec()));
+        }
+    }
+    out
+}
+
+/// Row-split / nnz-split SpMM (Yang, Buluç & Owens): one warp per
+/// segment, ⌈segs/warps⌉ segment blocks × ⌈n/b⌉ column tiles, segment
+/// block fastest. Per-block stream emitted by [`emit_rowsplit_block`].
+pub fn rowsplit_walk(
+    s: &dyn SparseStructure,
+    cap: usize,
+    dev: &DeviceConfig,
+    cfg: &WalkConfig,
+) -> (Counters, u64) {
+    let n = s.n();
+    let segs = rowsplit_segments(s, cap);
+    let warps = cfg.b / WARP;
+    let seg_blocks = segs.len().div_ceil(warps).max(1);
+    let total_blocks = seg_blocks * n.div_ceil(cfg.b);
+    let (start, len) = window(total_blocks, cfg);
+    let mut ms = MemorySystem::new(dev, dev.sms.min(len.max(1)));
+    {
+        let mut sink = ReplaySink::new(&mut ms, dev.sms);
+        for blk in start..start + len {
+            let sb = blk % seg_blocks;
+            let jb = blk / seg_blocks;
+            let lo = (sb * warps).min(segs.len());
+            let hi = (lo + warps).min(segs.len());
+            emit_rowsplit_block(&mut sink, blk, &segs[lo..hi], lo, cap, jb, cfg.b, n);
+        }
+    }
+    let scale = total_blocks as f64 / len as f64;
+    let flops = 2 * s.nnz() * n as u64;
+    (ms.counters.scale(scale), flops)
+}
+
 /// Tiled dense GEMM (cuBLAS stand-in): 64×64 C tiles, k-loop staging 64×16
 /// A/B tiles through shared memory. Per-block stream emitted by
 /// [`emit_gemm_block`]. Compute-bound at large n, which yields the
@@ -174,6 +263,44 @@ pub fn record_csr(s: &dyn SparseStructure, cfg: &WalkConfig) -> Trace {
             })
             .collect();
         emit_csr_block(&mut rec, blk, &rows, cfg.b, n, j_samples, j_stride);
+    }
+    rec.flops(2 * s.nnz() * n as u64);
+    rec.finish()
+}
+
+/// Record the sampled CMRS window as a materialized [`Trace`]
+/// (`Trace::replay` reproduces [`cmrs_walk`]'s counters exactly).
+pub fn record_cmrs(s: &dyn SparseStructure, cfg: &WalkConfig) -> Trace {
+    let n = s.n();
+    let g = s.num_bands();
+    let total_blocks = g * n.div_ceil(cfg.b);
+    let (start, len) = window(total_blocks, cfg);
+    let mut rec = TraceRecorder::new();
+    rec.grid(total_blocks, len);
+    for blk in start..start + len {
+        let cols = cmrs_strip_cols(s, blk % g);
+        emit_cmrs_block(&mut rec, blk, &cols, blk % g, blk / g, s.p(), cfg.b, n, n);
+    }
+    rec.flops(2 * s.nnz() * n as u64);
+    rec.finish()
+}
+
+/// Record the sampled row-split window as a materialized [`Trace`].
+pub fn record_rowsplit(s: &dyn SparseStructure, cap: usize, cfg: &WalkConfig) -> Trace {
+    let n = s.n();
+    let segs = rowsplit_segments(s, cap);
+    let warps = cfg.b / WARP;
+    let seg_blocks = segs.len().div_ceil(warps).max(1);
+    let total_blocks = seg_blocks * n.div_ceil(cfg.b);
+    let (start, len) = window(total_blocks, cfg);
+    let mut rec = TraceRecorder::new();
+    rec.grid(total_blocks, len);
+    for blk in start..start + len {
+        let sb = blk % seg_blocks;
+        let jb = blk / seg_blocks;
+        let lo = (sb * warps).min(segs.len());
+        let hi = (lo + warps).min(segs.len());
+        emit_rowsplit_block(&mut rec, blk, &segs[lo..hi], lo, cap, jb, cfg.b, n);
     }
     rec.flops(2 * s.nnz() * n as u64);
     rec.finish()
@@ -478,6 +605,45 @@ mod tests {
         assert_eq!(record_gcoo(&s, &cfg, true).replay(&TITANX), gcoo_walk(&s, &TITANX, &cfg, true));
         assert_eq!(record_csr(&s, &cfg).replay(&TITANX), csr_walk(&s, &TITANX, &cfg));
         assert_eq!(record_gemm(256, &cfg).replay(&TITANX), gemm_walk(256, &TITANX, &cfg));
+        assert_eq!(record_cmrs(&s, &cfg).replay(&TITANX), cmrs_walk(&s, &TITANX, &cfg));
+        assert_eq!(
+            record_rowsplit(&s, 16, &cfg).replay(&TITANX),
+            rowsplit_walk(&s, 16, &TITANX, &cfg)
+        );
+    }
+
+    #[test]
+    fn cmrs_interleave_destroys_column_runs() {
+        // dense-columns structure has long same-col runs: GCOO with reuse
+        // skips most B loads, while CMRS's round-robin interleave breaks
+        // the runs apart — its tex traffic must sit well above GCOO's.
+        use crate::gen;
+        use crate::rng::Rng;
+        use crate::simgpu::structure::GcooStructure;
+        use crate::sparse::Gcoo;
+        let mut rng = Rng::new(11);
+        let a = gen::dense_columns(256, 0.95, &mut rng);
+        let st = GcooStructure::new(&Gcoo::from_dense(&a, 8));
+        let cfg = WalkConfig::default();
+        let (gcoo, _) = gcoo_walk(&st, &TITANX, &cfg, true);
+        let (cmrs, _) = cmrs_walk(&st, &TITANX, &cfg);
+        assert!(
+            cmrs.l1_tex > gcoo.l1_tex,
+            "interleave should lose reuse: cmrs.tex={} gcoo.tex={}",
+            cmrs.l1_tex,
+            gcoo.l1_tex
+        );
+    }
+
+    #[test]
+    fn rowsplit_flops_exact_and_segments_bound_work() {
+        let s = synth(512, 0.99);
+        let (c, flops) = rowsplit_walk(&s, 16, &TITANX, &WalkConfig::default());
+        assert_eq!(flops, 2 * s.nnz() * 512);
+        assert!(c.total_mem_transactions() > 0);
+        // Smaller capacity → more segments → more blocks, never a panic.
+        let (c1, _) = rowsplit_walk(&s, 1, &TITANX, &WalkConfig::default());
+        assert!(c1.total_mem_transactions() > 0);
     }
 
     #[test]

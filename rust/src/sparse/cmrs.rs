@@ -1,0 +1,415 @@
+//! CMRS — Compressed Multi-Row Storage (Koza et al., arXiv:1203.2946),
+//! adapted to this engine's slab discipline for high-variance row
+//! distributions where a single heavy row starves GCOO's (col,row) scan.
+//!
+//! Rows are grouped into *strips* of `p` consecutive rows — deliberately
+//! the same height as the GCOO band, so `scan_stats`' per-band nnz counts
+//! price strips exactly and no second stats pass is ever needed. Within a
+//! strip, entries are interleaved **round-robin by occurrence index**:
+//! first every row's 0th entry (ascending row), then every row's 1st, and
+//! so on. A warp scanning the strip sequentially therefore touches `p`
+//! different output rows in turn instead of draining one heavy row while
+//! its neighbors idle — the load-balancing CMRS exists for.
+//!
+//! Bitwise discipline: each row's entries appear in ascending occurrence
+//! index, and per-row entry lists are collected in ascending column order,
+//! so every output element still accumulates over ascending k in f32 —
+//! identical bit-for-bit to the dense/GCOO/ELL reference order.
+
+use super::{FormatError, ToDense};
+use crate::ndarray::Mat;
+
+/// CMRS: concatenated per-strip entry arrays, round-robin interleaved
+/// within each strip. Row indices are strip-local (`0..p`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cmrs {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Strip height (equal to the GCOO band height p, so per-band stats
+    /// price strips without a second scan).
+    pub p: usize,
+    pub vals: Vec<f32>,
+    /// Strip-local row index of each entry (0..p).
+    pub rows: Vec<u32>,
+    /// Absolute column index of each entry.
+    pub cols: Vec<u32>,
+    /// Start offset of each strip in the concatenated arrays.
+    pub s_idxes: Vec<u32>,
+    /// Nonzeros per strip.
+    pub nnz_per_strip: Vec<u32>,
+}
+
+impl Cmrs {
+    /// Number of strips = ceil(n_rows / p).
+    pub fn num_strips(&self) -> usize {
+        self.n_rows.div_ceil(self.p)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Build from dense: collect each strip row's entries in ascending
+    /// column order, then emit round-robin by (occurrence index, row).
+    pub fn from_dense(a: &Mat, p: usize) -> Self {
+        assert!(p > 0);
+        let g = a.rows.div_ceil(p);
+        let mut vals = Vec::new();
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut s_idxes = vec![0u32; g];
+        let mut nnz_per_strip = vec![0u32; g];
+        for si in 0..g {
+            let lo = si * p;
+            let hi = ((si + 1) * p).min(a.rows);
+            s_idxes[si] = vals.len() as u32;
+            // Per-row (col, val) lists; a row-major walk gives ascending cols.
+            let lists: Vec<Vec<(u32, f32)>> = (lo..hi)
+                .map(|i| {
+                    a.row(i)
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, v)| **v != 0.0)
+                        .map(|(j, &v)| (j as u32, v))
+                        .collect()
+                })
+                .collect();
+            let deepest = lists.iter().map(|l| l.len()).max().unwrap_or(0);
+            for idx in 0..deepest {
+                for (r, list) in lists.iter().enumerate() {
+                    if let Some(&(c, v)) = list.get(idx) {
+                        vals.push(v);
+                        rows.push(r as u32);
+                        cols.push(c);
+                    }
+                }
+            }
+            nnz_per_strip[si] = vals.len() as u32 - s_idxes[si];
+        }
+        Cmrs { n_rows: a.rows, n_cols: a.cols, p, vals, rows, cols, s_idxes, nnz_per_strip }
+    }
+
+    /// Strip `si`'s entries as (strip-local row, col, val), in stored
+    /// (interleaved) order.
+    pub fn strip(&self, si: usize) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        let lo = self.s_idxes[si] as usize;
+        let hi = lo + self.nnz_per_strip[si] as usize;
+        (lo..hi).map(move |k| (self.rows[k], self.cols[k], self.vals[k]))
+    }
+
+    /// Largest per-strip nnz — the capacity the padded device form needs.
+    /// Equal to GCOO's `max_band_nnz` for the same matrix and p.
+    pub fn max_strip_nnz(&self) -> usize {
+        self.nnz_per_strip.iter().copied().max().unwrap_or(0) as usize
+    }
+
+    pub fn validate(&self) -> Result<(), FormatError> {
+        let g = self.num_strips();
+        if self.s_idxes.len() != g || self.nnz_per_strip.len() != g {
+            return Err(FormatError::Invalid("strip array lengths".into()));
+        }
+        let total: usize = self.nnz_per_strip.iter().map(|&x| x as usize).sum();
+        if total != self.nnz() {
+            return Err(FormatError::Invalid("nnz_per_strip sum != nnz".into()));
+        }
+        for si in 0..g {
+            let expect = if si == 0 {
+                0
+            } else {
+                self.s_idxes[si - 1] + self.nnz_per_strip[si - 1]
+            };
+            if self.s_idxes[si] != expect {
+                return Err(FormatError::Invalid(format!("s_idxes[{si}] != prefix sum")));
+            }
+            let strip_rows = ((si + 1) * self.p).min(self.n_rows) - si * self.p;
+            // Round-robin invariant: the (occurrence index, row) key of the
+            // entry stream is strictly ascending, and each row's columns
+            // ascend with occurrence index.
+            let mut seen = vec![0u32; strip_rows];
+            let mut last_col = vec![None::<u32>; strip_rows];
+            let mut prev_key: Option<(u32, u32)> = None;
+            for (r, c, _v) in self.strip(si) {
+                if r as usize >= strip_rows || c as usize >= self.n_cols {
+                    return Err(FormatError::Invalid(format!("strip {si}: entry out of range")));
+                }
+                let key = (seen[r as usize], r);
+                if let Some(p) = prev_key {
+                    if key <= p {
+                        return Err(FormatError::Invalid(format!(
+                            "strip {si}: not round-robin interleaved"
+                        )));
+                    }
+                }
+                if let Some(lc) = last_col[r as usize] {
+                    if c <= lc {
+                        return Err(FormatError::Invalid(format!(
+                            "strip {si}: row {r} columns not ascending"
+                        )));
+                    }
+                }
+                last_col[r as usize] = Some(c);
+                seen[r as usize] += 1;
+                prev_key = Some(key);
+            }
+        }
+        Ok(())
+    }
+
+    /// Pad to the device layout the `cmrs_*` artifacts expect.
+    pub fn pad(&self, cap: usize) -> Result<CmrsPadded, FormatError> {
+        let need = self.max_strip_nnz();
+        if need > cap {
+            return Err(FormatError::CapacityExceeded {
+                which: "cmrs strip".into(),
+                needed: need,
+                cap,
+            });
+        }
+        let g = self.num_strips();
+        let mut vals = vec![0.0f32; g * cap];
+        let mut rows = vec![0i32; g * cap];
+        let mut cols = vec![0i32; g * cap];
+        for si in 0..g {
+            for (k, (r, c, v)) in self.strip(si).enumerate() {
+                vals[si * cap + k] = v;
+                rows[si * cap + k] = r as i32;
+                cols[si * cap + k] = c as i32;
+            }
+        }
+        Ok(CmrsPadded { g, cap, p: self.p, n: self.n_cols, vals, rows, cols })
+    }
+}
+
+impl ToDense for Cmrs {
+    fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n_rows, self.n_cols);
+        for si in 0..self.num_strips() {
+            for (r, c, v) in self.strip(si) {
+                m[(si * self.p + r as usize, c as usize)] += v;
+            }
+        }
+        m
+    }
+}
+
+/// Device-layout CMRS: `(g, cap)` row-major strip slabs, zero padded —
+/// structurally a [`super::GcooPadded`] twin, but the entry order inside
+/// each slab row is the round-robin interleave, never (col,row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CmrsPadded {
+    pub g: usize,
+    pub cap: usize,
+    pub p: usize,
+    pub n: usize,
+    pub vals: Vec<f32>,
+    pub rows: Vec<i32>,
+    pub cols: Vec<i32>,
+}
+
+impl CmrsPadded {
+    /// Borrow the slabs as the view the engine consumes (no copy).
+    pub fn as_slabs(&self) -> CmrsSlabs<'_> {
+        CmrsSlabs {
+            g: self.g,
+            cap: self.cap,
+            p: self.p,
+            n: self.n,
+            vals: &self.vals,
+            rows: &self.rows,
+            cols: &self.cols,
+        }
+    }
+}
+
+/// Borrowed view of device-layout CMRS slabs.
+#[derive(Clone, Copy, Debug)]
+pub struct CmrsSlabs<'a> {
+    pub g: usize,
+    pub cap: usize,
+    pub p: usize,
+    pub n: usize,
+    pub vals: &'a [f32],
+    pub rows: &'a [i32],
+    pub cols: &'a [i32],
+}
+
+impl CmrsSlabs<'_> {
+    /// Re-pad to a different strip capacity, producing owned slabs. The
+    /// interleave inside each strip's `cap`-prefix is untouched, so repad
+    /// is order-preserving (and therefore bitwise-safe).
+    pub fn repad(&self, cap: usize) -> CmrsPadded {
+        let mut vals = vec![0.0f32; self.g * cap];
+        let mut rows = vec![0i32; self.g * cap];
+        let mut cols = vec![0i32; self.g * cap];
+        let copy = self.cap.min(cap);
+        for si in 0..self.g {
+            vals[si * cap..si * cap + copy]
+                .copy_from_slice(&self.vals[si * self.cap..si * self.cap + copy]);
+            rows[si * cap..si * cap + copy]
+                .copy_from_slice(&self.rows[si * self.cap..si * self.cap + copy]);
+            cols[si * cap..si * cap + copy]
+                .copy_from_slice(&self.cols[si * self.cap..si * self.cap + copy]);
+        }
+        CmrsPadded { g: self.g, cap, p: self.p, n: self.n, vals, rows, cols }
+    }
+
+    /// Total slab bytes at this geometry (f32 vals + i32 rows + i32 cols).
+    pub fn bytes(&self) -> usize {
+        self.g * self.cap * (4 + 4 + 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Rng;
+
+    #[test]
+    fn small_example_interleaves_round_robin() {
+        // Strip 0 = rows {0,1}: row 0 holds (0,7),(3,8); row 1 holds (1,10).
+        // Round-robin: idx 0 of rows 0,1 then idx 1 of row 0.
+        #[rustfmt::skip]
+        let a = Mat::from_vec(4, 4, vec![
+            7.0, 0.0, 0.0, 8.0,
+            0.0, 10.0, 0.0, 0.0,
+            9.0, 0.0, 0.0, 0.0,
+            0.0, 0.0, 6.0, 3.0,
+        ]);
+        let cmrs = Cmrs::from_dense(&a, 2);
+        assert_eq!(cmrs.num_strips(), 2);
+        assert_eq!(cmrs.nnz_per_strip, vec![3, 3]);
+        assert_eq!(cmrs.s_idxes, vec![0, 3]);
+        let s0: Vec<_> = cmrs.strip(0).collect();
+        assert_eq!(s0, vec![(0, 0, 7.0), (1, 1, 10.0), (0, 3, 8.0)]);
+        // Strip 1: row 0 holds (0,9); row 1 holds (2,6),(3,3).
+        let s1: Vec<_> = cmrs.strip(1).collect();
+        assert_eq!(s1, vec![(0, 0, 9.0), (1, 2, 6.0), (1, 3, 3.0)]);
+        cmrs.validate().unwrap();
+        assert_eq!(cmrs.to_dense(), a);
+    }
+
+    #[test]
+    fn heavy_row_interleaves_not_drains() {
+        // Row 0 dense, rows 1-3 single-entry: the stream must alternate
+        // across rows before returning to row 0's tail.
+        let mut a = Mat::zeros(4, 8);
+        for j in 0..8 {
+            a[(0, j)] = (j + 1) as f32;
+        }
+        a[(1, 2)] = 20.0;
+        a[(2, 5)] = 30.0;
+        a[(3, 7)] = 40.0;
+        let cmrs = Cmrs::from_dense(&a, 4);
+        let rows: Vec<u32> = cmrs.strip(0).map(|e| e.0).collect();
+        assert_eq!(&rows[..4], &[0, 1, 2, 3], "idx-0 pass covers every row");
+        assert!(rows[4..].iter().all(|&r| r == 0), "tail is the heavy row");
+        cmrs.validate().unwrap();
+        assert_eq!(cmrs.to_dense(), a);
+    }
+
+    #[test]
+    fn per_row_order_is_ascending_col() {
+        // The bitwise guarantee: each row's entries appear in ascending
+        // column order within the stream.
+        let mut rng = Rng::new(31);
+        let a = gen::power_law_rows(64, 0.9, &mut rng);
+        let cmrs = Cmrs::from_dense(&a, 8);
+        cmrs.validate().unwrap();
+        for si in 0..cmrs.num_strips() {
+            let mut last = vec![None::<u32>; 8];
+            for (r, c, _v) in cmrs.strip(si) {
+                if let Some(lc) = last[r as usize] {
+                    assert!(c > lc, "strip {si} row {r} out of column order");
+                }
+                last[r as usize] = Some(c);
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_uniform_and_ragged() {
+        let mut rng = Rng::new(32);
+        let a = gen::uniform(64, 0.9, &mut rng);
+        let cmrs = Cmrs::from_dense(&a, 8);
+        cmrs.validate().unwrap();
+        assert_eq!(cmrs.to_dense(), a);
+        // 30 rows, p=8: ragged last strip of 6 rows.
+        let b = gen::uniform(30, 0.7, &mut rng);
+        let cb = Cmrs::from_dense(&b, 8);
+        assert_eq!(cb.num_strips(), 4);
+        cb.validate().unwrap();
+        assert_eq!(cb.to_dense(), b);
+    }
+
+    #[test]
+    fn strip_counts_match_gcoo_band_counts() {
+        // Strip == band: scan_stats' per-band counts price CMRS capacity.
+        let mut rng = Rng::new(33);
+        let a = gen::uniform(48, 0.85, &mut rng);
+        let cmrs = Cmrs::from_dense(&a, 8);
+        let gcoo = super::super::Gcoo::from_dense(&a, 8);
+        assert_eq!(cmrs.nnz_per_strip, gcoo.nnz_per_group);
+        assert_eq!(cmrs.max_strip_nnz(), gcoo.max_group_nnz());
+    }
+
+    #[test]
+    fn pad_round_trip_and_capacity() {
+        let mut rng = Rng::new(34);
+        let a = gen::uniform(32, 0.9, &mut rng);
+        let cmrs = Cmrs::from_dense(&a, 8);
+        let padded = cmrs.pad(cmrs.max_strip_nnz()).unwrap();
+        assert_eq!(padded.vals.len(), padded.g * padded.cap);
+        assert!(cmrs.pad(cmrs.max_strip_nnz().saturating_sub(1)).is_err());
+    }
+
+    #[test]
+    fn slab_repad_grows_and_shrinks_consistently() {
+        let p = CmrsPadded {
+            g: 2,
+            cap: 2,
+            p: 2,
+            n: 4,
+            vals: vec![1.0, 2.0, 3.0, 4.0],
+            rows: vec![0, 1, 0, 1],
+            cols: vec![0, 1, 2, 3],
+        };
+        let grown = p.as_slabs().repad(3);
+        assert_eq!(grown.vals, vec![1.0, 2.0, 0.0, 3.0, 4.0, 0.0]);
+        assert_eq!(grown.rows, vec![0, 1, 0, 0, 1, 0]);
+        assert_eq!(grown.cols, vec![0, 1, 0, 2, 3, 0]);
+        assert_eq!(grown.as_slabs().repad(2), p);
+    }
+
+    #[test]
+    fn slab_views_borrow_without_copying() {
+        let mut rng = Rng::new(35);
+        let a = gen::uniform(32, 0.9, &mut rng);
+        let cmrs = Cmrs::from_dense(&a, 8);
+        let padded = cmrs.pad(cmrs.max_strip_nnz().max(1)).unwrap();
+        let slabs = padded.as_slabs();
+        assert!(std::ptr::eq(slabs.vals.as_ptr(), padded.vals.as_ptr()));
+        assert_eq!(slabs.bytes(), padded.g * padded.cap * 12);
+    }
+
+    #[test]
+    fn validate_catches_broken_interleave() {
+        let mut rng = Rng::new(36);
+        let a = gen::uniform(32, 0.8, &mut rng);
+        let mut cmrs = Cmrs::from_dense(&a, 8);
+        // Swapping two adjacent entries of different rows breaks the
+        // (occurrence, row) ordering.
+        let mut broke = false;
+        for k in 1..cmrs.nnz() {
+            if cmrs.rows[k] != cmrs.rows[k - 1] {
+                cmrs.rows.swap(k, k - 1);
+                cmrs.cols.swap(k, k - 1);
+                cmrs.vals.swap(k, k - 1);
+                broke = true;
+                break;
+            }
+        }
+        assert!(broke);
+        assert!(cmrs.validate().is_err());
+    }
+}

@@ -9,12 +9,16 @@
 mod coo;
 mod csr;
 mod gcoo;
+mod cmrs;
+mod rowsplit;
 mod bsr;
 mod footprint;
 
 pub use coo::Coo;
 pub use csr::Csr;
 pub use gcoo::{Ell, EllSlabs, Gcoo, GcooPadded, GcooSlabs};
+pub use cmrs::{Cmrs, CmrsPadded, CmrsSlabs};
+pub use rowsplit::{RowSplit, RowSplitPadded, RowSplitSlabs};
 pub use bsr::Bsr;
 pub use footprint::{
     FootprintBytes, coo_bytes, csr_bytes, gcoo_bytes, dense_bytes, coo_elements, csr_elements,

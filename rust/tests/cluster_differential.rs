@@ -94,7 +94,7 @@ fn assert_c_bits_equal(got: &Mat, want: &Mat, what: &str) {
     }
 }
 
-/// The acceptance matrix: 6 patterns × {inline, handle+inline-B,
+/// The acceptance matrix: 9 patterns × {inline, handle+inline-B,
 /// handle+seeded-B} × {JSON, binary}, 3-node window-on cluster vs plain
 /// single node, every checksum and every want_c C compared bitwise.
 #[test]
@@ -328,7 +328,7 @@ fn cluster_stats_aggregation_sums_node_gauges_exactly() {
     // one error so the error counter is non-trivial somewhere.
     for i in 0..4u64 {
         let mut rng = Rng::new(50 + i);
-        let ai = gen::generate(gen::Pattern::ALL[i as usize % 6], n, 0.9, &mut rng);
+        let ai = gen::generate(gen::Pattern::ALL[i as usize % gen::Pattern::ALL.len()], n, 0.9, &mut rng);
         let bi = Mat::randn(n, n, &mut rng);
         let r = client.spdm_inline(30 + i, n, &ai.data, &bi.data, false).unwrap();
         assert!(r.ok, "{:?}", r.error);

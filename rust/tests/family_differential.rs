@@ -1,0 +1,243 @@
+//! Family differential (ISSUE 10 tentpole acceptance): the execution
+//! families — GCOO, CSR/ELL, dense, CMRS, row-split — are **bitwise
+//! interchangeable**. Every family accumulates each output element over
+//! ascending k in f32 from 0.0, so which family runs is pure routing
+//! provenance, never visible in the numbers.
+//!
+//! * The core sweep: all 9 corpus patterns (adversarial families
+//!   included) × widths {1, 2, batch_max} × all five hintable families,
+//!   fused batch execution, with matching (n=64) and padded (n=60)
+//!   request sizes — every response C bitwise identical across families.
+//! * The wire sweep: per pattern, a CMRS-registered handle and a
+//!   row-split-registered handle on a slice-over-subscribed spilling
+//!   coordinator answer on **both wire planes** with checksums bitwise
+//!   equal to an untenanted auto-routed inline baseline — across GSPL
+//!   demote → promote round trips of both new operand encodings, with
+//!   zero reconversions.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use gcoospdm::coordinator::{
+    process_batch_ws, Algo, BatchJob, Coordinator, CoordinatorConfig, SpdmRequest, SpdmResponse,
+    TenantSpec, Workspace,
+};
+use gcoospdm::gen;
+use gcoospdm::ndarray::Mat;
+use gcoospdm::rng::Rng;
+use gcoospdm::runtime::{Engine, Registry};
+use gcoospdm::serve::{Client, Server, ServerConfig};
+
+/// Stub registry at n=64 carrying every family (the engine only needs
+/// artifact files to exist; distinct target dir so parallel test binaries
+/// never race on the files).
+fn runnable_registry() -> Registry {
+    let dir = PathBuf::from("target/family_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let manifest = r#"{"artifacts": [
+        {"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "csr_n64_rowcap64", "algo": "csr", "n": 64,
+         "params": {"rp": 8, "rowcap": 64}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "dense_xla_n64", "algo": "dense_xla", "n": 64,
+         "params": {}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "cmrs_n64_cap512", "algo": "cmrs", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"},
+        {"name": "rowsplit_n64_cap64", "algo": "rowsplit", "n": 64,
+         "params": {"cap": 64}, "inputs": [], "file": "stub.hlo.txt"}
+    ]}"#;
+    Registry::from_manifest_json(manifest, dir).expect("stub manifest parses")
+}
+
+const N: usize = 64;
+const FAMILIES: [Algo; 5] = [Algo::Gcoo, Algo::Csr, Algo::DenseXla, Algo::Cmrs, Algo::RowSplit];
+
+/// The core sweep: 9 patterns × widths {1, 2, batch_max} × all five
+/// families, fused execution, bitwise identity against the GCOO
+/// reference in every cell.
+#[test]
+fn all_families_bitwise_identical_across_corpus_and_widths() {
+    let reg = runnable_registry();
+    let engine = Engine::new().unwrap();
+    let cfg = CoordinatorConfig::default();
+    let widths = [1usize, 2, cfg.batch_max];
+    let mut rng = Rng::new(0xFA41);
+    let mut cells = 0usize;
+    for (pi, pattern) in gen::Pattern::ALL.iter().enumerate() {
+        // Alternate matching and padded-up execution sizes so every
+        // family's conversion crosses the pad border too.
+        let n = if pi % 2 == 0 { 64 } else { 60 };
+        let a = gen::generate(*pattern, n, 0.9, &mut rng);
+        for &w in &widths {
+            let bs: Vec<Mat> = (0..w).map(|_| Mat::randn(n, n, &mut rng)).collect();
+            let mut reference: Option<Vec<SpdmResponse>> = None;
+            for family in FAMILIES {
+                let reqs: Vec<SpdmRequest> = bs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| {
+                        let mut r = SpdmRequest::new(i as u64, a.clone(), b.clone());
+                        r.algo_hint = Some(family);
+                        // One oracle check per family per cell pins each
+                        // family to the true product, not just to GCOO.
+                        r.verify = i == 0;
+                        r
+                    })
+                    .collect();
+                let jobs: Vec<BatchJob<'_>> =
+                    reqs.iter().map(|r| BatchJob::inline(r, Instant::now())).collect();
+                let mut ws = Workspace::new();
+                let resps = process_batch_ws(&engine, &mut ws, &reg, &cfg, &jobs);
+                let ctx = format!("{}/{}/w{w}/n{n}", pattern.name(), family.as_str());
+                for (i, r) in resps.iter().enumerate() {
+                    assert!(r.ok(), "{ctx}[{i}]: {:?}", r.error);
+                    assert_eq!(r.algo, family, "{ctx}[{i}]: the hint must win");
+                    if i == 0 {
+                        assert_eq!(r.verified, Some(true), "{ctx}: oracle");
+                    }
+                }
+                match &reference {
+                    None => reference = Some(resps),
+                    Some(base) => {
+                        for (i, (b_resp, f_resp)) in base.iter().zip(&resps).enumerate() {
+                            assert!(
+                                b_resp.c == f_resp.c,
+                                "{ctx}[{i}]: C is not bitwise identical to {}",
+                                FAMILIES[0].as_str()
+                            );
+                        }
+                    }
+                }
+            }
+            cells += 1;
+        }
+    }
+    assert_eq!(cells, 9 * 3, "full corpus × width matrix covered");
+}
+
+fn boot(cfg: CoordinatorConfig) -> (Arc<Coordinator>, String, std::thread::JoinHandle<()>) {
+    let coord = Arc::new(Coordinator::new(Arc::new(runnable_registry()), cfg));
+    let server = Server::bind(&ServerConfig::ephemeral(), Arc::clone(&coord)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    (coord, addr, handle)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gcoospdm_familydiff_{}_{name}", std::process::id()))
+}
+
+/// The wire sweep: per pattern, CMRS and row-split handles on a
+/// slice-over-subscribed spilling coordinator serve bitwise-identical
+/// checksums on both planes across GSPL demote → promote round trips of
+/// both new operand encodings, with zero reconversions.
+#[test]
+fn cmrs_and_rowsplit_handles_spill_round_trip_bitwise_on_both_planes() {
+    let registry = Arc::new(runnable_registry());
+    for (pi, pat) in gen::Pattern::ALL.iter().enumerate() {
+        let mut rng = Rng::new(0xF001 + pi as u64);
+        let a = gen::generate(*pat, N, 0.9, &mut rng);
+        let b = Mat::randn(N, N, &mut rng);
+        let mut rng2 = Rng::new(0xF101 + pi as u64);
+        let filler = gen::generate(gen::Pattern::Uniform, N, 0.9, &mut rng2);
+        let fb = Mat::randn(N, N, &mut rng2);
+
+        // Untenanted auto-routed inline baselines on the JSON plane.
+        let (_c0, addr0, s0) =
+            boot(CoordinatorConfig { workers: 1, ..Default::default() });
+        let mut base = Client::connect(&addr0).unwrap();
+        let r = base.spdm_inline(1, N, &a.data, &b.data, false).unwrap();
+        assert!(r.ok, "{}: baseline a: {:?}", pat.name(), r.error);
+        let base_a = r.checksum.unwrap().to_bits();
+        let r = base.spdm_inline(2, N, &filler.data, &fb.data, false).unwrap();
+        assert!(r.ok, "{}: baseline filler: {:?}", pat.name(), r.error);
+        let base_f = r.checksum.unwrap().to_bits();
+        base.shutdown(9_998).unwrap();
+        s0.join().unwrap();
+
+        // A slice that fits either family's operand alone but never both.
+        let meter = Coordinator::new(
+            Arc::clone(&registry),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        );
+        let ea = meter.put_a(a.clone(), Some(Algo::Cmrs)).unwrap();
+        let ef = meter.put_a(filler.clone(), Some(Algo::RowSplit)).unwrap();
+        let slice = (ea.bytes.max(ef.bytes) + ea.bytes + ef.bytes) / 2;
+        meter.shutdown();
+
+        let dir = tmp_dir(pat.name());
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            tenants: vec![TenantSpec {
+                name: "solo".into(),
+                weight: 1,
+                rate_per_s: 0.0,
+                burst: 0.0,
+                store_slice_bytes: slice,
+            }],
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let (coord, addr, server) = boot(cfg);
+        let mut client = Client::connect(&addr).unwrap();
+        client.set_tenant(Some("solo"));
+
+        let r = client.put_a_inline(10, N, &a.data, "cmrs").unwrap();
+        assert!(r.ok, "{}: cmrs put_a: {:?}", pat.name(), r.error);
+        let ha = r.a_handle.unwrap();
+        let r = client.spdm_handle(11, ha, &b.data, false).unwrap();
+        assert!(r.ok, "{}: cmrs pre-spill: {:?}", pat.name(), r.error);
+        assert_eq!(r.checksum.unwrap().to_bits(), base_a, "{}: cmrs JSON plane", pat.name());
+
+        // Registering the row-split filler overflows the slice and
+        // demotes the CMRS operand into the GSPL tier.
+        let r = client.put_a_inline(12, N, &filler.data, "rowsplit").unwrap();
+        assert!(r.ok, "{}: rowsplit put_a: {:?}", pat.name(), r.error);
+        let hf = r.a_handle.unwrap();
+        assert!(
+            coord.store().stats().spill_writes >= 1,
+            "{}: filler registration must demote the CMRS operand",
+            pat.name()
+        );
+
+        // Binary plane revisit promotes the CMRS operand from disk.
+        let (r, _) = client.spdm_handle_bin(13, ha, N, &b.data, None, false, false).unwrap();
+        assert!(r.ok, "{}: cmrs promote: {:?}", pat.name(), r.error);
+        assert_eq!(
+            r.checksum.unwrap().to_bits(),
+            base_a,
+            "{}: CMRS binary plane after GSPL round trip",
+            pat.name()
+        );
+        // JSON plane revisit promotes the row-split operand back in turn.
+        let r = client.spdm_handle(14, hf, &fb.data, false).unwrap();
+        assert!(r.ok, "{}: rowsplit promote: {:?}", pat.name(), r.error);
+        assert_eq!(
+            r.checksum.unwrap().to_bits(),
+            base_f,
+            "{}: row-split JSON plane after GSPL round trip",
+            pat.name()
+        );
+
+        let snap = coord.snapshot();
+        assert!(
+            snap.spill_promotes >= 2,
+            "{}: both encodings round-tripped through disk ({} promotes)",
+            pat.name(),
+            snap.spill_promotes
+        );
+        assert_eq!(
+            snap.conversions_total, 2,
+            "{}: the two registrations are the only conversions — promotes pay none",
+            pat.name()
+        );
+
+        client.shutdown(9_999).unwrap();
+        server.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -4,7 +4,7 @@
 //!
 //! * The broad differential: adaptive routing (measured model +
 //!   exploration + flips, live tuner) is **bitwise identical** to static
-//!   routing across all 6 corpus patterns × {gcoo, csr, auto-dense} ×
+//!   routing across all 9 corpus patterns × {gcoo, csr, auto-dense} ×
 //!   widths {1, 2, batch_max} × {n=64, n=60}, on both the inline and the
 //!   registered-operand (handle) paths.
 //! * The misroute convergence test: a sparse-by-the-numbers matrix whose
@@ -190,7 +190,148 @@ fn adaptive_routing_bitwise_equals_static_across_corpus() {
             }
         }
     }
-    assert_eq!(cells, 6 * 3 * 3, "full corpus × hint × width matrix covered");
+    assert_eq!(cells, 9 * 3 * 3, "full corpus × hint × width matrix covered");
+}
+
+/// Registry with gcoo plus exactly one exploration family (cmrs or
+/// rowsplit): the two-candidate setup the family flip test scripts
+/// against — the prior still routes gcoo, the measured model can only
+/// flip to the new family.
+fn registry_gcoo_plus(family: &str) -> Registry {
+    let dir = PathBuf::from("target/routing_differential_artifacts");
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(dir.join("stub.hlo.txt"), b"stub").expect("write stub artifact");
+    let extra = match family {
+        "cmrs" => {
+            r#"{"name": "cmrs_n64_cap512", "algo": "cmrs", "n": 64,
+         "params": {"p": 8, "cap": 512}, "inputs": [], "file": "stub.hlo.txt"}"#
+        }
+        _ => {
+            r#"{"name": "rowsplit_n64_cap64", "algo": "rowsplit", "n": 64,
+         "params": {"cap": 64}, "inputs": [], "file": "stub.hlo.txt"}"#
+        }
+    };
+    let manifest = format!(
+        r#"{{"artifacts": [
+        {{"name": "gcoo_n64_cap512", "algo": "gcoo", "n": 64,
+         "params": {{"p": 8, "cap": 512}}, "inputs": [], "file": "stub.hlo.txt"}},
+        {extra}
+    ]}}"#
+    );
+    Registry::from_manifest_json(&manifest, dir).expect("stub manifest parses")
+}
+
+/// Satellite (ISSUE 10): the new families win on measurements. A matrix
+/// the paper prior routes to gcoo, served under scripted latencies that
+/// favor the exploration family 8×, flips to CMRS (then, in a second
+/// scenario, to row-split) at the **exactly** mirrored request index —
+/// and every response C stays bitwise identical to a static gcoo
+/// coordinator across the flip.
+#[test]
+fn cmrs_and_rowsplit_beat_gcoo_with_exact_flip_index() {
+    for (family, alt_algo) in [("cmrs", Algo::Cmrs), ("rowsplit", Algo::RowSplit)] {
+        let tuning = TunerConfig {
+            enabled: true,
+            alpha: 0.5, // exactly representable: mirror math is exact
+            min_samples: 2,
+            explore_every: 3,
+            seed: 0x5EED_CAFE,
+            register_refine_budget: 0,
+        };
+        let cfg = CoordinatorConfig { workers: 1, tuning, ..Default::default() };
+        let clock = Arc::new(ScriptedClock::new(vec![]));
+        let coord = Coordinator::with_clock(
+            Arc::new(registry_gcoo_plus(family)),
+            cfg,
+            Arc::<ScriptedClock>::clone(&clock),
+        );
+        let static_coord = Coordinator::new(
+            Arc::new(registry_gcoo_plus(family)),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        );
+
+        let mut rng = Rng::new(0x985);
+        let a = gen::uniform(64, 0.985, &mut rng);
+        let entry = coord.put_a(a.clone(), None).expect("put_a");
+        assert_eq!(entry.plan.algo, Algo::Gcoo, "{family}: the prior routes gcoo");
+        let algos: Vec<Algo> = entry.candidates.iter().map(|c| c.algo).collect();
+        assert_eq!(algos, vec![Algo::Gcoo, alt_algo], "{family}: one alternative");
+        let key = ModelKey::operand(entry.handle);
+
+        // Scripted latencies (exact powers of two): gcoo 0.5 s, the new
+        // family 0.0625 s — 8× faster per the fake clock.
+        const LAT_GCOO: f64 = 0.5;
+        const LAT_ALT: f64 = 0.0625;
+        let mut mirror = Mirror { alpha: 0.5, min_samples: 2, est: HashMap::new() };
+        let mut incumbent = Algo::Gcoo;
+        let mut flip_at: Option<usize> = None;
+
+        for i in 0..24usize {
+            let alt = if incumbent == Algo::Gcoo { alt_algo } else { Algo::Gcoo };
+            let draw = explore_draw(tuning.seed, key, i as u64, tuning.explore_every);
+            let predicted = if draw { alt } else { incumbent };
+            let lat = if predicted == Algo::Gcoo { LAT_GCOO } else { LAT_ALT };
+            clock.push_latency(lat);
+
+            let b = Mat::randn(64, 64, &mut rng);
+            let mut req = SpdmRequest::for_handle(100 + i as u64, entry.handle, b.clone());
+            req.verify = true;
+            let resp = coord.run_sync(req);
+            assert!(resp.ok(), "{family}[{i}] {:?}", resp.error);
+            assert_eq!(resp.verified, Some(true), "{family}[{i}] oracle");
+            assert_eq!(
+                resp.algo, predicted,
+                "{family}[{i}] live routing diverged from the pure-function mirror"
+            );
+
+            let sresp = static_coord.run_sync(SpdmRequest::new(500 + i as u64, a.clone(), b));
+            assert_eq!(sresp.algo, Algo::Gcoo);
+            assert!(
+                resp.c == sresp.c,
+                "{family}[{i}] C (ran {:?}) must be bitwise identical to static gcoo",
+                resp.algo
+            );
+
+            mirror.observe(predicted, lat / 64.0);
+            if let (Some(inc_m), Some(alt_m)) = (mirror.gated(incumbent), mirror.gated(alt)) {
+                if alt_m < inc_m && flip_at.is_none() {
+                    flip_at = Some(i);
+                    incumbent = alt;
+                }
+            }
+            let expected_flips = match flip_at {
+                Some(f) if i >= f => 1,
+                _ => 0,
+            };
+            assert_eq!(
+                coord.snapshot().route_flips,
+                expected_flips,
+                "{family}[{i}] flip counter must transition exactly at the mirrored index"
+            );
+        }
+
+        let flipped_at =
+            flip_at.expect("family-favoring latencies must force a flip within K=24");
+        assert_eq!(incumbent, alt_algo, "{family} wins the measured race");
+        assert_eq!(
+            coord.snapshot().route_flips,
+            1,
+            "{family}: exactly one flip, at request {flipped_at}"
+        );
+        let republished = coord
+            .store()
+            .entries_snapshot()
+            .into_iter()
+            .find(|e| e.handle == entry.handle)
+            .expect("still resident");
+        assert_eq!(republished.version, 2, "{family}: entry republished");
+        assert_eq!(republished.plan.algo, alt_algo);
+        assert_eq!(republished.plan.reason, "measured-flip");
+        assert_eq!(entry.plan.algo, Algo::Gcoo, "{family}: pre-flip snapshot untouched");
+
+        coord.shutdown();
+        static_coord.shutdown();
+    }
 }
 
 /// Lock-step mirror of the tuner's arithmetic: the same EWMA, the same

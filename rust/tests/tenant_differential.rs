@@ -14,7 +14,7 @@
 //! * (c) a demoted-then-promoted handle serves with **zero**
 //!   reconversions: `conversions_total` is constant across the
 //!   demote/promote cycle;
-//! * spill round-trip across all 6 corpus patterns: demote → promote
+//! * spill round-trip across the full pattern corpus: demote → promote
 //!   yields a bitwise-identical `DeviceOperand` and bitwise-identical C.
 //!
 //! The scripted-clock DRR no-starvation property test lives next to the
@@ -352,6 +352,34 @@ fn hot_tenant_flood_cannot_evict_victim_and_gets_typed_backpressure() {
     assert!(r.error.unwrap().contains(RATE_LIMITED));
     assert!(client.ping_bin(304).unwrap().ok, "connection survives RATE_LIMITED");
 
+    // Satellite (ISSUE 10): /stats is no longer tenant-blind — the
+    // snapshot carries one row per configured lane with byte usage, the
+    // slice budget, and the split rejection counters.
+    let snap = coord.snapshot();
+    let names: Vec<&str> = snap.tenants.iter().map(|t| t.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec!["default", "hog", "ratey", "tiny", "victim"],
+        "one row per configured lane, sorted by name"
+    );
+    let row = |n: &str| snap.tenants.iter().find(|t| t.name == n).unwrap();
+    assert_eq!(row("victim").bytes, victim_bytes, "victim's resident bytes surface per-tenant");
+    assert_eq!(row("victim").slice_budget_bytes, slice);
+    assert!(row("hog").bytes > 0, "hog keeps its newest operand resident");
+    assert_eq!(
+        (row("tiny").quota_exceeded, row("tiny").rate_limited),
+        (1, 0),
+        "tiny's one over-quota put_a is counted against tiny alone"
+    );
+    assert_eq!(
+        (row("ratey").rate_limited, row("ratey").quota_exceeded),
+        (3, 0),
+        "ratey's three limited requests (both planes + put_a) count against ratey alone"
+    );
+    for n in ["default", "hog", "victim"] {
+        assert_eq!((row(n).rate_limited, row(n).quota_exceeded), (0, 0), "{n} saw no rejections");
+    }
+
     client.shutdown(9_999).unwrap();
     server.join().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
@@ -419,6 +447,75 @@ fn demote_promote_cycle_never_reconverts() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+fn count_spill_files(dir: &std::path::Path) -> usize {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .filter(|e| e.path().extension().is_some_and(|x| x == "spill"))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+/// ISSUE 10 spill-leak bugfix: the in-memory index is authoritative and
+/// the files follow it. Counting on-disk `.spill` files across
+/// demote → drop_a → shutdown → restart never finds an orphan:
+/// `drop_a` deletes the demoted file, shutdown sweeps the tier (and
+/// removes the emptied directory), and a restart's startup GC clears
+/// any orphan a crash left behind.
+#[test]
+fn spill_tier_leaves_zero_files_after_drop_a_shutdown_and_restart() {
+    let (per, _) = make_work();
+    let slice = measure_slice(&per);
+    let (a1, _) = per[0][0].clone();
+    let (a2, b2) = per[0][1].clone();
+    let (a3, _) = per[1][0].clone();
+
+    let dir = tmp_dir("leak");
+    let cfg = || CoordinatorConfig {
+        workers: 1,
+        tenants: vec![spec("solo", 1, 0.0, 0.0, slice)],
+        spill_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let coord = Coordinator::new(Arc::new(runnable_registry()), cfg());
+    assert_eq!(count_spill_files(&dir), 0, "fresh tier starts empty");
+
+    // Registration #2 demotes #1: exactly one file on disk.
+    let e1 = coord.put_a_for("solo", a1, None).unwrap();
+    let _e2 = coord.put_a_for("solo", a2, None).unwrap();
+    assert!(coord.store().stats().spill_writes >= 1, "over-subscription demotes");
+    assert_eq!(count_spill_files(&dir), 1, "one demoted entry, one file");
+
+    // drop_a of the demoted handle deletes its file, not just the index row.
+    assert!(coord.drop_a(e1.handle), "drop_a finds the spilled handle");
+    assert_eq!(count_spill_files(&dir), 0, "drop_a must delete the spill file");
+
+    // Leave a fresh demoted file behind, then shut down: the sweep clears
+    // the tier and removes the emptied directory.
+    let e3 = coord.put_a_for("solo", a3, None).unwrap();
+    assert_eq!(count_spill_files(&dir), 1, "registration #3 demoted #2");
+    coord.shutdown();
+    assert_eq!(count_spill_files(&dir), 0, "shutdown sweeps every spill file");
+    assert!(!dir.exists(), "the emptied spill directory is removed too");
+    let _ = e3;
+
+    // Restart on the same directory with a crash-orphaned file planted:
+    // startup GC deletes it before the tier serves anything.
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("a424242.spill"), b"stale bytes from a crashed run").unwrap();
+    let coord = Coordinator::new(Arc::new(runnable_registry()), cfg());
+    assert_eq!(count_spill_files(&dir), 0, "restart GCs crash orphans");
+    // The restarted tier still works: registrations demote and serve.
+    let e1 = coord.put_a_for("solo", per[0][0].0.clone(), None).unwrap();
+    let _e2 = coord.put_a_for("solo", per[0][1].0.clone(), None).unwrap();
+    let resp = coord.run_sync(SpdmRequest::for_handle(7, e1.handle, b2).with_tenant("solo"));
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    coord.shutdown();
+    assert_eq!(count_spill_files(&dir), 0, "second shutdown leaves zero files");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
@@ -437,11 +534,24 @@ fn operand_bitwise_eq(x: &DeviceOperand, y: &DeviceOperand) -> bool {
         (DeviceOperand::Dense(a), DeviceOperand::Dense(b)) => {
             (a.rows, a.cols) == (b.rows, b.cols) && bits(&a.data) == bits(&b.data)
         }
+        (DeviceOperand::Cmrs(a), DeviceOperand::Cmrs(b)) => {
+            (a.g, a.cap, a.p, a.n) == (b.g, b.cap, b.p, b.n)
+                && bits(&a.vals) == bits(&b.vals)
+                && a.rows == b.rows
+                && a.cols == b.cols
+        }
+        (DeviceOperand::RowSplit(a), DeviceOperand::RowSplit(b)) => {
+            (a.segs, a.cap, a.n) == (b.segs, b.cap, b.n)
+                && bits(&a.vals) == bits(&b.vals)
+                && a.seg_rows == b.seg_rows
+                && a.cols == b.cols
+        }
         _ => false,
     }
 }
 
-/// Satellite: across **all 6 corpus patterns**, demote → promote restores
+/// Satellite: across **the full corpus** (all 9 patterns, adversarial
+/// families included), demote → promote restores
 /// a bitwise-identical `DeviceOperand` and serves a bitwise-identical C.
 #[test]
 fn spill_round_trip_is_bitwise_across_all_corpus_patterns() {
